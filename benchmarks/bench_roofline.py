@@ -1,0 +1,34 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline)."""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import emit
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results", "dryrun_baseline.json")
+
+
+def run(path: str = RESULTS):
+    if not os.path.exists(path):
+        emit("roofline_table", 0.0, "dryrun_baseline.json missing — run dryrun first")
+        return
+    rows = json.load(open(path))
+    for r in rows:
+        if r["mesh"] != "16x16":
+            continue
+        tag = f"roofline_{r['arch']}_{r['shape']}"
+        if r["status"] != "ok":
+            emit(tag, 0.0, f"SKIP: {r['note']}")
+            continue
+        rf = r["roofline"]
+        emit(
+            tag, rf["bound_s"],
+            f"dom={rf['dominant']} comp={rf['compute_s'] * 1e3:.0f}ms "
+            f"mem={rf['memory_s'] * 1e3:.0f}ms coll={rf['collective_s'] * 1e3:.0f}ms "
+            f"frac={rf['fraction']:.3f} useful_ratio={rf['useful_ratio']:.2f}",
+        )
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,22 @@
+"""Shared benchmark helpers: timing + CSV rows (name,us_per_call,derived)."""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+
+def timeit(fn: Callable, repeat: int = 1) -> float:
+    best = float("inf")
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+ROWS: List[Tuple[str, float, str]] = []
+
+
+def emit(name: str, seconds: float, derived: str = "") -> None:
+    ROWS.append((name, seconds * 1e6, derived))
+    print(f"{name},{seconds * 1e6:.1f},{derived}")

@@ -1,0 +1,81 @@
+"""Reproduces the EXPERIMENTS.md §Perf hillclimb measurements.
+
+    PYTHONPATH=src python -m benchmarks.perf_hillclimb [--cell A|B|C|all]
+
+Each row re-lowers + re-compiles the cell with the iteration's settings and
+prints the three roofline terms. Takes several minutes per cell (512-device
+SPMD compiles).
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse  # noqa: E402
+
+
+def _report(tag, res):
+    if res.status != "ok":
+        print(f"{tag}: {res.status} {res.note[:200]}")
+        return
+    rf = res.roofline
+    print(f"{tag}: comp={rf['compute_s']:.2f}s mem={rf['memory_s']:.2f}s "
+          f"coll={rf['collective_s']:.2f}s dom={rf['dominant']} "
+          f"frac={rf['fraction']:.4f} mem/dev={res.memory['total_per_device']/2**30:.1f}GiB")
+
+
+def cell_b():
+    from repro.launch.dryrun import run_cell
+
+    print("== Cell B: mixtral-8x22b x train_4k ==")
+    _report("B0 einsum-dispatch baseline",
+            run_cell("mixtral-8x22b", "train_4k", verbose=False, moe_dispatch="einsum"))
+    _report("B1 scatter dispatch",
+            run_cell("mixtral-8x22b", "train_4k", verbose=False))
+    _report("B2 +bf16 params",
+            run_cell("mixtral-8x22b", "train_4k", verbose=False, bf16_params=True))
+    _report("B3 +micro=8",
+            run_cell("mixtral-8x22b", "train_4k", verbose=False, bf16_params=True, microbatch=8))
+    _report("B4 +expert-parallel mesh",
+            run_cell("mixtral-8x22b", "train_4k", verbose=False, bf16_params=True,
+                     microbatch=8, ep=8))
+    _report("B5 +micro=4",
+            run_cell("mixtral-8x22b", "train_4k", verbose=False, bf16_params=True,
+                     microbatch=4, ep=8))
+
+
+def cell_a():
+    from repro.launch.dryrun import run_cell
+
+    print("== Cell A: granite-moe-3b-a800m x prefill_32k ==")
+    _report("A0 baseline", run_cell("granite-moe-3b-a800m", "prefill_32k", verbose=False))
+    _report("A1 einsum dispatch on EP mesh (counterfactual)",
+            run_cell("granite-moe-3b-a800m", "prefill_32k", verbose=False,
+                     ep=8, moe_dispatch="einsum"))
+    _report("A2 scatter + EP mesh",
+            run_cell("granite-moe-3b-a800m", "prefill_32k", verbose=False, ep=8))
+
+
+def cell_c():
+    from repro.launch.dryrun import run_cell
+
+    print("== Cell C: qwen1.5-110b x decode_32k ==")
+    _report("C0-4 flash-decoding baseline",
+            run_cell("qwen1.5-110b", "decode_32k", verbose=False))
+    _report("C5 weight-stationary decode TP",
+            run_cell("qwen1.5-110b", "decode_32k", verbose=False,
+                     rule_overrides={"batch": (), "embed": ("data",)}))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", default="all", choices=["A", "B", "C", "all"])
+    args = ap.parse_args()
+    if args.cell in ("B", "all"):
+        cell_b()
+    if args.cell in ("A", "all"):
+        cell_a()
+    if args.cell in ("C", "all"):
+        cell_c()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. ``--quick`` shrinks sizes for CI.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="smaller sizes")
+    ap.add_argument("--only", default="", help="substring filter on bench name")
+    args = ap.parse_args()
+
+    from benchmarks import (
+        bench_batched,
+        bench_dedup_scaling,
+        bench_engine_scaling,
+        bench_parallelism,
+        bench_reordering,
+        bench_resource_alloc,
+        bench_roofline,
+        bench_subset_splitting,
+    )
+
+    q = args.quick
+    suites = [
+        ("dedup_scaling(Table2)", lambda: bench_dedup_scaling.run(base_n=200 if q else 600)),
+        ("reordering(Fig9)", lambda: bench_reordering.run(n=400 if q else 1500)),
+        ("batched(Fig10a)", lambda: bench_batched.run(n=500 if q else 2000)),
+        ("engine_scaling(Fig4)", lambda: bench_engine_scaling.run(
+            small=150 if q else 500, medium=600 if q else 3000)),
+        ("subset_splitting(Fig4f)", lambda: bench_subset_splitting.run(n=800 if q else 4000)),
+        ("resource_alloc(Table4)", lambda: bench_resource_alloc.run(n=16 if q else 48)),
+        ("hier_parallelism(Fig10b)", lambda: bench_parallelism.run(n=200 if q else 800)),
+        ("roofline(section-g)", bench_roofline.run),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in suites:
+        if args.only and args.only not in name:
+            continue
+        print(f"# --- {name} ---")
+        try:
+            fn()
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

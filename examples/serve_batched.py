@@ -1,0 +1,69 @@
+"""Serve a small model with batched requests: prefill + decode through the
+model substrate's cache machinery (the same code paths the decode_32k
+dry-run cells exercise), then use the served model as a data-processing OP.
+
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.data.tokenizer import HashWordTokenizer
+from repro.models.model_zoo import build_model
+
+
+def main():
+    cfg = get_config("phi3-medium-14b", reduced=True)
+    model = build_model(cfg, remat_policy="none")
+    params = model.init_params(jax.random.PRNGKey(0))
+    tok = HashWordTokenizer(cfg.vocab_size)
+
+    requests = [
+        "data juicer processes multimodal corpora at cloud scale",
+        "adaptive operators probe the workload and reorder themselves",
+        "the union find merges duplicate documents into components",
+        "tpu pods shard the kv cache across the model axis",
+    ]
+    batch = len(requests)
+    prompt_len = 16
+    toks = np.zeros((batch, prompt_len), np.int32)
+    for i, r in enumerate(requests):
+        ids = tok.encode(r)[:prompt_len]
+        toks[i, : len(ids)] = ids
+
+    prefill = jax.jit(lambda p, b: model.prefill(p, b, cache_budget=32))
+    decode = jax.jit(model.decode_step)
+
+    t0 = time.time()
+    cache, logits = prefill(params, {"tokens": jnp.asarray(toks)})
+    jax.block_until_ready(logits)
+    t_prefill = time.time() - t0
+    print(f"prefill: batch={batch} x {prompt_len} tokens in {t_prefill * 1e3:.1f} ms")
+
+    generated = [[] for _ in range(batch)]
+    next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+    t0 = time.time()
+    n_steps = 24
+    for step in range(n_steps):
+        cache, logits = decode(
+            params, cache, {"token": next_tok, "pos": jnp.asarray(prompt_len + step)}
+        )
+        next_tok = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)[:, None]
+        for i in range(batch):
+            generated[i].append(int(next_tok[i, 0]))
+    jax.block_until_ready(next_tok)
+    dt = time.time() - t0
+    print(f"decode: {n_steps} steps x batch {batch} = {n_steps * batch} tokens "
+          f"in {dt * 1e3:.1f} ms ({n_steps * batch / dt:.0f} tok/s)")
+    for i, r in enumerate(requests):
+        print(f"  req[{i}] '{r[:40]}...' -> token ids {generated[i][:8]}...")
+
+    assert all(len(g) == n_steps for g in generated)
+    print("OK: batched prefill+decode served", batch, "requests")
+
+
+if __name__ == "__main__":
+    main()

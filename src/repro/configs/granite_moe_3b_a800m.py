@@ -1,0 +1,31 @@
+"""Granite-MoE-3B-A800M — 40 experts top-8 [hf:ibm-granite/granite-3.0-1b-a400m-base].
+
+The structured assignment field says "MoE 40e top-8"; the prose note says
+"32 experts". We follow the structured field (40 experts, top-8), which also
+matches the HF card for granite-3.0-3b-a800m. Recorded in DESIGN.md.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="granite-moe-3b-a800m",
+    family="moe",
+    n_layers=32,
+    d_model=1536,
+    n_heads=24,
+    n_kv_heads=8,
+    d_ff=512,
+    vocab_size=49155,
+    mlp_type="swiglu",
+    n_experts=40,
+    top_k=8,
+    source="hf:ibm-granite/granite-3.0-1b-a400m-base; hf",
+)
+
+
+def reduced() -> ModelConfig:
+    import dataclasses
+
+    return dataclasses.replace(
+        CONFIG, n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=32,
+        vocab_size=515, n_experts=8, top_k=4,
+    )

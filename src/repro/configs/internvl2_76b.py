@@ -1,0 +1,29 @@
+"""InternVL2-76B — InternViT + InternLM2 backbone [arXiv:2404.16821].
+
+The assignment specifies the transformer BACKBONE only; the vision frontend
+is a stub (``input_specs()`` supplies precomputed patch embeddings).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="internvl2-76b",
+    family="vlm",
+    n_layers=80,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=28672,
+    vocab_size=128256,
+    mlp_type="swiglu",
+    n_patches=256,
+    source="arXiv:2404.16821; unverified",
+)
+
+
+def reduced() -> ModelConfig:
+    import dataclasses
+
+    return dataclasses.replace(
+        CONFIG, n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+        vocab_size=512, n_patches=8,
+    )

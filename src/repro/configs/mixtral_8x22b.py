@@ -1,0 +1,27 @@
+"""Mixtral-8x22B — 8 experts top-2, sliding-window attention [arXiv:2401.04088]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="mixtral-8x22b",
+    family="moe",
+    n_layers=56,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    d_ff=16384,
+    vocab_size=32768,
+    mlp_type="swiglu",
+    n_experts=8,
+    top_k=2,
+    attn_window=4096,  # SWA per the assignment spec -> sub-quadratic
+    source="arXiv:2401.04088; hf",
+)
+
+
+def reduced() -> ModelConfig:
+    import dataclasses
+
+    return dataclasses.replace(
+        CONFIG, n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=96,
+        vocab_size=512, n_experts=4, top_k=2, attn_window=16,
+    )

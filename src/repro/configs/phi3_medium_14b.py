@@ -1,0 +1,24 @@
+"""Phi-3-medium 14B — RoPE, SwiGLU, GQA [arXiv:2404.14219]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="phi3-medium-14b",
+    family="dense",
+    n_layers=40,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=10,
+    d_ff=17920,
+    vocab_size=100352,
+    mlp_type="swiglu",
+    source="arXiv:2404.14219; unverified",
+)
+
+
+def reduced() -> ModelConfig:
+    import dataclasses
+
+    return dataclasses.replace(
+        CONFIG, n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+        vocab_size=512,
+    )

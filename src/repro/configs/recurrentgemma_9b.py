@@ -1,0 +1,30 @@
+"""RecurrentGemma-9B (Griffin) — RG-LRU + local attention, 1 attn : 2 recurrent
+[arXiv:2402.19427]. MQA (kv=1) local attention with a 2048 window.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="recurrentgemma-9b",
+    family="hybrid",
+    n_layers=38,
+    d_model=4096,
+    n_heads=16,
+    n_kv_heads=1,
+    head_dim=256,
+    d_ff=12288,
+    vocab_size=256000,
+    mlp_type="swiglu",
+    hybrid_pattern=("rec", "rec", "attn"),
+    lru_width=4096,
+    local_window=2048,
+    source="arXiv:2402.19427; unverified",
+)
+
+
+def reduced() -> ModelConfig:
+    import dataclasses
+
+    return dataclasses.replace(
+        CONFIG, n_layers=5, d_model=64, n_heads=4, n_kv_heads=1, head_dim=16,
+        d_ff=128, vocab_size=512, lru_width=64, local_window=16,
+    )

@@ -1,0 +1,29 @@
+"""StarCoder2-15B — GQA, RoPE [arXiv:2402.19173].
+
+Standard (non-gated) GELU MLP; d_ff = 4 * d_model. QKV uses bias in the HF
+reference; the assignment line lists GQA+RoPE only, bias kept (hf card).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="starcoder2-15b",
+    family="dense",
+    n_layers=40,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=4,
+    d_ff=24576,
+    vocab_size=49152,
+    mlp_type="gelu",
+    qkv_bias=True,
+    source="arXiv:2402.19173; hf",
+)
+
+
+def reduced() -> ModelConfig:
+    import dataclasses
+
+    return dataclasses.replace(
+        CONFIG, n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=256,
+        vocab_size=512,
+    )

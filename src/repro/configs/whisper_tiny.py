@@ -1,0 +1,32 @@
+"""Whisper-tiny — encoder-decoder, conv frontend STUB [arXiv:2212.04356].
+
+``input_specs()`` provides precomputed frame embeddings (batch, 1500, 384)
+for the encoder; the decoder is a standard causal transformer with
+cross-attention. No RoPE (learned/sinusoidal positions), GELU MLP.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="whisper-tiny",
+    family="encdec",
+    n_layers=4,       # decoder layers
+    n_enc_layers=4,
+    d_model=384,
+    n_heads=6,
+    n_kv_heads=6,
+    d_ff=1536,
+    vocab_size=51865,
+    mlp_type="gelu",
+    qkv_bias=True,
+    src_len=1500,
+    source="arXiv:2212.04356; unverified",
+)
+
+
+def reduced() -> ModelConfig:
+    import dataclasses
+
+    return dataclasses.replace(
+        CONFIG, n_layers=2, n_enc_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=4, d_ff=128, vocab_size=512, src_len=32,
+    )

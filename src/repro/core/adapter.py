@@ -1,0 +1,122 @@
+"""Adapter: runtime probing + automatic adaptation (paper §5.2, Appendix F).
+
+  * ``probe_small_batch`` — estimate per-OP speed & memory on
+    min(1000, len(dataset)) random samples (paper default).
+  * adaptive batch size   — saturation search (Fig. 10a: gains plateau
+    >=100, default 1000).
+  * automatic resource allocation — model-based OPs get parallelism
+    ``min(cpu_budget, accel_mem // gpu_mem_required)`` (Table 4 semantics:
+    prevents OOM while maximising occupancy); I/O-bound OPs get a thread
+    multiplier (hierarchical parallelism, Fig. 10b).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+import tracemalloc
+from typing import Any, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.ops_base import Filter, Operator
+
+PROBE_CAP = 1000
+
+
+@dataclasses.dataclass
+class OpProbe:
+    name: str
+    speed: float  # samples / sec
+    mem_peak: int  # bytes
+    retention: float  # fraction of samples kept (Filters)
+
+
+@dataclasses.dataclass
+class ResourcePlan:
+    n_procs: int
+    n_threads: int
+    batch_size: int
+    note: str = ""
+
+
+class Adapter:
+    def __init__(
+        self,
+        cpu_budget: Optional[int] = None,
+        mem_budget: int = 8 * 2**30,
+        accel_mem: int = 0,  # per-accelerator bytes (0 = host only)
+        n_accel: int = 0,
+        utilization_target: float = 0.9,
+    ):
+        import os
+
+        self.cpu_budget = cpu_budget or max(1, (os.cpu_count() or 2) - 1)
+        self.mem_budget = mem_budget
+        self.accel_mem = accel_mem
+        self.n_accel = n_accel
+        self.utilization_target = utilization_target
+        self.probes: Dict[str, OpProbe] = {}
+
+    # ------------------------------------------------------------------
+    def probe_small_batch(
+        self, samples: Sequence[dict], ops: Sequence[Operator],
+        cap: int = PROBE_CAP, seed: int = 0,
+    ) -> Dict[str, OpProbe]:
+        """Apply each OP to a small random subset; record speed/mem/retention."""
+        n = min(cap, len(samples))
+        rng = np.random.default_rng(seed)
+        idx = rng.choice(len(samples), size=n, replace=False)
+        subset = [dict(samples[int(i)]) for i in idx]
+        for op in ops:
+            op.setup()
+            probe_in = [dict(s) for s in subset]
+            tracemalloc.start()
+            t0 = time.time()
+            out = op.run_batch_safe(probe_in)
+            dt = max(time.time() - t0, 1e-9)
+            _, peak = tracemalloc.get_traced_memory()
+            tracemalloc.stop()
+            retention = len(out) / max(1, len(probe_in)) if isinstance(op, Filter) else 1.0
+            p = OpProbe(op.name, n / dt, int(peak), retention)
+            self.probes[op.name] = p
+            op.probed_speed = p.speed
+        return self.probes
+
+    # ------------------------------------------------------------------
+    def adaptive_batch_size(
+        self, samples: Sequence[dict], op: Operator,
+        candidates: Sequence[int] = (1, 10, 100, 1000),
+        plateau: float = 1.10,
+    ) -> int:
+        """Pick the smallest batch size within 10% of the best throughput
+        (Fig. 10a: 100+ saturates; 1000 default)."""
+        n = min(PROBE_CAP, len(samples))
+        subset = [dict(s) for s in samples[:n]]
+        op.setup()
+        speeds: Dict[int, float] = {}
+        for bs in candidates:
+            t0 = time.time()
+            for i in range(0, n, bs):
+                op.run_batch_safe([dict(s) for s in subset[i : i + bs]], i)
+            speeds[bs] = n / max(time.time() - t0, 1e-9)
+        best = max(speeds.values())
+        for bs in sorted(speeds):
+            if speeds[bs] * plateau >= best:
+                return bs
+        return max(speeds, key=speeds.get)
+
+    # ------------------------------------------------------------------
+    def resource_plan(self, op: Operator, batch_size: int = 1000) -> ResourcePlan:
+        """OP-wise parallelism (paper §F.2 / Table 4)."""
+        probe = self.probes.get(op.name)
+        mem_per_proc = max(op.mem_required, probe.mem_peak if probe else 0, 1)
+        n_by_mem = max(1, int(self.mem_budget * self.utilization_target // mem_per_proc))
+        n_procs = min(self.cpu_budget, n_by_mem)
+        note = "cpu/mem bound"
+        if op.uses_model and self.n_accel > 0 and op.gpu_mem_required > 0:
+            per_accel = max(1, int(self.accel_mem // op.gpu_mem_required))
+            n_procs = min(n_procs, per_accel * self.n_accel)
+            note = f"accel: {per_accel} instances x {self.n_accel} devices"
+        n_threads = 4 if op.io_intensive else 1
+        return ResourcePlan(n_procs=n_procs, n_threads=n_threads,
+                            batch_size=batch_size, note=note)

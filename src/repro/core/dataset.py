@@ -1,0 +1,133 @@
+"""Data-Juicer-Dataset: the engine-agnostic facade (paper §5.1).
+
+Chainable ``process()`` (single OP, chained calls, or a list), unified
+across Local / Parallel / Sharded engines, with sample-level fault
+tolerance, dataset-level OP handling (Deduplicator / Selector / Grouper /
+Aggregator) and per-OP lineage stats for insight mining.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Union
+
+import numpy as np
+
+from repro.core import schema as S
+from repro.core.engine import LocalEngine, make_engine
+from repro.core.ops_base import (
+    Aggregator, Deduplicator, Filter, Grouper, Operator, Selector,
+)
+from repro.core.storage import SampleBlock, read_jsonl, split_blocks, write_jsonl
+
+Sample = Dict[str, Any]
+GROUP_KEY = "__group__"
+
+
+class DJDataset:
+    def __init__(self, blocks: List[SampleBlock], engine=None, lineage: Optional[List[dict]] = None):
+        self.blocks = blocks
+        self.engine = engine or LocalEngine()
+        self.lineage: List[dict] = lineage or []
+
+    # ------------------------------------------------------------------
+    # construction / export
+    # ------------------------------------------------------------------
+    @classmethod
+    def from_samples(cls, samples: Iterable[Sample], engine=None, n_blocks_hint: int = 1):
+        samples = list(samples)
+        n_workers = getattr(engine, "n_workers", n_blocks_hint) or 1
+        total = max(1, len(samples))
+        blocks = split_blocks(samples, n_workers=max(n_workers, n_blocks_hint),
+                              total_hint_bytes=total * 256)
+        return cls(blocks, engine)
+
+    @classmethod
+    def load(cls, src: Union[str, Iterable[Sample]], engine=None,
+             validator=None, limit: Optional[int] = None):
+        """DatasetBuilder entry: path (jsonl/.zst) or iterable of samples."""
+        if isinstance(src, str):
+            samples = list(read_jsonl(src, limit=limit))
+        else:
+            samples = list(src)
+        if validator is not None:
+            validator.validate(samples)
+        return cls.from_samples(samples, engine)
+
+    def export(self, path: str) -> int:
+        return write_jsonl(path, self.samples())
+
+    # ------------------------------------------------------------------
+    def samples(self) -> List[Sample]:
+        return [s for b in self.blocks for s in b.samples]
+
+    def __len__(self):
+        return sum(len(b) for b in self.blocks)
+
+    def __iter__(self):
+        for b in self.blocks:
+            yield from b.samples
+
+    def stats_column(self, key: str) -> np.ndarray:
+        vals = [s.get("stats", {}).get(key) for s in self]
+        return np.asarray([v for v in vals if v is not None])
+
+    # ------------------------------------------------------------------
+    # processing
+    # ------------------------------------------------------------------
+    def process(self, ops: Union[Operator, Sequence[Operator]],
+                batch_size: Optional[int] = None, drop_empty: bool = True,
+                monitor: Optional[list] = None) -> "DJDataset":
+        if isinstance(ops, Operator):
+            ops = [ops]
+        ds = self
+        for op in ops:
+            ds = ds._process_one(op, batch_size, drop_empty, monitor)
+        return ds
+
+    def _process_one(self, op: Operator, batch_size, drop_empty, monitor) -> "DJDataset":
+        t0 = time.time()
+        n_before = len(self)
+        bs = batch_size or op.default_batch_size
+
+        if isinstance(op, (Deduplicator, Selector, Grouper)):
+            op.setup()
+            samples = self.samples()
+            if isinstance(op, Deduplicator):
+                out = op.dedup(samples)
+            elif isinstance(op, Selector):
+                out = op.select(samples)
+            else:  # Grouper
+                out = [{GROUP_KEY: g, "meta": {}, "stats": {}} for g in op.group(samples)]
+            new_blocks = split_blocks(out, n_workers=max(1, len(self.blocks)))
+        elif isinstance(op, Aggregator):
+            op.setup()
+            out = []
+            for s in self.samples():
+                if GROUP_KEY in s:
+                    out.append(op.run_batch_safe(s[GROUP_KEY])[0]
+                               if s[GROUP_KEY] else S.empty_like({"text": ""}))
+                else:
+                    out.append(s)
+            # non-grouped input: aggregate everything into one sample
+            if out and not any(GROUP_KEY in s for s in self.samples()):
+                out = op.run_batch_safe(self.samples())
+            new_blocks = split_blocks(out, n_workers=max(1, len(self.blocks)))
+        else:
+            new_blocks, _ = self.engine.map_batches(op, self.blocks, bs)
+
+        if drop_empty:
+            new_blocks = [
+                SampleBlock([s for s in b.samples if not S.is_empty(s)]) for b in new_blocks
+            ]
+            new_blocks = [b for b in new_blocks if len(b)] or [SampleBlock([])]
+
+        dt = time.time() - t0
+        n_after = sum(len(b) for b in new_blocks)
+        entry = {
+            "op": op.name, "seconds": dt, "in": n_before, "out": n_after,
+            "errors": len(op.errors),
+            "speed": n_before / dt if dt > 0 else float("inf"),
+        }
+        if monitor is not None:
+            monitor.append(entry)
+        return DJDataset(new_blocks, self.engine, self.lineage + [entry])

@@ -1,0 +1,163 @@
+"""MinHash-LSH fuzzy deduplication (paper §E.1, Table 2; Broder [5,6]).
+
+Pipeline: shingle -> 64-bit shingle hashes -> P permuted min-hashes
+(signature) -> LSH banding -> candidate pairs via HASH-BASED AGGREGATION
+(band-hash dict, not a sort/groupby shuffle — one of the two tricks behind
+the paper's 3.3x) -> load-balanced union-find -> keep one doc per component.
+
+Signature computation is vectorized numpy on the host and has a Pallas TPU
+kernel (``repro.kernels.minhash``) for the accelerator path — it is the
+embarrassingly-parallel 99% of dedup compute.
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+MERSENNE61 = (1 << 61) - 1
+_MAXU32 = np.uint64(0xFFFFFFFF)
+
+
+def shingle_hashes(text: str, n: int = 5, max_shingles: int = 512) -> np.ndarray:
+    """Word-level n-gram shingles -> uint64 hashes (stable across runs)."""
+    words = text.split()
+    if len(words) < n:
+        grams = [" ".join(words)] if words else [""]
+    else:
+        grams = [" ".join(words[i : i + n]) for i in range(len(words) - n + 1)]
+    if len(grams) > max_shingles:
+        step = len(grams) / max_shingles
+        grams = [grams[int(i * step)] for i in range(max_shingles)]
+    out = np.empty(len(grams), dtype=np.uint64)
+    for i, g in enumerate(grams):
+        out[i] = np.frombuffer(
+            hashlib.blake2b(g.encode("utf-8"), digest_size=8).digest(), dtype=np.uint64
+        )[0]
+    return out
+
+
+def make_permutations(n_perm: int, seed: int = 42) -> Tuple[np.ndarray, np.ndarray]:
+    rng = np.random.default_rng(seed)
+    a = rng.integers(1, MERSENNE61 - 1, size=n_perm, dtype=np.uint64)
+    b = rng.integers(0, MERSENNE61 - 1, size=n_perm, dtype=np.uint64)
+    return a, b
+
+
+def signature_ref(hashes: np.ndarray, a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """Oracle minhash signature: min over shingles of (a*h + b) mod M61,
+    folded to 32 bits. hashes (S,), a/b (P,) -> (P,) uint32."""
+    if hashes.size == 0:
+        return np.full(a.shape, 0xFFFFFFFF, dtype=np.uint32)
+    h = hashes[None, :].astype(np.uint64)
+    vals = (a[:, None] * h + b[:, None]) % np.uint64(MERSENNE61)
+    folded = (vals & _MAXU32) ^ (vals >> np.uint64(32))
+    return folded.min(axis=1).astype(np.uint32)
+
+
+def signatures_batch(
+    docs: Sequence[np.ndarray], n_perm: int = 128, seed: int = 42,
+    use_kernel: bool = False,
+) -> np.ndarray:
+    """(n_docs, n_perm) uint32 signatures. ``use_kernel`` routes through the
+    Pallas TPU kernel (interpret mode on CPU)."""
+    a, b = make_permutations(n_perm, seed)
+    if use_kernel:
+        from repro.kernels.minhash.ops import minhash_signatures
+
+        max_s = max((d.size for d in docs), default=1) or 1
+        padded = np.zeros((len(docs), max_s), dtype=np.uint64)
+        mask = np.zeros((len(docs), max_s), dtype=bool)
+        for i, d in enumerate(docs):
+            padded[i, : d.size] = d
+            mask[i, : d.size] = True
+        return np.asarray(minhash_signatures(padded, mask, a, b))
+    out = np.empty((len(docs), n_perm), dtype=np.uint32)
+    for i, d in enumerate(docs):
+        out[i] = signature_ref(d, a, b)
+    return out
+
+
+def lsh_bands(signatures: np.ndarray, n_bands: int) -> np.ndarray:
+    """Hash each band of each signature -> (n_docs, n_bands) uint64 keys."""
+    n_docs, n_perm = signatures.shape
+    assert n_perm % n_bands == 0
+    r = n_perm // n_bands
+    bands = signatures.reshape(n_docs, n_bands, r).astype(np.uint64)
+    # polynomial band hash (vectorized)
+    key = np.zeros((n_docs, n_bands), dtype=np.uint64)
+    mult = np.uint64(1099511628211)
+    for i in range(r):
+        key = key * mult + bands[:, :, i]
+    return key
+
+
+def candidate_pairs_hash_agg(band_keys: np.ndarray) -> List[Tuple[int, int]]:
+    """Hash-based aggregation: bucket docs by (band, key) in a dict and emit
+    star edges to the bucket head — avoids the expensive sort/groupby
+    shuffle of LSH-on-big-data-engines (paper: 'hash-based aggregation')."""
+    pairs: List[Tuple[int, int]] = []
+    n_docs, n_bands = band_keys.shape
+    for band in range(n_bands):
+        buckets: Dict[int, int] = {}
+        col = band_keys[:, band]
+        for doc in range(n_docs):
+            k = int(col[doc])
+            head = buckets.get(k)
+            if head is None:
+                buckets[k] = doc
+            else:
+                pairs.append((head, doc))
+    return pairs
+
+
+def jaccard(a: np.ndarray, b: np.ndarray) -> float:
+    sa, sb = set(a.tolist()), set(b.tolist())
+    if not sa and not sb:
+        return 1.0
+    return len(sa & sb) / max(1, len(sa | sb))
+
+
+def minhash_dedup_indices(
+    texts: Sequence[str],
+    n_perm: int = 128,
+    n_bands: int = 16,
+    ngram: int = 5,
+    jaccard_threshold: float = 0.7,
+    verify_jaccard: bool = True,
+    backend: str = "balanced",  # balanced | naive
+    n_partitions: int = 8,
+    use_kernel: bool = False,
+    seed: int = 42,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Returns (keep_mask (n,), component_id (n,))."""
+    from repro.core.dedup.unionfind import (
+        BalancedUnionFind, naive_components, partitioned_union,
+    )
+
+    n = len(texts)
+    if n == 0:
+        return np.zeros(0, bool), np.zeros(0, np.int64)
+    docs = [shingle_hashes(t, n=ngram) for t in texts]
+    sigs = signatures_batch(docs, n_perm=n_perm, seed=seed, use_kernel=use_kernel)
+    keys = lsh_bands(sigs, n_bands)
+    pairs = candidate_pairs_hash_agg(keys)
+    if verify_jaccard and jaccard_threshold > 0:
+        pairs = [
+            (a, b) for a, b in pairs
+            if jaccard(docs[a], docs[b]) >= jaccard_threshold
+        ]
+    if backend == "naive":
+        comp = naive_components(n, pairs)
+    else:
+        uf = partitioned_union(n, pairs, n_partitions=n_partitions)
+        comp = uf.components()
+    keep = np.zeros(n, dtype=bool)
+    seen: Dict[int, bool] = {}
+    for i in range(n):
+        c = int(comp[i])
+        if c not in seen:
+            seen[c] = True
+            keep[i] = True
+    return keep, comp

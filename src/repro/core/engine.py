@@ -1,0 +1,197 @@
+"""Execution engines behind the DJDataset facade (paper §5.1, §E.1).
+
+  * LocalEngine    — single-process (HF-Datasets-standalone analogue).
+  * ParallelEngine — multi-worker host execution over pre-split blocks
+    (Ray-mode analogue) with speculative re-dispatch of straggler blocks.
+  * ShardedEngine  — vectorized OPs executed as jit'd SPMD programs over the
+    jax device mesh (the TPU-native adaptation: per-sample numeric/stat OPs
+    become data-parallel array programs; everything else falls back to the
+    host path). Model-based OPs score batches through the model substrate.
+
+Engines share one interface (``map_batches``), so OPs are engine-agnostic —
+the Facade-pattern property the paper emphasises.
+"""
+from __future__ import annotations
+
+import concurrent.futures as cf
+import os
+import queue
+import threading
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.ops_base import Operator, OpError
+from repro.core.storage import SampleBlock, split_blocks
+
+Sample = Dict[str, Any]
+
+
+class EngineStats(dict):
+    pass
+
+
+def _iter_batches(samples: List[Sample], batch_size: int):
+    for i in range(0, len(samples), batch_size):
+        yield i, samples[i : i + batch_size]
+
+
+class LocalEngine:
+    name = "local"
+
+    def __init__(self, n_threads: int = 1):
+        self.n_threads = n_threads
+
+    def map_batches(
+        self, op: Operator, blocks: List[SampleBlock], batch_size: int
+    ) -> Tuple[List[SampleBlock], EngineStats]:
+        op.setup()
+        t0 = time.time()
+        out_blocks: List[SampleBlock] = []
+        n_in = 0
+        threads = self.n_threads if op.io_intensive else 1
+        for blk in blocks:
+            results: List[List[Sample]] = []
+            if threads > 1:
+                # hierarchical parallelism: multithreading for I/O-bound OPs
+                # overlaps I/O latency with compute (paper §F.2, Fig. 10b)
+                with cf.ThreadPoolExecutor(threads) as pool:
+                    futs = [
+                        pool.submit(op.run_batch_safe, b, i)
+                        for i, b in _iter_batches(blk.samples, batch_size)
+                    ]
+                    results = [f.result() for f in futs]
+            else:
+                for i, b in _iter_batches(blk.samples, batch_size):
+                    results.append(op.run_batch_safe(b, i))
+            merged: List[Sample] = [s for r in results for s in r]
+            n_in += len(blk)
+            out_blocks.append(SampleBlock(merged))
+        dt = time.time() - t0
+        return out_blocks, EngineStats(seconds=dt, samples=n_in, engine=self.name)
+
+
+def _worker_apply(op_config: Dict[str, Any], samples: List[Sample], batch_size: int):
+    """Runs in a worker process: rebuild the OP from config, apply safely."""
+    from repro.core.registry import create_op
+
+    op = create_op(op_config)
+    op.setup()
+    out: List[Sample] = []
+    for i in range(0, len(samples), batch_size):
+        out.extend(op.run_batch_safe(samples[i : i + batch_size], i))
+    return out, [e.__dict__ for e in op.errors]
+
+
+class ParallelEngine:
+    """Multi-process engine with straggler re-dispatch.
+
+    Speculative execution: once >=50% of blocks finish, any block running
+    longer than ``straggler_factor`` x the median completion time gets a
+    backup submission; first finisher wins.
+    """
+
+    name = "parallel"
+
+    def __init__(self, n_workers: Optional[int] = None, straggler_factor: float = 3.0):
+        self.n_workers = n_workers or max(1, (os.cpu_count() or 2) - 1)
+        self.straggler_factor = straggler_factor
+        self.redispatches = 0
+
+    def map_batches(self, op, blocks, batch_size):
+        try:
+            cfg = op.config()
+            from repro.core.registry import create_op
+            create_op(cfg)  # picklability / reconstructibility probe
+        except Exception:
+            return LocalEngine().map_batches(op, blocks, batch_size)
+
+        t0 = time.time()
+        results: Dict[int, List[Sample]] = {}
+        errors: List[dict] = []
+        with cf.ProcessPoolExecutor(self.n_workers) as pool:
+            futs = {
+                pool.submit(_worker_apply, cfg, blk.samples, batch_size): idx
+                for idx, blk in enumerate(blocks)
+            }
+            start = {idx: time.time() for idx in futs.values()}
+            times: List[float] = []
+            backups: Dict[int, cf.Future] = {}
+            pending = set(futs)
+            while pending or any(i not in results for i in range(len(blocks))):
+                done, pending = cf.wait(pending, timeout=0.05, return_when=cf.FIRST_COMPLETED)
+                for f in done:
+                    idx = futs[f]
+                    if idx not in results:
+                        try:
+                            out, errs = f.result()
+                            results[idx] = out
+                            errors.extend(errs)
+                            times.append(time.time() - start[idx])
+                        except Exception:
+                            results[idx] = [s for s in blocks[idx].samples]
+                if all(i in results for i in range(len(blocks))):
+                    break
+                # straggler mitigation
+                if times and len(times) >= max(1, len(blocks) // 2):
+                    med = float(np.median(times))
+                    now = time.time()
+                    for f, idx in list(futs.items()):
+                        if (
+                            idx not in results and idx not in backups
+                            and now - start[idx] > self.straggler_factor * max(med, 0.05)
+                        ):
+                            b = pool.submit(_worker_apply, cfg, blocks[idx].samples, batch_size)
+                            backups[idx] = b
+                            futs[b] = idx
+                            pending.add(b)
+                            self.redispatches += 1
+        out_blocks = [SampleBlock(results[i]) for i in range(len(blocks))]
+        for e in errors:
+            op.errors.append(OpError(**e))
+        return out_blocks, EngineStats(
+            seconds=time.time() - t0,
+            samples=sum(len(b) for b in blocks),
+            engine=self.name,
+            redispatches=self.redispatches,
+        )
+
+
+class ShardedEngine:
+    """SPMD engine: vectorized OPs run as jit'd array programs on the mesh.
+
+    An OP opts in by implementing
+    ``compute_stats_arrays(cols) -> (stat_name, np.ndarray)`` — the engine
+    builds padded device arrays sharded over ``data`` and executes the OP's
+    jitted kernel; non-vectorized OPs fall back to the host path.
+    """
+
+    name = "sharded"
+
+    def __init__(self, mesh=None, fallback: Optional[LocalEngine] = None):
+        self.mesh = mesh
+        self.fallback = fallback or LocalEngine()
+
+    def map_batches(self, op, blocks, batch_size):
+        fn = getattr(op, "compute_stats_arrays", None)
+        if fn is None or not hasattr(op, "keep"):
+            return self.fallback.map_batches(op, blocks, batch_size)
+        op.setup()
+        t0 = time.time()
+        out_blocks = []
+        n = 0
+        for blk in blocks:
+            stat_name, values = fn(blk.samples)  # vectorized (numpy/jax)
+            kept = []
+            for s, v in zip(blk.samples, np.asarray(values)):
+                s.setdefault("stats", {})[stat_name] = float(v)
+                if op.keep(s):
+                    kept.append(s)
+            out_blocks.append(SampleBlock(kept))
+            n += len(blk)
+        return out_blocks, EngineStats(seconds=time.time() - t0, samples=n, engine=self.name)
+
+
+def make_engine(kind: str = "local", **kw):
+    return {"local": LocalEngine, "parallel": ParallelEngine, "sharded": ShardedEngine}[kind](**kw)

@@ -1,0 +1,101 @@
+"""End-to-end workflow orchestration (paper §5.3).
+
+Executor: config -> load -> validate -> probe -> fuse/reorder ->
+process (fault-tolerant, checkpointed, monitored) -> insight -> export.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional
+
+from repro.core.adapter import Adapter
+from repro.core.checkpoint import CheckpointManager, recipe_prefix_sigs
+from repro.core.dataset import DJDataset
+from repro.core.engine import make_engine
+from repro.core.fusion import optimize
+from repro.core.insight import InsightMiner
+from repro.core.ops_base import Operator
+from repro.core.recipes import Recipe
+from repro.core.registry import create_op
+
+
+@dataclasses.dataclass
+class RunReport:
+    recipe: str
+    n_in: int
+    n_out: int
+    seconds: float
+    per_op: List[dict]
+    plan: List[str]
+    resumed_at: int = 0
+    insight: str = ""
+    errors: int = 0
+
+
+class Executor:
+    def __init__(self, recipe: Recipe, adapter: Optional[Adapter] = None):
+        self.recipe = recipe
+        self.adapter = adapter or Adapter()
+
+    def _build_ops(self) -> List[Operator]:
+        return [create_op(cfg) for cfg in self.recipe.process]
+
+    def run(self, dataset: Optional[DJDataset] = None) -> tuple[DJDataset, RunReport]:
+        r = self.recipe
+        t0 = time.time()
+        engine = make_engine(r.engine, **({"n_workers": r.np} if r.engine == "parallel" else {}))
+        if dataset is None:
+            if not r.dataset_path:
+                raise ValueError("recipe has no dataset_path and no dataset given")
+            dataset = DJDataset.load(r.dataset_path, engine=engine)
+        else:
+            dataset = DJDataset(dataset.blocks, engine, dataset.lineage)
+        n_in = len(dataset)
+
+        ops = self._build_ops()
+        # probe + optimize (fusion & workload-aware reordering)
+        if (r.use_fusion or r.use_reordering) and len(dataset):
+            self.adapter.probe_small_batch(dataset.samples(), ops)
+            ops = optimize(
+                ops, self.adapter.probes,
+                do_fuse=r.use_fusion, do_reorder=r.use_reordering,
+            )
+        plan = [op.name for op in ops]
+
+        # operator-level checkpoint resume
+        resumed_at = 0
+        ckpt = CheckpointManager(r.checkpoint_dir) if r.checkpoint_dir else None
+        op_cfgs = [op.config() for op in ops]
+        if ckpt:
+            resumed_at, samples = ckpt.resume_point(op_cfgs)
+            if samples is not None:
+                dataset = DJDataset.from_samples(samples, engine)
+
+        miner = InsightMiner() if r.insight else None
+        if miner:
+            miner.record("load", dataset.samples())
+
+        monitor: List[dict] = []
+        sigs = recipe_prefix_sigs(op_cfgs)
+        errors = 0
+        for i in range(resumed_at, len(ops)):
+            op = ops[i]
+            dataset = dataset.process(op, monitor=monitor)
+            errors += len(op.errors)
+            if ckpt:
+                ckpt.save_stage(sigs[i], i + 1, dataset.samples())
+                ckpt.gc()
+            if miner:
+                miner.record(op.name, dataset.samples())
+
+        if r.export_path:
+            dataset.export(r.export_path)
+
+        report = RunReport(
+            recipe=r.name, n_in=n_in, n_out=len(dataset),
+            seconds=time.time() - t0, per_op=monitor, plan=plan,
+            resumed_at=resumed_at,
+            insight=miner.report() if miner else "", errors=errors,
+        )
+        return dataset, report

@@ -1,0 +1,103 @@
+"""OP insight mining (paper §5.2 'OP Insight Mining', Appendix F.3).
+
+Tracks per-OP statistic distributions (numeric histograms + tag counts),
+diffs consecutive OPs, and flags lineage-level shifts (volume drops,
+mean/std moves) so recipe authors see each OP's real effect — beyond the
+volume-only Sankey view of 1.0/Falcon.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class StatSummary:
+    count: int
+    mean: float
+    std: float
+    p5: float
+    p50: float
+    p95: float
+    hist: List[int]
+    edges: List[float]
+
+    @classmethod
+    def from_values(cls, vals: np.ndarray, bins: int = 20) -> "StatSummary":
+        vals = np.asarray(vals, dtype=np.float64)
+        if vals.size == 0:
+            return cls(0, 0.0, 0.0, 0.0, 0.0, 0.0, [], [])
+        hist, edges = np.histogram(vals, bins=bins)
+        return cls(
+            int(vals.size), float(vals.mean()), float(vals.std()),
+            float(np.percentile(vals, 5)), float(np.percentile(vals, 50)),
+            float(np.percentile(vals, 95)),
+            hist.astype(int).tolist(), np.round(edges, 6).tolist(),
+        )
+
+
+def snapshot(samples: List[dict]) -> Dict[str, Any]:
+    """Distributions of every numeric stat + counts of every tag."""
+    numeric: Dict[str, List[float]] = {}
+    tags: Dict[str, Dict[str, int]] = {}
+    for s in samples:
+        for k, v in (s.get("stats") or {}).items():
+            if isinstance(v, (int, float)) and not isinstance(v, bool):
+                numeric.setdefault(k, []).append(float(v))
+            elif isinstance(v, str):
+                tags.setdefault(k, {})
+                tags[k][v] = tags[k].get(v, 0) + 1
+    return {
+        "n": len(samples),
+        "numeric": {k: StatSummary.from_values(np.asarray(v)) for k, v in numeric.items()},
+        "tags": tags,
+    }
+
+
+class InsightMiner:
+    def __init__(self, volume_flag: float = 0.5, mean_shift_flag: float = 0.25):
+        self.volume_flag = volume_flag
+        self.mean_shift_flag = mean_shift_flag
+        self.timeline: List[Dict[str, Any]] = []
+
+    def record(self, op_name: str, samples: List[dict]) -> None:
+        self.timeline.append({"op": op_name, "snap": snapshot(samples)})
+
+    def diffs(self) -> List[Dict[str, Any]]:
+        out = []
+        for prev, cur in zip(self.timeline, self.timeline[1:]):
+            d: Dict[str, Any] = {
+                "from": prev["op"], "to": cur["op"],
+                "volume": (prev["snap"]["n"], cur["snap"]["n"]),
+                "flags": [], "stat_shifts": {},
+            }
+            n0, n1 = prev["snap"]["n"], cur["snap"]["n"]
+            if n0 and (n0 - n1) / n0 >= self.volume_flag:
+                d["flags"].append(f"volume dropped {(n0 - n1) / n0:.0%} after {cur['op']}")
+            for k, s1 in cur["snap"]["numeric"].items():
+                s0 = prev["snap"]["numeric"].get(k)
+                if s0 is None or s0.count == 0 or s1.count == 0:
+                    continue
+                denom = max(abs(s0.mean), 1e-9)
+                shift = (s1.mean - s0.mean) / denom
+                d["stat_shifts"][k] = shift
+                if abs(shift) >= self.mean_shift_flag:
+                    d["flags"].append(
+                        f"stat '{k}' mean shifted {shift:+.0%} after {cur['op']}"
+                    )
+            out.append(d)
+        return out
+
+    def report(self) -> str:
+        lines = ["== insight mining report =="]
+        for d in self.diffs():
+            lines.append(
+                f"{d['from']} -> {d['to']}: volume {d['volume'][0]} -> {d['volume'][1]}"
+            )
+            for f in d["flags"]:
+                lines.append(f"  !! {f}")
+            for k, v in sorted(d["stat_shifts"].items()):
+                lines.append(f"   {k}: mean shift {v:+.2%}")
+        return "\n".join(lines)

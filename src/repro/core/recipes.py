@@ -1,0 +1,104 @@
+"""Data recipes: end-to-end pipeline configs (paper Fig. 6).
+
+Recipes are dicts (JSON-native) with a minimal YAML-subset parser so the
+paper's YAML-recipe workflow works offline (PyYAML is unavailable):
+top-level scalars, one level of nesting, and `process:` lists of
+`- op_name:` blocks with scalar args.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Union
+
+import orjson
+
+
+@dataclasses.dataclass
+class Recipe:
+    name: str = "recipe"
+    dataset_path: Optional[str] = None
+    export_path: Optional[str] = None
+    process: List[Dict[str, Any]] = dataclasses.field(default_factory=list)
+    np: int = 1  # worker count
+    engine: str = "local"
+    use_fusion: bool = True
+    use_reordering: bool = True
+    checkpoint_dir: Optional[str] = None
+    insight: bool = False
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "Recipe":
+        known = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in known})
+
+    @classmethod
+    def load(cls, path: str) -> "Recipe":
+        with open(path, "rb") as f:
+            raw = f.read()
+        if path.endswith(".json"):
+            return cls.from_dict(orjson.loads(raw))
+        return cls.from_dict(parse_simple_yaml(raw.decode("utf-8")))
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+def _scalar(tok: str) -> Any:
+    t = tok.strip().strip('"').strip("'")
+    if t.lower() in ("true", "false"):
+        return t.lower() == "true"
+    if t.lower() in ("null", "none", "~", ""):
+        return None
+    try:
+        return int(t)
+    except ValueError:
+        pass
+    try:
+        return float(t)
+    except ValueError:
+        pass
+    return t
+
+
+def parse_simple_yaml(text: str) -> Dict[str, Any]:
+    """Minimal YAML subset: `key: value`, `process:` with `- op:` blocks
+    whose args are indented `key: value` lines."""
+    root: Dict[str, Any] = {}
+    cur_list: Optional[List[Dict[str, Any]]] = None
+    cur_item: Optional[Dict[str, Any]] = None
+    for raw in text.splitlines():
+        if not raw.strip() or raw.strip().startswith("#"):
+            continue
+        indent = len(raw) - len(raw.lstrip())
+        line = raw.strip()
+        if indent == 0:
+            cur_item = None
+            if line.endswith(":"):
+                cur_list = []
+                root[line[:-1]] = cur_list
+            else:
+                k, _, v = line.partition(":")
+                root[k.strip()] = _scalar(v)
+                cur_list = None
+        elif line.startswith("- "):
+            if cur_list is None:
+                raise ValueError(f"list item outside list: {raw!r}")
+            body = line[2:]
+            if body.endswith(":"):
+                cur_item = {"name": body[:-1].strip()}
+            elif ":" in body:
+                k, _, v = body.partition(":")
+                cur_item = {"name": k.strip()} if v.strip() == "" else {k.strip(): _scalar(v)}
+                if "name" not in cur_item:
+                    cur_item = {"name": k.strip(), **cur_item}
+            else:
+                cur_item = {"name": body.strip()}
+            cur_list.append(cur_item)
+        else:  # nested arg of the current list item
+            if cur_item is None:
+                k, _, v = line.partition(":")
+                root[k.strip()] = _scalar(v)
+            else:
+                k, _, v = line.partition(":")
+                cur_item[k.strip()] = _scalar(v)
+    return root

@@ -1,0 +1,57 @@
+"""Operator registry: name -> class, auto-discovery, config round-trip."""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Type
+
+from repro.core.ops_base import FusedOP, Operator
+
+OPS: Dict[str, Type[Operator]] = {}
+
+
+def register(name: str):
+    def deco(cls):
+        cls._name = name
+        OPS[name] = cls
+        return cls
+
+    return deco
+
+
+def _ensure_builtin_ops_loaded() -> None:
+    import repro.ops  # noqa: F401 — registers the builtin library
+
+
+def create_op(config: Dict[str, Any]) -> Operator:
+    """{'name': ..., **params} -> Operator instance."""
+    _ensure_builtin_ops_loaded()
+    cfg = dict(config)
+    name = cfg.pop("name")
+    if name == "fused_op":
+        ops = [create_op(c) for c in cfg.pop("ops")]
+        return FusedOP(ops, **cfg)
+    if name not in OPS:
+        raise KeyError(f"unknown OP {name!r}; known: {sorted(OPS)}")
+    return OPS[name](**cfg)
+
+
+def list_ops() -> List[str]:
+    _ensure_builtin_ops_loaded()
+    return sorted(OPS)
+
+
+def op_info(name: str) -> Dict[str, Any]:
+    _ensure_builtin_ops_loaded()
+    cls = OPS[name]
+    kind = next(
+        (b.__name__ for b in cls.__mro__ if b.__name__ in (
+            "Formatter", "Mapper", "Filter", "Deduplicator", "Selector",
+            "Grouper", "Aggregator", "ScriptOP", "HumanOP")),
+        "Operator",
+    )
+    return {
+        "name": name,
+        "type": kind,
+        "doc": (cls.__doc__ or "").strip().split("\n")[0],
+        "uses_model": cls.uses_model,
+        "fusible": cls.fusible,
+    }

@@ -1,0 +1,152 @@
+"""Token-aligned multimodal data schema (paper §5.1, Appendix D.2).
+
+Samples are flat dicts with three field groups:
+  * core contents  — "text" (pre-training) and/or "query"/"response"/
+    "history" (post-tuning);
+  * extra data     — modality path lists ("images", "videos", "audios"),
+    referenced in order by special tokens inside "text";
+  * "meta" / "stats" — provenance and per-OP computed statistics.
+
+Text is chunked by ``EOC``; each chunk is a semantic unit whose modality
+tokens align with the corresponding entries of the modality lists.
+"""
+from __future__ import annotations
+
+import copy
+from typing import Any, Dict, List, Optional, Tuple
+
+IMAGE_TOKEN = "<__dj__image>"
+VIDEO_TOKEN = "<__dj__video>"
+AUDIO_TOKEN = "<__dj__audio>"
+EOC = "<|__dj__eoc|>"
+
+MODALITY_TOKENS = {"images": IMAGE_TOKEN, "videos": VIDEO_TOKEN, "audios": AUDIO_TOKEN}
+MODALITY_KEYS = tuple(MODALITY_TOKENS)
+CORE_KEYS = ("text", "query", "response", "history")
+
+
+def new_sample(text: str = "", **fields) -> Dict[str, Any]:
+    s: Dict[str, Any] = {"text": text, "meta": {}, "stats": {}}
+    s.update(fields)
+    return s
+
+
+def chunks(sample: Dict[str, Any]) -> List[str]:
+    return sample.get("text", "").split(EOC)
+
+
+def modality_counts(sample: Dict[str, Any]) -> Dict[str, int]:
+    text = sample.get("text", "")
+    return {k: text.count(tok) for k, tok in MODALITY_TOKENS.items()}
+
+
+def check_alignment(sample: Dict[str, Any]) -> Tuple[bool, str]:
+    """Every modality token must reference an entry of its path list."""
+    counts = modality_counts(sample)
+    for key, n_tok in counts.items():
+        n_paths = len(sample.get(key, []) or [])
+        if n_tok != n_paths:
+            return False, f"{key}: {n_tok} tokens vs {n_paths} paths"
+    return True, ""
+
+
+def empty_like(sample: Dict[str, Any]) -> Dict[str, Any]:
+    """Schema-compatible empty sample (fault tolerance, paper §E.2)."""
+    out: Dict[str, Any] = {}
+    for k, v in sample.items():
+        if isinstance(v, str):
+            out[k] = ""
+        elif isinstance(v, list):
+            out[k] = []
+        elif isinstance(v, dict):
+            out[k] = {} if k not in ("meta", "stats") else {"__empty__": True}
+        elif isinstance(v, bool):
+            out[k] = False
+        elif isinstance(v, int):
+            out[k] = 0
+        elif isinstance(v, float):
+            out[k] = 0.0
+        else:
+            out[k] = None
+    out.setdefault("meta", {"__empty__": True})
+    out["meta"] = dict(out.get("meta") or {}, __empty__=True)
+    return out
+
+
+def is_empty(sample: Dict[str, Any]) -> bool:
+    return bool((sample.get("meta") or {}).get("__empty__"))
+
+
+class ValidationError(ValueError):
+    pass
+
+
+class DataValidator:
+    """Pre-flight dataset validation (paper §5.1 'Reliable Data Loading').
+
+    ``goal`` in {"pretrain", "post_tuning", "multimodal", None}.
+    """
+
+    def __init__(self, goal: Optional[str] = None, required_fields: Tuple[str, ...] = ()):
+        self.goal = goal
+        self.required_fields = required_fields
+
+    def validate_sample(self, sample: Dict[str, Any]) -> None:
+        if not isinstance(sample, dict):
+            raise ValidationError(f"sample must be a dict, got {type(sample)}")
+        for f in self.required_fields:
+            if f not in sample:
+                raise ValidationError(f"missing required field {f!r}")
+        if self.goal == "pretrain" and not isinstance(sample.get("text", None), str):
+            raise ValidationError("pretrain goal requires a string 'text' field")
+        if self.goal == "post_tuning":
+            if "query" not in sample or "response" not in sample:
+                raise ValidationError("post_tuning goal requires query/response dialog fields")
+        if self.goal == "multimodal":
+            ok, why = check_alignment(sample)
+            if not ok:
+                raise ValidationError(f"modality misalignment: {why}")
+
+    def validate(self, samples) -> int:
+        n = 0
+        for s in samples:
+            self.validate_sample(s)
+            n += 1
+        return n
+
+
+# ---------------------------------------------------------------------------
+# Conversion tools (paper: bi-directional converters for training ecosystems)
+# ---------------------------------------------------------------------------
+
+
+def to_alpaca(sample: Dict[str, Any]) -> Dict[str, Any]:
+    return {
+        "instruction": sample.get("query", ""),
+        "input": "",
+        "output": sample.get("response", ""),
+        "history": copy.deepcopy(sample.get("history", [])),
+    }
+
+
+def from_alpaca(rec: Dict[str, Any]) -> Dict[str, Any]:
+    q = rec.get("instruction", "")
+    if rec.get("input"):
+        q = f"{q}\n{rec['input']}"
+    return new_sample(
+        text="", query=q, response=rec.get("output", ""),
+        history=copy.deepcopy(rec.get("history", [])),
+    )
+
+
+def to_query_response(sample: Dict[str, Any]) -> List[Dict[str, str]]:
+    """Flatten history + current turn into role/content messages."""
+    msgs = []
+    for q, r in sample.get("history", []) or []:
+        msgs.append({"role": "user", "content": q})
+        msgs.append({"role": "assistant", "content": r})
+    if sample.get("query"):
+        msgs.append({"role": "user", "content": sample["query"]})
+    if sample.get("response"):
+        msgs.append({"role": "assistant", "content": sample["response"]})
+    return msgs

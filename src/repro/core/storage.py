@@ -1,0 +1,143 @@
+"""Columnar sample storage + streaming I/O + subset pre-splitting.
+
+``SampleBlock`` is an Arrow-like unit: a list of sample dicts with a byte
+estimate. Datasets are lists of blocks, pre-split to ~128 MB (paper §E.3) and
+aligned to the worker count — the paper measured 2-3x end-to-end speedups
+from exactly this (Fig. 4f: peak network I/O 160 -> 60 MB/s).
+
+JSONL (orjson) with optional zstd compression; streaming readers never load
+the whole file.
+"""
+from __future__ import annotations
+
+import io
+import os
+from typing import Any, Callable, Dict, Iterable, Iterator, List, Optional
+
+import orjson
+
+try:
+    import zstandard as zstd
+except Exception:  # pragma: no cover
+    zstd = None
+
+DEFAULT_BLOCK_BYTES = 128 * 2**20
+
+
+def sample_nbytes(sample: Dict[str, Any]) -> int:
+    # fast estimate; exact enough for block splitting
+    return len(orjson.dumps(sample))
+
+
+class SampleBlock:
+    __slots__ = ("samples", "nbytes")
+
+    def __init__(self, samples: Optional[List[Dict[str, Any]]] = None, nbytes: int = -1):
+        self.samples = samples if samples is not None else []
+        self.nbytes = nbytes if nbytes >= 0 else sum(sample_nbytes(s) for s in self.samples)
+
+    def __len__(self):
+        return len(self.samples)
+
+    def append(self, s: Dict[str, Any], nb: Optional[int] = None):
+        self.samples.append(s)
+        self.nbytes += nb if nb is not None else sample_nbytes(s)
+
+
+def split_blocks(
+    samples: Iterable[Dict[str, Any]],
+    block_bytes: int = DEFAULT_BLOCK_BYTES,
+    n_workers: int = 1,
+    total_hint_bytes: Optional[int] = None,
+) -> List[SampleBlock]:
+    """Adaptive subset splitting: target min(block_bytes, total/n_workers)
+    so every worker gets at least one block (paper §E.3)."""
+    if total_hint_bytes and n_workers > 1:
+        block_bytes = max(1, min(block_bytes, total_hint_bytes // n_workers))
+    blocks: List[SampleBlock] = [SampleBlock()]
+    for s in samples:
+        nb = sample_nbytes(s)
+        if blocks[-1].nbytes + nb > block_bytes and len(blocks[-1]) > 0:
+            blocks.append(SampleBlock())
+        blocks[-1].append(s, nb)
+    return [b for b in blocks if len(b)]
+
+
+# ---------------------------------------------------------------------------
+# JSONL I/O (streaming; optional .zst)
+# ---------------------------------------------------------------------------
+
+
+def _open_read(path: str):
+    if path.endswith(".zst"):
+        if zstd is None:
+            raise RuntimeError("zstandard unavailable")
+        fh = open(path, "rb")
+        return io.TextIOWrapper(zstd.ZstdDecompressor().stream_reader(fh), encoding="utf-8")
+    return open(path, "r", encoding="utf-8")
+
+
+def read_jsonl(path: str, limit: Optional[int] = None) -> Iterator[Dict[str, Any]]:
+    """Streaming JSONL reader — O(1) memory (paper §E.3 'streaming loading')."""
+    n = 0
+    with _open_read(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            yield orjson.loads(line)
+            n += 1
+            if limit is not None and n >= limit:
+                return
+
+
+def write_jsonl(path: str, samples: Iterable[Dict[str, Any]]) -> int:
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    n = 0
+    if path.endswith(".zst"):
+        if zstd is None:
+            raise RuntimeError("zstandard unavailable")
+        with open(path, "wb") as fh:
+            with zstd.ZstdCompressor().stream_writer(fh) as w:
+                for s in samples:
+                    w.write(orjson.dumps(s) + b"\n")
+                    n += 1
+    else:
+        with open(path, "wb") as f:
+            for s in samples:
+                f.write(orjson.dumps(s) + b"\n")
+                n += 1
+    return n
+
+
+def presplit_jsonl(
+    src: str, out_dir: str, block_bytes: int = DEFAULT_BLOCK_BYTES, n_workers: int = 1
+) -> List[str]:
+    """Pre-split a JSONL file into ~block_bytes shards on disk."""
+    os.makedirs(out_dir, exist_ok=True)
+    total = os.path.getsize(src)
+    if n_workers > 1:
+        block_bytes = max(1, min(block_bytes, total // n_workers))
+    paths: List[str] = []
+    buf: List[bytes] = []
+    nb = 0
+
+    def flush():
+        nonlocal buf, nb
+        if not buf:
+            return
+        p = os.path.join(out_dir, f"part-{len(paths):05d}.jsonl")
+        with open(p, "wb") as f:
+            f.write(b"".join(buf))
+        paths.append(p)
+        buf, nb = [], 0
+
+    with _open_read(src) as f:
+        for line in f:
+            raw = line.encode("utf-8") if isinstance(line, str) else line
+            if nb + len(raw) > block_bytes and buf:
+                flush()
+            buf.append(raw)
+            nb += len(raw)
+    flush()
+    return paths

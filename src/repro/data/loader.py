@@ -1,0 +1,61 @@
+"""Training feed: DJDataset -> tokenized, packed, mesh-sharded batches.
+
+This is where the paper's data pipeline meets the training stack: the
+processed dataset is tokenized (HashWordTokenizer to match any assigned
+arch vocab), packed to fixed sequences, and yielded as device arrays placed
+with the same logical-axis rules the train step uses.
+"""
+from __future__ import annotations
+
+from typing import Iterator, Optional
+
+import jax
+import numpy as np
+
+from repro.data.packing import pack_documents
+from repro.data.tokenizer import HashWordTokenizer
+from repro.launch import sharding as sh
+
+
+class PackedDataLoader:
+    def __init__(
+        self,
+        dataset,
+        seq_len: int,
+        global_batch: int,
+        vocab_size: int = 32000,
+        mesh=None,
+        seed: int = 0,
+        drop_remainder: bool = True,
+    ):
+        self.seq_len = seq_len
+        self.global_batch = global_batch
+        self.mesh = mesh
+        tok = HashWordTokenizer(vocab_size)
+        docs = [tok.encode(s.get("text", "")) for s in dataset]
+        self.tokens, self.labels, self.mask = pack_documents(docs, seq_len)
+        rng = np.random.default_rng(seed)
+        self.order = rng.permutation(len(self.tokens))
+        self.drop_remainder = drop_remainder
+
+    def __len__(self):
+        return len(self.tokens) // self.global_batch
+
+    def batches(self, epochs: int = 1) -> Iterator[dict]:
+        for _ in range(epochs):
+            for i in range(0, len(self.order) - self.global_batch + 1, self.global_batch):
+                idx = self.order[i : i + self.global_batch]
+                batch = {
+                    "tokens": self.tokens[idx],
+                    "labels": self.labels[idx],
+                    "loss_mask": self.mask[idx],
+                }
+                if self.mesh is not None:
+                    batch = {
+                        k: jax.device_put(
+                            v,
+                            sh.named_sharding(v.shape, ("batch", "seq"), self.mesh, sh.ACT_RULES),
+                        )
+                        for k, v in batch.items()
+                    }
+                yield batch

@@ -1,0 +1,44 @@
+"""Sequence packing: token lists -> fixed (N, seq_len) training blocks."""
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+
+def pack_documents(
+    docs: Sequence[Sequence[int]], seq_len: int, pad_id: int = 0
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Concatenate docs and cut into seq_len+1 windows.
+
+    Returns (tokens (N, S), labels (N, S), loss_mask (N, S)) with next-token
+    labels; the trailing partial window is padded and masked.
+    """
+    stream: List[int] = []
+    for d in docs:
+        stream.extend(int(t) for t in d)
+    if not stream:
+        z = np.zeros((0, seq_len), np.int32)
+        return z, z.copy(), np.zeros((0, seq_len), np.float32)
+    step = seq_len
+    n_full = max(0, (len(stream) - 1) // step)
+    rows_t, rows_l, rows_m = [], [], []
+    for i in range(n_full):
+        w = stream[i * step : i * step + seq_len + 1]
+        rows_t.append(w[:-1])
+        rows_l.append(w[1:])
+        rows_m.append([1.0] * seq_len)
+    rem = stream[n_full * step :]
+    if len(rem) > 1:
+        t = rem[:-1][:seq_len]
+        l = rem[1:][: len(t)]
+        m = [1.0] * len(t)
+        pad = seq_len - len(t)
+        rows_t.append(t + [pad_id] * pad)
+        rows_l.append(l + [pad_id] * pad)
+        rows_m.append(m + [0.0] * pad)
+    return (
+        np.asarray(rows_t, np.int32),
+        np.asarray(rows_l, np.int32),
+        np.asarray(rows_m, np.float32),
+    )

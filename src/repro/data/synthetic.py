@@ -1,0 +1,98 @@
+"""Synthetic corpus generator: scalable, seeded, with controllable fractions
+of noise / duplicates / near-duplicates / multimodal samples — the offline
+stand-in for the paper's LLaVA-based scaling corpus (§H.1)."""
+from __future__ import annotations
+
+import math
+from typing import Dict, Iterator, List, Optional
+
+import numpy as np
+
+from repro.core import schema as S
+
+_VOCAB = (
+    "data juicer cloud scale adaptive processing foundation model multimodal operator "
+    "pipeline filter mapper dedup ray tpu mesh shard batch token image video audio "
+    "quality score train sample system efficient runtime engine recipe insight "
+    "probability gradient neural network language vision speech alignment semantic".split()
+)
+_NOISE = list("!@#$%^&*<>{}[]|\\~`")
+
+
+def _sentence(rng: np.random.Generator, n: int) -> str:
+    return " ".join(rng.choice(_VOCAB, size=n)) + "."
+
+
+def make_corpus(
+    n: int,
+    seed: int = 0,
+    noise_frac: float = 0.15,
+    dup_frac: float = 0.2,
+    near_dup_frac: float = 0.1,
+    multimodal_frac: float = 0.2,
+    min_sents: int = 2,
+    max_sents: int = 12,
+) -> List[Dict]:
+    """Returns n schema samples; ``dup_frac`` are exact copies of earlier
+    samples and ``near_dup_frac`` are word-dropped near-copies."""
+    rng = np.random.default_rng(seed)
+    out: List[Dict] = []
+    originals: List[str] = []
+    for i in range(n):
+        r = rng.random()
+        if out and r < dup_frac:
+            text = originals[int(rng.integers(0, len(originals)))]
+            kind = "dup"
+        elif out and r < dup_frac + near_dup_frac:
+            base = originals[int(rng.integers(0, len(originals)))].split()
+            keep = rng.random(len(base)) > 0.08
+            text = " ".join(w for w, k in zip(base, keep) if k)
+            kind = "near_dup"
+        else:
+            n_s = int(rng.integers(min_sents, max_sents + 1))
+            text = " ".join(_sentence(rng, int(rng.integers(5, 18))) for _ in range(n_s))
+            if rng.random() < noise_frac:
+                junk = "".join(rng.choice(_NOISE, size=int(rng.integers(20, 80))))
+                text = junk + " " + text if rng.random() < 0.5 else text + " " + junk
+                kind = "noisy"
+            else:
+                kind = "clean"
+            originals.append(text)
+        s = S.new_sample(text)
+        s["meta"] = {
+            "id": i, "kind": kind,
+            "domain": str(rng.choice(["web", "code", "news", "dialog"])),
+        }
+        if rng.random() < multimodal_frac:
+            n_img = int(rng.integers(1, 3))
+            tags_pool = ["cat", "dog", "tree", "car", "person", "house", "sky"]
+            s["images"] = [f"img://{i}/{j}" for j in range(n_img)]
+            s["image_meta"] = [
+                {
+                    "width": int(rng.integers(16, 4096)),
+                    "height": int(rng.integers(16, 4096)),
+                    "bytes": int(rng.integers(1_000, 5_000_000)),
+                    "nsfw_score": float(rng.beta(1, 20)),
+                    "tags": list(rng.choice(tags_pool, size=2, replace=False)),
+                }
+                for _ in range(n_img)
+            ]
+            s["text"] = (S.IMAGE_TOKEN + " ") * n_img + s["text"]
+        if rng.random() < multimodal_frac / 2:
+            s["videos"] = [f"vid://{i}"]
+            energy = np.abs(rng.standard_normal(24) * rng.random() * 4).tolist()
+            s["video_meta"] = [{
+                "duration": float(rng.uniform(0.5, 600)),
+                "fps": 24, "frame_energy": [round(e, 4) for e in energy],
+            }]
+            s["text"] = S.VIDEO_TOKEN + " " + s["text"]
+        if rng.random() < multimodal_frac / 2:
+            s["audios"] = [f"aud://{i}"]
+            s["audio_meta"] = [{
+                "duration": float(rng.uniform(0.2, 120)),
+                "rms_signal": float(rng.uniform(0.05, 1.0)),
+                "rms_noise": float(rng.uniform(0.001, 0.3)),
+            }]
+            s["text"] = S.AUDIO_TOKEN + " " + s["text"]
+        out.append(s)
+    return out

@@ -1,0 +1,54 @@
+"""Deterministic offline tokenizers (no external vocab files).
+
+``ByteTokenizer`` — raw UTF-8 bytes + BOS/EOS/PAD; exact round-trip.
+``HashWordTokenizer`` — whitespace words hashed into a fixed vocab
+(stable blake2); fast, any vocab size, used to feed the assigned-arch
+models whose configs fix large vocab sizes.
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import List, Sequence
+
+import numpy as np
+
+
+class ByteTokenizer:
+    PAD, BOS, EOS = 256, 257, 258
+    vocab_size = 259
+
+    def encode(self, text: str, add_bos: bool = True, add_eos: bool = True) -> List[int]:
+        ids = list(text.encode("utf-8"))
+        if add_bos:
+            ids = [self.BOS] + ids
+        if add_eos:
+            ids = ids + [self.EOS]
+        return ids
+
+    def decode(self, ids: Sequence[int]) -> str:
+        return bytes(i for i in ids if i < 256).decode("utf-8", errors="replace")
+
+
+class HashWordTokenizer:
+    """word -> 4 + blake2(word) % (vocab-4); ids 0..3 reserved (pad/bos/eos/unk)."""
+
+    PAD, BOS, EOS, UNK = 0, 1, 2, 3
+
+    def __init__(self, vocab_size: int = 32000):
+        assert vocab_size > 8
+        self.vocab_size = vocab_size
+
+    def _wid(self, w: str) -> int:
+        h = hashlib.blake2b(w.encode("utf-8"), digest_size=8).digest()
+        return 4 + int.from_bytes(h, "little") % (self.vocab_size - 4)
+
+    def encode(self, text: str, add_bos: bool = True, add_eos: bool = True) -> List[int]:
+        ids = [self._wid(w) for w in text.split()]
+        if add_bos:
+            ids = [self.BOS] + ids
+        if add_eos:
+            ids = ids + [self.EOS]
+        return ids
+
+    def encode_batch(self, texts: Sequence[str]) -> List[List[int]]:
+        return [self.encode(t) for t in texts]

@@ -1,0 +1,79 @@
+"""Command-line tools (paper Listing 1): dj-process / dj-analyze analogues.
+
+  python -m repro.interface.cli process --config recipe.{json,yaml}
+  python -m repro.interface.cli analyze --dataset_path x.jsonl [--auto]
+  python -m repro.interface.cli list-ops
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(prog="dj")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    p_proc = sub.add_parser("process", help="run a recipe")
+    p_proc.add_argument("--config", required=True)
+    p_proc.add_argument("--np", type=int, default=0)
+
+    p_an = sub.add_parser("analyze", help="compute default stats + report")
+    p_an.add_argument("--dataset_path", required=True)
+    p_an.add_argument("--auto", action="store_true")
+
+    sub.add_parser("list-ops", help="print the OP registry")
+
+    args = ap.parse_args(argv)
+
+    if args.cmd == "list-ops":
+        from repro.core.registry import list_ops, op_info
+
+        for n in list_ops():
+            info = op_info(n)
+            print(f"{n:40s} {info['type']:12s} {info['doc'][:60]}")
+        return 0
+
+    if args.cmd == "process":
+        from repro.core.executor import Executor
+        from repro.core.recipes import Recipe
+
+        recipe = Recipe.load(args.config)
+        if args.np:
+            recipe.np = args.np
+        _, report = Executor(recipe).run()
+        print(f"recipe={report.recipe} in={report.n_in} out={report.n_out} "
+              f"seconds={report.seconds:.2f} plan={report.plan}")
+        for row in report.per_op:
+            print(f"  {row['op']:40s} {row['seconds']:.3f}s "
+                  f"{row['in']}->{row['out']} ({row['speed']:.0f} samples/s)")
+        if report.insight:
+            print(report.insight)
+        return 0
+
+    if args.cmd == "analyze":
+        from repro.core.dataset import DJDataset
+        from repro.core.insight import snapshot
+        from repro.core.registry import create_op
+
+        ds = DJDataset.load(args.dataset_path)
+        default_ops = [
+            {"name": "text_length_filter"},
+            {"name": "words_num_filter"},
+            {"name": "alnum_ratio_filter"},
+            {"name": "quality_score_filter"},
+        ]
+        for cfg in default_ops:
+            op = create_op(cfg)
+            for s in ds:
+                op.compute_stats(s)
+        snap = snapshot(ds.samples())
+        print(f"n={snap['n']}")
+        for k, st in snap["numeric"].items():
+            print(f"  {k:24s} mean={st.mean:.3f} p50={st.p50:.3f} p95={st.p95:.3f}")
+        return 0
+    return 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,82 @@
+"""Natural-language interaction (paper §4, Appendix C.4).
+
+Offline ReAct-style loop: a rule-based intent parser maps user requests to
+OPs + parameters (the LLM-agent role), executes through the same code path
+the RESTful API uses, and reports thought/function/result traces — the
+paper's transparency pattern, minus the hosted model.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Dict, List, Optional, Tuple
+
+_INTENTS: List[Tuple[re.Pattern, str, Dict[str, Any]]] = [
+    (re.compile(r"(filter|remove|drop).{0,40}(short|small).{0,20}text", re.I),
+     "text_length_filter", {"min_val": 80}),
+    (re.compile(r"(filter|remove|drop).{0,40}(long).{0,20}text", re.I),
+     "text_length_filter", {"max_val": 10000}),
+    (re.compile(r"de-?dup|duplicate", re.I),
+     "document_minhash_deduplicator", {"jaccard_threshold": 0.7}),
+    (re.compile(r"lower ?case", re.I), "lowercase_mapper", {}),
+    (re.compile(r"(remove|strip|clean).{0,20}(html|tags)", re.I), "remove_html_mapper", {}),
+    (re.compile(r"(remove|clean).{0,20}(link|url)", re.I), "clean_links_mapper", {}),
+    (re.compile(r"(remove|clean).{0,20}e-?mail", re.I), "clean_email_mapper", {}),
+    (re.compile(r"nsfw|not.?safe", re.I), "image_nsfw_filter", {"threshold": 0.5}),
+    (re.compile(r"quality", re.I), "quality_score_filter", {"min_val": 0.4}),
+    (re.compile(r"normali[sz]e.{0,20}(whitespace|spaces)", re.I),
+     "whitespace_normalization_mapper", {}),
+    (re.compile(r"motion", re.I), "video_motion_score_filter", {"min_val": 0.1}),
+]
+
+_NUM_RE = re.compile(r"(min(?:imum)?|max(?:imum)?|threshold)\D{0,15}?([\d.]+)", re.I)
+
+
+@dataclasses.dataclass
+class AgentTurn:
+    thought: str
+    function: Optional[str]
+    arguments: Dict[str, Any]
+    result: Optional[dict] = None
+
+
+def parse_intent(request: str) -> List[AgentTurn]:
+    turns: List[AgentTurn] = []
+    for pat, op, defaults in _INTENTS:
+        if pat.search(request):
+            args = dict(defaults)
+            for key, val in _NUM_RE.findall(request):
+                k = key.lower()
+                v = float(val)
+                if k.startswith("min"):
+                    args["min_val"] = v
+                elif k.startswith("max"):
+                    args["max_val"] = v
+                else:
+                    args["threshold"] = v
+            turns.append(AgentTurn(
+                thought=f"request matches '{pat.pattern[:40]}...' -> use {op}",
+                function=op, arguments=args,
+            ))
+    if not turns:
+        turns.append(AgentTurn(
+            thought="no OP intent recognised; ask the user to rephrase",
+            function=None, arguments={},
+        ))
+    return turns
+
+
+def run_request(request: str, dataset) -> Tuple[Any, List[AgentTurn]]:
+    """Interprets the request and executes the matched OPs on the dataset."""
+    from repro.core.registry import create_op
+
+    turns = parse_intent(request)
+    ds = dataset
+    for t in turns:
+        if t.function is None:
+            continue
+        op = create_op({"name": t.function, **t.arguments})
+        n0 = len(ds)
+        ds = ds.process(op)
+        t.result = {"status": "SUCCESS", "in": n0, "out": len(ds)}
+    return ds, turns

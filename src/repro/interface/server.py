@@ -1,0 +1,90 @@
+"""RESTful API layer (paper §4, Appendix C.2) — dependency-free
+``http.server`` implementation with automatic OP discovery.
+
+  GET  /ops              — discover + register all OP classes
+  GET  /ops/<name>       — one OP's metadata
+  POST /run/<op_name>?dataset_path=...   body: JSON op params
+                         — executes op.run() on the dataset, returns the
+                           processed dataset path
+  POST /process?dataset_path=...          body: JSON recipe
+"""
+from __future__ import annotations
+
+import threading
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Optional
+from urllib.parse import parse_qs, urlparse
+
+import orjson
+
+
+class _Handler(BaseHTTPRequestHandler):
+    def _send(self, code: int, payload):
+        body = orjson.dumps(payload)
+        self.send_response(code)
+        self.send_header("Content-Type", "application/json")
+        self.send_header("Content-Length", str(len(body)))
+        self.end_headers()
+        self.wfile.write(body)
+
+    def log_message(self, *a):  # quiet
+        pass
+
+    def do_GET(self):
+        from repro.core.registry import list_ops, op_info
+
+        url = urlparse(self.path)
+        parts = [p for p in url.path.split("/") if p]
+        if parts == ["ops"]:
+            return self._send(200, {"ops": [op_info(n) for n in list_ops()]})
+        if len(parts) == 2 and parts[0] == "ops":
+            try:
+                return self._send(200, op_info(parts[1]))
+            except KeyError:
+                return self._send(404, {"error": f"unknown op {parts[1]}"})
+        return self._send(404, {"error": "not found"})
+
+    def do_POST(self):
+        from repro.core.dataset import DJDataset
+        from repro.core.executor import Executor
+        from repro.core.recipes import Recipe
+        from repro.core.registry import create_op
+
+        url = urlparse(self.path)
+        qs = parse_qs(url.query)
+        n = int(self.headers.get("Content-Length", 0))
+        params = orjson.loads(self.rfile.read(n) or b"{}")
+        parts = [p for p in url.path.split("/") if p]
+        try:
+            dataset_path = qs.get("dataset_path", [None])[0]
+            if not dataset_path:
+                return self._send(400, {"error": "dataset_path query param required"})
+            out_path = qs.get("export_path", [dataset_path + ".out.jsonl"])[0]
+            if len(parts) == 2 and parts[0] == "run":
+                op = create_op({"name": parts[1], **params})
+                ds = DJDataset.load(dataset_path)
+                ds = op.run(ds)
+                ds.export(out_path)
+                return self._send(200, {
+                    "status": "ok", "export_path": out_path,
+                    "n_out": len(ds), "errors": len(op.errors),
+                })
+            if parts == ["process"]:
+                recipe = Recipe.from_dict({**params, "dataset_path": dataset_path,
+                                           "export_path": out_path})
+                _, report = Executor(recipe).run()
+                return self._send(200, {
+                    "status": "ok", "export_path": out_path,
+                    "n_in": report.n_in, "n_out": report.n_out,
+                    "plan": report.plan, "seconds": report.seconds,
+                })
+        except Exception as e:  # noqa: BLE001
+            return self._send(500, {"error": f"{type(e).__name__}: {e}"})
+        return self._send(404, {"error": "not found"})
+
+
+def serve(host: str = "127.0.0.1", port: int = 8123) -> ThreadingHTTPServer:
+    srv = ThreadingHTTPServer((host, port), _Handler)
+    t = threading.Thread(target=srv.serve_forever, daemon=True)
+    t.start()
+    return srv

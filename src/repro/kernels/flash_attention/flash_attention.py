@@ -1,0 +1,137 @@
+"""Pallas TPU kernel: flash attention forward (causal / sliding-window, GQA).
+
+Grid (B*Hq, n_q_blocks, n_kv_blocks), kv innermost (sequential on TPU) so
+the online-softmax running stats (m, l) and the output accumulator live in
+VMEM scratch across kv steps. GQA is handled in the index map: query head
+``h`` reads kv head ``h // group``, so KV is never materialised at Hq.
+Causal skipping: kv blocks strictly above the diagonal are masked out
+entirely (the dominant-term reduction the XLA fallback cannot do — see
+EXPERIMENTS.md §Perf).
+
+VMEM per program (defaults BQ=BK=256, hd<=256, f32 scratch):
+q 256xhd + k/v 256xhd + scores 256x256 + acc 256xhd  ~= 1.3 MiB.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 256
+DEFAULT_BLOCK_K = 256
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  causal: bool, window: int, scale: float, seq_len: int,
+                  block_q: int, block_k: int):
+    iq = pl.program_id(1)
+    jk = pl.program_id(2)
+    n_k = pl.num_programs(2)
+
+    @pl.when(jk == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_pos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    k_pos = jk * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+
+    # block-level skip: fully-masked kv blocks do no work
+    run = jnp.bool_(True)
+    if causal:
+        run = jnp.logical_and(run, (jk * block_k) <= (iq * block_q + block_q - 1))
+    if window > 0:
+        run = jnp.logical_and(run, (jk * block_k + block_k - 1) > (iq * block_q - window))
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[0].astype(jnp.float32) * scale  # (BQ, hd)
+        k = k_ref[0].astype(jnp.float32)  # (BK, hd)
+        v = v_ref[0].astype(jnp.float32)
+        s = q @ k.T  # (BQ, BK)
+        mask = k_pos < seq_len
+        if causal:
+            mask = jnp.logical_and(mask, k_pos <= q_pos)
+        if window > 0:
+            mask = jnp.logical_and(mask, k_pos > q_pos - window)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        p = jnp.where(mask, p, 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + p @ v
+        m_scr[...] = m_new
+
+    @pl.when(jk == n_k - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-20)
+        o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(
+    q: jnp.ndarray,  # (B, Sq, Hq, hd)
+    k: jnp.ndarray,  # (B, Skv, Hkv, hd)
+    v: jnp.ndarray,
+    causal: bool = True,
+    window: int = 0,  # 0 = full
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    b, sq, hq, hd = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    scale = 1.0 / math.sqrt(hd)
+    block_q = min(block_q, sq)
+    block_k = min(block_k, skv)
+
+    pad_q = (-sq) % block_q
+    pad_k = (-skv) % block_k
+    qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0))) if pad_q else q
+    kp = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0))) if pad_k else k
+    vp = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0))) if pad_k else v
+
+    # (B*H, S, hd) layouts
+    qh = qp.transpose(0, 2, 1, 3).reshape(b * hq, sq + pad_q, hd)
+    kh = kp.transpose(0, 2, 1, 3).reshape(b * hkv, skv + pad_k, hd)
+    vh = vp.transpose(0, 2, 1, 3).reshape(b * hkv, skv + pad_k, hd)
+
+    grid = (b * hq, (sq + pad_q) // block_q, (skv + pad_k) // block_k)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _flash_kernel, causal=causal, window=window or 0, scale=scale,
+            seq_len=skv, block_q=block_q, block_k=block_k,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda bh, iq, jk: (bh, iq, 0)),
+            # GQA: query head bh -> kv head (bh % hq) // g within the batch
+            pl.BlockSpec(
+                (1, block_k, hd),
+                lambda bh, iq, jk, g=g, hq=hq, hkv=hkv: ((bh // hq) * hkv + (bh % hq) // g, jk, 0),
+            ),
+            pl.BlockSpec(
+                (1, block_k, hd),
+                lambda bh, iq, jk, g=g, hq=hq, hkv=hkv: ((bh // hq) * hkv + (bh % hq) // g, jk, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), lambda bh, iq, jk: (bh, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * hq, sq + pad_q, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qh, kh, vh)
+    out = out[:, :sq].reshape(b, hq, sq, hd).transpose(0, 2, 1, 3)
+    return out

@@ -1,0 +1,17 @@
+"""Jit'd public wrapper for the flash-attention Pallas kernel."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_fwd
+
+
+def flash_attention(q, k, v, causal: bool = True, window: Optional[int] = None,
+                    block_q: int = 256, block_k: int = 256, interpret: bool = True):
+    """(b, sq, hq, hd) x (b, skv, hkv, hd) -> (b, sq, hq, hd)."""
+    return flash_attention_fwd(
+        q, k, v, causal=causal, window=window or 0,
+        block_q=block_q, block_k=block_k, interpret=interpret,
+    )

@@ -1,0 +1,3 @@
+"""Oracle for the flash-attention kernel: the materialized-softmax
+reference from the model layers (GQA/causal/window aware)."""
+from repro.models.layers import attention_reference  # noqa: F401

@@ -1,0 +1,67 @@
+"""Pallas TPU kernel: MinHash signatures.
+
+Tiling: grid (D/BD, P/BP); each program loads a (BD, S) tile of shingle
+hashes + a (BP,) slice of permutation params into VMEM and computes the
+running min over the shingle axis in chunks, so the (BD, BP, CHUNK)
+intermediate stays VMEM-resident (default 64x64x256 u32 = 4 MiB).
+Pure integer VPU work — no MXU — which is why dedup's signature stage maps
+cleanly onto TPU even though the paper ran it on CPU clusters.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+SENTINEL = 0xFFFFFFFF  # plain int: jnp constants may not be captured by kernels
+
+BLOCK_D = 64
+BLOCK_P = 64
+CHUNK_S = 256
+
+
+def _minhash_kernel(h_ref, mask_ref, a_ref, b_ref, out_ref, *, chunk_s: int):
+    h = h_ref[...]  # (BD, S) uint32
+    mask = mask_ref[...]  # (BD, S) bool
+    a = a_ref[...]  # (BP,)
+    b = b_ref[...]
+    bd, s = h.shape
+    bp = a.shape[0]
+    acc = jnp.full((bd, bp), SENTINEL, jnp.uint32)
+    n_chunks = (s + chunk_s - 1) // chunk_s
+    for c in range(n_chunks):  # static unroll: S is a compile-time shape
+        lo = c * chunk_s
+        hc = jax.lax.dynamic_slice_in_dim(h, lo, min(chunk_s, s - lo), axis=1)
+        mc = jax.lax.dynamic_slice_in_dim(mask, lo, min(chunk_s, s - lo), axis=1)
+        vals = a[None, :, None] * hc[:, None, :] + b[None, :, None]  # u32 wrap
+        vals = jnp.where(mc[:, None, :], vals, jnp.uint32(SENTINEL))
+        acc = jnp.minimum(acc, vals.min(axis=2).astype(jnp.uint32))
+    out_ref[...] = acc
+
+
+def minhash_pallas(h: jnp.ndarray, mask: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray,
+                   block_d: int = BLOCK_D, block_p: int = BLOCK_P,
+                   chunk_s: int = CHUNK_S, interpret: bool = True) -> jnp.ndarray:
+    """h (D, S) uint32, mask (D, S) bool, a/b (P,) uint32 -> (D, P) uint32.
+
+    D and P must be multiples of the block sizes (ops.py pads).
+    """
+    d, s = h.shape
+    p = a.shape[0]
+    assert d % block_d == 0 and p % block_p == 0, (d, p, block_d, block_p)
+    grid = (d // block_d, p // block_p)
+    return pl.pallas_call(
+        functools.partial(_minhash_kernel, chunk_s=chunk_s),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_d, s), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_d, s), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_p,), lambda i, j: (j,)),
+            pl.BlockSpec((block_p,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((block_d, block_p), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((d, p), jnp.uint32),
+        interpret=interpret,
+    )(h, mask, a, b)

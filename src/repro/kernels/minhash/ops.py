@@ -1,0 +1,37 @@
+"""Jit'd public wrapper: padding + dispatch to the Pallas kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.minhash.minhash import BLOCK_D, BLOCK_P, minhash_pallas
+
+
+def minhash_signatures(
+    hashes: np.ndarray, mask: np.ndarray, a: np.ndarray, b: np.ndarray,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """hashes (D, S) uint64/uint32, mask (D, S) bool, a/b (P,) any int ->
+    (D, P) uint32 signatures. Inputs are folded to uint32 and padded to
+    kernel block multiples."""
+    h32 = (np.asarray(hashes, np.uint64) & 0xFFFFFFFF).astype(np.uint32) ^ (
+        np.asarray(hashes, np.uint64) >> np.uint64(32)
+    ).astype(np.uint32)
+    a32 = (np.asarray(a, np.uint64).astype(np.uint32) | np.uint32(1))  # odd multipliers
+    b32 = np.asarray(b, np.uint64).astype(np.uint32)
+    d, s = h32.shape
+    p = a32.shape[0]
+    pd = (-d) % BLOCK_D
+    pp = (-p) % BLOCK_P
+    if pd:
+        h32 = np.pad(h32, ((0, pd), (0, 0)))
+        mask = np.pad(mask, ((0, pd), (0, 0)))
+    if pp:
+        a32 = np.pad(a32, (0, pp), constant_values=1)
+        b32 = np.pad(b32, (0, pp))
+    out = minhash_pallas(
+        jnp.asarray(h32), jnp.asarray(mask), jnp.asarray(a32), jnp.asarray(b32),
+        interpret=interpret,
+    )
+    return out[:d, :p]

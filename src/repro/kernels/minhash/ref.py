@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the MinHash signature kernel.
+
+Permutation family: sig[d, p] = min over valid shingles s of
+(a[p] * h[d, s] + b[p]) with uint32 wraparound — TPU-native 32-bit
+arithmetic (the M61 family used on the host path needs 64-bit mults that
+TPU VREGs lack; the uint32 multiply-add family has the same min-wise
+uniformity properties for LSH purposes).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+SENTINEL = jnp.uint32(0xFFFFFFFF)
+
+
+def minhash_ref(h: jnp.ndarray, mask: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray):
+    """h (D, S) uint32, mask (D, S) bool, a/b (P,) uint32 -> (D, P) uint32."""
+    vals = a[None, :, None] * h[:, None, :] + b[None, :, None]  # (D, P, S) u32 wrap
+    vals = jnp.where(mask[:, None, :], vals, SENTINEL)
+    return vals.min(axis=2).astype(jnp.uint32)

@@ -1,0 +1,11 @@
+"""Jit'd public wrapper for the SSD Pallas kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.ssd_scan import ssd_pallas
+
+
+def ssd_forward(x, dt, a_log, b_mat, c_mat, chunk: int, interpret: bool = True):
+    """Matches repro.models.mamba2.ssd_chunked's y output (g=1)."""
+    return ssd_pallas(x, dt, a_log, b_mat, c_mat, chunk, interpret=interpret)

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the SSD chunk-scan kernel: re-exports the model's
+chunked SSD implementation (single-group case g=1, as in mamba2-1.3b)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.mamba2 import ssd_chunked
+
+
+def ssd_ref(x, dt, a_log, b_mat, c_mat, chunk):
+    """x (B, S, H, P), dt (B, S, H), a_log (H,), b/c (B, S, 1, N) ->
+    y (B, S, H, P), final_state (B, H, P, N)."""
+    return ssd_chunked(x, dt, a_log, b_mat, c_mat, chunk)

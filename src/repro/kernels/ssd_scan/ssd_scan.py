@@ -1,0 +1,90 @@
+"""Pallas TPU kernel: Mamba2 SSD chunked scan (forward).
+
+Grid (B, H, NC) with the chunk axis innermost — TPU executes the grid
+sequentially, so the inter-chunk state lives in a VMEM scratch (P, N) f32
+carried across chunk steps (reset at chunk 0). Each program computes the
+quadratic intra-chunk term on the MXU ((Q,N)x(N,Q) and (Q,Q)x(Q,P) dots)
+plus the inter-chunk contribution from the carried state; the chunk length
+Q and head dim P are the MXU-aligned tile sizes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_kernel(x_ref, dt_ref, alog_ref, b_ref, c_ref, y_ref, state_ref):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0, 0, 0].astype(jnp.float32)  # (Q, P)
+    dt = dt_ref[0, 0, 0].astype(jnp.float32)  # (Q,)
+    a = -jnp.exp(alog_ref[0].astype(jnp.float32))  # scalar
+    bm = b_ref[0, 0].astype(jnp.float32)  # (Q, N)
+    cm = c_ref[0, 0].astype(jnp.float32)  # (Q, N)
+    q = x.shape[0]
+
+    da = dt * a  # (Q,)
+    cum = jnp.cumsum(da)  # (Q,)
+    # decay matrix L[i, j] = exp(cum_i - cum_j) for j <= i
+    diff = cum[:, None] - cum[None, :]
+    tri = jnp.tril(jnp.ones((q, q), jnp.float32))
+    lmat = jnp.exp(jnp.where(tri > 0, diff, -jnp.inf)) * tri
+
+    scores = (cm @ bm.T) * lmat * dt[None, :]  # (Q, Q)
+    y_intra = scores @ x  # (Q, P)
+
+    state = state_ref[...]  # (P, N)
+    y_inter = jnp.exp(cum)[:, None] * (cm @ state.T)  # (Q, N)@(N, P) -> (Q, P)
+
+    y_ref[0, 0, 0] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    total = cum[q - 1]
+    decay_to_end = jnp.exp(total - cum)  # (Q,)
+    s_chunk = x.T @ (bm * (dt * decay_to_end)[:, None])  # (P, Q)@(Q, N) -> (P, N)
+    state_ref[...] = state * jnp.exp(total) + s_chunk
+
+
+def ssd_pallas(
+    x: jnp.ndarray,  # (B, S, H, P)
+    dt: jnp.ndarray,  # (B, S, H)
+    a_log: jnp.ndarray,  # (H,)
+    b_mat: jnp.ndarray,  # (B, S, 1, N)  (single group)
+    c_mat: jnp.ndarray,  # (B, S, 1, N)
+    chunk: int,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    bsz, s, h, p = x.shape
+    n = b_mat.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    xb = x.transpose(0, 2, 1, 3).reshape(bsz, h, nc, chunk, p)
+    dtb = dt.transpose(0, 2, 1).reshape(bsz, h, nc, chunk)
+    bb = b_mat[:, :, 0].reshape(bsz, nc, chunk, n)
+    cb = c_mat[:, :, 0].reshape(bsz, nc, chunk, n)
+
+    grid = (bsz, h, nc)
+    from jax.experimental.pallas import tpu as pltpu
+
+    y = pl.pallas_call(
+        _ssd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, chunk, p), lambda b, hh, c: (b, hh, c, 0, 0)),
+            pl.BlockSpec((1, 1, 1, chunk), lambda b, hh, c: (b, hh, c, 0)),
+            pl.BlockSpec((1,), lambda b, hh, c: (hh,)),
+            pl.BlockSpec((1, 1, chunk, n), lambda b, hh, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, chunk, n), lambda b, hh, c: (b, c, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, chunk, p), lambda b, hh, c: (b, hh, c, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, h, nc, chunk, p), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(xb, dtb, a_log, bb, cb)
+    return y.reshape(bsz, h, s, p).transpose(0, 2, 1, 3)  # (B, S, H, P)

@@ -1,0 +1,286 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count on first init). Everything else in the repo sees the real device.
+
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+import sys  # noqa: E402
+import time  # noqa: E402
+from typing import Any, Dict, Optional  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs import SHAPES, get_config, get_shape, list_archs, shape_applicable  # noqa: E402
+from repro.launch import sharding as sh  # noqa: E402
+from repro.launch.hlo_analysis import analyze_hlo  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.roofline import model_flops_for, roofline  # noqa: E402
+from repro.models import module as mod  # noqa: E402
+from repro.models.model_zoo import build_model  # noqa: E402
+from repro.train.train_step import TrainConfig, make_train_step, state_specs  # noqa: E402
+
+SERVE_DTYPE = jnp.bfloat16
+
+
+def _bf16_params(spec_tree):
+    """Serving stores parameters in bf16."""
+    return mod.tree_map_specs(
+        lambda s: mod.ParamSpec(s.shape, s.axes, SERVE_DTYPE if s.dtype == jnp.float32 else s.dtype, s.init, s.scale),
+        spec_tree,
+    )
+
+
+def _shardings_and_shapes(spec_tree, mesh, rules):
+    return (
+        sh.tree_shardings(spec_tree, mesh, rules),
+        mod.to_shape_dtype(spec_tree),
+    )
+
+
+def _out_shardings_like(fn, in_shapes, out_tree_shardings):
+    """Build out_shardings matching fn's output structure via eval_shape."""
+    out_shape = jax.eval_shape(fn, *in_shapes)
+    return out_shape
+
+
+def _replicated(mesh):
+    return jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+
+
+@dataclasses.dataclass
+class CellResult:
+    arch: str
+    shape: str
+    mesh: str
+    status: str  # ok | skip | error
+    note: str = ""
+    compile_s: float = 0.0
+    memory: Optional[dict] = None
+    cost: Optional[dict] = None
+    hlo: Optional[dict] = None
+    roofline: Optional[dict] = None
+
+    def to_dict(self):
+        return dataclasses.asdict(self)
+
+
+def _useful_bytes_per_dev(cfg, shape, model, n_dev) -> float:
+    """Minimum HBM traffic per device: active params once + cache R/W."""
+    act_param_bytes = cfg.active_param_count() * (
+        2 if shape.kind != "train" else 4
+    )
+    cache_bytes = 0
+    if shape.kind == "decode":
+        cache = model.cache_specs(shape)
+        cache_bytes = 2 * mod.tree_bytes(cache)  # read + write
+    if shape.kind == "train":
+        # params + grads + m/v read&write (fp32) dominates weight traffic
+        act_param_bytes = cfg.param_count() * (4 + 4 + 4 * 4)
+    return (act_param_bytes + cache_bytes) / n_dev
+
+
+ACT_STACK_BUDGET = 4 * 2**30  # target saved-residual stack per device
+
+
+def auto_microbatches(cfg, shape, dp_size: int) -> int:
+    """Grad-accumulation factor keeping the per-device saved-residual stack
+    (n_layers x b_dev x seq x d_model x 2B, the scan-carry checkpoint cost)
+    under ~4 GiB. Constrained so each microbatch still divides the DP axis."""
+    if shape.kind != "train":
+        return 1
+    stack = cfg.n_layers * (shape.global_batch / dp_size) * shape.seq_len * cfg.d_model * 2
+    n = 1
+    while (
+        stack / n > ACT_STACK_BUDGET
+        and shape.global_batch % (2 * n) == 0
+        and (shape.global_batch // (2 * n)) % dp_size == 0
+    ):
+        n *= 2
+    return n
+
+
+def run_cell(
+    arch: str,
+    shape_name: str,
+    multi_pod: bool = False,
+    remat: str = "full",
+    microbatch: int = 0,
+    rule_overrides: Optional[Dict[str, tuple]] = None,
+    bf16_params: bool = False,
+    moe_dispatch: str = "scatter",
+    ep: int = 0,
+    verbose: bool = True,
+) -> CellResult:
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    mesh_name = ("2x16x16" if multi_pod else "16x16") + (f"+ep{ep}" if ep else "")
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        return CellResult(arch, shape_name, mesh_name, "skip", why)
+
+    mesh = make_production_mesh(multi_pod=multi_pod, ep=ep)
+    n_dev = mesh.size
+    act_rules = dict(sh.ACT_RULES)
+    param_rules = dict(sh.PARAM_RULES)
+    if rule_overrides:
+        for k, v in rule_overrides.items():
+            act_rules[k] = tuple(v)
+            if k in param_rules:
+                param_rules[k] = tuple(v)
+    sh.set_sharding_context(mesh, act_rules)
+
+    model = build_model(cfg, remat_policy=remat if shape.kind == "train" else "none")
+    if hasattr(model, "moe_dispatch"):
+        model.moe_dispatch = moe_dispatch
+    dp_size = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+    n_micro = microbatch if microbatch > 0 else auto_microbatches(cfg, shape, dp_size)
+    t0 = time.time()
+    try:
+        if shape.kind == "train":
+            tc = TrainConfig(n_microbatches=n_micro, bf16_params=bf16_params)
+            sspecs = state_specs(model, tc)
+            s_shard, s_shapes = _shardings_and_shapes(sspecs, mesh, param_rules)
+            in_specs = model.input_specs(shape)
+            b_shard, b_shapes = _shardings_and_shapes(in_specs, mesh, act_rules)
+            step = make_train_step(model, tc)
+            out_shape = jax.eval_shape(step, s_shapes, b_shapes)
+            out_shard = (s_shard, jax.tree.map(lambda _: _replicated(mesh), out_shape[1]))
+            jitted = jax.jit(
+                step,
+                in_shardings=(s_shard, b_shard),
+                out_shardings=out_shard,
+                donate_argnums=(0,),
+            )
+            with mesh:
+                lowered = jitted.lower(s_shapes, b_shapes)
+                compiled = lowered.compile()
+        elif shape.kind == "prefill":
+            pspecs = _bf16_params(model.param_specs())
+            p_shard, p_shapes = _shardings_and_shapes(pspecs, mesh, param_rules)
+            in_specs = model.input_specs(shape)
+            b_shard, b_shapes = _shardings_and_shapes(in_specs, mesh, act_rules)
+            cspecs = model.cache_specs(shape)
+            c_shard = sh.tree_shardings(cspecs, mesh, act_rules)
+            fn = lambda p, b: model.prefill(p, b)
+            out_shape = jax.eval_shape(fn, p_shapes, b_shapes)
+            out_shard = (c_shard, _replicated(mesh))
+            jitted = jax.jit(fn, in_shardings=(p_shard, b_shard), out_shardings=out_shard)
+            with mesh:
+                lowered = jitted.lower(p_shapes, b_shapes)
+                compiled = lowered.compile()
+        else:  # decode
+            pspecs = _bf16_params(model.param_specs())
+            p_shard, p_shapes = _shardings_and_shapes(pspecs, mesh, param_rules)
+            cspecs = model.cache_specs(shape)
+            c_shard, c_shapes = _shardings_and_shapes(cspecs, mesh, act_rules)
+            in_specs = model.input_specs(shape)
+            b_shard, b_shapes = _shardings_and_shapes(in_specs, mesh, act_rules)
+            fn = model.decode_step
+            out_shard = (c_shard, _replicated(mesh))
+            jitted = jax.jit(
+                fn,
+                in_shardings=(p_shard, c_shard, b_shard),
+                out_shardings=out_shard,
+                donate_argnums=(1,),
+            )
+            with mesh:
+                lowered = jitted.lower(p_shapes, c_shapes, b_shapes)
+                compiled = lowered.compile()
+    except Exception as e:  # compile failures are bugs; surface them
+        return CellResult(
+            arch, shape_name, mesh_name, "error", f"{type(e).__name__}: {e}",
+            compile_s=time.time() - t0,
+        )
+    finally:
+        sh.set_sharding_context(None)
+
+    compile_s = time.time() - t0
+    mem = compiled.memory_analysis()
+    mem_d = {
+        "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+        "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+        "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+        "alias_bytes": getattr(mem, "alias_size_in_bytes", 0),
+    }
+    mem_d["total_per_device"] = (
+        mem_d["argument_bytes"] + mem_d["output_bytes"] + mem_d["temp_bytes"]
+        - mem_d["alias_bytes"]
+    )
+    cost = compiled.cost_analysis() or {}
+    cost_d = {k: float(v) for k, v in cost.items() if isinstance(v, (int, float))
+              and k in ("flops", "bytes accessed", "transcendentals")}
+
+    stats = analyze_hlo(compiled.as_text())
+    rep = roofline(
+        arch, shape_name, stats, n_dev,
+        model_flops_for(cfg, shape),
+        _useful_bytes_per_dev(cfg, shape, model, n_dev),
+    )
+    res = CellResult(
+        arch, shape_name, mesh_name, "ok",
+        compile_s=compile_s, memory=mem_d, cost=cost_d,
+        hlo=stats.to_dict(), roofline=rep.to_dict(),
+    )
+    if verbose:
+        gb = mem_d["total_per_device"] / 2**30
+        print(
+            f"[{arch} x {shape_name} x {mesh_name}] OK compile={compile_s:.1f}s "
+            f"mem/dev={gb:.2f}GiB flops/dev={stats.flops:.3e} "
+            f"hbm/dev={stats.hbm_bytes:.3e} coll/dev={stats.total_coll_bytes:.3e} "
+            f"dominant={rep.dominant} bound={rep.bound_s*1e3:.1f}ms frac={rep.fraction:.3f}"
+        )
+        sys.stdout.flush()
+    return res
+
+
+def main():
+    ap = argparse.ArgumentParser(description="Multi-pod dry-run driver")
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--remat", default="full", choices=["none", "full", "dots"])
+    ap.add_argument("--microbatch", type=int, default=0, help="0 = auto")
+    ap.add_argument("--out", default="")
+    ap.add_argument("--rule", action="append", default=[],
+                    help="logical=axis1+axis2 overrides (hillclimbing)")
+    ap.add_argument("--bf16-params", action="store_true")
+    ap.add_argument("--moe-dispatch", default="scatter", choices=["scatter", "einsum"])
+    args = ap.parse_args()
+
+    archs = list_archs() if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    overrides = {}
+    for r in args.rule:
+        k, v = r.split("=", 1)
+        overrides[k] = tuple(x for x in v.split("+") if x)
+
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                res = run_cell(
+                    arch, shape, multi_pod=mp, remat=args.remat,
+                    microbatch=args.microbatch, rule_overrides=overrides or None,
+                    bf16_params=args.bf16_params, moe_dispatch=args.moe_dispatch,
+                )
+                if res.status == "skip":
+                    print(f"[{arch} x {shape} x {'2x16x16' if mp else '16x16'}] SKIP: {res.note}")
+                elif res.status == "error":
+                    print(f"[{arch} x {shape} x {'2x16x16' if mp else '16x16'}] ERROR: {res.note}")
+                results.append(res.to_dict())
+
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+        print(f"wrote {args.out}")
+    n_err = sum(1 for r in results if r["status"] == "error")
+    sys.exit(1 if n_err else 0)
+
+
+if __name__ == "__main__":
+    main()

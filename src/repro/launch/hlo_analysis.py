@@ -1,0 +1,455 @@
+"""Trip-count-aware HLO cost analysis.
+
+XLA's built-in ``compiled.cost_analysis()`` counts a ``while`` body ONCE,
+which undercounts scan-over-layers models by ~n_layers x. This module walks
+the optimized (post-SPMD, per-device) HLO text and computes:
+
+  * flops        — 2 * prod(out dims) * prod(contracting dims) per dot /
+                   convolution, recursing into fusions, call and while
+                   bodies, multiplying by ``known_trip_count`` from the
+                   while's backend_config.
+  * hbm_bytes    — op-boundary traffic: every executed top-level instruction
+                   reads its operands and writes its outputs (fusions are
+                   opaque), i.e. a perfect-fusion HBM traffic model.
+  * collectives  — per-kind operand bytes and instruction counts
+                   (all-gather / all-reduce / reduce-scatter / all-to-all /
+                   collective-permute), trip-count multiplied.
+
+All quantities are PER DEVICE (the module analysed is the SPMD-partitioned
+per-device program).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import re
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def type_bytes(type_str: str) -> int:
+    """Bytes of an HLO type string (handles tuples)."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            n = math.prod(int(d) for d in dims.split(","))
+        total += DTYPE_BYTES[dt] * n
+    return total
+
+
+def type_dims(type_str: str) -> List[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",")] if dims else []
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    out_type: str
+    op: str
+    operands: List[str]
+    attrs: str
+    line: str
+    is_root: bool = False
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: List[Instr]
+    by_name: Dict[str, Instr]
+
+
+# one instruction:  "  %name = TYPE op(...), attrs" / "  ROOT %name = ..."
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^=]*?\))|(?:[\w\[\]{},\s]+?))\s+([\w\-]+)\((.*)$"
+)
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.*\{\s*$")
+
+
+def parse_module(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry: Optional[str] = None
+    cur: Optional[Computation] = None
+    comment_re = re.compile(r"/\*.*?\*/")
+    for raw in text.splitlines():
+        line = comment_re.sub("", raw).rstrip()
+        if cur is None:
+            m = _COMP_HDR_RE.match(line)
+            if m:
+                cur = Computation(m.group(1), [], {})
+                if line.startswith("ENTRY"):
+                    entry = cur.name
+            continue
+        if line == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, out_type, op, rest = m.groups()
+        # split operands (top-level of the first paren group) from attrs
+        depth, idx = 1, 0
+        for idx, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+        operand_str = rest[:idx]
+        attrs = rest[idx + 1 :]
+        operands = re.findall(r"%([\w.\-]+)", operand_str)
+        ins = Instr(name, out_type.strip(), op, operands, attrs, line,
+                    is_root=line.lstrip().startswith("ROOT"))
+        cur.instrs.append(ins)
+        cur.by_name[name] = ins
+    return comps, entry
+
+
+def _operand_type(comp: Computation, operand: str) -> str:
+    ins = comp.by_name.get(operand)
+    return ins.out_type if ins else ""
+
+
+_TRIP_RE = re.compile(r'"known_trip_count"\s*:\s*\{\s*"n"\s*:\s*"(\d+)"')
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+
+def _dot_flops(comp: Computation, ins: Instr) -> float:
+    out = type_dims(ins.out_type)
+    lhs_t = _operand_type(comp, ins.operands[0]) if ins.operands else ""
+    lhs = type_dims(lhs_t)
+    m = _CONTRACT_RE.search(ins.attrs)
+    contract = 1
+    if m and m.group(1):
+        for d in m.group(1).split(","):
+            di = int(d)
+            if di < len(lhs):
+                contract *= lhs[di]
+    return 2.0 * math.prod(out or [0]) * contract
+
+
+_FREE_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota",
+}
+
+
+@dataclasses.dataclass
+class HloStats:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    coll_bytes: Dict[str, float] = dataclasses.field(default_factory=dict)
+    coll_count: Dict[str, int] = dataclasses.field(default_factory=dict)
+    dot_count: int = 0
+    while_trips: List[int] = dataclasses.field(default_factory=list)
+    bytes_by_op: Dict[str, float] = dataclasses.field(default_factory=dict)
+    # pure dtype-conversion fusions: an XLA *CPU* artifact (bf16 dot operands
+    # get mirrored to f32 — TPU has native bf16 MXU paths). Tracked separately
+    # and excluded from hbm_bytes.
+    mirror_bytes: float = 0.0
+
+    @property
+    def total_coll_bytes(self) -> float:
+        return sum(self.coll_bytes.values())
+
+    def to_dict(self) -> dict:
+        return {
+            "flops": self.flops,
+            "hbm_bytes": self.hbm_bytes,
+            "coll_bytes": dict(self.coll_bytes),
+            "coll_count": dict(self.coll_count),
+            "total_coll_bytes": self.total_coll_bytes,
+            "dot_count": self.dot_count,
+            "while_trips": list(self.while_trips),
+            "mirror_bytes": self.mirror_bytes,
+            "bytes_by_op": dict(
+                sorted(self.bytes_by_op.items(), key=lambda kv: -kv[1])[:12]
+            ),
+        }
+
+
+def _flops_of_computation(
+    comps: Dict[str, Computation], name: str, cache: Dict[str, float]
+) -> float:
+    """Recursive flop count (dots + convs) of one computation incl. callees."""
+    if name in cache:
+        return cache[name]
+    comp = comps.get(name)
+    if comp is None:
+        return 0.0
+    total = 0.0
+    cache[name] = 0.0  # cycle guard
+    for ins in comp.instrs:
+        if ins.op == "dot":
+            total += _dot_flops(comp, ins)
+        elif ins.op == "convolution":
+            # approx: 2 * out elems * (in_ch * prod(kernel spatial)) — rare here
+            total += 2.0 * math.prod(type_dims(ins.out_type) or [0])
+        elif ins.op == "while":
+            trip = 1
+            m = _TRIP_RE.search(ins.attrs)
+            if m:
+                trip = int(m.group(1))
+            b = _BODY_RE.search(ins.attrs)
+            c = _COND_RE.search(ins.attrs)
+            if b:
+                total += trip * _flops_of_computation(comps, b.group(1), cache)
+            if c:
+                total += trip * _flops_of_computation(comps, c.group(1), cache)
+        elif ins.op in ("fusion", "call", "conditional", "map", "reduce", "sort"):
+            m = _CALLS_RE.search(ins.attrs)
+            if m:
+                total += _flops_of_computation(comps, m.group(1), cache)
+            for cm in re.finditer(r"(?:to_apply|branch_computations)=\{?%?([\w.\-]+)", ins.attrs):
+                total += _flops_of_computation(comps, cm.group(1), cache)
+    cache[name] = total
+    return total
+
+
+def _root_instrs(comp: Computation) -> List[Instr]:
+    root = next((i for i in comp.instrs if i.is_root), None)
+    if root is None and comp.instrs:
+        root = comp.instrs[-1]
+    if root is None:
+        return []
+    if root.op == "tuple":
+        return [comp.by_name[o] for o in root.operands if o in comp.by_name]
+    return [root]
+
+
+def _dus_alias_correction(comps: Dict[str, Computation], called: str) -> float:
+    """For in-place-update fusions: bytes to SUBTRACT from the naive
+    (operands + output) count. Each dynamic-update-slice root element aliases
+    a full buffer that appears both as operand and output but only touches
+    update-slice bytes (read + write). Roots reached through elementwise
+    unary wrappers (convert/copy/bitcast) count too — on TPU those fuse into
+    the slice update."""
+    comp = comps.get(called)
+    if comp is None:
+        return 0.0
+    corr = 0.0
+    for r in _root_instrs(comp):
+        # peel unary wrappers to find a dus
+        seen = 0
+        while r.op in ("convert", "copy", "bitcast") and r.operands and seen < 4:
+            nxt = comp.by_name.get(r.operands[0])
+            if nxt is None:
+                break
+            r = nxt
+            seen += 1
+        if r.op != "dynamic-update-slice" or len(r.operands) < 2:
+            continue
+        buf = type_bytes(r.out_type)
+        upd = type_bytes(_operand_type(comp, r.operands[1]))
+        # naive charged: buf as output + buf as aliased operand + upd read.
+        # actual traffic: upd read + upd write  =>  subtract 2*buf - upd.
+        corr += 2.0 * buf - upd
+    return corr
+
+
+_MIRROR_OPS = {"parameter", "convert", "bitcast", "constant"}
+
+
+def _is_dtype_mirror(comps: Dict[str, Computation], called: str) -> bool:
+    comp = comps.get(called)
+    if comp is None:
+        return False
+    return all(i.op in _MIRROR_OPS for i in comp.instrs)
+
+
+_LAYOUT_RE = re.compile(r"\{([\d,]*)\}")
+
+
+def _is_alias_copy(comp: Computation, ins: Instr) -> bool:
+    """Same-shape same-layout copy: a loop-carry aliasing artifact that
+    in-place buffer donation elides on TPU."""
+    if ins.op != "copy" or not ins.operands:
+        return False
+    src = _operand_type(comp, ins.operands[0])
+    if not src:
+        return False
+    norm = lambda t: re.sub(r"\s", "", t)
+    return norm(src) == norm(ins.out_type)
+
+
+def _fusion_bytes(comps: Dict[str, Computation], called: str) -> Optional[float]:
+    """Precise fusion-boundary traffic: parameters consumed only by internal
+    dynamic-slice ops are charged at slice size; dynamic-update-slice roots
+    (possibly behind convert/copy/bitcast) charge update size; everything
+    else at full size."""
+    comp = comps.get(called)
+    if comp is None:
+        return None
+    total = 0.0
+    params = [i for i in comp.instrs if i.op == "parameter"]
+    dus_alias_params = set()
+    # writes (root side)
+    for r in _root_instrs(comp):
+        seen = 0
+        while r.op in ("convert", "copy", "bitcast") and r.operands and seen < 4:
+            nxt = comp.by_name.get(r.operands[0])
+            if nxt is None:
+                break
+            r = nxt
+            seen += 1
+        if r.op == "dynamic-update-slice" and len(r.operands) >= 2:
+            total += type_bytes(_operand_type(comp, r.operands[1]))
+            buf = comp.by_name.get(r.operands[0])
+            # the aliased buffer operand (possibly behind a bitcast/convert)
+            seen = 0
+            while buf is not None and buf.op in ("convert", "copy", "bitcast") and buf.operands and seen < 4:
+                buf = comp.by_name.get(buf.operands[0])
+                seen += 1
+            if buf is not None and buf.op == "parameter":
+                dus_alias_params.add(buf.name)
+        else:
+            total += type_bytes(r.out_type)
+    # reads (parameter side): kLoop fusions are output-driven, so a param
+    # reaching the root only through (elementwise-unary)* -> dynamic-slice
+    # is read at slice granularity, not full size.
+    uses_of: Dict[str, List[Instr]] = {}
+    for i in comp.instrs:
+        for o in i.operands:
+            uses_of.setdefault(o, []).append(i)
+    for p in params:
+        if p.name in dus_alias_params:
+            continue  # in-place buffer: not read beyond the slice
+        frontier = [p.name]
+        sliced_bytes = 0.0
+        full = False
+        seen = set()
+        while frontier:
+            n = frontier.pop()
+            if n in seen:
+                continue
+            seen.add(n)
+            for u in uses_of.get(n, []):
+                if u.op in ("convert", "bitcast", "copy"):
+                    frontier.append(u.name)
+                elif u.op == "dynamic-slice" and u.operands and u.operands[0] == n:
+                    sliced_bytes += type_bytes(u.out_type)
+                else:
+                    full = True
+        if full or not uses_of.get(p.name):
+            total += type_bytes(p.out_type)
+        else:
+            total += sliced_bytes
+    return total
+
+
+def _walk_bytes(
+    comps: Dict[str, Computation],
+    name: str,
+    mult: float,
+    stats: HloStats,
+    flop_cache: Dict[str, float],
+) -> None:
+    comp = comps.get(name)
+    if comp is None:
+        return
+    for ins in comp.instrs:
+        if ins.op in _FREE_OPS:
+            continue
+        if ins.op == "while":
+            trip = 1
+            m = _TRIP_RE.search(ins.attrs)
+            if m:
+                trip = int(m.group(1))
+            stats.while_trips.append(trip)
+            b = _BODY_RE.search(ins.attrs)
+            c = _COND_RE.search(ins.attrs)
+            if b:
+                _walk_bytes(comps, b.group(1), mult * trip, stats, flop_cache)
+            if c:
+                _walk_bytes(comps, c.group(1), mult * trip, stats, flop_cache)
+            continue
+        if ins.op == "call":
+            m = _CALLS_RE.search(ins.attrs)
+            if m:
+                _walk_bytes(comps, m.group(1), mult, stats, flop_cache)
+            continue
+        # opaque op (incl. fusion): operands read + output written, with
+        # slice-touching ops charged at slice granularity
+        if ins.op == "dynamic-slice":
+            op_bytes = 2.0 * type_bytes(ins.out_type)
+        elif ins.op == "dynamic-update-slice":
+            upd = type_bytes(_operand_type(comp, ins.operands[1])) if len(ins.operands) > 1 else 0
+            op_bytes = 2.0 * upd
+        elif ins.op in ("gather", "slice"):
+            idx = (
+                type_bytes(_operand_type(comp, ins.operands[1]))
+                if ins.op == "gather" and len(ins.operands) > 1
+                else 0
+            )
+            op_bytes = 2.0 * type_bytes(ins.out_type) + idx
+        else:
+            op_bytes = type_bytes(ins.out_type)
+            for o in ins.operands:
+                op_bytes += type_bytes(_operand_type(comp, o))
+            if ins.op == "fusion":
+                m = _CALLS_RE.search(ins.attrs)
+                if m:
+                    if _is_dtype_mirror(comps, m.group(1)):
+                        stats.mirror_bytes += mult * op_bytes
+                        continue
+                    fb = _fusion_bytes(comps, m.group(1))
+                    if fb is not None:
+                        op_bytes = fb
+        if ins.op == "convert":  # bare dtype mirror (CPU bf16-dot artifact)
+            stats.mirror_bytes += mult * op_bytes
+            continue
+        if _is_alias_copy(comp, ins):  # loop-carry copy (elided on TPU)
+            stats.mirror_bytes += mult * op_bytes
+            continue
+        stats.hbm_bytes += mult * op_bytes
+        stats.bytes_by_op[ins.op] = stats.bytes_by_op.get(ins.op, 0.0) + mult * op_bytes
+
+        if ins.op == "dot":
+            stats.flops += mult * _dot_flops(comp, ins)
+            stats.dot_count += 1
+        elif ins.op == "convolution":
+            stats.flops += mult * 2.0 * math.prod(type_dims(ins.out_type) or [0])
+        elif ins.op == "fusion":
+            m = _CALLS_RE.search(ins.attrs)
+            if m:
+                stats.flops += mult * _flops_of_computation(comps, m.group(1), flop_cache)
+        elif ins.op in COLLECTIVES or any(ins.op.startswith(k) for k in COLLECTIVES):
+            kind = next((k for k in COLLECTIVES if ins.op.startswith(k)), ins.op)
+            in_bytes = sum(type_bytes(_operand_type(comp, o)) for o in ins.operands)
+            stats.coll_bytes[kind] = stats.coll_bytes.get(kind, 0.0) + mult * in_bytes
+            stats.coll_count[kind] = stats.coll_count.get(kind, 0) + int(mult)
+
+
+def analyze_hlo(text: str) -> HloStats:
+    comps, entry = parse_module(text)
+    stats = HloStats()
+    if entry is None:
+        return stats
+    _walk_bytes(comps, entry, 1.0, stats, {})
+    return stats

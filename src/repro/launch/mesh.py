@@ -1,0 +1,33 @@
+"""Production mesh builders.
+
+Defined as FUNCTIONS (never module-level constants) so importing this module
+never touches jax device state. The dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import; everything else sees the real (single) device.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False, ep: int = 0):
+    """16x16 single-pod (256 chips) or 2x16x16 multi-pod (512 chips) mesh.
+
+    ``ep`` re-factorizes the 16-way model dimension into an explicit expert
+    axis (MoE expert parallelism): (data, expert=ep, model=16//ep). The
+    logical-rule tables route `expert` dims to the new axis when present.
+    """
+    if ep:
+        assert 16 % ep == 0, ep
+        shape = (2, 16, ep, 16 // ep) if multi_pod else (16, ep, 16 // ep)
+        axes = (("pod",) if multi_pod else ()) + ("data", "expert", "model")
+        return jax.make_mesh(shape, axes)
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Mesh over whatever devices actually exist (tests / examples)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"))

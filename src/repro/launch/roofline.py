@@ -1,0 +1,95 @@
+"""Three-term roofline model for TPU v5e-class chips.
+
+  compute   = per-device HLO flops / peak bf16 FLOP/s
+  memory    = per-device HBM traffic / HBM bandwidth
+  collective= per-device collective operand bytes / ICI link bandwidth
+
+(The spec's ``X_total / (chips * BW)`` equals our per-device form since the
+HLO analysed is the per-device SPMD program.)
+
+``fraction_of_roofline`` compares useful work against the binding term:
+  * compute-bound cells: useful = MODEL_FLOPS time (an MFU-style number)
+  * memory-bound cells:  useful = minimum required bytes (params read once +
+    cache/batch traffic) — an MBU-style number.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from repro.launch.hlo_analysis import HloStats
+
+PEAK_FLOPS_BF16 = 197e12  # per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    n_devices: int
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    bound_s: float
+    model_flops: float  # total useful flops (6ND / 2ND)
+    hlo_flops_total: float
+    useful_ratio: float  # MODEL_FLOPS / HLO_FLOPs(total)
+    useful_bytes: float  # minimum per-device traffic (memory-bound cells)
+    fraction: float  # useful time on dominant resource / bound_s
+    note: str = ""
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def roofline(
+    arch: str,
+    shape: str,
+    stats: HloStats,
+    n_devices: int,
+    model_flops: float,
+    useful_bytes_per_dev: float = 0.0,
+    note: str = "",
+) -> RooflineReport:
+    compute_s = stats.flops / PEAK_FLOPS_BF16
+    memory_s = stats.hbm_bytes / HBM_BW
+    coll_s = stats.total_coll_bytes / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
+    dominant = max(terms, key=terms.get)
+    bound = terms[dominant]
+
+    # useful time = the larger of (ideal compute time for MODEL_FLOPS,
+    # ideal HBM time for the minimum traffic). fraction = useful / bound —
+    # an MFU-style number for compute-bound cells, MBU-style for
+    # memory-bound ones.
+    useful_compute_s = (model_flops / n_devices) / PEAK_FLOPS_BF16
+    useful_mem_s = useful_bytes_per_dev / HBM_BW
+    frac = max(useful_compute_s, useful_mem_s) / bound if bound else 0.0
+
+    hlo_total = stats.flops * n_devices
+    return RooflineReport(
+        arch=arch,
+        shape=shape,
+        n_devices=n_devices,
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=coll_s,
+        dominant=dominant,
+        bound_s=bound,
+        model_flops=model_flops,
+        hlo_flops_total=hlo_total,
+        useful_ratio=(model_flops / hlo_total) if hlo_total else 0.0,
+        useful_bytes=useful_bytes_per_dev,
+        fraction=frac,
+        note=note,
+    )
+
+
+def model_flops_for(cfg, shape) -> float:
+    """6*N*D for training, 2*N*D for inference (N = active params)."""
+    n = cfg.active_param_count()
+    d = shape.tokens_per_step
+    return (6.0 if shape.kind == "train" else 2.0) * n * d

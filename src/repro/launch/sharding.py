@@ -1,0 +1,145 @@
+"""Logical-axis sharding rules with a divisibility guard.
+
+Arrays carry *logical* axis names (via ``ParamSpec.axes`` or explicit calls to
+``logical_constraint``). A rule table maps each logical name to an ordered
+tuple of mesh axes; axes that do not divide the dimension (or are already
+used by another dim of the same array) are dropped. This keeps every
+(arch x shape x mesh) cell compilable — e.g. 8 KV heads on a 16-way ``model``
+axis fall back to replication, granite's 49155 vocab falls back likewise —
+while big dims get full sharding.
+
+Two rule sets:
+  * PARAM_RULES  — weight storage. ``embed`` -> ``data`` gives ZeRO/FSDP
+    sharding of params & optimizer state; ``mlp``/``heads``/``vocab`` ->
+    ``model`` is tensor parallelism.
+  * ACT_RULES    — activations. ``batch`` -> ('pod','data') is DP;
+    ``kv_seq`` -> ``model`` shards decode KV caches along sequence
+    (XLA then emits flash-decoding-style partial reductions).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import module as mod
+
+Rules = Dict[str, Tuple[str, ...]]
+
+PARAM_RULES: Rules = {
+    "embed": ("data",),       # FSDP / ZeRO-3 storage sharding
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "mlp": ("model",),
+    "vocab": ("model", "expert"),
+    # expert parallelism when the mesh has an `expert` axis (make_production_
+    # mesh(ep=...)); otherwise tries `model` and is guarded off (8/40 experts
+    # do not divide 16)
+    "expert": ("expert", "model"),
+    "layers": (),
+    "lru": ("model",),
+    "ssm_inner": ("model",),
+    "ssm_heads": ("model",),
+    "state": (),
+    "conv": (),
+    "src": (),
+}
+
+ACT_RULES: Rules = {
+    "batch": ("pod", "data"),
+    # decode KV caches keep their own batch axis so serving experiments can
+    # reshard activations (e.g. weight-stationary 2D TP) without touching
+    # the resident cache layout
+    "cache_batch": ("pod", "data"),
+    "seq": (),
+    "embed": (),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    # query-parallel attention: inside flash attention the score tensors are
+    # sharded over the query-sequence dim on the `model` axis whenever the
+    # KV-head dim cannot use it (GQA kv_heads < 16 on every assigned arch) —
+    # zero redundant head compute, small q all-to-all + dk/dv reduce instead.
+    # (`expert` joins in on EP meshes so attention keeps full 16-way width.)
+    "attn_sq": ("model", "expert"),
+    "mlp": ("model",),
+    "vocab": ("model", "expert"),
+    "expert": ("expert", "model"),
+    "kv_seq": ("model", "expert"),  # decode cache: shard seq -> flash-decoding
+    "lru": ("model",),
+    "ssm_inner": ("model",),
+    "ssm_heads": ("model",),
+    "state": (),
+    "layers": (),
+    "src": (),
+}
+
+
+def partition_spec(
+    shape: Sequence[int], axes: Sequence[Optional[str]], mesh: Mesh, rules: Rules
+) -> P:
+    assignment = []
+    used = set()
+    for dim, name in zip(shape, axes):
+        chosen = []
+        if name:
+            for ax in rules.get(name, ()):
+                if ax in used or ax not in mesh.shape:
+                    continue
+                size = mesh.shape[ax]
+                cur = math.prod(mesh.shape[a] for a in chosen) if chosen else 1
+                if dim % (cur * size) == 0:
+                    chosen.append(ax)
+                    used.add(ax)
+        if not chosen:
+            assignment.append(None)
+        elif len(chosen) == 1:
+            assignment.append(chosen[0])
+        else:
+            assignment.append(tuple(chosen))
+    return P(*assignment)
+
+
+def named_sharding(shape, axes, mesh: Mesh, rules: Rules) -> NamedSharding:
+    return NamedSharding(mesh, partition_spec(shape, axes, mesh, rules))
+
+
+def tree_shardings(spec_tree, mesh: Mesh, rules: Rules = PARAM_RULES):
+    """ParamSpec tree -> NamedSharding tree."""
+    return mod.tree_map_specs(
+        lambda s: named_sharding(s.shape, s.axes, mesh, rules), spec_tree
+    )
+
+
+# ---------------------------------------------------------------------------
+# In-model activation constraints (context-scoped; no-op outside launch code)
+# ---------------------------------------------------------------------------
+
+_CTX: dict = {"mesh": None, "rules": None}
+
+
+def set_sharding_context(mesh: Optional[Mesh], rules: Optional[Rules] = None) -> None:
+    _CTX["mesh"] = mesh
+    _CTX["rules"] = dict(rules or ACT_RULES)
+
+
+def get_context_rules() -> Optional[Rules]:
+    return _CTX["rules"]
+
+
+def update_context_rules(**overrides) -> None:
+    """Hillclimbing hook: override individual logical-axis rules."""
+    if _CTX["rules"] is None:
+        _CTX["rules"] = dict(ACT_RULES)
+    for k, v in overrides.items():
+        _CTX["rules"][k] = tuple(v)
+
+
+def logical_constraint(x: jax.Array, axes: Sequence[Optional[str]]) -> jax.Array:
+    """Apply with_sharding_constraint per the active context (no-op if unset)."""
+    mesh = _CTX["mesh"]
+    if mesh is None:
+        return x
+    s = named_sharding(x.shape, axes, mesh, _CTX["rules"] or ACT_RULES)
+    return jax.lax.with_sharding_constraint(x, s)

@@ -1,0 +1,165 @@
+"""Sharded flash-decoding: cache write + single-token attention under
+``shard_map``.
+
+The decode KV cache is sharded along ``kv_seq`` on the ``model`` mesh axis.
+XLA's automatic partitioner handles a dynamic-index update on a sharded dim
+poorly (whole-stack selects / carry copies), so we hand-partition:
+
+  * each model-rank owns a contiguous slice of cache positions;
+  * the new token's K/V is written slice-locally (a masked slot update —
+    no full-cache traffic anywhere);
+  * each rank computes partial attention over its slice, and the partials
+    are combined with the flash-decoding log-sum-exp correction in ONE
+    psum over (acc, l, m).
+
+Falls back to a single-device implementation when no mesh context is set
+(CPU tests / examples).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.launch import sharding as sh
+from repro.models import layers as L
+
+
+def _partial_attention(q, k_l, v_l, valid_from, valid_to, base):
+    """Partial (unnormalised) attention over a local cache slice.
+
+    q: (b, hkv, g, hd) scaled; k_l/v_l: (b, hkv, a_loc, hd).
+    valid positions are [valid_from, valid_to) in GLOBAL coordinates;
+    ``base`` is this slice's global offset.
+    Returns (acc (b,hkv,g,hd) f32, l (b,hkv,g) f32, m (b,hkv,g) f32).
+    """
+    # slice-level f32: decode attention is HBM-bound (cache reads dominate);
+    # computing QK/PV in f32 costs nothing at the roofline and avoids the
+    # CPU backend's whole-stack bf16->f32 operand mirroring.
+    a_loc = k_l.shape[2]
+    q = q.astype(jnp.float32)
+    s = jnp.einsum("bkgd,bksd->bkgs", q, k_l.astype(jnp.float32))
+    gpos = base + jnp.arange(a_loc)[None, None, None, :]
+    mask = (gpos >= valid_from) & (gpos < valid_to)
+    s = jnp.where(mask, s, -jnp.inf)
+    m = jnp.max(s, axis=-1)
+    m_safe = jnp.where(jnp.isneginf(m), 0.0, m)
+    p = jnp.where(mask, jnp.exp(s - m_safe[..., None]), 0.0)
+    l = jnp.sum(p, axis=-1)
+    acc = jnp.einsum("bkgs,bksd->bkgd", p, v_l.astype(jnp.float32))
+    return acc, l, m
+
+
+def _masked_slot_write(stack, new, i, lslot, in_range):
+    """Write ``new`` (b, hkv, 1, hd) at [i, :, :, lslot] iff in_range —
+    slice-sized ops only (reads the current slot to keep it when skipped)."""
+    zero = jnp.zeros((), jnp.int32)
+    idx = (jnp.asarray(i), zero, zero, jnp.asarray(lslot), zero)
+    upd = new.astype(stack.dtype)[None]
+    cur = jax.lax.dynamic_slice(stack, idx, upd.shape)
+    upd = jnp.where(in_range, upd, cur)
+    return jax.lax.dynamic_update_slice(stack, upd, idx)
+
+
+def decode_attention(
+    q: jax.Array,  # (b, 1, hq, hd)
+    k_new: jax.Array,  # (b, 1, hkv, hd)
+    v_new: jax.Array,
+    kst: jax.Array,  # (L, b, hkv, A, hd)
+    vst: jax.Array,
+    i,  # layer index (traced scalar)
+    pos,  # current position (traced scalar)
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns (attn_out (b, 1, hq, hd), kst, vst)."""
+    b, _, hq, hd = q.shape
+    hkv, a = kst.shape[2], kst.shape[3]
+    g = hq // hkv
+    scale = 1.0 / math.sqrt(hd)
+    pos = jnp.asarray(pos)
+    slot = pos % a
+    valid = jnp.minimum(pos + 1, a)
+    mesh = sh._CTX["mesh"]
+
+    k_t = L.cache_store(k_new)  # (b, hkv, 1, hd)
+    v_t = L.cache_store(v_new)
+
+    if mesh is None or "model" not in mesh.shape or mesh.shape["model"] == 1:
+        # single-device / no-mesh fallback
+        zero = jnp.zeros((), jnp.int32)
+        idx = (jnp.asarray(i), zero, zero, slot, zero)
+        kst = jax.lax.dynamic_update_slice(kst, k_t.astype(kst.dtype)[None], idx)
+        vst = jax.lax.dynamic_update_slice(vst, v_t.astype(vst.dtype)[None], idx)
+        k_l = jax.lax.dynamic_index_in_dim(kst, i, 0, keepdims=False)
+        v_l = jax.lax.dynamic_index_in_dim(vst, i, 0, keepdims=False)
+        out = L.attention_decode(q, k_l, v_l, valid)
+        return out, kst, vst
+
+    # derive specs through the same divisibility-guarded rule table used for
+    # in_shardings (e.g. batch=1 on long_500k cannot shard over `data`)
+    rules = sh.get_context_rules() or sh.ACT_RULES
+    cache_spec = sh.partition_spec(
+        kst.shape, ("layers", "cache_batch", "kv_heads", "kv_seq", None), mesh, rules
+    )
+    qspec = sh.partition_spec(q.shape, ("batch", None, None, None), mesh, rules)
+    kv_new_spec = sh.partition_spec(k_t.shape, ("batch", None, None, None), mesh, rules)
+    cb = cache_spec[1] if len(cache_spec) > 1 else None
+    cache_b_axes = () if cb is None else ((cb,) if isinstance(cb, str) else tuple(cb))
+    # attention output follows the CACHE's batch sharding (activations may be
+    # batch-replicated under weight-stationary decode TP — see §Perf)
+    out_spec = P(cb, None, None, None)
+
+    seq_dim = cache_spec[3] if len(cache_spec) > 3 else None
+    if not (seq_dim == "model" or (isinstance(seq_dim, tuple) and "model" in seq_dim)):
+        # kv_seq not sharded (guarded out) -> single-rank math is wrong in
+        # the manual body; use the local path under replication.
+        zero = jnp.zeros((), jnp.int32)
+        idx = (jnp.asarray(i), zero, zero, slot, zero)
+        kst = jax.lax.dynamic_update_slice(kst, k_t.astype(kst.dtype)[None], idx)
+        vst = jax.lax.dynamic_update_slice(vst, v_t.astype(vst.dtype)[None], idx)
+        k_l = jax.lax.dynamic_index_in_dim(kst, i, 0, keepdims=False)
+        v_l = jax.lax.dynamic_index_in_dim(vst, i, 0, keepdims=False)
+        out = L.attention_decode(q, k_l, v_l, valid)
+        return out, kst, vst
+
+    def body(q_l, k_t_l, v_t_l, kst_l, vst_l, i_, pos_, slot_, valid_):
+        b_loc = kst_l.shape[1]
+        if q_l.shape[0] != b_loc:
+            # activations batch-replicated (weight-stationary TP): slice the
+            # local cache-batch rows by this rank's position on the cache axes
+            rb = jnp.zeros((), jnp.int32)
+            for ax in cache_b_axes:
+                rb = rb * mesh.shape[ax] + jax.lax.axis_index(ax)
+            q_l = jax.lax.dynamic_slice_in_dim(q_l, rb * b_loc, b_loc, 0)
+            k_t_l = jax.lax.dynamic_slice_in_dim(k_t_l, rb * b_loc, b_loc, 0)
+            v_t_l = jax.lax.dynamic_slice_in_dim(v_t_l, rb * b_loc, b_loc, 0)
+        r = jax.lax.axis_index("model")
+        a_loc = kst_l.shape[3]
+        base = r * a_loc
+        in_range = (slot_ >= base) & (slot_ < base + a_loc)
+        lslot = jnp.clip(slot_ - base, 0, a_loc - 1)
+        kst_l = _masked_slot_write(kst_l, k_t_l, i_, lslot, in_range)
+        vst_l = _masked_slot_write(vst_l, v_t_l, i_, lslot, in_range)
+        k_l = jax.lax.dynamic_index_in_dim(kst_l, i_, 0, keepdims=False)
+        v_l = jax.lax.dynamic_index_in_dim(vst_l, i_, 0, keepdims=False)
+        qc = (q_l.astype(L.COMPUTE_DTYPE) * scale)[:, 0].reshape(-1, hkv, g, hd)
+        acc, l, m = _partial_attention(qc, k_l, v_l, 0, valid_, base)
+        gm = jax.lax.pmax(m, "model")
+        corr = jnp.where(jnp.isneginf(m), 0.0, jnp.exp(m - gm))
+        l_g, acc_g = jax.lax.psum((l * corr, acc * corr[..., None]), "model")
+        out = acc_g / jnp.maximum(l_g, 1e-20)[..., None]
+        return out.reshape(-1, 1, hq, hd).astype(q_l.dtype), kst_l, vst_l
+
+    from jax.experimental.shard_map import shard_map
+
+    out, kst, vst = shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(qspec, kv_new_spec, kv_new_spec,
+                  cache_spec, cache_spec, P(), P(), P(), P()),
+        out_specs=(out_spec, cache_spec, cache_spec),
+        check_rep=False,
+    )(q, k_t, v_t, kst, vst, jnp.asarray(i), pos, slot, valid)
+    return out, kst, vst

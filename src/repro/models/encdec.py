@@ -1,0 +1,255 @@
+"""Whisper-style encoder-decoder [arXiv:2212.04356].
+
+The conv/mel frontend is a STUB per the assignment: ``input_specs()``
+supplies precomputed frame embeddings (b, src_len, d_model). Encoder is
+non-causal self-attention; decoder is causal self-attention + cross
+attention with learned positional embeddings and GELU MLPs (biases on QKV
+per the reference implementation).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.launch.sharding import logical_constraint
+from repro.models import layers as L
+from repro.models import module as mod
+from repro.models.decode_attn import decode_attention
+from repro.models.transformer import remat_wrap, CACHE_DTYPE
+
+
+class EncDecLM:
+    def __init__(self, cfg: ModelConfig, remat_policy: str = "full"):
+        self.cfg = cfg
+        self.remat_policy = remat_policy
+
+    # ------------------------------------------------------------------
+    def _attn_specs(self, n: int, prefix: str = "layers") -> Dict[str, mod.ParamSpec]:
+        c = self.cfg
+        d = c.d_model
+        hd = c.resolved_head_dim
+        qd, kvd = c.n_heads * hd, c.n_kv_heads * hd
+        sp = lambda shape, axes, **kw: mod.spec((n,) + shape, (prefix,) + axes, **kw)
+        out = {
+            "wq": sp((d, qd), ("embed", "heads"), init="scaled"),
+            "wk": sp((d, kvd), ("embed", "kv_heads"), init="scaled"),
+            "wv": sp((d, kvd), ("embed", "kv_heads"), init="scaled"),
+            "wo": sp((qd, d), ("heads", "embed"), init="scaled"),
+            "bq": sp((qd,), ("heads",), init="zeros"),
+            "bv": sp((kvd,), ("kv_heads",), init="zeros"),
+        }
+        return out
+
+    def _mlp_specs(self, n: int) -> Dict[str, mod.ParamSpec]:
+        c = self.cfg
+        sp = lambda shape, axes, **kw: mod.spec((n,) + shape, ("layers",) + axes, **kw)
+        return {
+            "wu": sp((c.d_model, c.d_ff), ("embed", "mlp"), init="scaled"),
+            "wd": sp((c.d_ff, c.d_model), ("mlp", "embed"), init="scaled"),
+            "bu": sp((c.d_ff,), ("mlp",), init="zeros"),
+            "bd": sp((c.d_model,), ("embed",), init="zeros"),
+        }
+
+    def _norm(self, n: int, name: str) -> Dict[str, mod.ParamSpec]:
+        d = self.cfg.d_model
+        return {
+            f"{name}_g": mod.spec((n, d), ("layers", "embed"), init="ones"),
+            f"{name}_b": mod.spec((n, d), ("layers", "embed"), init="zeros"),
+        }
+
+    def param_specs(self):
+        c = self.cfg
+        enc_layer = {**self._attn_specs(c.n_enc_layers), **self._mlp_specs(c.n_enc_layers)}
+        enc_layer.update(self._norm(c.n_enc_layers, "ln1"))
+        enc_layer.update(self._norm(c.n_enc_layers, "ln2"))
+        dec_layer = {
+            "self": self._attn_specs(c.n_layers),
+            "cross": self._attn_specs(c.n_layers),
+            **self._mlp_specs(c.n_layers),
+        }
+        dec_layer.update(self._norm(c.n_layers, "ln1"))
+        dec_layer.update(self._norm(c.n_layers, "ln2"))
+        dec_layer.update(self._norm(c.n_layers, "ln3"))
+        return {
+            "enc_pos": mod.spec((c.src_len, c.d_model), ("src", "embed")),
+            "enc_layers": enc_layer,
+            "enc_norm_g": mod.spec((c.d_model,), ("embed",), init="ones"),
+            "enc_norm_b": mod.spec((c.d_model,), ("embed",), init="zeros"),
+            "embed": mod.spec((c.padded_vocab, c.d_model), ("vocab", "embed")),
+            "dec_pos": mod.spec((32768, c.d_model), (None, "embed")),
+            "dec_layers": dec_layer,
+            "dec_norm_g": mod.spec((c.d_model,), ("embed",), init="ones"),
+            "dec_norm_b": mod.spec((c.d_model,), ("embed",), init="zeros"),
+            "head": mod.spec((c.d_model, c.padded_vocab), ("embed", "vocab"), init="scaled"),
+        }
+
+    def init_params(self, key):
+        return mod.init_tree(self.param_specs(), key)
+
+    # ------------------------------------------------------------------
+    def _proj_qkv(self, p, xq, xkv):
+        c = self.cfg
+        hd = c.resolved_head_dim
+        b, sq, _ = xq.shape
+        skv = xkv.shape[1]
+        q = (jnp.einsum("bsd,dq->bsq", xq, p["wq"].astype(xq.dtype)) + p["bq"].astype(xq.dtype))
+        k = jnp.einsum("bsd,dq->bsq", xkv, p["wk"].astype(xq.dtype))
+        v = (jnp.einsum("bsd,dq->bsq", xkv, p["wv"].astype(xq.dtype)) + p["bv"].astype(xq.dtype))
+        return (
+            q.reshape(b, sq, c.n_heads, hd),
+            k.reshape(b, skv, c.n_kv_heads, hd),
+            v.reshape(b, skv, c.n_kv_heads, hd),
+        )
+
+    def _enc_layer(self, p, x):
+        c = self.cfg
+        h = L.layer_norm(x, p["ln1_g"], p["ln1_b"], c.norm_eps)
+        q, k, v = self._proj_qkv(p, h, h)
+        attn = L.attention_chunked(q, k, v, causal=False)
+        x = x + jnp.einsum("bsq,qd->bsd", attn.reshape(*attn.shape[:2], -1), p["wo"].astype(x.dtype))
+        h = L.layer_norm(x, p["ln2_g"], p["ln2_b"], c.norm_eps)
+        x = x + L.mlp_gelu(h, p["wu"], p["wd"], p["bu"], p["bd"])
+        return logical_constraint(x, ("batch", "seq", "embed"))
+
+    def encode(self, params, frames):
+        """frames: (b, src_len, d_model) precomputed embeddings (stub frontend)."""
+        c = self.cfg
+        x = (frames.astype(L.COMPUTE_DTYPE) + params["enc_pos"].astype(L.COMPUTE_DTYPE))
+        enc = remat_wrap(lambda xx, pp: self._enc_layer(pp, xx), self.remat_policy)
+        x, _ = jax.lax.scan(lambda xx, pp: (enc(xx, pp), None), x, params["enc_layers"])
+        return L.layer_norm(x, params["enc_norm_g"], params["enc_norm_b"], c.norm_eps)
+
+    def _dec_layer(self, p, x, enc_out, positions, mode, kv=None, pos=None, a_alloc=0):
+        c = self.cfg
+        h = L.layer_norm(x, p["ln1_g"], p["ln1_b"], c.norm_eps)
+        q, k, v = self._proj_qkv(p["self"], h, h)
+        if mode == "decode":
+            kst, vst, i = kv  # stacked (L, b, hkv, A, hd) carried through scan
+            attn, kst, vst = decode_attention(q, k, v, kst, vst, i, pos)
+            new_kv = (kst, vst)
+        else:
+            attn = L.attention_chunked(q, k, v, causal=True)
+            if mode == "prefill":
+                pad = ((0, 0), (0, max(a_alloc - k.shape[1], 0)), (0, 0), (0, 0))
+                new_kv = (
+                    L.cache_store(jnp.pad(k, pad)).astype(CACHE_DTYPE),
+                    L.cache_store(jnp.pad(v, pad)).astype(CACHE_DTYPE),
+                )
+            else:
+                new_kv = None
+        x = x + jnp.einsum("bsq,qd->bsd", attn.reshape(*attn.shape[:2], -1), p["self"]["wo"].astype(x.dtype))
+
+        h = L.layer_norm(x, p["ln2_g"], p["ln2_b"], c.norm_eps)
+        q2, k2, v2 = self._proj_qkv(p["cross"], h, enc_out)
+        cross = L.attention_chunked(q2, k2, v2, causal=False)
+        x = x + jnp.einsum("bsq,qd->bsd", cross.reshape(*cross.shape[:2], -1), p["cross"]["wo"].astype(x.dtype))
+
+        h = L.layer_norm(x, p["ln3_g"], p["ln3_b"], c.norm_eps)
+        x = x + L.mlp_gelu(h, p["wu"], p["wd"], p["bu"], p["bd"])
+        return logical_constraint(x, ("batch", "seq", "embed")), new_kv
+
+    def _decoder(self, params, tokens, enc_out, start_pos, mode, cache=None, pos=None, a_alloc=0):
+        c = self.cfg
+        x = L.embed(tokens, params["embed"])
+        s = tokens.shape[1]
+        positions = start_pos + jnp.arange(s)
+        # learned positions, clamped at the table edge (decode beyond table
+        # length only occurs for the out-of-spec decode_32k cell on whisper)
+        pe = jnp.take(
+            params["dec_pos"], jnp.minimum(positions, params["dec_pos"].shape[0] - 1), axis=0
+        )
+        x = x + pe.astype(x.dtype)
+        x = logical_constraint(x, ("batch", "seq", "embed"))
+        dec = remat_wrap(
+            lambda xx, args: self._dec_layer(
+                args[0], xx, enc_out, positions, mode, args[1], pos, a_alloc
+            ),
+            self.remat_policy if mode != "decode" else "none",
+        )
+
+        if mode == "decode":
+            def body(carry, per):
+                xx, kc, vc = carry
+                pp, i = per
+                xx, (kc, vc) = dec(xx, (pp, (kc, vc, i)))
+                return (xx, kc, vc), None
+            (x, kc, vc), _ = jax.lax.scan(
+                body, (x, cache["k"], cache["v"]),
+                (params["dec_layers"], jnp.arange(c.n_layers)),
+            )
+            kvs = (kc, vc)
+        else:
+            def body(xx, pp):
+                xx, kv = dec(xx, (pp, None))
+                return xx, kv
+            x, kvs = jax.lax.scan(body, x, params["dec_layers"])
+        x = L.layer_norm(x, params["dec_norm_g"], params["dec_norm_b"], c.norm_eps)
+        return x, kvs
+
+    # ------------------------------------------------------------------
+    def loss_fn(self, params, batch):
+        enc_out = self.encode(params, batch["frames"])
+        x, _ = self._decoder(params, batch["tokens"], enc_out, 0, "train")
+        logits = L.lm_logits(x, params["head"])
+        logits = logical_constraint(logits, ("batch", "seq", "vocab"))
+        loss = L.softmax_xent(logits, batch["labels"], batch.get("loss_mask"), valid_vocab=self.cfg.vocab_size)
+        return loss, {"xent": loss}
+
+    def prefill(self, params, batch, cache_budget: int = 0):
+        enc_out = self.encode(params, batch["frames"])
+        a_alloc = batch["tokens"].shape[1] + cache_budget
+        x, kvs = self._decoder(
+            params, batch["tokens"], enc_out, 0, "prefill", a_alloc=a_alloc
+        )
+        logits = L.lm_logits(x[:, -1:], params["head"])[..., : self.cfg.vocab_size]
+        cache = {"k": kvs[0], "v": kvs[1], "enc_out": enc_out.astype(CACHE_DTYPE)}
+        return cache, logits
+
+    def decode_step(self, params, cache, batch):
+        enc_out = cache["enc_out"].astype(L.COMPUTE_DTYPE)
+        pos = batch["pos"]
+        x, kvs = self._decoder(
+            params, batch["token"], enc_out, jnp.asarray(pos), "decode", cache, pos
+        )
+        logits = L.lm_logits(x, params["head"])[..., : self.cfg.vocab_size]
+        return {"k": kvs[0], "v": kvs[1], "enc_out": cache["enc_out"]}, logits
+
+    # ------------------------------------------------------------------
+    def input_specs(self, shape: ShapeConfig) -> Dict[str, Any]:
+        c = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        frames = mod.spec((b, c.src_len, c.d_model), ("batch", "src", "embed"), jnp.bfloat16)
+        if shape.kind == "train":
+            return {
+                "frames": frames,
+                "tokens": mod.spec((b, s), ("batch", "seq"), i32, "zeros"),
+                "labels": mod.spec((b, s), ("batch", "seq"), i32, "zeros"),
+                "loss_mask": mod.spec((b, s), ("batch", "seq"), jnp.float32, "ones"),
+            }
+        if shape.kind == "prefill":
+            return {
+                "frames": frames,
+                "tokens": mod.spec((b, s), ("batch", "seq"), i32, "zeros"),
+            }
+        return {
+            "token": mod.spec((b, 1), ("batch", "seq"), i32, "zeros"),
+            "pos": mod.spec((), (), i32, "zeros"),
+        }
+
+    def cache_specs(self, shape: ShapeConfig) -> Dict[str, Any]:
+        c = self.cfg
+        b = shape.global_batch
+        hd = c.resolved_head_dim
+        kv = (c.n_layers, b, c.n_kv_heads, shape.seq_len, hd)
+        axes = ("layers", "cache_batch", "kv_heads", "kv_seq", None)
+        return {
+            "k": mod.spec(kv, axes, CACHE_DTYPE, "zeros"),
+            "v": mod.spec(kv, axes, CACHE_DTYPE, "zeros"),
+            "enc_out": mod.spec(
+                (b, c.src_len, c.d_model), ("cache_batch", "src", "embed"), CACHE_DTYPE, "zeros"
+            ),
+        }

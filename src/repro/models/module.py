@@ -1,0 +1,78 @@
+"""Minimal parameter-spec module system (no flax available offline).
+
+A model describes its parameters as a pytree of :class:`ParamSpec` — shape,
+dtype, *logical axis names* and an initializer tag. The same spec tree is
+used to (a) materialise real params for smoke tests, (b) build
+``jax.ShapeDtypeStruct`` stand-ins for the multi-pod dry-run, and (c) derive
+``NamedSharding``s from the logical-axis rule table in ``repro.launch.sharding``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Tree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]  # logical axis name per dim (None = unsharded)
+    dtype: Any = jnp.float32
+    init: str = "normal"  # normal | zeros | ones | scaled
+    scale: float = 0.02
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def spec(shape, axes, dtype=jnp.float32, init="normal", scale=0.02) -> ParamSpec:
+    return ParamSpec(tuple(shape), tuple(axes), dtype, init, scale)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def tree_map_specs(fn: Callable[[ParamSpec], Any], tree: Tree) -> Tree:
+    return jax.tree.map(fn, tree, is_leaf=is_spec)
+
+
+def to_shape_dtype(tree: Tree) -> Tree:
+    """Spec tree -> ShapeDtypeStruct tree (no allocation; dry-run input)."""
+    return tree_map_specs(lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), tree)
+
+
+def _init_one(s: ParamSpec, key: jax.Array) -> jax.Array:
+    if s.init == "zeros":
+        return jnp.zeros(s.shape, s.dtype)
+    if s.init == "ones":
+        return jnp.ones(s.shape, s.dtype)
+    if s.init == "scaled":  # fan-in scaled normal
+        fan_in = s.shape[-2] if len(s.shape) >= 2 else max(s.shape[-1], 1)
+        std = 1.0 / math.sqrt(fan_in)
+        return (std * jax.random.normal(key, s.shape, jnp.float32)).astype(s.dtype)
+    return (s.scale * jax.random.normal(key, s.shape, jnp.float32)).astype(s.dtype)
+
+
+def init_tree(tree: Tree, key: jax.Array) -> Tree:
+    """Materialise a spec tree into real parameters (reduced configs only)."""
+    leaves, treedef = jax.tree.flatten(tree, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    vals = [_init_one(s, k) for s, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def count_params(tree: Tree) -> int:
+    leaves, _ = jax.tree.flatten(tree, is_leaf=is_spec)
+    return int(sum(np.prod(s.shape) for s in leaves))
+
+
+def tree_bytes(tree: Tree) -> int:
+    leaves, _ = jax.tree.flatten(tree, is_leaf=is_spec)
+    return int(sum(np.prod(s.shape) * np.dtype(s.dtype).itemsize for s in leaves))

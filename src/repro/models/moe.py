@@ -1,0 +1,125 @@
+"""Capacity-based Mixture-of-Experts layer.
+
+Two dispatch implementations:
+
+  * ``dispatch="scatter"`` (default) — positions computed by cumsum over the
+    routing one-hots, tokens moved with scatter-add / gather. O(tokens * d)
+    data movement, no O(tokens^2) matmul. Gradients are the dual
+    gather/scatter, equally cheap.
+  * ``dispatch="einsum"`` — the classic mesh-TF / MaxText one-hot-matmul
+    formulation. O(tokens * E*C * d) per group: measured ~8x the expert
+    FFN compute itself on mixtral-8x22b train_4k (see EXPERIMENTS.md §Perf —
+    kept as the measured baseline of that hillclimb step).
+
+Expert FFN weights are sharded ``mlp -> model``; the expert dim is guarded
+(8 / 40 experts do not divide the 16-way model axis — DESIGN.md
+§Arch-applicability).
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.sharding import logical_constraint
+
+
+def moe_capacity(tokens_per_group: int, top_k: int, n_experts: int, cf: float) -> int:
+    c = math.ceil(tokens_per_group * top_k * cf / n_experts)
+    return max(4, min(c, tokens_per_group * top_k))
+
+
+def _route(x, router_w, top_k):
+    """Returns (gate (b,s,k) f32, idx (b,s,k) i32, aux scalar)."""
+    e = router_w.shape[-1]
+    logits = jnp.einsum("bsd,de->bse", x, router_w.astype(x.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, top_k)
+    gate = gate / jnp.maximum(jnp.sum(gate, axis=-1, keepdims=True), 1e-9)
+    density = jnp.mean(probs, axis=(0, 1))
+    frac = jnp.mean(jax.nn.one_hot(idx[..., 0], e, dtype=jnp.float32), axis=(0, 1))
+    aux = e * jnp.sum(density * frac)
+    return gate, idx, aux
+
+
+def _positions(idx, e, top_k, cap):
+    """Capacity slots per (token, k): (pos (b,t), keep (b,t)) with t = s*k."""
+    b, s, k = idx.shape
+    oh = jax.nn.one_hot(idx, e, dtype=jnp.float32).reshape(b, s * k, e)
+    pos_in_e = jnp.cumsum(oh, axis=1) - oh
+    pos = jnp.sum(pos_in_e * oh, axis=-1)  # (b, t)
+    keep = pos < cap
+    return pos.astype(jnp.int32), keep
+
+
+def _expert_ffn(dispatched, w_gate, w_up, w_down):
+    # dispatched: batch over data, d replicated — the d-contraction is local
+    # and becf comes out f-sharded from the weights (no per-matmul psum)
+    dispatched = logical_constraint(dispatched, ("batch", "expert", None, "embed"))
+    h = jnp.einsum("becd,edf->becf", dispatched, w_gate.astype(dispatched.dtype))
+    u = jnp.einsum("becd,edf->becf", dispatched, w_up.astype(dispatched.dtype))
+    h = logical_constraint(h, ("batch", "expert", None, "mlp"))
+    h = jax.nn.silu(h.astype(jnp.float32)).astype(dispatched.dtype) * u
+    out = jnp.einsum("becf,efd->becd", h, w_down.astype(dispatched.dtype))
+    return logical_constraint(out, ("batch", "expert", None, "embed"))
+
+
+def moe_layer(
+    x: jax.Array,  # (b, s, d)
+    router_w: jax.Array,  # (d, E)
+    w_gate: jax.Array,  # (E, d, f)
+    w_up: jax.Array,
+    w_down: jax.Array,  # (E, f, d)
+    top_k: int,
+    capacity_factor: float = 1.25,
+    dispatch: str = "scatter",
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (out (b, s, d), aux_loss scalar)."""
+    b, s, d = x.shape
+    e = router_w.shape[-1]
+    cap = moe_capacity(s, top_k, e, capacity_factor)
+    gate, idx, aux = _route(x, router_w, top_k)
+
+    if dispatch == "einsum":
+        return _moe_einsum(x, gate, idx, aux, w_gate, w_up, w_down, cap, e, top_k)
+
+    pos, keep = _positions(idx, e, top_k, cap)  # (b, t)
+    t = s * top_k
+    idx_f = idx.reshape(b, t)
+    gate_f = gate.reshape(b, t) * keep
+    x_rep = jnp.broadcast_to(x[:, :, None, :], (b, s, top_k, d)).reshape(b, t, d)
+    val = x_rep * keep[..., None].astype(x.dtype)
+
+    # vmap over the (data-sharded) batch dim so the scatter/gather carry an
+    # explicit batching dim — the SPMD partitioner keeps them batch-local
+    # instead of replicating (global-index scatter forces all-gathers).
+    def scatter_one(vv, ii, pp):
+        return jnp.zeros((e, cap, d), x.dtype).at[ii, pp].add(vv, mode="drop")
+
+    dispatched = jax.vmap(scatter_one)(val, idx_f, pos)
+
+    expert_out = _expert_ffn(dispatched, w_gate, w_up, w_down)
+
+    gathered = jax.vmap(lambda eo, ii, pp: eo[ii, pp])(expert_out, idx_f, pos)
+    out = (gathered * gate_f[..., None].astype(x.dtype)).reshape(b, s, top_k, d).sum(axis=2)
+    return out, aux.astype(jnp.float32)
+
+
+def _moe_einsum(x, gate, idx, aux, w_gate, w_up, w_down, cap, e, top_k):
+    b, s, d = x.shape
+    t = s * top_k
+    pos, keep = _positions(idx, e, top_k, cap)
+    oh_f = jax.nn.one_hot(idx, e, dtype=jnp.float32).reshape(b, t, e)
+    gate_f = gate.reshape(b, t) * keep
+    cap_oh = jax.nn.one_hot(pos, cap, dtype=x.dtype)
+    disp = (oh_f * keep[..., None]).astype(x.dtype)
+    x_rep = jnp.broadcast_to(x[:, :, None, :], (b, s, top_k, d)).reshape(b, t, d)
+    dispatched = jnp.einsum("bte,btc,btd->becd", disp, cap_oh, x_rep)
+    expert_out = _expert_ffn(dispatched, w_gate, w_up, w_down)
+    combined = jnp.einsum(
+        "becd,bte,btc,bt->btd", expert_out, disp, cap_oh, gate_f.astype(x.dtype)
+    )
+    out = combined.reshape(b, s, top_k, d).sum(axis=2)
+    return out, aux.astype(jnp.float32)

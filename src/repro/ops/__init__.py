@@ -1,0 +1,13 @@
+"""Builtin operator library. Importing this module registers all OPs."""
+from repro.ops import (  # noqa: F401
+    aggregators,
+    dedup_ops,
+    formatters,
+    groupers,
+    model_ops,
+    multimodal_ops,
+    post_tuning_ops,
+    selectors,
+    text_filters,
+    text_mappers,
+)

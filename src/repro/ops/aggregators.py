@@ -1,0 +1,38 @@
+"""Aggregator OPs: combine a group of samples into one."""
+from __future__ import annotations
+
+from collections import Counter
+
+from repro.core import schema as S
+from repro.core.ops_base import Aggregator
+from repro.core.registry import register
+
+
+@register("concat_text_aggregator")
+class ConcatTextAggregator(Aggregator):
+    """Concatenates group texts with EOC separators (chunked document)."""
+
+    def aggregate(self, group):
+        text = S.EOC.join(s.get("text", "") for s in group)
+        out = S.new_sample(text)
+        out["meta"] = {"group_size": len(group)}
+        return out
+
+
+@register("keyword_summary_aggregator")
+class KeywordSummaryAggregator(Aggregator):
+    """Nested-aggregation stand-in: summarises a group by its most frequent
+    content words (the paper's LLM summariser, offline rule variant)."""
+
+    def __init__(self, top_k: int = 10, **kw):
+        super().__init__(top_k=top_k, **kw)
+
+    def aggregate(self, group):
+        counts: Counter = Counter()
+        for s in group:
+            counts.update(w.lower() for w in s.get("text", "").split() if len(w) > 4)
+        top = [w for w, _ in counts.most_common(self.params["top_k"])]
+        out = S.new_sample("summary keywords: " + ", ".join(top))
+        out["meta"] = {"group_size": len(group)}
+        out["stats"] = {"n_keywords": float(len(top))}
+        return out

@@ -1,0 +1,115 @@
+"""Deduplicator OPs: exact hash + MinHash-LSH (standalone & parallel)."""
+from __future__ import annotations
+
+import hashlib
+from typing import List
+
+import numpy as np
+
+from repro.core.dedup.minhash import minhash_dedup_indices
+from repro.core.ops_base import Deduplicator
+from repro.core.registry import register
+
+
+@register("exact_text_deduplicator")
+class ExactTextDeduplicator(Deduplicator):
+    """Document-level exact dedup by text digest."""
+
+    def dedup(self, samples):
+        seen = set()
+        out = []
+        for s in samples:
+            h = hashlib.blake2b(s.get("text", "").encode("utf-8"), digest_size=16).digest()
+            if h in seen:
+                continue
+            seen.add(h)
+            out.append(s)
+        return out
+
+
+@register("document_minhash_deduplicator")
+class DocumentMinHashDeduplicator(Deduplicator):
+    """MinHash-LSH fuzzy dedup (paper's minhash_deduplicator; engine-agnostic
+    algorithm parameters: jaccard_threshold / num_permutations)."""
+
+    def __init__(self, jaccard_threshold: float = 0.7, num_permutations: int = 128,
+                 num_bands: int = 16, ngram: int = 5, backend: str = "balanced",
+                 n_partitions: int = 8, use_kernel: bool = False, **kw):
+        super().__init__(
+            jaccard_threshold=jaccard_threshold, num_permutations=num_permutations,
+            num_bands=num_bands, ngram=ngram, backend=backend,
+            n_partitions=n_partitions, use_kernel=use_kernel, **kw)
+
+    def dedup(self, samples):
+        p = self.params
+        keep, comp = minhash_dedup_indices(
+            [s.get("text", "") for s in samples],
+            n_perm=p["num_permutations"], n_bands=p["num_bands"], ngram=p["ngram"],
+            jaccard_threshold=p["jaccard_threshold"], backend=p["backend"],
+            n_partitions=p["n_partitions"], use_kernel=p["use_kernel"],
+        )
+        out = []
+        for s, k, c in zip(samples, keep, comp):
+            if k:
+                s.setdefault("stats", {})["dup_component"] = int(c)
+                out.append(s)
+        return out
+
+
+@register("distributed_minhash_deduplicator")
+class DistributedMinHashDeduplicator(DocumentMinHashDeduplicator):
+    """RayDeduplicator analogue: signatures computed by a worker pool over
+    pre-split chunks; candidate edges merged through the load-balanced
+    partitioned union-find (paper §E.1 — 3.3x over the vanilla path)."""
+
+    def __init__(self, n_workers: int = 4, **kw):
+        super().__init__(**kw)
+        self.params["n_workers"] = n_workers
+
+    def dedup(self, samples):
+        import concurrent.futures as cf
+
+        from repro.core.dedup import minhash as MH
+        from repro.core.dedup.unionfind import naive_components, partitioned_union
+
+        p = self.params
+        texts = [s.get("text", "") for s in samples]
+        n_workers = max(1, int(p["n_workers"]))
+        chunk = max(1, len(texts) // (n_workers * 4))
+        chunks = [texts[i : i + chunk] for i in range(0, len(texts), chunk)]
+
+        def sig_chunk(args):
+            idx, txts = args
+            docs = [MH.shingle_hashes(t, n=p["ngram"]) for t in txts]
+            sigs = MH.signatures_batch(docs, n_perm=p["num_permutations"])
+            return idx, docs, sigs
+
+        docs: List[np.ndarray] = [None] * len(texts)  # type: ignore[list-item]
+        sigs = np.empty((len(texts), p["num_permutations"]), np.uint32)
+        with cf.ThreadPoolExecutor(n_workers) as pool:
+            for idx, dch, sch in pool.map(
+                sig_chunk, [(i * chunk, c) for i, c in enumerate(chunks)]
+            ):
+                for j, d in enumerate(dch):
+                    docs[idx + j] = d
+                sigs[idx : idx + len(dch)] = sch
+
+        keys = MH.lsh_bands(sigs, p["num_bands"])
+        pairs = MH.candidate_pairs_hash_agg(keys)
+        if p["jaccard_threshold"] > 0:
+            pairs = [(a, b) for a, b in pairs
+                     if MH.jaccard(docs[a], docs[b]) >= p["jaccard_threshold"]]
+        if p["backend"] == "naive":
+            comp = naive_components(len(texts), pairs)
+        else:
+            comp = partitioned_union(len(texts), pairs, p["n_partitions"]).components()
+        seen = set()
+        out = []
+        for i, s in enumerate(samples):
+            c = int(comp[i])
+            if c in seen:
+                continue
+            seen.add(c)
+            s.setdefault("stats", {})["dup_component"] = c
+            out.append(s)
+        return out

@@ -1,0 +1,28 @@
+"""Formatter OPs: raw records -> schema samples."""
+from __future__ import annotations
+
+from repro.core import schema as S
+from repro.core.ops_base import Formatter
+from repro.core.registry import register
+
+
+@register("text_formatter")
+class TextFormatter(Formatter):
+    """{text_key: ...} records -> schema samples."""
+
+    def __init__(self, text_key: str = "text", **kw):
+        super().__init__(text_key=text_key, **kw)
+
+    def format_single(self, rec):
+        s = S.new_sample(str(rec.get(self.params["text_key"], "")))
+        s["meta"] = {k: v for k, v in rec.items() if k != self.params["text_key"]
+                     and isinstance(v, (str, int, float, bool))}
+        return s
+
+
+@register("alpaca_formatter")
+class AlpacaFormatter(Formatter):
+    """Alpaca instruction records -> post-tuning schema samples."""
+
+    def format_single(self, rec):
+        return S.from_alpaca(rec)

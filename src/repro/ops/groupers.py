@@ -1,0 +1,31 @@
+"""Grouper OPs: dataset -> groups (feeding Aggregators)."""
+from __future__ import annotations
+
+from repro.core.ops_base import Grouper
+from repro.core.registry import register
+
+
+@register("key_value_grouper")
+class KeyValueGrouper(Grouper):
+    """Groups samples by a meta key's value."""
+
+    def __init__(self, key: str = "domain", **kw):
+        super().__init__(key=key, **kw)
+
+    def group(self, samples):
+        by: dict = {}
+        for s in samples:
+            by.setdefault((s.get("meta") or {}).get(self.params["key"], ""), []).append(s)
+        return [by[k] for k in sorted(by)]
+
+
+@register("batch_grouper")
+class BatchGrouper(Grouper):
+    """Fixed-size groups in order."""
+
+    def __init__(self, group_size: int = 8, **kw):
+        super().__init__(group_size=group_size, **kw)
+
+    def group(self, samples):
+        g = self.params["group_size"]
+        return [samples[i : i + g] for i in range(0, len(samples), g)]

@@ -1,0 +1,211 @@
+"""Multimodal OPs over the token-aligned schema.
+
+Media payloads are represented by per-sample metadata/feature fields
+(offline container: no real image/video files), but the OP semantics —
+stats computation, alignment checks, cross-modal matching — follow the
+paper's OPs of the same names.
+
+Expected fields (produced by ``repro.data.synthetic``):
+  images/videos/audios — path lists (aligned with text tokens)
+  image_meta  — [{"width","height","bytes","nsfw_score","tags":[...]}]
+  video_meta  — [{"duration","fps","frame_energy":[...] }]
+  audio_meta  — [{"duration","rms_signal","rms_noise"}]
+"""
+from __future__ import annotations
+
+import math
+from typing import List
+
+import numpy as np
+
+from repro.core import schema as S
+from repro.core.ops_base import Filter, Mapper
+from repro.core.registry import register
+from repro.ops.text_filters import _RangeFilter
+
+
+@register("modality_alignment_filter")
+class ModalityAlignmentFilter(Filter):
+    """Keeps samples whose modality tokens align with their path lists
+    (the schema validity check as an OP)."""
+
+    def compute_stats(self, sample):
+        ok, why = S.check_alignment(sample)
+        sample.setdefault("stats", {})["aligned"] = 1.0 if ok else 0.0
+        return sample
+
+    def keep(self, sample):
+        return sample["stats"]["aligned"] >= 1.0
+
+
+@register("image_shape_filter")
+class ImageShapeFilter(Filter):
+    """Keeps samples whose images' width/height are within range."""
+
+    io_intensive = True  # reads media metadata in the real system
+
+    def __init__(self, min_width=32, max_width=1 << 16, min_height=32, max_height=1 << 16, any_or_all="any", **kw):
+        super().__init__(min_width=min_width, max_width=max_width,
+                         min_height=min_height, max_height=max_height,
+                         any_or_all=any_or_all, **kw)
+
+    def compute_stats(self, sample):
+        metas = sample.get("image_meta", []) or []
+        oks = [
+            self.params["min_width"] <= m.get("width", 0) <= self.params["max_width"]
+            and self.params["min_height"] <= m.get("height", 0) <= self.params["max_height"]
+            for m in metas
+        ]
+        st = sample.setdefault("stats", {})
+        st["image_widths"] = [m.get("width", 0) for m in metas]
+        st["image_shape_ok"] = float(
+            (any(oks) if self.params["any_or_all"] == "any" else all(oks)) if oks else 1.0
+        )
+        return sample
+
+    def keep(self, sample):
+        return sample["stats"]["image_shape_ok"] >= 1.0
+
+
+@register("image_aspect_ratio_filter")
+class ImageAspectRatioFilter(_RangeFilter):
+    """Keeps samples whose images' aspect ratios are within range."""
+
+    stat_key = "aspect_ratio_max"
+    io_intensive = True
+
+    def _stat(self, s):
+        metas = s.get("image_meta", []) or []
+        ratios = [m.get("width", 1) / max(m.get("height", 1), 1) for m in metas]
+        return float(max(ratios)) if ratios else 1.0
+
+
+@register("image_size_filter")
+class ImageSizeFilter(_RangeFilter):
+    """Keeps samples whose image byte sizes are within range."""
+
+    stat_key = "image_bytes_max"
+    io_intensive = True
+
+    def _stat(self, s):
+        metas = s.get("image_meta", []) or []
+        return float(max((m.get("bytes", 0) for m in metas), default=0))
+
+
+@register("image_nsfw_filter")
+class ImageNSFWFilter(Filter):
+    """Keeps samples whose max NSFW score is below threshold (privacy/safety
+    family; model-based in the paper — scores precomputed here)."""
+
+    uses_model = True
+    gpu_mem_required = 1 << 30
+
+    def __init__(self, threshold: float = 0.5, **kw):
+        super().__init__(threshold=threshold, **kw)
+
+    def compute_stats(self, sample):
+        metas = sample.get("image_meta", []) or []
+        sample.setdefault("stats", {})["nsfw_max"] = float(
+            max((m.get("nsfw_score", 0.0) for m in metas), default=0.0)
+        )
+        return sample
+
+    def keep(self, sample):
+        return sample["stats"]["nsfw_max"] < self.params["threshold"]
+
+
+@register("image_text_similarity_filter")
+class ImageTextSimilarityFilter(_RangeFilter):
+    """Keeps samples whose chunk text matches its image tags (bag-of-words
+    cosine over hashed embeddings — the offline stand-in for CLIP)."""
+
+    stat_key = "image_text_sim"
+    uses_model = True
+    gpu_mem_required = 2 << 30
+
+    def _embed(self, words: List[str]) -> np.ndarray:
+        import hashlib
+
+        v = np.zeros(64, np.float32)
+        for w in words:
+            h = int.from_bytes(hashlib.blake2b(w.lower().encode(), digest_size=4).digest(), "little")
+            v[h % 64] += 1.0
+        n = np.linalg.norm(v)
+        return v / n if n else v
+
+    def _stat(self, s):
+        metas = s.get("image_meta", []) or []
+        if not metas:
+            return 1.0
+        text_emb = self._embed(s.get("text", "").split())
+        sims = [float(text_emb @ self._embed(m.get("tags", []))) for m in metas]
+        return float(np.mean(sims)) if sims else 1.0
+
+
+@register("video_motion_score_filter")
+class VideoMotionScoreFilter(_RangeFilter):
+    """Keeps samples with video motion scores within range — the mean
+    magnitude of inter-frame change (paper Fig. 5b; CPU/OpenCV variant
+    adapted to per-frame energy series)."""
+
+    stat_key = "motion_score"
+    io_intensive = True
+
+    def _stat(self, s):
+        metas = s.get("video_meta", []) or []
+        scores = []
+        for m in metas:
+            e = np.asarray(m.get("frame_energy", []), np.float32)
+            scores.append(float(np.abs(np.diff(e)).mean()) if e.size > 1 else 0.0)
+        return float(np.mean(scores)) if scores else 0.0
+
+
+@register("video_duration_filter")
+class VideoDurationFilter(_RangeFilter):
+    """Keeps samples whose video durations are within range."""
+
+    stat_key = "video_duration_max"
+
+    def _stat(self, s):
+        metas = s.get("video_meta", []) or []
+        return float(max((m.get("duration", 0.0) for m in metas), default=0.0))
+
+
+@register("audio_duration_filter")
+class AudioDurationFilter(_RangeFilter):
+    """Keeps samples whose audio durations are within range."""
+
+    stat_key = "audio_duration_max"
+
+    def _stat(self, s):
+        metas = s.get("audio_meta", []) or []
+        return float(max((m.get("duration", 0.0) for m in metas), default=0.0))
+
+
+@register("audio_snr_filter")
+class AudioSNRFilter(_RangeFilter):
+    """Keeps samples whose audio SNR (dB) is within range (NMF-SNR analog)."""
+
+    stat_key = "audio_snr_db"
+
+    def _stat(self, s):
+        metas = s.get("audio_meta", []) or []
+        snrs = []
+        for m in metas:
+            sig, noise = m.get("rms_signal", 0.0), m.get("rms_noise", 1e-9)
+            snrs.append(20.0 * math.log10(max(sig, 1e-9) / max(noise, 1e-9)))
+        return float(min(snrs)) if snrs else 100.0
+
+
+@register("image_face_blur_mapper")
+class ImageFaceBlurMapper(Mapper):
+    """Privacy mapper: marks faces blurred in image metadata (the real OP
+    edits pixels; semantics preserved via metadata here)."""
+
+    uses_model = True
+
+    def process_single(self, s):
+        s = dict(s)
+        metas = [dict(m, faces_blurred=True) for m in s.get("image_meta", []) or []]
+        s["image_meta"] = metas
+        return s

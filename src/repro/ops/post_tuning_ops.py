@@ -1,0 +1,197 @@
+"""Post-tuning OPs (paper §3 / Fig. 3 families): extraction, calibration,
+QA optimisation, preference-pair construction — offline rule-based
+equivalents of the paper's LLM-backed operators, on the dialog schema
+(query / response / history)."""
+from __future__ import annotations
+
+import re
+from collections import Counter
+from typing import List
+
+from repro.core import schema as S
+from repro.core.ops_base import Filter, Mapper
+from repro.core.registry import register
+
+_WS = re.compile(r"\s+")
+
+
+@register("calibrate_query_mapper")
+class CalibrateQueryMapper(Mapper):
+    """Calibrates queries: trims noise, normalises spacing, ensures a
+    question form (the paper's reference-text LLM calibration, rule form)."""
+
+    def process_single(self, s):
+        s = dict(s)
+        q = _WS.sub(" ", s.get("query", "")).strip()
+        if q and not q.endswith("?") and q.split()[0].lower() in (
+            "what", "why", "how", "when", "where", "who", "which", "can", "does", "is"
+        ):
+            q += "?"
+        s["query"] = q
+        return s
+
+
+@register("calibrate_response_mapper")
+class CalibrateResponseMapper(Mapper):
+    """Calibrates responses: strips boilerplate prefixes and dedups
+    repeated sentences."""
+
+    _PREFIXES = ("as an ai", "sure!", "sure,", "certainly!", "of course!")
+    _SENT = re.compile(r"(?<=[.!?])\s+")
+
+    def process_single(self, s):
+        s = dict(s)
+        r = _WS.sub(" ", s.get("response", "")).strip()
+        low = r.lower()
+        for p in self._PREFIXES:
+            if low.startswith(p):
+                r = r[len(p):].lstrip(" ,.!")
+                break
+        seen, out = set(), []
+        for sent in self._SENT.split(r):
+            key = sent.strip().lower()
+            if key and key not in seen:
+                seen.add(key)
+                out.append(sent.strip())
+        s["response"] = " ".join(out)
+        return s
+
+
+@register("extract_keyword_mapper")
+class ExtractKeywordMapper(Mapper):
+    """Generates keywords for the text into meta (paper's
+    extract_keyword_mapper)."""
+
+    def __init__(self, top_k: int = 8, **kw):
+        super().__init__(top_k=top_k, **kw)
+
+    def process_single(self, s):
+        s = dict(s)
+        words = [w.strip(".,!?;:").lower() for w in s.get("text", "").split()]
+        counts = Counter(w for w in words if len(w) > 4)
+        s["meta"] = dict(s.get("meta", {}),
+                         keywords=[w for w, _ in counts.most_common(self.params["top_k"])])
+        return s
+
+
+@register("extract_entity_attribute_mapper")
+class ExtractEntityAttributeMapper(Mapper):
+    """Extracts 'X is Y' attribute pairs from text into meta (rule-based
+    stand-in for the knowledge-graph extraction OPs)."""
+
+    _PAT = re.compile(r"\b([A-Z][\w-]{2,})\s+(?:is|are|was|were)\s+([\w-]{3,})")
+
+    def process_single(self, s):
+        s = dict(s)
+        pairs = self._PAT.findall(s.get("text", ""))[:16]
+        s["meta"] = dict(s.get("meta", {}), entity_attributes=[list(p) for p in pairs])
+        return s
+
+
+@register("optimize_qa_mapper")
+class OptimizeQAMapper(Mapper):
+    """Optimises both query and response (composition of the calibrators)."""
+
+    def __init__(self, **kw):
+        super().__init__(**kw)
+        self._q = CalibrateQueryMapper()
+        self._r = CalibrateResponseMapper()
+
+    def process_single(self, s):
+        return self._r.process_single(self._q.process_single(s))
+
+
+@register("pair_preference_mapper")
+class PairPreferenceMapper(Mapper):
+    """Constructs preference pairs: chosen = response, rejected = degraded
+    variant (word-dropped), for DPO-style training data."""
+
+    def __init__(self, degrade_rate: float = 0.25, seed: int = 0, **kw):
+        super().__init__(degrade_rate=degrade_rate, seed=seed, **kw)
+
+    def process_single(self, s):
+        import numpy as np
+
+        s = dict(s)
+        r = s.get("response", "")
+        words = r.split()
+        rng = np.random.default_rng(self.params["seed"] + len(words))
+        keep = rng.random(len(words)) >= self.params["degrade_rate"]
+        s["meta"] = dict(s.get("meta", {}),
+                         chosen=r, rejected=" ".join(w for w, k in zip(words, keep) if k))
+        return s
+
+
+@register("dialog_turns_filter")
+class DialogTurnsFilter(Filter):
+    """Keeps samples whose dialog turn count is within range."""
+
+    def __init__(self, min_turns: int = 1, max_turns: int = 64, **kw):
+        super().__init__(min_turns=min_turns, max_turns=max_turns, **kw)
+
+    def compute_stats(self, sample):
+        n = len(sample.get("history", []) or [])
+        n += 1 if sample.get("query") else 0
+        sample.setdefault("stats", {})["n_turns"] = float(n)
+        return sample
+
+    def keep(self, sample):
+        return self.params["min_turns"] <= sample["stats"]["n_turns"] <= self.params["max_turns"]
+
+
+@register("response_length_ratio_filter")
+class ResponseLengthRatioFilter(Filter):
+    """Keeps QA samples whose response/query length ratio is within range
+    (degenerate one-word answers / runaway responses get dropped)."""
+
+    def __init__(self, min_val: float = 0.2, max_val: float = 100.0, **kw):
+        super().__init__(min_val=min_val, max_val=max_val, **kw)
+
+    def compute_stats(self, sample):
+        q = max(len(sample.get("query", "").split()), 1)
+        r = len(sample.get("response", "").split())
+        sample.setdefault("stats", {})["resp_len_ratio"] = r / q
+        return sample
+
+    def keep(self, sample):
+        return self.params["min_val"] <= sample["stats"]["resp_len_ratio"] <= self.params["max_val"]
+
+
+@register("llm_difficulty_score_filter")
+class LLMDifficultyScoreFilter(Filter):
+    """Difficulty proxy score (the paper notes rule-based methods struggle
+    on e.g. math; this offline proxy blends rare-word rate, numeric density
+    and query length — the LLM-scored variant plugs in via
+    lm_perplexity_filter with a trained checkpoint)."""
+
+    def __init__(self, min_val: float = 0.0, max_val: float = 1.0, **kw):
+        super().__init__(min_val=min_val, max_val=max_val, **kw)
+
+    def compute_stats(self, sample):
+        import math
+
+        text = (sample.get("query", "") + " " + sample.get("text", "")).strip()
+        words = text.split()
+        if not words:
+            score = 0.0
+        else:
+            rare = sum(1 for w in words if len(w) > 8) / len(words)
+            nums = sum(1 for w in words if any(c.isdigit() for c in w)) / len(words)
+            score = 1.0 / (1.0 + math.exp(-(4 * rare + 3 * nums + 0.01 * len(words) - 1.5)))
+        sample.setdefault("stats", {})["difficulty"] = float(score)
+        return sample
+
+    def keep(self, sample):
+        return self.params["min_val"] <= sample["stats"]["difficulty"] <= self.params["max_val"]
+
+
+@register("history_flatten_mapper")
+class HistoryFlattenMapper(Mapper):
+    """Flattens dialog history + current turn into pre-training text
+    (schema conversion utility as an OP)."""
+
+    def process_single(self, s):
+        s = dict(s)
+        msgs = S.to_query_response(s)
+        s["text"] = "\n".join(f"{m['role']}: {m['content']}" for m in msgs)
+        return s

@@ -1,0 +1,65 @@
+"""Selector OPs: rank/rule-based dataset-level sampling."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.ops_base import Selector
+from repro.core.registry import register
+
+
+@register("topk_stat_selector")
+class TopKStatSelector(Selector):
+    """Keeps the top-k (or top-fraction) samples by a stats key."""
+
+    def __init__(self, stat_key: str, k: int = 0, fraction: float = 0.0,
+                 descending: bool = True, **kw):
+        super().__init__(stat_key=stat_key, k=k, fraction=fraction,
+                         descending=descending, **kw)
+
+    def select(self, samples):
+        p = self.params
+        vals = np.asarray(
+            [s.get("stats", {}).get(p["stat_key"], -np.inf) for s in samples], np.float64
+        )
+        order = np.argsort(-vals if p["descending"] else vals, kind="stable")
+        k = p["k"] or int(np.ceil(p["fraction"] * len(samples)))
+        return [samples[int(i)] for i in order[: max(k, 0)]]
+
+
+@register("random_selector")
+class RandomSelector(Selector):
+    """Seeded uniform subsample."""
+
+    def __init__(self, k: int = 0, fraction: float = 0.0, seed: int = 0, **kw):
+        super().__init__(k=k, fraction=fraction, seed=seed, **kw)
+
+    def select(self, samples):
+        p = self.params
+        k = p["k"] or int(np.ceil(p["fraction"] * len(samples)))
+        rng = np.random.default_rng(p["seed"])
+        idx = rng.choice(len(samples), size=min(k, len(samples)), replace=False)
+        return [samples[int(i)] for i in sorted(idx)]
+
+
+@register("domain_diversity_selector")
+class DomainDiversitySelector(Selector):
+    """Greedy diversity selection: round-robin over a meta domain key so the
+    kept subset covers domains evenly (paper's diversity selector family)."""
+
+    def __init__(self, k: int, domain_key: str = "domain", **kw):
+        super().__init__(k=k, domain_key=domain_key, **kw)
+
+    def select(self, samples):
+        p = self.params
+        by_dom: dict = {}
+        for s in samples:
+            by_dom.setdefault((s.get("meta") or {}).get(p["domain_key"], ""), []).append(s)
+        out = []
+        doms = sorted(by_dom)
+        i = 0
+        while len(out) < p["k"] and any(by_dom[d] for d in doms):
+            d = doms[i % len(doms)]
+            if by_dom[d]:
+                out.append(by_dom[d].pop(0))
+            i += 1
+        return out

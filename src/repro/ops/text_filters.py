@@ -1,0 +1,208 @@
+"""Text Filter OPs (cleaning). Each computes stats then filters by range —
+the paper's Filter contract (compute_stats + keep)."""
+from __future__ import annotations
+
+import math
+import re
+import string
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.core.ops_base import Filter, shared_words
+from repro.core.registry import register
+
+_STOPWORDS = frozenset(
+    "the a an and or but if then else of to in on for with at by from as is are was "
+    "were be been being it its this that these those i you he she we they them his her".split()
+)
+
+
+class _RangeFilter(Filter):
+    """Common stat-in-[min,max] retention."""
+
+    stat_key = "stat"
+
+    def __init__(self, min_val: float = -math.inf, max_val: float = math.inf, **kw):
+        super().__init__(min_val=min_val, max_val=max_val, **kw)
+        self.min_val, self.max_val = min_val, max_val
+
+    def _stat(self, sample) -> float:
+        raise NotImplementedError
+
+    def compute_stats(self, sample):
+        sample.setdefault("stats", {})[self.stat_key] = self._stat(sample)
+        return sample
+
+    def keep(self, sample):
+        v = sample["stats"][self.stat_key]
+        return self.min_val <= v <= self.max_val
+
+
+@register("text_length_filter")
+class TextLengthFilter(_RangeFilter):
+    """Keeps samples whose text length (chars) is within range."""
+
+    stat_key = "text_len"
+
+    def _stat(self, s):
+        return float(len(s.get("text", "")))
+
+    def compute_stats_arrays(self, samples) -> Tuple[str, np.ndarray]:
+        # vectorized path for the ShardedEngine
+        return self.stat_key, np.asarray([len(s.get("text", "")) for s in samples], np.float32)
+
+
+@register("words_num_filter")
+class WordsNumFilter(_RangeFilter):
+    """Keeps samples with a word count within range."""
+
+    stat_key = "num_words"
+
+    def _stat(self, s):
+        return float(len(shared_words(s)))
+
+
+@register("avg_word_length_filter")
+class AvgWordLengthFilter(_RangeFilter):
+    """Keeps samples whose mean word length is within range."""
+
+    stat_key = "avg_word_len"
+
+    def _stat(self, s):
+        words = shared_words(s)
+        return float(np.mean([len(w) for w in words])) if words else 0.0
+
+
+@register("alnum_ratio_filter")
+class AlnumRatioFilter(_RangeFilter):
+    """Keeps samples with alphanumeric-character ratio within range."""
+
+    stat_key = "alnum_ratio"
+
+    def _stat(self, s):
+        t = s.get("text", "")
+        return sum(c.isalnum() or c.isspace() for c in t) / len(t) if t else 0.0
+
+
+@register("special_char_ratio_filter")
+class SpecialCharRatioFilter(_RangeFilter):
+    """Keeps samples whose special-character ratio is within range."""
+
+    stat_key = "special_char_ratio"
+
+    def _stat(self, s):
+        t = s.get("text", "")
+        if not t:
+            return 1.0
+        specials = sum(1 for c in t if (not c.isalnum()) and (not c.isspace())
+                       and c not in ".,!?;:'\"()-")
+        return specials / len(t)
+
+
+@register("stopword_ratio_filter")
+class StopwordRatioFilter(_RangeFilter):
+    """Keeps samples whose stopword ratio is within range (low ratio often
+    indicates non-natural-language content)."""
+
+    stat_key = "stopword_ratio"
+
+    def _stat(self, s):
+        words = [w.strip(string.punctuation).lower() for w in shared_words(s)]
+        return sum(w in _STOPWORDS for w in words) / len(words) if words else 0.0
+
+
+@register("word_repetition_filter")
+class WordRepetitionFilter(_RangeFilter):
+    """Keeps samples whose top-ngram repetition fraction is within range."""
+
+    stat_key = "word_rep_ratio"
+
+    def __init__(self, n: int = 5, **kw):
+        super().__init__(**kw)
+        self.n = n
+        self.params["n"] = n
+
+    def _stat(self, s):
+        words = shared_words(s)
+        if len(words) < self.n:
+            return 0.0
+        grams = [tuple(words[i : i + self.n]) for i in range(len(words) - self.n + 1)]
+        uniq = len(set(grams))
+        return 1.0 - uniq / len(grams)
+
+
+@register("char_repetition_filter")
+class CharRepetitionFilter(_RangeFilter):
+    """Keeps samples whose repeated-character-run fraction is within range."""
+
+    stat_key = "char_rep_ratio"
+
+    def _stat(self, s):
+        t = s.get("text", "")
+        if len(t) < 2:
+            return 0.0
+        runs = sum(1 for a, b in zip(t, t[1:]) if a == b)
+        return runs / (len(t) - 1)
+
+
+@register("language_heuristic_filter")
+class LanguageHeuristicFilter(Filter):
+    """Tags a coarse language family via script heuristics; keeps listed ones."""
+
+    def __init__(self, keep_langs=("en",), **kw):
+        super().__init__(keep_langs=tuple(keep_langs), **kw)
+        self.keep_langs = set(keep_langs)
+
+    def compute_stats(self, sample):
+        t = sample.get("text", "")
+        if not t:
+            lang = "unknown"
+        else:
+            ascii_ratio = sum(ord(c) < 128 for c in t) / len(t)
+            cjk = sum(0x4E00 <= ord(c) <= 0x9FFF for c in t) / len(t)
+            if cjk > 0.2:
+                lang = "zh"
+            elif ascii_ratio > 0.9:
+                lang = "en"
+            else:
+                lang = "other"
+        sample.setdefault("stats", {})["lang"] = lang
+        return sample
+
+    def keep(self, sample):
+        return sample["stats"]["lang"] in self.keep_langs
+
+
+@register("token_count_filter")
+class TokenCountFilter(_RangeFilter):
+    """Keeps samples whose tokenized length is within range."""
+
+    stat_key = "num_tokens"
+
+    def __init__(self, min_val=0, max_val=math.inf, vocab_size: int = 32000, **kw):
+        super().__init__(min_val=min_val, max_val=max_val, **kw)
+        self.params["vocab_size"] = vocab_size
+        self._tok = None
+        self._vocab = vocab_size
+
+    def setup(self):
+        if self._tok is None:
+            from repro.data.tokenizer import HashWordTokenizer
+
+            self._tok = HashWordTokenizer(self._vocab)
+
+    def _stat(self, s):
+        self.setup()
+        return float(len(self._tok.encode(s.get("text", ""))))
+
+
+@register("maximum_line_length_filter")
+class MaximumLineLengthFilter(_RangeFilter):
+    """Keeps samples whose longest line is within range (code-ish heuristic)."""
+
+    stat_key = "max_line_len"
+
+    def _stat(self, s):
+        lines = s.get("text", "").splitlines() or [""]
+        return float(max(len(l) for l in lines))

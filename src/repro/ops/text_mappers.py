@@ -1,0 +1,155 @@
+"""Text Mapper OPs (editing / cleaning / synthesis-lite)."""
+from __future__ import annotations
+
+import re
+from typing import List
+
+from repro.core.ops_base import Mapper
+from repro.core.registry import register
+
+_HTML_RE = re.compile(r"<[^>]{1,200}>")
+_LINK_RE = re.compile(r"https?://\S+|www\.\S+")
+_EMAIL_RE = re.compile(r"[\w.+-]+@[\w-]+\.[\w.-]+")
+_WS_RE = re.compile(r"[ \t\f\v]+")
+_REPEAT_RE = re.compile(r"(.)\1{7,}")
+
+
+def _set_text(sample, text):
+    sample = dict(sample)
+    sample["text"] = text
+    return sample
+
+
+@register("whitespace_normalization_mapper")
+class WhitespaceNormalizationMapper(Mapper):
+    """Collapses runs of spaces/tabs; trims trailing space per line."""
+
+    def process_single(self, s):
+        t = "\n".join(_WS_RE.sub(" ", l).rstrip() for l in s.get("text", "").splitlines())
+        return _set_text(s, t)
+
+
+@register("remove_html_mapper")
+class RemoveHtmlMapper(Mapper):
+    """Strips HTML tags."""
+
+    def process_single(self, s):
+        return _set_text(s, _HTML_RE.sub(" ", s.get("text", "")))
+
+
+@register("clean_links_mapper")
+class CleanLinksMapper(Mapper):
+    """Removes URLs."""
+
+    def process_single(self, s):
+        return _set_text(s, _LINK_RE.sub("", s.get("text", "")))
+
+
+@register("clean_email_mapper")
+class CleanEmailMapper(Mapper):
+    """Removes e-mail addresses (privacy OP family)."""
+
+    def process_single(self, s):
+        return _set_text(s, _EMAIL_RE.sub("", s.get("text", "")))
+
+
+@register("remove_repeat_chars_mapper")
+class RemoveRepeatCharsMapper(Mapper):
+    """Caps absurd character runs (aaaaaaaa... -> aaa)."""
+
+    def process_single(self, s):
+        return _set_text(s, _REPEAT_RE.sub(lambda m: m.group(1) * 3, s.get("text", "")))
+
+
+@register("lowercase_mapper")
+class LowercaseMapper(Mapper):
+    """Lower-cases text."""
+
+    def process_single(self, s):
+        return _set_text(s, s.get("text", "").lower())
+
+
+@register("fix_unicode_mapper")
+class FixUnicodeMapper(Mapper):
+    """Drops control chars / replacement chars, normalises newlines."""
+
+    def process_single(self, s):
+        t = s.get("text", "").replace("\r\n", "\n").replace("\r", "\n")
+        t = "".join(c for c in t if c == "\n" or c == "\t" or ord(c) >= 32)
+        return _set_text(s, t.replace("�", ""))
+
+
+@register("sentence_split_mapper")
+class SentenceSplitMapper(Mapper):
+    """1->many: splits a document into per-sentence samples."""
+
+    expands = True
+    _SENT_RE = re.compile(r"(?<=[.!?])\s+")
+
+    def process_single(self, s):
+        sents = [x for x in self._SENT_RE.split(s.get("text", "")) if x.strip()]
+        out = []
+        for sent in sents or [""]:
+            ns = dict(s)
+            ns["text"] = sent
+            ns["meta"] = dict(s.get("meta", {}), parent_len=len(s.get("text", "")))
+            out.append(ns)
+        return out
+
+
+@register("dedup_lines_mapper")
+class DedupLinesMapper(Mapper):
+    """Removes exact duplicate lines within a document."""
+
+    def process_single(self, s):
+        seen = set()
+        out: List[str] = []
+        for l in s.get("text", "").splitlines():
+            key = l.strip()
+            if key and key in seen:
+                continue
+            seen.add(key)
+            out.append(l)
+        return _set_text(s, "\n".join(out))
+
+
+@register("sentence_augmentation_mapper")
+class SentenceAugmentationMapper(Mapper):
+    """Deterministic augmentation: drops a seeded fraction of words
+    (the paper's LLM-based variant adapted to an offline rule)."""
+
+    def __init__(self, drop_rate: float = 0.1, seed: int = 0, **kw):
+        super().__init__(drop_rate=drop_rate, seed=seed, **kw)
+        self.drop_rate = drop_rate
+        self.seed = seed
+
+    def process_single(self, s):
+        import numpy as np
+
+        words = s.get("text", "").split()
+        rng = np.random.default_rng(self.seed + len(words))
+        keep = rng.random(len(words)) >= self.drop_rate
+        return _set_text(s, " ".join(w for w, k in zip(words, keep) if k))
+
+
+@register("generate_qa_from_text_mapper")
+class GenerateQAFromTextMapper(Mapper):
+    """Synthesis OP: turns declarative sentences into (query, response)
+    post-tuning samples (template-based offline stand-in for the LLM OP)."""
+
+    expands = True
+    _SENT_RE = re.compile(r"(?<=[.!?])\s+")
+
+    def process_single(self, s):
+        out = []
+        for sent in self._SENT_RE.split(s.get("text", "")):
+            words = sent.split()
+            if len(words) < 4:
+                continue
+            subject = " ".join(words[:3])
+            q = f"What can you tell me about {subject.rstrip('.,!?')}?"
+            ns = dict(s)
+            ns.update(text="", query=q, response=sent.strip(), history=[])
+            ns["meta"] = dict(s.get("meta", {}), synthesized=True)
+            out.append(ns)
+        return out or [dict(s)]

@@ -1,0 +1,64 @@
+"""Training-side checkpoint/restart (+ elastic data-parallel resume).
+
+Numpy-npz based (no orbax offline): the state pytree is flattened to
+path-keyed arrays, written atomically, and restored onto any mesh — the
+restore path re-shards via ``jax.device_put`` with the target shardings, so
+restarts can change the data-parallel width (elastic scaling).
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_state(path: str, state) -> None:
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    flat = _flatten(state)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(os.path.abspath(path)))
+    os.close(fd)
+    np.savez(tmp, **flat)
+    os.replace(tmp + ".npz" if os.path.exists(tmp + ".npz") else tmp, path)
+
+
+def load_state(path: str, like, shardings=None):
+    """Restore into the structure of ``like`` (ShapeDtypeStructs or arrays);
+    optionally placing shards per ``shardings`` (elastic re-shard)."""
+    with np.load(path) as z:
+        flat = {k: z[k] for k in z.files}
+    leaves_like, _ = jax.tree_util.tree_flatten_with_path(like)
+    out = []
+    for path_keys, leaf in leaves_like:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path_keys)
+        arr = flat[key]
+        if hasattr(leaf, "dtype"):
+            arr = arr.astype(leaf.dtype)
+        out.append(arr)
+    tree = jax.tree.unflatten(jax.tree.structure(like), out)
+    if shardings is not None:
+        tree = jax.device_put(tree, shardings)
+    return tree
+
+
+def save_params(path: str, params) -> None:
+    save_state(path, params)
+
+
+def load_params(path: str, like=None):
+    if like is None:
+        with np.load(path) as z:
+            return {k: z[k] for k in z.files}
+    return load_state(path, like)

@@ -1,0 +1,238 @@
+"""Data-Juicer core system tests: schema, OPs, engines, executor, fault
+tolerance, checkpointing, fusion/reordering, insight mining."""
+import math
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import schema as S
+from repro.core.adapter import Adapter
+from repro.core.dataset import DJDataset
+from repro.core.engine import LocalEngine, ParallelEngine, ShardedEngine
+from repro.core.executor import Executor
+from repro.core.fusion import fuse_filters, harmonic_speed, optimize, reorder
+from repro.core.ops_base import Filter, FusedOP, HumanOP, Mapper, ScriptOP
+from repro.core.recipes import Recipe, parse_simple_yaml
+from repro.core.registry import create_op, list_ops, op_info
+from repro.data.synthetic import make_corpus
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return make_corpus(400, seed=7)
+
+
+def test_schema_alignment_and_empty():
+    s = S.new_sample(f"{S.IMAGE_TOKEN} a cat {S.EOC} a dog {S.IMAGE_TOKEN}")
+    s["images"] = ["a.png", "b.png"]
+    ok, _ = S.check_alignment(s)
+    assert ok
+    s["images"] = ["a.png"]
+    ok, why = S.check_alignment(s)
+    assert not ok and "images" in why
+    e = S.empty_like(s)
+    assert S.is_empty(e) and e["text"] == "" and e["images"] == []
+
+
+def test_registry_round_trip():
+    ops = list_ops()
+    assert len(ops) >= 30, f"expected a rich OP library, got {len(ops)}"
+    op = create_op({"name": "text_length_filter", "min_val": 10, "max_val": 100})
+    cfg = op.config()
+    op2 = create_op(cfg)
+    assert op2.params["min_val"] == 10
+    info = op_info("text_length_filter")
+    assert info["type"] == "Filter" and info["fusible"]
+
+
+def test_basic_pipeline_chainable(corpus):
+    ds = DJDataset.from_samples(corpus)
+    op1 = create_op({"name": "whitespace_normalization_mapper"})
+    op2 = create_op({"name": "text_length_filter", "min_val": 400})
+    out = ds.process(op1).process(op2)
+    assert 0 < len(out) < len(ds)
+    assert all(len(s["text"]) >= 400 for s in out)
+    out2 = ds.process([op1, op2])
+    assert len(out2) == len(out)
+
+
+def test_filter_stats_recorded(corpus):
+    ds = DJDataset.from_samples(corpus[:50])
+    out = ds.process(create_op({"name": "alnum_ratio_filter", "min_val": 0.0}))
+    assert all("alnum_ratio" in s["stats"] for s in out)
+
+
+def test_fault_tolerance_empty_samples(corpus):
+    class Bomb(Mapper):
+        _name = "bomb"
+
+        def process_single(self, s):
+            if "juicer" in s.get("text", ""):
+                raise RuntimeError("boom")
+            return s
+
+    ds = DJDataset.from_samples(corpus[:100])
+    op = Bomb()
+    out = ds.process(op, drop_empty=True)
+    assert len(op.errors) > 0, "expected some failures"
+    assert len(out) == 100 - len(op.errors)
+    # keep_failed path: empties preserved
+    out2 = DJDataset.from_samples(corpus[:100]).process(Bomb(), drop_empty=False)
+    empties = [s for s in out2 if S.is_empty(s)]
+    assert len(empties) > 0
+
+
+def test_dedup_removes_duplicates(corpus):
+    ds = DJDataset.from_samples(corpus)
+    n0 = len(ds)
+    out = ds.process(create_op({"name": "document_minhash_deduplicator",
+                                "jaccard_threshold": 0.6}))
+    kinds = [s["meta"].get("kind") for s in out]
+    assert len(out) < n0
+    # exact duplicates must be gone entirely
+    texts = [s["text"] for s in out]
+    assert len(set(texts)) == len(texts)
+
+
+def test_grouper_aggregator(corpus):
+    ds = DJDataset.from_samples(corpus[:60])
+    g = create_op({"name": "key_value_grouper", "key": "domain"})
+    a = create_op({"name": "keyword_summary_aggregator", "top_k": 5})
+    out = ds.process([g, a])
+    assert 1 <= len(out) <= 4
+    assert all(s["text"].startswith("summary keywords:") for s in out)
+
+
+def test_script_op_and_fused_op(corpus):
+    ds = DJDataset.from_samples(corpus[:40])
+    sop = ScriptOP(fn=lambda s: {**s, "text": s["text"][:10]})
+    f1 = create_op({"name": "text_length_filter", "min_val": 5})
+    fused = FusedOP([f1, sop])
+    out = ds.process(fused)
+    assert all(len(s["text"]) <= 10 for s in out)
+
+
+def test_human_op_async():
+    h = HumanOP(annotator=lambda s: {"label": "good" if len(s["text"]) > 5 else "bad"})
+    h.submit([S.new_sample("long enough text"), S.new_sample("hi")])
+    assert h.poll(max_items=1) == 1
+    got = h.collect()
+    assert len(got) == 1 and got[0]["meta"]["human"]["label"] == "good"
+    h.poll()
+    assert len(h.collect()) == 1
+
+
+def test_parallel_engine_matches_local(corpus):
+    cfgs = [{"name": "whitespace_normalization_mapper"},
+            {"name": "words_num_filter", "min_val": 5}]
+    ops_l = [create_op(c) for c in cfgs]
+    ops_p = [create_op(c) for c in cfgs]
+    local = DJDataset.from_samples(corpus, LocalEngine()).process(ops_l)
+    par = DJDataset.from_samples(corpus, ParallelEngine(n_workers=2)).process(ops_p)
+    assert sorted(s["text"] for s in local) == sorted(s["text"] for s in par)
+
+
+def test_sharded_engine_vectorized(corpus):
+    op = create_op({"name": "text_length_filter", "min_val": 50})
+    eng = ShardedEngine()
+    out = DJDataset.from_samples(corpus, eng).process(op)
+    ref = DJDataset.from_samples(corpus, LocalEngine()).process(
+        create_op({"name": "text_length_filter", "min_val": 50}))
+    assert sorted(s["text"] for s in out) == sorted(s["text"] for s in ref)
+
+
+def test_fusion_and_reorder():
+    f_fast = create_op({"name": "text_length_filter", "min_val": 1})
+    f_slow = create_op({"name": "word_repetition_filter", "max_val": 0.9})
+    m = create_op({"name": "lowercase_mapper"})
+    f_fast.probed_speed, f_slow.probed_speed = 1000.0, 10.0
+    plan = fuse_filters([f_fast, f_slow, m])
+    assert isinstance(plan[0], FusedOP) and plan[1] is m
+    ordered = reorder([f_slow, f_fast])
+    assert ordered[0] is f_fast, "faster op must run first"
+    assert math.isclose(harmonic_speed([1000, 10]), 1 / (1 / 1000 + 1 / 10))
+
+
+def test_adapter_probe_and_plan(corpus):
+    ops = [create_op({"name": "text_length_filter", "min_val": 10}),
+           create_op({"name": "word_repetition_filter", "max_val": 1.0})]
+    ad = Adapter(cpu_budget=4, mem_budget=1 << 30)
+    probes = ad.probe_small_batch(corpus, ops, cap=100)
+    assert all(p.speed > 0 for p in probes.values())
+    plan = ad.resource_plan(ops[0])
+    assert 1 <= plan.n_procs <= 4
+
+
+def test_executor_end_to_end(tmp_path, corpus):
+    from repro.core.storage import write_jsonl
+
+    src = str(tmp_path / "in.jsonl")
+    write_jsonl(src, corpus)
+    recipe = Recipe(
+        name="t", dataset_path=src, export_path=str(tmp_path / "out.jsonl"),
+        process=[
+            {"name": "whitespace_normalization_mapper"},
+            {"name": "text_length_filter", "min_val": 30},
+            {"name": "alnum_ratio_filter", "min_val": 0.6},
+            {"name": "document_minhash_deduplicator", "jaccard_threshold": 0.6},
+        ],
+        insight=True,
+    )
+    ds, report = Executor(recipe).run()
+    assert report.n_out < report.n_in
+    assert os.path.exists(tmp_path / "out.jsonl")
+    assert "insight" in report.insight or report.insight
+    assert len(report.per_op) >= 3
+
+
+def test_checkpoint_resume(tmp_path, corpus):
+    from repro.core.storage import write_jsonl
+
+    src = str(tmp_path / "in.jsonl")
+    write_jsonl(src, corpus[:100])
+    procs = [
+        {"name": "whitespace_normalization_mapper"},
+        {"name": "text_length_filter", "min_val": 30},
+    ]
+    recipe = Recipe(name="t", dataset_path=src, process=procs,
+                    checkpoint_dir=str(tmp_path / "ckpt"),
+                    use_fusion=False, use_reordering=False)
+    _, rep1 = Executor(recipe).run()
+    assert rep1.resumed_at == 0
+    # second run resumes from the final stage (all ops skipped)
+    _, rep2 = Executor(recipe).run()
+    assert rep2.resumed_at == len(procs)
+    assert rep2.n_out == rep1.n_out
+
+
+def test_yaml_recipe_parse():
+    text = """
+name: demo
+np: 4
+engine: parallel
+process:
+  - text_length_filter:
+      min_val: 10
+      max_val: 10000
+  - lowercase_mapper
+"""
+    d = parse_simple_yaml(text)
+    r = Recipe.from_dict(d)
+    assert r.np == 4 and r.engine == "parallel"
+    assert r.process[0]["name"] == "text_length_filter"
+    assert r.process[0]["min_val"] == 10
+    assert r.process[1]["name"] == "lowercase_mapper"
+
+
+def test_insight_mining(corpus):
+    from repro.core.insight import InsightMiner
+
+    miner = InsightMiner()
+    ds = DJDataset.from_samples(corpus)
+    miner.record("load", ds.samples())
+    ds = ds.process(create_op({"name": "text_length_filter", "min_val": 200}))
+    miner.record("text_length_filter", ds.samples())
+    diffs = miner.diffs()
+    assert diffs and diffs[0]["volume"][0] > diffs[0]["volume"][1]
+    assert isinstance(miner.report(), str)

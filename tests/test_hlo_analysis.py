@@ -1,0 +1,63 @@
+"""Validates the trip-count-aware HLO profiler against XLA's own
+cost_analysis on loop-free programs, and its loop multiplication on scans."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hlo_analysis import analyze_hlo, parse_module, type_bytes
+
+
+def _compile(fn, *shapes):
+    args = [jax.ShapeDtypeStruct(s, jnp.float32) for s in shapes]
+    return jax.jit(fn).lower(*args).compile()
+
+
+def test_flops_match_cost_analysis_loop_free():
+    comp = _compile(lambda a, b: a @ b, (64, 128), (128, 32))
+    stats = analyze_hlo(comp.as_text())
+    xla_flops = comp.cost_analysis().get("flops", 0)
+    assert stats.flops == pytest.approx(xla_flops, rel=0.01)
+    assert stats.flops == pytest.approx(2 * 64 * 128 * 32, rel=0.01)
+
+
+def test_scan_trip_count_multiplied():
+    def scanned(x, ws):
+        def body(c, w):
+            return (c @ w).astype(c.dtype), None
+        x, _ = jax.lax.scan(body, x, ws)
+        return x
+
+    n = 12
+    comp = _compile(scanned, (32, 32), (n, 32, 32))
+    stats = analyze_hlo(comp.as_text())
+    xla_flops = comp.cost_analysis().get("flops", 0)  # counts body ONCE
+    assert stats.flops == pytest.approx(n * 2 * 32**3, rel=0.05)
+    assert stats.flops > 5 * xla_flops, "our walker must multiply loop bodies"
+    assert n in stats.while_trips
+
+
+def test_type_bytes():
+    assert type_bytes("f32[8,128]{1,0}") == 8 * 128 * 4
+    assert type_bytes("bf16[2,3]{1,0}") == 12
+    assert type_bytes("(s32[], f32[4]{0})") == 4 + 16
+    assert type_bytes("pred[]") == 1
+
+
+def test_parse_module_finds_entry():
+    comp = _compile(lambda a: jnp.sum(a * 2.0), (16, 16))
+    comps, entry = parse_module(comp.as_text())
+    assert entry is not None and entry in comps
+    assert len(comps[entry].instrs) > 0
+
+
+def test_collectives_counted():
+    if len(jax.devices()) < 1:
+        pytest.skip("no devices")
+    mesh = jax.make_mesh((1,), ("d",))
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    fn = jax.jit(lambda x: x * 2, in_shardings=NamedSharding(mesh, P(None)))
+    comp = fn.lower(jax.ShapeDtypeStruct((8,), jnp.float32)).compile()
+    stats = analyze_hlo(comp.as_text())
+    assert stats.hbm_bytes > 0

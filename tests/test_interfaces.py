@@ -1,0 +1,89 @@
+"""Interface layer: RESTful server, NL agent, CLI."""
+import json
+import urllib.request
+
+import pytest
+
+from repro.core.dataset import DJDataset
+from repro.core.storage import write_jsonl
+from repro.data.synthetic import make_corpus
+from repro.interface.nl import parse_intent, run_request
+
+
+def test_nl_intent_parsing():
+    turns = parse_intent("Please filter out too short text samples, minimum 120 chars")
+    assert turns[0].function == "text_length_filter"
+    assert turns[0].arguments["min_val"] == 120
+    turns = parse_intent("deduplicate the corpus and lowercase everything")
+    fns = {t.function for t in turns}
+    assert "document_minhash_deduplicator" in fns and "lowercase_mapper" in fns
+    turns = parse_intent("make me a sandwich")
+    assert turns[0].function is None
+
+
+def test_nl_executes_ops():
+    ds = DJDataset.from_samples(make_corpus(100, seed=1))
+    out, turns = run_request("filter out short text samples, minimum 300", ds)
+    assert turns[0].result["status"] == "SUCCESS"
+    assert len(out) < len(ds)
+    assert all(len(s["text"]) >= 300 for s in out)
+
+
+def test_restful_server(tmp_path):
+    from repro.interface.server import serve
+
+    src = str(tmp_path / "d.jsonl")
+    write_jsonl(src, make_corpus(80, seed=2))
+    srv = serve(port=0)
+    port = srv.server_address[1]
+    try:
+        with urllib.request.urlopen(f"http://127.0.0.1:{port}/ops") as r:
+            ops = json.loads(r.read())["ops"]
+        assert any(o["name"] == "text_length_filter" for o in ops)
+
+        req = urllib.request.Request(
+            f"http://127.0.0.1:{port}/run/text_length_filter?dataset_path={src}",
+            data=json.dumps({"min_val": 300}).encode(),
+            headers={"Content-Type": "application/json"},
+        )
+        with urllib.request.urlopen(req) as r:
+            out = json.loads(r.read())
+        assert out["status"] == "ok" and out["n_out"] < 80
+
+        req = urllib.request.Request(
+            f"http://127.0.0.1:{port}/process?dataset_path={src}",
+            data=json.dumps({
+                "process": [
+                    {"name": "whitespace_normalization_mapper"},
+                    {"name": "words_num_filter", "min_val": 10},
+                ]
+            }).encode(),
+        )
+        with urllib.request.urlopen(req) as r:
+            out = json.loads(r.read())
+        assert out["status"] == "ok" and out["n_out"] <= 80 and len(out["plan"]) >= 1
+    finally:
+        srv.shutdown()
+
+
+def test_cli(tmp_path, capsys):
+    from repro.core.recipes import Recipe
+    from repro.interface.cli import main
+
+    src = str(tmp_path / "d.jsonl")
+    write_jsonl(src, make_corpus(60, seed=3))
+    assert main(["list-ops"]) == 0
+    assert "text_length_filter" in capsys.readouterr().out
+
+    rec = tmp_path / "r.json"
+    rec.write_text(json.dumps({
+        "name": "cli-test", "dataset_path": src,
+        "export_path": str(tmp_path / "o.jsonl"),
+        "process": [{"name": "text_length_filter", "min_val": 100}],
+    }))
+    assert main(["process", "--config", str(rec)]) == 0
+    out = capsys.readouterr().out
+    assert "cli-test" in out
+
+    assert main(["analyze", "--dataset_path", src]) == 0
+    assert "text_len" in capsys.readouterr().out

@@ -1,0 +1,118 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), sweeping shapes and
+dtypes per the deliverable."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+# ---------------------------------------------------------------------------
+# minhash
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("d,s,p", [(3, 5, 7), (10, 37, 33), (64, 256, 64), (100, 513, 128)])
+def test_minhash_kernel_matches_ref(d, s, p):
+    from repro.kernels.minhash.ops import minhash_signatures
+    from repro.kernels.minhash.ref import minhash_ref
+
+    rng = np.random.default_rng(d * 1000 + s)
+    h = rng.integers(0, 2**64, (d, s), dtype=np.uint64)
+    mask = rng.random((d, s)) > 0.2
+    mask[:, 0] = True  # at least one valid shingle per doc
+    a = rng.integers(1, 2**32, p, dtype=np.uint64)
+    b = rng.integers(0, 2**32, p, dtype=np.uint64)
+    out = np.asarray(minhash_signatures(h, mask, a, b))
+    h32 = (h & 0xFFFFFFFF).astype(np.uint32) ^ (h >> np.uint64(32)).astype(np.uint32)
+    a32 = a.astype(np.uint32) | np.uint32(1)
+    ref = np.asarray(
+        minhash_ref(jnp.asarray(h32), jnp.asarray(mask), jnp.asarray(a32),
+                    jnp.asarray(b.astype(np.uint32)))
+    )
+    np.testing.assert_array_equal(out, ref)
+
+
+# ---------------------------------------------------------------------------
+# ssd scan
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "b,s,h,p,n,chunk",
+    [(1, 16, 2, 8, 4, 8), (2, 64, 4, 16, 16, 16), (1, 128, 8, 32, 16, 32)],
+)
+def test_ssd_kernel_matches_ref(b, s, h, p, n, chunk):
+    from repro.kernels.ssd_scan.ops import ssd_forward
+    from repro.kernels.ssd_scan.ref import ssd_ref
+
+    rng = np.random.default_rng(s + h)
+    x = jnp.asarray(rng.standard_normal((b, s, h, p)), jnp.float32)
+    dt = jnp.asarray(np.abs(rng.standard_normal((b, s, h))) * 0.1 + 0.01, jnp.float32)
+    a_log = jnp.asarray(rng.standard_normal(h) * 0.3, jnp.float32)
+    bm = jnp.asarray(rng.standard_normal((b, s, 1, n)) * 0.5, jnp.float32)
+    cm = jnp.asarray(rng.standard_normal((b, s, 1, n)) * 0.5, jnp.float32)
+
+    y_k = ssd_forward(x, dt, a_log, bm, cm, chunk)
+    y_r, _ = ssd_ref(x, dt, a_log, bm, cm, chunk)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_r), rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_kernel_dtypes(dtype):
+    from repro.kernels.ssd_scan.ops import ssd_forward
+    from repro.kernels.ssd_scan.ref import ssd_ref
+
+    rng = np.random.default_rng(0)
+    b, s, h, p, n, chunk = 1, 32, 2, 16, 8, 16
+    x = jnp.asarray(rng.standard_normal((b, s, h, p)), dtype)
+    dt = jnp.asarray(np.abs(rng.standard_normal((b, s, h))) * 0.1 + 0.01, jnp.float32)
+    a_log = jnp.asarray(rng.standard_normal(h) * 0.3, jnp.float32)
+    bm = jnp.asarray(rng.standard_normal((b, s, 1, n)) * 0.5, dtype)
+    cm = jnp.asarray(rng.standard_normal((b, s, 1, n)) * 0.5, dtype)
+    y_k = ssd_forward(x, dt, a_log, bm, cm, chunk)
+    y_r, _ = ssd_ref(x, dt, a_log, bm, cm, chunk)
+    np.testing.assert_allclose(
+        np.asarray(y_k, np.float32), np.asarray(y_r, np.float32), rtol=5e-2, atol=5e-2
+    )
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "b,s,hq,hkv,hd,causal,window,bq,bk",
+    [
+        (1, 64, 2, 2, 16, True, None, 16, 16),
+        (2, 128, 4, 2, 32, True, None, 32, 32),
+        (1, 96, 4, 1, 16, True, 48, 32, 32),   # MQA + window
+        (2, 64, 4, 4, 16, False, None, 16, 16),  # non-causal
+        (1, 100, 2, 2, 16, True, None, 32, 32),  # padding path
+    ],
+)
+def test_flash_kernel_matches_ref(b, s, hq, hkv, hd, causal, window, bq, bk):
+    from repro.kernels.flash_attention.ops import flash_attention
+    from repro.kernels.flash_attention.ref import attention_reference
+
+    rng = np.random.default_rng(s + hq)
+    q = jnp.asarray(rng.standard_normal((b, s, hq, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, hkv, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, hkv, hd)), jnp.float32)
+    out = flash_attention(q, k, v, causal=causal, window=window, block_q=bq, block_k=bk)
+    ref = attention_reference(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-3, atol=2e-3)
+
+
+def test_flash_kernel_bf16():
+    from repro.kernels.flash_attention.ops import flash_attention
+    from repro.kernels.flash_attention.ref import attention_reference
+
+    rng = np.random.default_rng(3)
+    q = jnp.asarray(rng.standard_normal((1, 64, 4, 16)), jnp.bfloat16)
+    k = jnp.asarray(rng.standard_normal((1, 64, 2, 16)), jnp.bfloat16)
+    v = jnp.asarray(rng.standard_normal((1, 64, 2, 16)), jnp.bfloat16)
+    out = flash_attention(q, k, v, causal=True, block_q=32, block_k=32)
+    ref = attention_reference(q, k, v, causal=True)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), rtol=5e-2, atol=5e-2
+    )

@@ -1,0 +1,62 @@
+"""Post-tuning OP family tests (dialog schema)."""
+from repro.core import schema as S
+from repro.core.dataset import DJDataset
+from repro.core.registry import create_op
+
+
+def _qa(q, r, history=None):
+    return S.new_sample("", query=q, response=r, history=history or [])
+
+
+def test_calibrate_query_and_response():
+    op = create_op({"name": "optimize_qa_mapper"})
+    s = op.process_single(_qa("what  is   data juicer",
+                              "Sure! Data Juicer is a system. Data Juicer is a system."))
+    assert s["query"] == "what is data juicer?"
+    assert s["response"].lower().count("data juicer is a system") == 1
+    assert not s["response"].lower().startswith("sure")
+
+
+def test_pair_preference_and_ratio_filter():
+    ds = DJDataset.from_samples([
+        _qa("why is the sky blue?", "because of rayleigh scattering of sunlight " * 3),
+        _qa("explain gravity in detail please with examples", "no"),
+    ])
+    out = ds.process([
+        create_op({"name": "pair_preference_mapper"}),
+        create_op({"name": "response_length_ratio_filter", "min_val": 0.5}),
+    ])
+    assert len(out) == 1
+    m = out.samples()[0]["meta"]
+    assert m["chosen"] and len(m["rejected"].split()) <= len(m["chosen"].split())
+
+
+def test_extract_and_difficulty_and_turns():
+    s = S.new_sample("Einstein is famous. Gravity is universal. The value 3.14159 appears.",
+                     query="compute the integral of a polynomial", response="ok",
+                     history=[["hi", "hello"]])
+    s = create_op({"name": "extract_keyword_mapper"}).process_single(s)
+    assert "keywords" in s["meta"]
+    s = create_op({"name": "extract_entity_attribute_mapper"}).process_single(s)
+    assert ["Einstein", "famous"] in s["meta"]["entity_attributes"]
+    s = create_op({"name": "dialog_turns_filter"}).compute_stats(s)
+    assert s["stats"]["n_turns"] == 2
+    s = create_op({"name": "llm_difficulty_score_filter"}).compute_stats(s)
+    assert 0.0 <= s["stats"]["difficulty"] <= 1.0
+
+
+def test_history_flatten():
+    s = _qa("current?", "yes", history=[["q1", "a1"]])
+    out = create_op({"name": "history_flatten_mapper"}).process_single(s)
+    assert "user: q1" in out["text"] and "assistant: a1" in out["text"]
+    assert out["text"].endswith("assistant: yes")
+
+
+def test_registry_has_post_tuning_family():
+    from repro.core.registry import list_ops
+
+    ops = list_ops()
+    for name in ("calibrate_query_mapper", "pair_preference_mapper",
+                 "llm_difficulty_score_filter", "optimize_qa_mapper"):
+        assert name in ops
+    assert len(ops) >= 55

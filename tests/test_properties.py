@@ -1,0 +1,157 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import schema as S
+from repro.core.dedup.minhash import (
+    jaccard, lsh_bands, make_permutations, shingle_hashes, signature_ref,
+)
+from repro.core.dedup.unionfind import BalancedUnionFind, naive_components, partitioned_union
+from repro.core.fusion import harmonic_speed
+from repro.core.recipes import parse_simple_yaml
+from repro.data.packing import pack_documents
+from repro.data.tokenizer import ByteTokenizer, HashWordTokenizer
+
+TEXT = st.text(alphabet=st.characters(codec="utf-8", categories=("L", "N", "P", "Zs")),
+               min_size=0, max_size=300)
+
+
+# ---------------------------------------------------------------------------
+# schema
+# ---------------------------------------------------------------------------
+
+
+@given(TEXT, st.integers(0, 3))
+@settings(max_examples=50, deadline=None)
+def test_schema_alignment_invariant(text, n_img):
+    s = S.new_sample((S.IMAGE_TOKEN + " ") * n_img + text.replace(S.IMAGE_TOKEN, ""))
+    s["images"] = [f"i{k}" for k in range(n_img)]
+    ok, _ = S.check_alignment(s)
+    assert ok
+    e = S.empty_like(s)
+    assert S.is_empty(e)
+    ok_e, _ = S.check_alignment(e)
+    assert ok_e  # empty samples are schema-valid
+
+
+@given(TEXT, TEXT)
+@settings(max_examples=50, deadline=None)
+def test_alpaca_round_trip(q, r):
+    s = S.new_sample("", query=q, response=r, history=[])
+    back = S.from_alpaca(S.to_alpaca(s))
+    assert back["query"] == q and back["response"] == r
+
+
+# ---------------------------------------------------------------------------
+# minhash: Pr[sig_a == sig_b] ~= jaccard(a, b)
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(0, 2**32 - 1))
+@settings(max_examples=20, deadline=None)
+def test_minhash_estimates_jaccard(seed):
+    rng = np.random.default_rng(seed)
+    base = rng.integers(0, 2**63, 200, dtype=np.uint64)
+    overlap = rng.integers(10, 190)
+    other = np.concatenate([base[:overlap],
+                            rng.integers(0, 2**63, 200 - overlap, dtype=np.uint64)])
+    true_j = jaccard(base, other)
+    a, b = make_permutations(256, seed=7)
+    sa, sb = signature_ref(base, a, b), signature_ref(other, a, b)
+    est = float(np.mean(sa == sb))
+    assert abs(est - true_j) < 0.15, (est, true_j)
+
+
+@given(TEXT)
+@settings(max_examples=50, deadline=None)
+def test_identical_texts_identical_signatures(text):
+    a, b = make_permutations(64)
+    s1 = signature_ref(shingle_hashes(text), a, b)
+    s2 = signature_ref(shingle_hashes(text), a, b)
+    np.testing.assert_array_equal(s1, s2)
+    keys = lsh_bands(np.stack([s1, s2]), 8)
+    assert (keys[0] == keys[1]).all()
+
+
+# ---------------------------------------------------------------------------
+# union-find: all backends agree on connectivity
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(2, 60), st.lists(st.tuples(st.integers(0, 59), st.integers(0, 59)),
+                                    max_size=80))
+@settings(max_examples=60, deadline=None)
+def test_union_find_backends_agree(n, edges):
+    edges = [(a % n, b % n) for a, b in edges]
+    uf = BalancedUnionFind(n)
+    uf.add_edges(edges)
+    c1 = uf.components()
+    c2 = naive_components(n, edges)
+    c3 = partitioned_union(n, edges, n_partitions=4).components()
+    # same partition structure (labels may differ)
+    for c_other in (c2, c3):
+        for i in range(n):
+            for j in range(i + 1, n):
+                assert (c1[i] == c1[j]) == (c_other[i] == c_other[j]), (i, j)
+
+
+# ---------------------------------------------------------------------------
+# packing / tokenizers
+# ---------------------------------------------------------------------------
+
+
+@given(st.lists(st.lists(st.integers(0, 1000), min_size=0, max_size=50), max_size=8),
+       st.integers(4, 32))
+@settings(max_examples=60, deadline=None)
+def test_packing_preserves_tokens(docs, seq_len):
+    toks, labels, mask = pack_documents(docs, seq_len)
+    stream = [t for d in docs for t in d]
+    # next-token alignment: labels are tokens shifted by one in the stream
+    flat_t = toks.reshape(-1)
+    flat_l = labels.reshape(-1)
+    flat_m = mask.reshape(-1)
+    valid = flat_m > 0
+    if valid.sum() > 0:
+        n_valid = int(valid.sum())
+        np.testing.assert_array_equal(flat_t[valid][:n_valid], stream[:n_valid])
+        np.testing.assert_array_equal(flat_l[valid][:n_valid], stream[1 : n_valid + 1])
+    assert toks.shape == labels.shape == mask.shape
+
+
+@given(TEXT)
+@settings(max_examples=50, deadline=None)
+def test_byte_tokenizer_round_trip(text):
+    tok = ByteTokenizer()
+    assert tok.decode(tok.encode(text)) == text
+
+
+@given(TEXT, st.integers(16, 1 << 16))
+@settings(max_examples=50, deadline=None)
+def test_hash_tokenizer_in_vocab(text, vocab):
+    tok = HashWordTokenizer(vocab)
+    ids = tok.encode(text)
+    assert all(0 <= i < vocab for i in ids)
+    assert tok.encode(text) == ids  # deterministic
+
+
+# ---------------------------------------------------------------------------
+# fusion math / recipe parser
+# ---------------------------------------------------------------------------
+
+
+@given(st.lists(st.floats(0.1, 1e6), min_size=1, max_size=8))
+@settings(max_examples=60, deadline=None)
+def test_harmonic_speed_bounds(speeds):
+    v = harmonic_speed(speeds)
+    assert v <= min(speeds) + 1e-6  # fused is never faster than slowest member
+    assert v >= min(speeds) / len(speeds) - 1e-9
+
+
+@given(st.dictionaries(st.sampled_from(["name", "np", "engine"]),
+                       st.integers(0, 100), max_size=3))
+@settings(max_examples=30, deadline=None)
+def test_yaml_scalar_round_trip(d):
+    text = "\n".join(f"{k}: {v}" for k, v in d.items())
+    parsed = parse_simple_yaml(text)
+    for k, v in d.items():
+        assert parsed[k] == v
