@@ -23,6 +23,7 @@ def main() -> None:
         bench_reordering,
         bench_resource_alloc,
         bench_roofline,
+        bench_streaming,
         bench_subset_splitting,
     )
 
@@ -34,6 +35,7 @@ def main() -> None:
         ("engine_scaling(Fig4)", lambda: bench_engine_scaling.run(
             small=150 if q else 500, medium=600 if q else 3000)),
         ("subset_splitting(Fig4f)", lambda: bench_subset_splitting.run(n=800 if q else 4000)),
+        ("streaming_executor(Fig4f)", lambda: bench_streaming.run(quick=q)),
         ("resource_alloc(Table4)", lambda: bench_resource_alloc.run(n=16 if q else 48)),
         ("hier_parallelism(Fig10b)", lambda: bench_parallelism.run(n=200 if q else 800)),
         ("roofline(section-g)", bench_roofline.run),

@@ -11,6 +11,7 @@
 """
 from __future__ import annotations
 
+import copy
 import dataclasses
 import time
 import tracemalloc
@@ -66,7 +67,9 @@ class Adapter:
         n = min(cap, len(samples))
         rng = np.random.default_rng(seed)
         idx = rng.choice(len(samples), size=n, replace=False)
-        subset = [dict(samples[int(i)]) for i in idx]
+        # deep copies: a shallow dict() would share the nested "stats" dicts,
+        # letting probe runs write stats into the real dataset samples
+        subset = [copy.deepcopy(samples[int(i)]) for i in idx]
         for op in ops:
             op.setup()
             probe_in = [dict(s) for s in subset]

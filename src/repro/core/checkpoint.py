@@ -11,13 +11,11 @@ import hashlib
 import os
 from typing import Any, Dict, List, Optional, Tuple
 
-import orjson
-
-from repro.core.storage import read_jsonl, write_jsonl
+from repro.core.storage import json_dumps, json_loads, read_jsonl, write_jsonl
 
 
 def _op_sig(op_config: Dict[str, Any]) -> str:
-    blob = orjson.dumps(op_config, option=orjson.OPT_SORT_KEYS)
+    blob = json_dumps(op_config, sort_keys=True)
     return hashlib.sha1(blob).hexdigest()[:12]
 
 
@@ -49,20 +47,39 @@ class CheckpointManager:
         manifest["stages"] = {**manifest.get("stages", {}), sig: {
             "op_index": op_index, "n": len(samples)}}
         with open(self._manifest_path(), "wb") as f:
-            f.write(orjson.dumps(manifest))
+            f.write(json_dumps(manifest))
+
+    def set_meta(self, key: str, value: Any) -> None:
+        """Persist a run-level fact (e.g. original input size) in the manifest."""
+        manifest = self.load_manifest()
+        manifest[key] = value
+        with open(self._manifest_path(), "wb") as f:
+            f.write(json_dumps(manifest))
+
+    def get_meta(self, key: str, default: Any = None) -> Any:
+        return self.load_manifest().get(key, default)
 
     def load_manifest(self) -> Dict[str, Any]:
         try:
             with open(self._manifest_path(), "rb") as f:
-                return orjson.loads(f.read())
+                return json_loads(f.read())
         except FileNotFoundError:
             return {"stages": {}}
 
-    def resume_point(self, op_configs: List[Dict[str, Any]]) -> Tuple[int, Optional[List[dict]]]:
-        """Returns (n_ops_done, samples_at_that_stage|None)."""
+    def resume_point(
+        self, op_configs: List[Dict[str, Any]],
+        allowed: Optional[set] = None,
+    ) -> Tuple[int, Optional[List[dict]]]:
+        """Returns (n_ops_done, samples_at_that_stage|None).
+
+        ``allowed`` restricts resume to specific op counts — the streaming
+        executor passes its segment boundaries so recovery lands on a stage
+        that was actually persisted (segments checkpoint as a unit)."""
         sigs = recipe_prefix_sigs(op_configs)
         stages = self.load_manifest().get("stages", {})
         for i in range(len(sigs) - 1, -1, -1):
+            if allowed is not None and (i + 1) not in allowed:
+                continue
             sig = sigs[i]
             if sig in stages and os.path.exists(self._stage_path(sig)):
                 return i + 1, list(read_jsonl(self._stage_path(sig)))

@@ -15,12 +15,117 @@ import numpy as np
 from repro.core import schema as S
 from repro.core.engine import LocalEngine, make_engine
 from repro.core.ops_base import (
-    Aggregator, Deduplicator, Filter, Grouper, Operator, Selector,
+    BARRIER_TYPES, Aggregator, Deduplicator, Filter, Grouper, Operator,
+    Selector,
 )
-from repro.core.storage import SampleBlock, read_jsonl, split_blocks, write_jsonl
+from repro.core.storage import (
+    BlockPrefetcher, SampleBlock, read_jsonl, split_blocks, write_jsonl,
+)
 
 Sample = Dict[str, Any]
 GROUP_KEY = "__group__"
+
+
+def apply_dataset_op(op: Operator, samples: List[Sample]) -> List[Sample]:
+    """Apply a dataset-level (barrier) OP to fully-materialized samples."""
+    op.setup()
+    if isinstance(op, Deduplicator):
+        return op.dedup(samples)
+    if isinstance(op, Selector):
+        return op.select(samples)
+    if isinstance(op, Grouper):
+        return [{GROUP_KEY: g, "meta": {}, "stats": {}} for g in op.group(samples)]
+    if isinstance(op, Aggregator):
+        out = []
+        for s in samples:
+            if GROUP_KEY in s:
+                out.append(op.run_batch_safe(s[GROUP_KEY])[0]
+                           if s[GROUP_KEY] else S.empty_like({"text": ""}))
+            else:
+                out.append(s)
+        # non-grouped input: aggregate everything into one sample
+        if out and not any(GROUP_KEY in s for s in samples):
+            out = op.run_batch_safe(samples)
+        return out
+    raise TypeError(f"{op.name} is not a dataset-level OP")
+
+
+def stream_segments(
+    blocks: Iterable[SampleBlock],
+    segments: Sequence,  # List[fusion.Segment]
+    engine,
+    sink=None,
+    collect: bool = True,
+    n_workers_hint: int = 1,
+) -> tuple:
+    """Core of the streaming executor: drive a lazy block iterator through a
+    planned sequence of segments.
+
+    Pipelineable segments stream block-by-block through the engine's
+    ``map_block_chain`` (one dispatch per block per segment); barrier segments
+    drain the stream, run the dataset-level OP on the materialized samples,
+    and re-split into blocks. Exported blocks go to ``sink`` as they complete,
+    so with ``collect=False`` the full dataset is never materialized (unless a
+    barrier forces it).
+
+    Returns ``(out_blocks, per_op_entries, n_out)`` where ``per_op_entries``
+    is one monitor entry per OP (aggregated across blocks) in plan order.
+    """
+    # aggregation is keyed by GLOBAL op index, not op name — a recipe may
+    # legally contain two instances of the same OP class. Pre-seeded with
+    # zero entries so per_op stays aligned with the plan even on empty input.
+    agg: Dict[int, dict] = {}
+    _i = 0
+    for _seg in segments:
+        for _op in _seg.ops:
+            agg[_i] = {"op": _op.name, "seconds": 0.0, "in": 0, "out": 0, "errors": 0}
+            _i += 1
+
+    def record(op_idx: int, st: dict) -> None:
+        e = agg[op_idx]
+        for k in ("seconds", "in", "out", "errors"):
+            e[k] += st[k]
+
+    stream: Iterable[SampleBlock] = blocks
+    offset = 0
+    for seg in segments:
+        if seg.barrier:
+            op = seg.ops[0]
+            # drain FIRST: the lazy upstream executes here, and its time
+            # belongs to the upstream ops' entries, not the barrier's
+            samples = [s for b in stream for s in b.samples]
+            t0 = time.time()
+            n_in = len(samples)
+            err0 = len(op.errors)
+            out = [s for s in apply_dataset_op(op, samples) if not S.is_empty(s)]
+            record(offset, {"op": op.name, "seconds": time.time() - t0, "in": n_in,
+                            "out": len(out), "errors": len(op.errors) - err0})
+            stream = iter(split_blocks(out, n_workers=max(1, n_workers_hint),
+                                       total_hint_bytes=max(1, len(out)) * 256))
+        else:
+            def run(seg=seg, upstream=stream, offset=offset):
+                for blk, stats in engine.map_block_chain(seg.ops, upstream):
+                    # run_chain emits one entry per op in chain order
+                    for k, st in enumerate(stats):
+                        record(offset + k, st)
+                    yield blk
+            stream = run()
+        offset += len(seg.ops)
+
+    out_blocks: List[SampleBlock] = []
+    n_out = 0
+    for blk in stream:
+        n_out += len(blk)
+        if sink is not None:
+            sink.write_block(blk)
+        if collect:
+            out_blocks.append(blk)
+    entries = []
+    for idx in sorted(agg):
+        e = agg[idx]
+        dt = e["seconds"]
+        entries.append({**e, "speed": e["in"] / dt if dt > 0 else float("inf")})
+    return out_blocks, entries, n_out
 
 
 class DJDataset:
@@ -33,17 +138,20 @@ class DJDataset:
     # construction / export
     # ------------------------------------------------------------------
     @classmethod
-    def from_samples(cls, samples: Iterable[Sample], engine=None, n_blocks_hint: int = 1):
+    def from_samples(cls, samples: Iterable[Sample], engine=None, n_blocks_hint: int = 1,
+                     block_bytes: Optional[int] = None):
         samples = list(samples)
         n_workers = getattr(engine, "n_workers", n_blocks_hint) or 1
         total = max(1, len(samples))
+        kw = {"block_bytes": block_bytes} if block_bytes else {}
         blocks = split_blocks(samples, n_workers=max(n_workers, n_blocks_hint),
-                              total_hint_bytes=total * 256)
+                              total_hint_bytes=total * 256, **kw)
         return cls(blocks, engine)
 
     @classmethod
     def load(cls, src: Union[str, Iterable[Sample]], engine=None,
-             validator=None, limit: Optional[int] = None):
+             validator=None, limit: Optional[int] = None,
+             block_bytes: Optional[int] = None):
         """DatasetBuilder entry: path (jsonl/.zst) or iterable of samples."""
         if isinstance(src, str):
             samples = list(read_jsonl(src, limit=limit))
@@ -51,7 +159,7 @@ class DJDataset:
             samples = list(src)
         if validator is not None:
             validator.validate(samples)
-        return cls.from_samples(samples, engine)
+        return cls.from_samples(samples, engine, block_bytes=block_bytes)
 
     def export(self, path: str) -> int:
         return write_jsonl(path, self.samples())
@@ -84,33 +192,47 @@ class DJDataset:
             ds = ds._process_one(op, batch_size, drop_empty, monitor)
         return ds
 
+    def process_streaming(
+        self, ops: Union[Operator, Sequence[Operator]],
+        monitor: Optional[list] = None, prefetch: int = 0,
+    ) -> "DJDataset":
+        """Streaming block-pipelined processing (paper §E.3): the op plan is
+        partitioned into pipelineable segments separated by barrier ops, and
+        each block traverses a whole segment in one engine dispatch instead
+        of one dataset-wide barrier per op. Results match ``process()``.
+
+        ``prefetch`` defaults to 0 here: the blocks are already in memory,
+        so a prefetch thread buys no decode overlap (the executor's lazy
+        file-backed source is where it pays off)."""
+        from repro.core.fusion import plan_segments
+
+        if isinstance(ops, Operator):
+            ops = [ops]
+        segments = plan_segments(list(ops))
+        src: Iterable[SampleBlock] = self.blocks
+        prefetcher = None
+        if prefetch:
+            src = prefetcher = BlockPrefetcher(src, depth=prefetch)
+        try:
+            blocks, entries, _ = stream_segments(
+                src, segments, self.engine, collect=True,
+                n_workers_hint=max(1, len(self.blocks)),
+            )
+        finally:
+            if prefetcher is not None:
+                prefetcher.close()
+        if monitor is not None:
+            monitor.extend(entries)
+        return DJDataset(blocks or [SampleBlock([])], self.engine,
+                         self.lineage + entries)
+
     def _process_one(self, op: Operator, batch_size, drop_empty, monitor) -> "DJDataset":
         t0 = time.time()
         n_before = len(self)
         bs = batch_size or op.default_batch_size
 
-        if isinstance(op, (Deduplicator, Selector, Grouper)):
-            op.setup()
-            samples = self.samples()
-            if isinstance(op, Deduplicator):
-                out = op.dedup(samples)
-            elif isinstance(op, Selector):
-                out = op.select(samples)
-            else:  # Grouper
-                out = [{GROUP_KEY: g, "meta": {}, "stats": {}} for g in op.group(samples)]
-            new_blocks = split_blocks(out, n_workers=max(1, len(self.blocks)))
-        elif isinstance(op, Aggregator):
-            op.setup()
-            out = []
-            for s in self.samples():
-                if GROUP_KEY in s:
-                    out.append(op.run_batch_safe(s[GROUP_KEY])[0]
-                               if s[GROUP_KEY] else S.empty_like({"text": ""}))
-                else:
-                    out.append(s)
-            # non-grouped input: aggregate everything into one sample
-            if out and not any(GROUP_KEY in s for s in self.samples()):
-                out = op.run_batch_safe(self.samples())
+        if isinstance(op, BARRIER_TYPES):
+            out = apply_dataset_op(op, self.samples())
             new_blocks = split_blocks(out, n_workers=max(1, len(self.blocks)))
         else:
             new_blocks, _ = self.engine.map_batches(op, self.blocks, bs)

@@ -13,15 +13,17 @@ the Facade-pattern property the paper emphasises.
 """
 from __future__ import annotations
 
+import collections
 import concurrent.futures as cf
 import os
 import queue
 import threading
 import time
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, Iterable, Iterator, List, Optional, Tuple
 
 import numpy as np
 
+from repro.core import schema as S
 from repro.core.ops_base import Operator, OpError
 from repro.core.storage import SampleBlock, split_blocks
 
@@ -35,6 +37,38 @@ class EngineStats(dict):
 def _iter_batches(samples: List[Sample], batch_size: int):
     for i in range(0, len(samples), batch_size):
         yield i, samples[i : i + batch_size]
+
+
+def run_chain(
+    ops: List[Operator], samples: List[Sample],
+    batch_size: Optional[int] = None, drop_empty: bool = True,
+) -> Tuple[List[Sample], List[dict]]:
+    """Drive one block's samples through a whole op chain in a single pass.
+
+    This is the streaming executor's unit of work: one dispatch applies every
+    op of a pipelineable segment to the block, instead of one dataset-wide
+    barrier per op. Returns (out_samples, per-op stats) where each stats entry
+    is {"op", "in", "out", "seconds", "errors"} for THIS block only — the
+    caller aggregates across blocks so per-op lineage keeps working.
+    """
+    stats: List[dict] = []
+    for op in ops:
+        t0 = time.perf_counter()
+        n_in = len(samples)
+        err0 = len(op.errors)
+        bs = batch_size or op.default_batch_size
+        out: List[Sample] = []
+        for i in range(0, len(samples), bs):
+            out.extend(op.run_batch_safe(samples[i : i + bs], i))
+        if drop_empty:
+            out = [s for s in out if not S.is_empty(s)]
+        samples = out
+        stats.append({
+            "op": op.name, "in": n_in, "out": len(samples),
+            "seconds": time.perf_counter() - t0,
+            "errors": len(op.errors) - err0,
+        })
+    return samples, stats
 
 
 class LocalEngine:
@@ -51,25 +85,101 @@ class LocalEngine:
         out_blocks: List[SampleBlock] = []
         n_in = 0
         threads = self.n_threads if op.io_intensive else 1
-        for blk in blocks:
-            results: List[List[Sample]] = []
-            if threads > 1:
-                # hierarchical parallelism: multithreading for I/O-bound OPs
-                # overlaps I/O latency with compute (paper §F.2, Fig. 10b)
-                with cf.ThreadPoolExecutor(threads) as pool:
+        # hierarchical parallelism: multithreading for I/O-bound OPs overlaps
+        # I/O latency with compute (paper §F.2, Fig. 10b); one pool serves
+        # every block of the call
+        pool = cf.ThreadPoolExecutor(threads) if threads > 1 else None
+        try:
+            for blk in blocks:
+                results: List[List[Sample]] = []
+                if pool is not None:
                     futs = [
                         pool.submit(op.run_batch_safe, b, i)
                         for i, b in _iter_batches(blk.samples, batch_size)
                     ]
                     results = [f.result() for f in futs]
-            else:
-                for i, b in _iter_batches(blk.samples, batch_size):
-                    results.append(op.run_batch_safe(b, i))
-            merged: List[Sample] = [s for r in results for s in r]
-            n_in += len(blk)
-            out_blocks.append(SampleBlock(merged))
+                else:
+                    for i, b in _iter_batches(blk.samples, batch_size):
+                        results.append(op.run_batch_safe(b, i))
+                merged: List[Sample] = [s for r in results for s in r]
+                n_in += len(blk)
+                out_blocks.append(SampleBlock(merged))
+        finally:
+            if pool is not None:
+                pool.shutdown()
         dt = time.time() - t0
         return out_blocks, EngineStats(seconds=dt, samples=n_in, engine=self.name)
+
+    def map_block_chain(
+        self, ops: List[Operator], blocks: Iterable[SampleBlock],
+        batch_size: Optional[int] = None,
+    ) -> Iterator[Tuple[SampleBlock, List[dict]]]:
+        """Streaming: drive each block through the whole op chain, yielding
+        (out_block, per-op block stats) as soon as the block completes.
+
+        With ``n_threads > 1`` and an I/O-intensive op in the chain, blocks
+        run through the chain concurrently in a bounded thread window
+        (hierarchical parallelism, paper §F.2) — results stay in input order.
+        Each thread gets its own op clones so error bookkeeping stays
+        race-free; non-reconstructible ops fall back to the sequential path.
+        """
+        for op in ops:
+            op.setup()
+        threads = self.n_threads if any(op.io_intensive for op in ops) else 1
+        cfgs = None
+        if threads > 1:
+            try:
+                cfgs = [op.config() for op in ops]
+                from repro.core.registry import create_op
+
+                for c in cfgs:
+                    create_op(c)  # reconstructibility probe
+            except Exception:
+                cfgs = None
+        if threads <= 1 or cfgs is None:
+            for blk in blocks:
+                out, stats = run_chain(ops, blk.samples, batch_size)
+                # nbytes left lazy (0): output blocks are consumed immediately
+                # by the next segment or sink, never re-split by size
+                yield SampleBlock(out, nbytes=0), stats
+            return
+
+        from repro.core.registry import create_op
+
+        tls = threading.local()  # one clone chain per worker thread, not per block
+
+        def work(samples):
+            local_ops = getattr(tls, "ops", None)
+            if local_ops is None:
+                local_ops = [create_op(c) for c in cfgs]
+                for o in local_ops:
+                    o.setup()
+                tls.ops = local_ops
+            out, stats = run_chain(local_ops, samples, batch_size)
+            errs = [(k, e) for k, o in enumerate(local_ops) for e in o.errors]
+            for o in local_ops:
+                o.errors = []  # reused clones must not re-report past blocks
+            return out, stats, errs
+
+        blocks_it = iter(blocks)
+        with cf.ThreadPoolExecutor(threads) as pool:
+            inflight: "collections.deque" = collections.deque()
+
+            def submit_next() -> bool:
+                blk = next(blocks_it, None)
+                if blk is None:
+                    return False
+                inflight.append(pool.submit(work, blk.samples))
+                return True
+
+            while len(inflight) < 2 * threads and submit_next():
+                pass
+            while inflight:
+                out, stats, errs = inflight.popleft().result()
+                for k, e in errs:  # merged on the main thread — no races
+                    ops[k].errors.append(e)
+                submit_next()
+                yield SampleBlock(out, nbytes=0), stats
 
 
 def _worker_apply(op_config: Dict[str, Any], samples: List[Sample], batch_size: int):
@@ -82,6 +192,24 @@ def _worker_apply(op_config: Dict[str, Any], samples: List[Sample], batch_size: 
     for i in range(0, len(samples), batch_size):
         out.extend(op.run_batch_safe(samples[i : i + batch_size], i))
     return out, [e.__dict__ for e in op.errors]
+
+
+def _worker_apply_chain(
+    op_configs: List[Dict[str, Any]], samples: List[Sample],
+    batch_size: Optional[int] = None,
+):
+    """Runs in a worker process: rebuild the whole segment chain from configs
+    and drive the block through it in one dispatch."""
+    from repro.core.registry import create_op
+
+    ops = [create_op(c) for c in op_configs]
+    for op in ops:
+        op.setup()
+    out, stats = run_chain(ops, samples, batch_size)
+    # errors carry the op's index in the chain — attribution by name would
+    # merge two instances of the same OP class
+    errors = [(k, e.__dict__) for k, op in enumerate(ops) for e in op.errors]
+    return out, stats, errors
 
 
 class ParallelEngine:
@@ -129,8 +257,17 @@ class ParallelEngine:
                             results[idx] = out
                             errors.extend(errs)
                             times.append(time.time() - start[idx])
-                        except Exception:
+                        except Exception as e:
+                            # worker died: pass the input block through so the
+                            # run completes, but surface the failure — a
+                            # silent pass-through resurrects rows a Filter
+                            # should have dropped
                             results[idx] = [s for s in blocks[idx].samples]
+                            errors.append({
+                                "op": op.name, "index": idx,
+                                "error": f"worker failed on block {idx}: "
+                                         f"{type(e).__name__}: {e}",
+                            })
                 if all(i in results for i in range(len(blocks))):
                     break
                 # straggler mitigation
@@ -156,6 +293,69 @@ class ParallelEngine:
             engine=self.name,
             redispatches=self.redispatches,
         )
+
+    def map_block_chain(
+        self, ops: List[Operator], blocks: Iterable[SampleBlock],
+        batch_size: Optional[int] = None,
+    ) -> Iterator[Tuple[SampleBlock, List[dict]]]:
+        """Streaming: one worker dispatch drives a block through the whole
+        segment chain. A bounded in-flight window (2x workers) keeps every
+        worker busy without materializing the block stream; results are
+        yielded in input order so outputs are deterministic."""
+        try:
+            cfgs = [op.config() for op in ops]
+            from repro.core.registry import create_op
+
+            for c in cfgs:
+                create_op(c)  # picklability / reconstructibility probe
+        except Exception:
+            yield from LocalEngine().map_block_chain(ops, blocks, batch_size)
+            return
+
+        window = max(2, 2 * self.n_workers)
+        blocks_it = iter(blocks)
+        with cf.ProcessPoolExecutor(self.n_workers) as pool:
+            inflight: "collections.deque" = collections.deque()
+
+            def submit_next() -> bool:
+                blk = next(blocks_it, None)
+                if blk is None:
+                    return False
+                try:
+                    fut = pool.submit(_worker_apply_chain, cfgs, blk.samples, batch_size)
+                except Exception:
+                    # pool is broken (worker OOM-killed/segfaulted): keep the
+                    # run alive by finishing this block in-process
+                    fut = cf.Future()
+                    try:
+                        fut.set_result(_worker_apply_chain(cfgs, blk.samples, batch_size))
+                    except Exception as e:  # noqa: BLE001 — surfaced below
+                        fut.set_exception(e)
+                inflight.append((fut, blk))
+                return True
+
+            while len(inflight) < window and submit_next():
+                pass
+            while inflight:
+                fut, blk = inflight.popleft()
+                try:
+                    out, stats, errs = fut.result()
+                    for k, e in errs:
+                        ops[k].errors.append(OpError(**e))
+                except Exception as e:
+                    out = list(blk.samples)  # pass through, but recorded
+                    # synthesize pass-through stats so per-op lineage still
+                    # accounts for this block's samples
+                    stats = [{"op": o.name, "in": len(blk.samples),
+                              "out": len(blk.samples), "seconds": 0.0,
+                              "errors": 1 if k == 0 else 0}
+                             for k, o in enumerate(ops)]
+                    ops[0].errors.append(OpError(
+                        ops[0].name, -1,
+                        f"worker failed on chain block: {type(e).__name__}: {e}",
+                    ))
+                submit_next()
+                yield SampleBlock(out, nbytes=0), stats
 
 
 class ShardedEngine:
@@ -191,6 +391,38 @@ class ShardedEngine:
             out_blocks.append(SampleBlock(kept))
             n += len(blk)
         return out_blocks, EngineStats(seconds=time.time() - t0, samples=n, engine=self.name)
+
+    def map_block_chain(
+        self, ops: List[Operator], blocks: Iterable[SampleBlock],
+        batch_size: Optional[int] = None,
+    ) -> Iterator[Tuple[SampleBlock, List[dict]]]:
+        """Streaming: per block, vectorized OPs run as array programs and the
+        rest fall back to the host chain — still one pass per block."""
+        for op in ops:
+            op.setup()
+        for blk in blocks:
+            samples = blk.samples
+            stats: List[dict] = []
+            for op in ops:
+                fn = getattr(op, "compute_stats_arrays", None)
+                if fn is not None and hasattr(op, "keep") and samples:
+                    t0 = time.perf_counter()
+                    n_in = len(samples)
+                    stat_name, values = fn(samples)
+                    kept = []
+                    for s, v in zip(samples, np.asarray(values)):
+                        s.setdefault("stats", {})[stat_name] = float(v)
+                        if op.keep(s):
+                            kept.append(s)
+                    samples = kept
+                    stats.append({
+                        "op": op.name, "in": n_in, "out": len(samples),
+                        "seconds": time.perf_counter() - t0, "errors": 0,
+                    })
+                else:
+                    samples, sub = run_chain([op], samples, batch_size)
+                    stats.extend(sub)
+            yield SampleBlock(samples, nbytes=0), stats
 
 
 def make_engine(kind: str = "local", **kw):

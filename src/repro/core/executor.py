@@ -2,22 +2,43 @@
 
 Executor: config -> load -> validate -> probe -> fuse/reorder ->
 process (fault-tolerant, checkpointed, monitored) -> insight -> export.
+
+Two execution paths through the runtime layer:
+
+  * barriered — one dataset-wide pass per OP with full materialization
+    between OPs. Required for per-OP insight mining and per-OP checkpoints.
+  * streaming — the OP plan is partitioned into pipelineable segments
+    (chains of batch-level Mappers/Filters) separated by barrier OPs
+    (Deduplicator / Selector / Grouper / Aggregator); each block traverses a
+    whole segment in ONE worker dispatch, fed by a bounded prefetch queue
+    from the streaming JSONL reader and exported block-by-block, so the full
+    dataset is only materialized at genuine barriers (paper §E.3, Fig. 4f).
+
+``run()`` selects the streaming path automatically when the recipe has no
+barrier-requiring checkpoint/insight constraints; ``run_streaming()`` forces
+it (checkpointing then happens at segment boundaries instead of per-op).
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, Iterable, Iterator, List, Optional
 
 from repro.core.adapter import Adapter
 from repro.core.checkpoint import CheckpointManager, recipe_prefix_sigs
-from repro.core.dataset import DJDataset
+from repro.core.dataset import DJDataset, stream_segments
 from repro.core.engine import make_engine
-from repro.core.fusion import optimize
+from repro.core.fusion import optimize, plan_segments
 from repro.core.insight import InsightMiner
 from repro.core.ops_base import Operator
 from repro.core.recipes import Recipe
 from repro.core.registry import create_op
+from repro.core.storage import (
+    BlockPrefetcher, BlockWriter, SampleBlock, iter_sample_blocks,
+    read_jsonl, split_blocks,
+)
+
+PROBE_LIMIT = 1000
 
 
 @dataclasses.dataclass
@@ -31,6 +52,13 @@ class RunReport:
     resumed_at: int = 0
     insight: str = ""
     errors: int = 0
+    streaming: bool = False
+
+
+def _count_blocks(blocks: Iterable[SampleBlock], counter: Dict[str, int]) -> Iterator[SampleBlock]:
+    for b in blocks:
+        counter["n"] += len(b)
+        yield b
 
 
 class Executor:
@@ -41,14 +69,158 @@ class Executor:
     def _build_ops(self) -> List[Operator]:
         return [create_op(cfg) for cfg in self.recipe.process]
 
+    def _make_engine(self):
+        r = self.recipe
+        return make_engine(r.engine, **({"n_workers": r.np} if r.engine == "parallel" else {}))
+
+    def streaming_eligible(self) -> bool:
+        """Streaming drops the per-op dataset-wide barrier, so anything that
+        needs the full dataset after EVERY op keeps the barriered path."""
+        r = self.recipe
+        return not r.insight and not r.checkpoint_dir
+
     def run(self, dataset: Optional[DJDataset] = None) -> tuple[DJDataset, RunReport]:
+        if self.streaming_eligible():
+            return self.run_streaming(dataset)
+        return self.run_barriered(dataset)
+
+    # ------------------------------------------------------------------
+    # streaming block-pipelined path
+    # ------------------------------------------------------------------
+    def _optimize_ops(self, ops: List[Operator], probe_samples: List[dict]) -> List[Operator]:
+        r = self.recipe
+        if (r.use_fusion or r.use_reordering) and probe_samples:
+            self.adapter.probe_small_batch(probe_samples, ops)
+            ops = optimize(ops, self.adapter.probes,
+                           do_fuse=r.use_fusion, do_reorder=r.use_reordering)
+        return ops
+
+    def run_streaming(
+        self, dataset: Optional[DJDataset] = None,
+        materialize: bool = True, prefetch: int = 4,
+    ) -> tuple[DJDataset, RunReport]:
+        """Streaming block-pipelined execution. With ``materialize=False``
+        (and an ``export_path``) the output dataset is streamed to disk and
+        the returned DJDataset is empty. A ``checkpoint_dir`` still forces
+        per-segment materialization (stages are persisted whole), so peak
+        memory is then one full dataset even with ``materialize=False``."""
         r = self.recipe
         t0 = time.time()
-        engine = make_engine(r.engine, **({"n_workers": r.np} if r.engine == "parallel" else {}))
+        engine = self._make_engine()
+        if dataset is None and not r.dataset_path:
+            raise ValueError("recipe has no dataset_path and no dataset given")
+
+        ops = self._build_ops()
+        # NOTE: with a file source the probe sees the first PROBE_LIMIT rows
+        # (streaming can't random-sample without a full decode); on corpora
+        # sorted by source/length the optimizer plan may differ from the
+        # barriered path's random-subset probe
+        if dataset is not None:
+            probe = dataset.samples()[:PROBE_LIMIT]
+        else:
+            probe = list(read_jsonl(r.dataset_path, limit=PROBE_LIMIT))
+        ops = self._optimize_ops(ops, probe)
+        plan = [op.name for op in ops]
+        segments = plan_segments(ops)
+        n_workers = getattr(engine, "n_workers", 1) or 1
+
+        # segment-boundary checkpointing (only when forced via run_streaming
+        # with a checkpoint_dir — run() routes checkpointed recipes here only
+        # if the caller does so explicitly)
+        op_cfgs = [op.config() for op in ops]
+        sigs = recipe_prefix_sigs(op_cfgs)
+        bounds: List[int] = []
+        k = 0
+        for seg in segments:
+            k += len(seg.ops)
+            bounds.append(k)
+        ckpt = CheckpointManager(r.checkpoint_dir) if r.checkpoint_dir else None
+        resumed_at, resumed_samples = 0, None
+        if ckpt:
+            resumed_at, resumed_samples = ckpt.resume_point(op_cfgs, allowed=set(bounds))
+
+        counter = {"n": 0}
+        if resumed_samples is not None:
+            # original input size was persisted by the first (pre-crash) run;
+            # fall back to the resumed-stage count if it predates that
+            counter["n"] = ckpt.get_meta("n_in", len(resumed_samples))
+            src: Iterable[SampleBlock] = iter(split_blocks(
+                resumed_samples, n_workers=n_workers,
+                total_hint_bytes=max(1, len(resumed_samples)) * 256))
+        elif dataset is not None:
+            counter["n"] = len(dataset)
+            src = iter(dataset.blocks)
+        else:
+            bb = {"block_bytes": r.block_bytes} if r.block_bytes else {}
+            src = _count_blocks(
+                iter_sample_blocks(r.dataset_path, n_workers=n_workers, **bb), counter)
+        # sink first: a sink constructor failure must not strand a prefetch
+        # thread that is already decoding blocks
+        sink = BlockWriter(r.export_path) if r.export_path else None
+        prefetcher: Optional[BlockPrefetcher] = None
+        # prefetch only pays off over the lazy file-backed source — in-memory
+        # blocks have no decode latency to overlap
+        if prefetch and dataset is None and resumed_samples is None:
+            src = prefetcher = BlockPrefetcher(src, depth=prefetch)
+
+        remaining = [(seg, end) for seg, end in zip(segments, bounds) if end > resumed_at]
+        entries: List[dict] = []
+        ok = False
+        try:
+            if ckpt and remaining:
+                # checkpointing forces materialization at each segment
+                # boundary (the stage must be persisted whole)
+                blocks: List[SampleBlock] = []
+                n_out = 0
+                n_in_saved = resumed_samples is not None
+                for seg, end in remaining:
+                    is_last = end == bounds[-1]
+                    blocks, ent, n_out = stream_segments(
+                        src, [seg], engine, sink=sink if is_last else None,
+                        collect=True, n_workers_hint=n_workers)
+                    entries.extend(ent)
+                    ckpt.save_stage(sigs[end - 1], end,
+                                    [s for b in blocks for s in b.samples])
+                    ckpt.gc()
+                    if not n_in_saved:
+                        # source fully drained by the first segment — persist
+                        # the true input size for post-crash resumes
+                        ckpt.set_meta("n_in", counter["n"])
+                        n_in_saved = True
+                    src = iter(blocks)
+                if not materialize:
+                    blocks = []
+            else:
+                blocks, entries, n_out = stream_segments(
+                    src, [seg for seg, _ in remaining], engine, sink=sink,
+                    collect=materialize, n_workers_hint=n_workers)
+            ok = True
+        finally:
+            if sink is not None:
+                sink.close(success=ok)  # failure keeps any previous export
+            if prefetcher is not None:
+                prefetcher.close()  # releases the fill thread on error paths
+
+        errors = sum(len(op.errors) for op in ops)
+        report = RunReport(
+            recipe=r.name, n_in=counter["n"], n_out=n_out,
+            seconds=time.time() - t0, per_op=entries, plan=plan,
+            resumed_at=resumed_at, errors=errors, streaming=True,
+        )
+        return DJDataset(blocks or [SampleBlock([])], engine), report
+
+    # ------------------------------------------------------------------
+    # barriered (per-op materializing) path
+    # ------------------------------------------------------------------
+    def run_barriered(self, dataset: Optional[DJDataset] = None) -> tuple[DJDataset, RunReport]:
+        r = self.recipe
+        t0 = time.time()
+        engine = self._make_engine()
         if dataset is None:
             if not r.dataset_path:
                 raise ValueError("recipe has no dataset_path and no dataset given")
-            dataset = DJDataset.load(r.dataset_path, engine=engine)
+            dataset = DJDataset.load(r.dataset_path, engine=engine,
+                                     block_bytes=r.block_bytes)
         else:
             dataset = DJDataset(dataset.blocks, engine, dataset.lineage)
         n_in = len(dataset)

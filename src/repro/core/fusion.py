@@ -9,10 +9,49 @@ and the fused OP's speed is the harmonic composition
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.adapter import OpProbe
-from repro.core.ops_base import Filter, FusedOP, Mapper, Operator
+from repro.core.ops_base import (
+    BARRIER_TYPES, Filter, FusedOP, Mapper, Operator,
+)
+
+
+def is_barrier_op(op: Operator) -> bool:
+    return isinstance(op, BARRIER_TYPES)
+
+
+@dataclasses.dataclass
+class Segment:
+    """A unit of the streaming plan: either a chain of batch-level OPs
+    (Mappers / Filters / FusedOPs) that one block can traverse end-to-end in
+    a single worker dispatch, or a single barrier OP."""
+
+    ops: List[Operator]
+    barrier: bool = False
+
+    def __len__(self):
+        return len(self.ops)
+
+
+def plan_segments(ops: Sequence[Operator]) -> List[Segment]:
+    """Partition an (already optimized) op plan into pipelineable segments
+    separated by barrier ops. Consecutive non-barrier ops form one segment;
+    every barrier op is its own segment."""
+    segs: List[Segment] = []
+    cur: List[Operator] = []
+    for op in ops:
+        if is_barrier_op(op):
+            if cur:
+                segs.append(Segment(cur))
+                cur = []
+            segs.append(Segment([op], barrier=True))
+        else:
+            cur.append(op)
+    if cur:
+        segs.append(Segment(cur))
+    return segs
 
 
 def harmonic_speed(speeds: Sequence[float]) -> float:

@@ -223,6 +223,11 @@ class Aggregator(Operator):
         return [self.aggregate(batch)]
 
 
+# OPs that genuinely need the whole dataset before producing any output —
+# pipeline barriers for the streaming executor (paper §E.3)
+BARRIER_TYPES = (Deduplicator, Selector, Grouper, Aggregator)
+
+
 class FusedOP(Operator):
     """Explicit batch-wise fusion of multiple OPs (paper Listing 4) plus the
     auto-fused Filter group produced by the optimizer (fusion.py)."""

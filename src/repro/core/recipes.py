@@ -10,7 +10,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Dict, List, Optional, Union
 
-import orjson
+from repro.core.storage import json_loads
 
 
 @dataclasses.dataclass
@@ -25,6 +25,7 @@ class Recipe:
     use_reordering: bool = True
     checkpoint_dir: Optional[str] = None
     insight: bool = False
+    block_bytes: Optional[int] = None  # None -> storage.DEFAULT_BLOCK_BYTES
 
     @classmethod
     def from_dict(cls, d: Dict[str, Any]) -> "Recipe":
@@ -36,7 +37,7 @@ class Recipe:
         with open(path, "rb") as f:
             raw = f.read()
         if path.endswith(".json"):
-            return cls.from_dict(orjson.loads(raw))
+            return cls.from_dict(json_loads(raw))
         return cls.from_dict(parse_simple_yaml(raw.decode("utf-8")))
 
     def to_dict(self) -> Dict[str, Any]:

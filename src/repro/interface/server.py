@@ -15,12 +15,12 @@ from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from typing import Optional
 from urllib.parse import parse_qs, urlparse
 
-import orjson
+from repro.core.storage import json_dumps, json_loads
 
 
 class _Handler(BaseHTTPRequestHandler):
     def _send(self, code: int, payload):
-        body = orjson.dumps(payload)
+        body = json_dumps(payload)
         self.send_response(code)
         self.send_header("Content-Type", "application/json")
         self.send_header("Content-Length", str(len(body)))
@@ -53,7 +53,7 @@ class _Handler(BaseHTTPRequestHandler):
         url = urlparse(self.path)
         qs = parse_qs(url.query)
         n = int(self.headers.get("Content-Length", 0))
-        params = orjson.loads(self.rfile.read(n) or b"{}")
+        params = json_loads(self.rfile.read(n) or b"{}")
         parts = [p for p in url.path.split("/") if p]
         try:
             dataset_path = qs.get("dataset_path", [None])[0]

@@ -16,7 +16,7 @@ import numpy as np  # noqa: E402
 
 from repro.configs import SHAPES, get_config, get_shape, list_archs, shape_applicable  # noqa: E402
 from repro.launch import sharding as sh  # noqa: E402
-from repro.launch.hlo_analysis import analyze_hlo  # noqa: E402
+from repro.launch.hlo_analysis import analyze_hlo, normalize_cost_analysis  # noqa: E402
 from repro.launch.mesh import make_production_mesh  # noqa: E402
 from repro.launch.roofline import model_flops_for, roofline  # noqa: E402
 from repro.models import module as mod  # noqa: E402
@@ -210,9 +210,9 @@ def run_cell(
         mem_d["argument_bytes"] + mem_d["output_bytes"] + mem_d["temp_bytes"]
         - mem_d["alias_bytes"]
     )
-    cost = compiled.cost_analysis() or {}
-    cost_d = {k: float(v) for k, v in cost.items() if isinstance(v, (int, float))
-              and k in ("flops", "bytes accessed", "transcendentals")}
+    cost = normalize_cost_analysis(compiled.cost_analysis())
+    cost_d = {k: float(v) for k, v in cost.items()
+              if k in ("flops", "bytes accessed", "transcendentals")}
 
     stats = analyze_hlo(compiled.as_text())
     rep = roofline(

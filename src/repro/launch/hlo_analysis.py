@@ -41,6 +41,31 @@ COLLECTIVES = (
 _SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
 
 
+def normalize_cost_analysis(ca) -> Dict[str, float]:
+    """Normalize ``Compiled.cost_analysis()`` across JAX versions.
+
+    Older JAX returns a single dict; newer JAX returns a list with one dict
+    per executable (summed here). Always returns a plain ``{key: float}``.
+    """
+    if ca is None:
+        return {}
+    if isinstance(ca, dict):
+        items = [ca]
+    elif isinstance(ca, (list, tuple)):
+        items = list(ca)
+    else:  # unknown container — best effort, never raise
+        try:
+            items = [dict(ca)]
+        except Exception:
+            return {}
+    out: Dict[str, float] = {}
+    for d in items:
+        for k, v in (d or {}).items():
+            if isinstance(v, (int, float)):
+                out[k] = out.get(k, 0.0) + float(v)
+    return out
+
+
 def type_bytes(type_str: str) -> int:
     """Bytes of an HLO type string (handles tuples)."""
     total = 0

@@ -1,0 +1,257 @@
+"""Streaming block-pipelined execution path: segment planning, streaming vs
+barriered equivalence, bounded prefetch, engine chain dispatch, and the
+executor's automatic path selection."""
+import os
+
+import pytest
+
+from repro.core.dataset import DJDataset, stream_segments
+from repro.core.engine import LocalEngine, ParallelEngine, run_chain
+from repro.core.executor import Executor
+from repro.core.fusion import Segment, is_barrier_op, plan_segments
+from repro.core.recipes import Recipe
+from repro.core.registry import create_op
+from repro.core.storage import (
+    BlockPrefetcher, BlockWriter, SampleBlock, iter_sample_blocks,
+    read_jsonl, write_jsonl,
+)
+from repro.data.synthetic import make_corpus
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return make_corpus(300, seed=13)
+
+
+MIXED = [
+    {"name": "whitespace_normalization_mapper"},
+    {"name": "text_length_filter", "min_val": 30},
+    {"name": "document_minhash_deduplicator", "jaccard_threshold": 0.6},
+    {"name": "alnum_ratio_filter", "min_val": 0.6},
+]
+
+
+# ---------------------------------------------------------------------------
+# segment planning
+# ---------------------------------------------------------------------------
+
+
+def test_plan_segments_around_barriers():
+    ops = [create_op(c) for c in MIXED]
+    segs = plan_segments(ops)
+    assert [s.barrier for s in segs] == [False, True, False]
+    assert [len(s) for s in segs] == [2, 1, 1]
+    assert is_barrier_op(segs[1].ops[0])
+    # all-pipelineable plan collapses to one segment
+    segs2 = plan_segments([ops[0], ops[1], ops[3]])
+    assert len(segs2) == 1 and not segs2[0].barrier and len(segs2[0]) == 3
+    # leading/trailing barriers become their own segments
+    segs3 = plan_segments([ops[2], ops[0], ops[2]])
+    assert [s.barrier for s in segs3] == [True, False, True]
+    assert plan_segments([]) == []
+
+
+# ---------------------------------------------------------------------------
+# streaming == barriered on a mixed recipe (mapper -> filter -> dedup -> filter)
+# ---------------------------------------------------------------------------
+
+
+def test_streaming_matches_barriered(tmp_path, corpus):
+    src = str(tmp_path / "in.jsonl")
+    write_jsonl(src, corpus)
+    r_s = Recipe(name="s", dataset_path=src, export_path=str(tmp_path / "s.jsonl"),
+                 process=MIXED, block_bytes=4096)
+    ds_s, rep_s = Executor(r_s).run()
+    assert rep_s.streaming, "run() must auto-select streaming"
+    r_b = Recipe(name="b", dataset_path=src, export_path=str(tmp_path / "b.jsonl"),
+                 process=MIXED, block_bytes=4096)
+    ds_b, rep_b = Executor(r_b).run_barriered()
+    assert rep_s.n_out == rep_b.n_out > 0
+    with open(tmp_path / "s.jsonl", "rb") as f_s, open(tmp_path / "b.jsonl", "rb") as f_b:
+        assert f_s.read() == f_b.read(), "exports must be byte-identical"
+    # per-op lineage survives aggregation across blocks
+    assert [e["op"] for e in rep_s.per_op] == rep_s.plan
+    assert rep_s.per_op[0]["in"] == rep_s.n_in
+    assert rep_s.per_op[-1]["out"] == rep_s.n_out
+
+
+def test_process_streaming_matches_process(corpus):
+    ds = DJDataset.from_samples(corpus, n_blocks_hint=6)
+    ops_a = [create_op(c) for c in MIXED]
+    ops_b = [create_op(c) for c in MIXED]
+    mon = []
+    out_s = ds.process_streaming(ops_a, monitor=mon)
+    out_b = DJDataset.from_samples(corpus, n_blocks_hint=6).process(ops_b)
+    assert [s["text"] for s in out_s] == [s["text"] for s in out_b]
+    assert len(mon) == len(MIXED)
+
+
+def test_parallel_chain_matches_local(corpus):
+    ops_cfg = [{"name": "whitespace_normalization_mapper"},
+               {"name": "words_num_filter", "min_val": 5}]
+    blocks = DJDataset.from_samples(corpus, n_blocks_hint=4).blocks
+    loc = list(LocalEngine().map_block_chain([create_op(c) for c in ops_cfg], blocks))
+    par = list(ParallelEngine(n_workers=2).map_block_chain(
+        [create_op(c) for c in ops_cfg], iter(blocks)))
+    assert [s["text"] for b, _ in loc for s in b.samples] == \
+           [s["text"] for b, _ in par for s in b.samples]
+    # per-block stats carry every op of the chain
+    assert all([st["op"] for st in stats] == [c["name"] for c in ops_cfg]
+               for _, stats in par)
+
+
+def test_run_chain_equivalent_to_sequential_ops(corpus):
+    ops = [create_op({"name": "lowercase_mapper"}),
+           create_op({"name": "text_length_filter", "min_val": 100})]
+    out, stats = run_chain(ops, [dict(s) for s in corpus[:50]])
+    ref = DJDataset.from_samples(corpus[:50]).process(
+        [create_op({"name": "lowercase_mapper"}),
+         create_op({"name": "text_length_filter", "min_val": 100})])
+    assert [s["text"] for s in out] == [s["text"] for s in ref]
+    assert stats[0]["in"] == 50 and stats[-1]["out"] == len(out)
+
+
+# ---------------------------------------------------------------------------
+# bounded prefetch
+# ---------------------------------------------------------------------------
+
+
+def test_prefetch_queue_bounded(corpus):
+    import time
+
+    blocks = [SampleBlock([dict(s) for s in corpus[i:i + 10]])
+              for i in range(0, len(corpus), 10)]
+    assert len(blocks) >= 8
+    pf = BlockPrefetcher(iter(blocks), depth=3)
+    seen = []
+    for blk in pf:
+        time.sleep(0.002)  # slow consumer: producer must hit the cap, not blow it
+        seen.append(len(blk))
+    assert sum(seen) == len(corpus)
+    assert 0 < pf.max_depth <= 3, f"queue depth {pf.max_depth} exceeded cap 3"
+
+
+def test_prefetch_close_releases_fill_thread():
+    def endless():
+        while True:
+            yield SampleBlock([{"text": "x"}])
+
+    pf = BlockPrefetcher(endless(), depth=2)
+    it = iter(pf)
+    next(it)
+    it.close()  # abandon mid-stream — must not leave the fill thread stuck
+    pf._t.join(timeout=2)
+    assert not pf._t.is_alive(), "fill thread leaked after consumer abandoned"
+
+
+def test_duplicate_op_instances_keep_separate_entries(corpus):
+    ops = [create_op({"name": "text_length_filter", "min_val": 10}),
+           create_op({"name": "text_length_filter", "max_val": 10_000_000})]
+    mon = []
+    DJDataset.from_samples(corpus[:50], n_blocks_hint=4).process_streaming(ops, monitor=mon)
+    assert len(mon) == 2, "same-named ops must not merge into one monitor entry"
+    assert all(e["op"] == "text_length_filter" for e in mon)
+
+
+def test_prefetch_propagates_source_errors():
+    def bad_source():
+        yield SampleBlock([{"text": "x"}])
+        raise RuntimeError("decode failed")
+
+    pf = BlockPrefetcher(bad_source(), depth=2)
+    with pytest.raises(RuntimeError, match="decode failed"):
+        list(pf)
+
+
+# ---------------------------------------------------------------------------
+# block source / sink
+# ---------------------------------------------------------------------------
+
+
+def test_iter_sample_blocks_streams_and_splits(tmp_path, corpus):
+    src = str(tmp_path / "in.jsonl")
+    write_jsonl(src, corpus)
+    blocks = list(iter_sample_blocks(src, block_bytes=8192))
+    assert len(blocks) >= 8
+    assert sum(len(b) for b in blocks) == len(corpus)
+    assert [s["meta"]["id"] for b in blocks for s in b.samples] == \
+           [s["meta"]["id"] for s in corpus]
+
+
+def test_block_writer_streams_to_disk(tmp_path, corpus):
+    out = str(tmp_path / "out.jsonl")
+    blocks = list(iter_sample_blocks(iter(corpus[:40]), block_bytes=4096))
+    with BlockWriter(out) as w:
+        for b in blocks:
+            w.write_block(b)
+    assert w.n == 40
+    assert [s["meta"]["id"] for s in read_jsonl(out)] == \
+           [s["meta"]["id"] for s in corpus[:40]]
+
+
+# ---------------------------------------------------------------------------
+# executor policy + segment-boundary checkpointing
+# ---------------------------------------------------------------------------
+
+
+def test_run_auto_selection(tmp_path, corpus):
+    src = str(tmp_path / "in.jsonl")
+    write_jsonl(src, corpus[:60])
+    base = dict(dataset_path=src, process=MIXED[:2])
+    assert Executor(Recipe(name="a", **base)).streaming_eligible()
+    assert not Executor(Recipe(name="b", insight=True, **base)).streaming_eligible()
+    assert not Executor(
+        Recipe(name="c", checkpoint_dir=str(tmp_path / "ck"), **base)).streaming_eligible()
+    _, rep = Executor(Recipe(name="d", insight=True, **base)).run()
+    assert not rep.streaming and rep.insight
+
+
+def test_streaming_checkpoint_at_segment_boundaries(tmp_path, corpus):
+    src = str(tmp_path / "in.jsonl")
+    write_jsonl(src, corpus[:100])
+    r = Recipe(name="c", dataset_path=src, process=MIXED,
+               checkpoint_dir=str(tmp_path / "ckpt"),
+               use_fusion=False, use_reordering=False)
+    _, rep1 = Executor(r).run_streaming()
+    assert rep1.resumed_at == 0 and rep1.streaming
+    # 3 segments -> stages at op counts {2, 3, 4}; resume lands on the last
+    _, rep2 = Executor(r).run_streaming()
+    assert rep2.resumed_at == len(MIXED)
+    assert rep2.n_out == rep1.n_out
+    assert rep2.n_in == rep1.n_in == 100, "resume must report the ORIGINAL n_in"
+
+
+def test_failed_run_preserves_previous_export(tmp_path, corpus):
+    src = str(tmp_path / "in.jsonl")
+    write_jsonl(src, corpus[:50])
+    out = str(tmp_path / "out.jsonl")
+    good = Recipe(name="g", dataset_path=src, export_path=out, process=MIXED[:2])
+    Executor(good).run()
+    with open(out, "rb") as f:
+        before = f.read()
+    # corrupt the input past the probe window -> decode fails mid-stream
+    with open(src, "ab") as f:
+        f.write(b"{not json\n")
+    with pytest.raises(Exception):
+        Executor(good).run()
+    with open(out, "rb") as f:
+        assert f.read() == before, "failed run must not clobber the old export"
+
+
+def test_empty_input_keeps_per_op_aligned_with_plan(tmp_path):
+    src = str(tmp_path / "empty.jsonl")
+    open(src, "w").close()
+    r = Recipe(name="e", dataset_path=src, process=MIXED)
+    _, rep = Executor(r).run()
+    assert rep.streaming and rep.n_in == rep.n_out == 0
+    assert [e["op"] for e in rep.per_op] == rep.plan
+
+
+def test_streaming_no_materialize_export(tmp_path, corpus):
+    src = str(tmp_path / "in.jsonl")
+    write_jsonl(src, corpus[:80])
+    out = str(tmp_path / "out.jsonl")
+    r = Recipe(name="m", dataset_path=src, export_path=out, process=MIXED[:2])
+    ds, rep = Executor(r).run_streaming(materialize=False)
+    assert len(ds) == 0, "materialize=False must not hold the dataset"
+    assert rep.n_out == sum(1 for _ in read_jsonl(out)) > 0
