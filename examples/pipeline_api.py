@@ -1,0 +1,78 @@
+"""Unified lazy Pipeline API demo: one fluent chain behind every front-end.
+
+    PYTHONPATH=src python examples/pipeline_api.py
+
+Builds a pipeline, explains its optimized plan without running, executes it
+through the adaptive runtime (fusion + streaming segments), streams blocks
+lazily, and drives the same run as an async job with live progress + cancel.
+"""
+import os
+import tempfile
+import time
+
+import repro.api as dj
+from repro.api.jobs import JobManager
+from repro.core.storage import write_jsonl
+from repro.data.synthetic import make_corpus
+
+
+def main():
+    with tempfile.TemporaryDirectory() as tmp:
+        src = os.path.join(tmp, "corpus.jsonl")
+        out = os.path.join(tmp, "clean.jsonl")
+        write_jsonl(src, make_corpus(2000, seed=0))
+
+        pipe = (dj.read_jsonl(src)
+                .map("whitespace_normalization_mapper")
+                .filter("text_length_filter", min_val=120)
+                .filter("alnum_ratio_filter", min_val=0.55)
+                .filter("words_num_filter", min_val=10)
+                .dedup(jaccard_threshold=0.7)
+                .write_jsonl(out))
+
+        # ------------------------------------------------------- explain
+        info = pipe.explain()
+        print("optimized plan:", " -> ".join(info["plan"]))
+        for i, seg in enumerate(info["segments"]):
+            kind = "barrier" if seg["barrier"] else "stream"
+            print(f"  segment {i} [{kind}]: {', '.join(seg['ops'])}")
+
+        # ------------------------------------------------------- execute
+        ds, report = pipe.execute()
+        print(f"\nexecute: {report.n_in} -> {report.n_out} samples "
+              f"in {report.seconds:.2f}s (streaming={report.streaming})")
+
+        # --------------------------------------------------- lazy stream
+        n = sum(len(b) for b in pipe.iter_blocks())
+        print(f"iter_blocks: streamed {n} samples without materializing")
+
+        # ----------------------------------------------------- async job
+        jm = JobManager(max_workers=1)
+        job = jm.submit(pipe)
+        print(f"\njob {job.id} submitted (state={job.state})")
+        while not jm.get(job.id).done():
+            st = jm.get(job.id).status()
+            started = st["progress"]["ops_started"]
+            total = st["progress"]["ops_total"]
+            print(f"  poll: state={st['state']} ops_started={started}/{total}")
+            time.sleep(0.2)
+        final = jm.get(job.id).status()
+        print(f"job finished: state={final['state']} "
+              f"n_out={final['report']['n_out']}")
+        jm.shutdown()
+
+        # ---------------------------------------------------- NL -> same API
+        from repro.interface.nl import build_pipeline
+
+        nl_pipe, turns = build_pipeline(
+            "drop short text under 150 and dedup at threshold 0.8", src)
+        print("\nNL agent emitted:", nl_pipe)
+        for t in turns:
+            print("  thought:", t.thought)
+        _, nl_report = nl_pipe.execute()
+        print(f"NL run: {nl_report.n_in} -> {nl_report.n_out} "
+              f"(plan {nl_report.plan})")
+
+
+if __name__ == "__main__":
+    main()

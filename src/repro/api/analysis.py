@@ -1,0 +1,112 @@
+"""Dataset analysis through the shared insight path (paper §5.2).
+
+``analyze()`` computes per-stat distributions with ``insight.snapshot`` —
+the same snapshot machinery the InsightMiner uses during recipe runs — by
+running Filter OPs in stats-only mode over *protected copies*, so the
+caller's samples are never mutated and nothing is filtered out. ``auto``
+discovers every applicable stat-producing Filter in the registry by probing
+one sample (the previously-ignored ``dj analyze --auto``).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Iterable, List, Optional, Union
+
+from repro.core.insight import snapshot
+from repro.core.registry import create_op, list_ops, op_info
+from repro.core.storage import read_jsonl
+
+DEFAULT_ANALYZE_OPS = [
+    "text_length_filter",
+    "words_num_filter",
+    "alnum_ratio_filter",
+    "quality_score_filter",
+]
+
+
+def _stat_copy(sample: Dict[str, Any]) -> Dict[str, Any]:
+    """Shallow copy with fresh stats/meta dicts — compute_stats writes into
+    sample['stats'], so sharing those dicts would mutate the caller's data."""
+    return {**sample,
+            "stats": dict(sample.get("stats") or {}),
+            "meta": dict(sample.get("meta") or {})}
+
+
+# ops named <modality>_* read this sample key; absent key -> the op would
+# only emit default/zero stats, polluting the report
+_MODALITY_KEYS = {"image": "image_meta", "video": "video_meta",
+                  "audio": "audio_meta"}
+
+
+def discover_stat_ops(probe: Dict[str, Any],
+                      include_model_ops: bool = False) -> List[str]:
+    """Registry sweep: every Filter whose default-constructed ``compute_stats``
+    succeeds on the probe sample and produces stats it did not already have.
+    Modality-specific filters are skipped when the sample lacks that modality;
+    model-backed filters are skipped by default (slow to set up for a quick
+    analysis pass)."""
+    found: List[str] = []
+    before = set(probe.get("stats") or {})
+    for name in list_ops():
+        info = op_info(name)
+        if info["type"] != "Filter":
+            continue
+        if info["uses_model"] and not include_model_ops:
+            continue
+        if any(p["required"] for p in info["params"]):
+            continue
+        gate = _MODALITY_KEYS.get(name.split("_", 1)[0])
+        if gate and not probe.get(gate):
+            continue
+        try:
+            op = create_op({"name": name})
+            op.setup()
+            s = op.compute_stats(_stat_copy(probe))
+            if set(s.get("stats") or {}) - before:  # NEW stats only
+                found.append(name)
+        except Exception:  # noqa: BLE001 — inapplicable to this modality
+            continue
+    return found
+
+
+def analyze(
+    source: Union[str, Iterable[Dict[str, Any]]],
+    ops: Optional[List[str]] = None,
+    auto: bool = False,
+    include_model_ops: bool = False,
+    limit: Optional[int] = None,
+) -> Dict[str, Any]:
+    """Stats-only analysis: no filtering, no mutation of the input.
+
+    ``source`` is a JSONL path, a DJDataset, or an iterable of samples.
+    Returns ``{"n", "numeric": {stat: StatSummary}, "tags", "ops"}``.
+    """
+    from repro.core.dataset import DJDataset
+
+    if isinstance(source, str):
+        samples: List[Dict[str, Any]] = list(read_jsonl(source, limit=limit))
+    elif isinstance(source, DJDataset):
+        samples = source.samples()
+    else:
+        samples = list(source)
+    if limit:
+        samples = samples[:limit]
+
+    work = [_stat_copy(s) for s in samples]
+    op_names = list(ops or DEFAULT_ANALYZE_OPS)
+    if auto and work:
+        op_names = sorted(set(op_names) | set(
+            discover_stat_ops(work[0], include_model_ops=include_model_ops)))
+
+    applied: List[str] = []
+    for name in op_names:
+        try:
+            op = create_op({"name": name})
+            op.setup()
+            work = op.compute_stats_batch(work)  # stats only — keeps every sample
+            applied.append(name)
+        except Exception:  # noqa: BLE001 — op inapplicable to this corpus
+            continue
+
+    snap = snapshot(work)
+    return {"n": snap["n"], "numeric": snap["numeric"],
+            "tags": snap["tags"], "ops": applied}

@@ -1,0 +1,196 @@
+"""Async job subsystem behind the REST layer (paper §4, Appendix C.2).
+
+``JobManager`` runs Pipelines on a bounded pool of daemon worker threads
+with a bounded in-memory job store: ``submit()`` returns immediately (a
+TB-scale run must not block a synchronous HTTP handler), status polling
+reads the live per-op monitor rows the streaming executor mutates in
+place, and ``cancel()`` flips an event the executor polls once per block.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+import uuid
+from collections import OrderedDict
+from typing import Any, Dict, List, Optional
+
+from repro.core.dataset import ExecutionCancelled
+
+
+class JobState:
+    QUEUED = "queued"
+    RUNNING = "running"
+    SUCCEEDED = "succeeded"
+    FAILED = "failed"
+    CANCELLED = "cancelled"
+
+    TERMINAL = (SUCCEEDED, FAILED, CANCELLED)
+
+
+class JobStoreFull(RuntimeError):
+    """The bounded job store has no evictable (finished) slot left."""
+
+
+def _json_num(v: float) -> float:
+    # monitor rows use inf for not-yet-run speeds; orjson rejects inf
+    return v if v == v and abs(v) != float("inf") else 0.0
+
+
+@dataclasses.dataclass
+class Job:
+    id: str
+    pipeline: Any  # repro.api.pipeline.Pipeline
+    state: str = JobState.QUEUED
+    monitor: List[dict] = dataclasses.field(default_factory=list)
+    error: Optional[str] = None
+    report: Any = None  # core.executor.RunReport on success
+    created_at: float = dataclasses.field(default_factory=time.time)
+    started_at: Optional[float] = None
+    finished_at: Optional[float] = None
+    cancel_event: threading.Event = dataclasses.field(default_factory=threading.Event)
+
+    def cancel(self) -> None:
+        self.cancel_event.set()
+
+    def done(self) -> bool:
+        return self.state in JobState.TERMINAL
+
+    def status(self, verbose: bool = True) -> Dict[str, Any]:
+        """JSON-safe snapshot. The monitor rows are mutated concurrently by
+        the worker thread; dict copies under the GIL give a consistent-enough
+        view for progress display."""
+        out: Dict[str, Any] = {
+            "job_id": self.id,
+            "state": self.state,
+            "created_at": self.created_at,
+            "started_at": self.started_at,
+            "finished_at": self.finished_at,
+            "error": self.error,
+        }
+        if verbose:
+            rows = [dict(r) for r in list(self.monitor)]
+            for r in rows:
+                r["speed"] = _json_num(r.get("speed", 0.0))
+            out["progress"] = {
+                "per_op": rows,
+                "ops_started": sum(1 for r in rows if r["in"] > 0),
+                "ops_total": len(rows),
+            }
+            if self.report is not None:
+                rep = self.report
+                out["report"] = {
+                    "recipe": rep.recipe, "n_in": rep.n_in, "n_out": rep.n_out,
+                    "seconds": rep.seconds, "plan": rep.plan,
+                    "errors": rep.errors, "streaming": rep.streaming,
+                }
+        return out
+
+
+class JobManager:
+    """Bounded thread-pool runner + bounded in-memory job store.
+
+    Workers are daemon threads fed from a queue, so an interpreter exit never
+    blocks on a stuck job; ``max_jobs`` bounds the store — submitting past it
+    evicts the oldest *finished* jobs, and fails with JobStoreFull when all
+    retained jobs are still live.
+    """
+
+    def __init__(self, max_workers: int = 2, max_jobs: int = 64):
+        self.max_workers = max(1, max_workers)
+        self.max_jobs = max(1, max_jobs)
+        self._jobs: "OrderedDict[str, Job]" = OrderedDict()
+        self._queue: "queue.Queue[Optional[str]]" = queue.Queue()
+        self._lock = threading.Lock()
+        self._workers: List[threading.Thread] = []
+        self._shutdown = False
+
+    # ------------------------------------------------------------------
+    def submit(self, pipeline, job_id: Optional[str] = None) -> Job:
+        """Enqueue a pipeline; returns the (queued) Job immediately."""
+        job = Job(id=job_id or uuid.uuid4().hex[:12], pipeline=pipeline)
+        with self._lock:
+            if self._shutdown:
+                raise RuntimeError("JobManager is shut down")
+            while len(self._jobs) >= self.max_jobs:
+                victim = next((j for j in self._jobs.values() if j.done()), None)
+                if victim is None:
+                    raise JobStoreFull(
+                        f"job store full ({self.max_jobs} live jobs)")
+                del self._jobs[victim.id]
+            self._jobs[job.id] = job
+            self._ensure_workers()
+        self._queue.put(job.id)
+        return job
+
+    def get(self, job_id: str) -> Job:
+        with self._lock:
+            return self._jobs[job_id]  # KeyError -> caller maps to 404
+
+    def list(self) -> List[Dict[str, Any]]:
+        with self._lock:
+            jobs = list(self._jobs.values())
+        return [j.status(verbose=False) for j in jobs]
+
+    def cancel(self, job_id: str) -> Job:
+        """Request cancellation. Queued jobs flip to cancelled immediately;
+        running jobs stop at the next block boundary."""
+        job = self.get(job_id)
+        job.cancel()
+        with self._lock:
+            if job.state == JobState.QUEUED:
+                job.state = JobState.CANCELLED
+                job.finished_at = time.time()
+        return job
+
+    def shutdown(self, wait: bool = False) -> None:
+        with self._lock:
+            self._shutdown = True
+            workers = list(self._workers)
+        for _ in workers:
+            self._queue.put(None)
+        if wait:
+            for t in workers:
+                t.join(timeout=5)
+
+    # ------------------------------------------------------------------
+    def _ensure_workers(self) -> None:
+        # grow the pool by one per submit, up to max_workers (called under
+        # self._lock); idle daemon workers blocked on the queue are cheap
+        if len(self._workers) < self.max_workers:
+            t = threading.Thread(target=self._worker_loop, daemon=True,
+                                 name=f"dj-job-worker-{len(self._workers)}")
+            self._workers.append(t)
+            t.start()
+
+    def _worker_loop(self) -> None:
+        while True:
+            job_id = self._queue.get()
+            if job_id is None:
+                return
+            # claim atomically: cancel() takes the same lock for its
+            # QUEUED -> CANCELLED transition, so a job cancelled while
+            # queued can never also start running
+            with self._lock:
+                job = self._jobs.get(job_id)
+                if job is None or job.done():
+                    continue
+                if job.cancel_event.is_set():
+                    job.state = JobState.CANCELLED
+                    job.finished_at = time.time()
+                    continue
+                job.state = JobState.RUNNING
+                job.started_at = time.time()
+            try:
+                _, report = job.pipeline.execute(
+                    monitor=job.monitor, cancel=job.cancel_event.is_set)
+                job.report = report
+                job.state = JobState.SUCCEEDED
+            except ExecutionCancelled:
+                job.state = JobState.CANCELLED
+            except Exception as e:  # noqa: BLE001 — job isolation boundary
+                job.error = f"{type(e).__name__}: {e}"
+                job.state = JobState.FAILED
+            finally:
+                job.finished_at = time.time()

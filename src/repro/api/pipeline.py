@@ -1,0 +1,238 @@
+"""Lazy, chainable Pipeline API — the one Python-first entry point every
+front-end (CLI / REST / NL agent) compiles down to (paper §4, Appendix C.2).
+
+A ``Pipeline`` is an immutable, deferred plan (Ray-Data-style fluent
+chaining): each ``.map()/.filter()/.dedup()`` call validates the op name and
+kwargs against the registry's typed signatures and returns a NEW pipeline —
+nothing executes until ``.execute()`` / ``.iter_blocks()``. Execution lowers
+the chain into a ``Recipe`` + op plan and dispatches through the existing
+``Executor``, so fusion, workload-aware reordering, streaming-segment
+auto-selection, checkpoints and insight mining all apply for free, and a
+fluent pipeline is *byte-identical* to the equivalent recipe run.
+
+    import repro.api as dj
+    (dj.read_jsonl("in.jsonl")
+       .map("clean_links_mapper")
+       .filter("text_length_filter", min_val=80)
+       .dedup(jaccard_threshold=0.7)
+       .write_jsonl("out.jsonl")
+       .execute())
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Iterable, Iterator, List, Optional, Tuple
+
+from repro.core.recipes import Recipe
+from repro.core.registry import op_info, validate_op_config
+
+# Recipe fields settable through .options() — everything except the chain
+# itself (process) and the source (dataset_path), which the builder owns.
+_OPTION_FIELDS = {
+    f.name for f in dataclasses.fields(Recipe)
+} - {"process", "dataset_path"}
+
+# method -> op taxonomy types it accepts (op_info()["type"])
+_KIND_FOR_METHOD = {
+    "map": ("Mapper", "Formatter"),
+    "filter": ("Filter",),
+    "dedup": ("Deduplicator",),
+    "select": ("Selector",),
+    "group": ("Grouper",),
+    "aggregate": ("Aggregator",),
+}
+
+
+def _check_kind(method: str, name: str) -> None:
+    kinds = _KIND_FOR_METHOD[method]
+    actual = op_info(name)["type"]
+    if actual not in kinds:
+        hint = {"Mapper": "map", "Formatter": "map", "Filter": "filter",
+                "Deduplicator": "dedup", "Selector": "select",
+                "Grouper": "group", "Aggregator": "aggregate"}.get(actual, "op")
+        raise TypeError(
+            f"{name} is a {actual}, not a {'/'.join(kinds)}; "
+            f"use .{hint}({name!r}, ...) or the generic .op()")
+
+
+class Pipeline:
+    """Immutable lazy plan: (source, op chain, run options)."""
+
+    def __init__(self, source: Optional[Dict[str, Any]] = None,
+                 steps: Tuple[Dict[str, Any], ...] = (),
+                 options: Optional[Dict[str, Any]] = None):
+        self._source = source
+        self._steps = tuple(dict(s) for s in steps)
+        self._options = dict(options or {})
+
+    # ------------------------------------------------------------------
+    # sources
+    # ------------------------------------------------------------------
+    @classmethod
+    def read_jsonl(cls, path: str) -> "Pipeline":
+        """Lazy JSONL/zst source — never decoded until execution."""
+        return cls({"kind": "jsonl", "path": path})
+
+    @classmethod
+    def from_samples(cls, samples: Iterable[Dict[str, Any]]) -> "Pipeline":
+        return cls({"kind": "samples", "samples": list(samples)})
+
+    @classmethod
+    def from_dataset(cls, dataset) -> "Pipeline":
+        """Wrap an in-memory DJDataset, carrying its engine into the lowered
+        recipe (a parallel/sharded dataset keeps running parallel/sharded;
+        a later ``.with_engine()`` overrides)."""
+        opts: Dict[str, Any] = {}
+        engine_cls = type(getattr(dataset, "engine", None)).__name__
+        if engine_cls == "ParallelEngine":
+            opts = {"engine": "parallel",
+                    "np": getattr(dataset.engine, "n_workers", 1) or 1}
+        elif engine_cls == "ShardedEngine":
+            opts = {"engine": "sharded"}
+        return cls({"kind": "dataset", "dataset": dataset}, options=opts)
+
+    @classmethod
+    def from_recipe(cls, recipe: Recipe) -> "Pipeline":
+        """Lift a declarative Recipe into the fluent representation."""
+        src = {"kind": "jsonl", "path": recipe.dataset_path} \
+            if recipe.dataset_path else None
+        opts = {k: v for k, v in recipe.to_dict().items()
+                if k in _OPTION_FIELDS}
+        return cls(src, tuple(recipe.process), opts)
+
+    # ------------------------------------------------------------------
+    # chainable ops (validated, deferred)
+    # ------------------------------------------------------------------
+    def op(self, name: str, **kwargs) -> "Pipeline":
+        """Generic chain step: any registered OP by name."""
+        cfg = {"name": name, **kwargs}
+        validate_op_config(cfg)  # unknown name / bad kwargs fail HERE
+        return Pipeline(self._source, self._steps + (cfg,), self._options)
+
+    def map(self, name: str, **kwargs) -> "Pipeline":
+        _check_kind("map", name)
+        return self.op(name, **kwargs)
+
+    def filter(self, name: str, **kwargs) -> "Pipeline":
+        _check_kind("filter", name)
+        return self.op(name, **kwargs)
+
+    def dedup(self, name: str = "document_minhash_deduplicator", **kwargs) -> "Pipeline":
+        _check_kind("dedup", name)
+        return self.op(name, **kwargs)
+
+    def select(self, name: str, **kwargs) -> "Pipeline":
+        _check_kind("select", name)
+        return self.op(name, **kwargs)
+
+    def group(self, name: str, **kwargs) -> "Pipeline":
+        _check_kind("group", name)
+        return self.op(name, **kwargs)
+
+    def aggregate(self, name: str, **kwargs) -> "Pipeline":
+        _check_kind("aggregate", name)
+        return self.op(name, **kwargs)
+
+    # ------------------------------------------------------------------
+    # run options (also chainable)
+    # ------------------------------------------------------------------
+    def options(self, **kwargs) -> "Pipeline":
+        """Set Recipe-level run options (engine, np, use_fusion, ...)."""
+        unknown = sorted(k for k in kwargs if k not in _OPTION_FIELDS)
+        if unknown:
+            raise TypeError(f"unknown option(s) {unknown}; "
+                            f"accepted: {sorted(_OPTION_FIELDS)}")
+        return Pipeline(self._source, self._steps, {**self._options, **kwargs})
+
+    def write_jsonl(self, path: str) -> "Pipeline":
+        """Deferred export target (block-streamed, not materialized)."""
+        return self.options(export_path=path)
+
+    def with_engine(self, engine: str, np: Optional[int] = None) -> "Pipeline":
+        opts: Dict[str, Any] = {"engine": engine}
+        if np is not None:
+            opts["np"] = np
+        return self.options(**opts)
+
+    def checkpoint(self, checkpoint_dir: str) -> "Pipeline":
+        return self.options(checkpoint_dir=checkpoint_dir)
+
+    def insight(self, on: bool = True) -> "Pipeline":
+        return self.options(insight=on)
+
+    # ------------------------------------------------------------------
+    # lowering + execution
+    # ------------------------------------------------------------------
+    def to_recipe(self, name: str = "pipeline") -> Recipe:
+        """Lower the chain into the declarative Recipe the Executor runs.
+        This is the equivalence guarantee: executing the pipeline IS
+        executing this recipe."""
+        d: Dict[str, Any] = {"name": self._options.get("name", name)}
+        if self._source and self._source["kind"] == "jsonl":
+            d["dataset_path"] = self._source["path"]
+        d.update({k: v for k, v in self._options.items() if k != "name"})
+        d["process"] = [dict(s) for s in self._steps]
+        return Recipe.from_dict(d)
+
+    def save_recipe(self, path: str, name: str = "pipeline") -> None:
+        self.to_recipe(name).save(path)
+
+    def _source_dataset(self):
+        from repro.core.dataset import DJDataset
+
+        if self._source is None:
+            return None
+        if self._source["kind"] == "dataset":
+            return self._source["dataset"]
+        if self._source["kind"] == "samples":
+            # protected copies: ops write into sample['stats']/['meta'], and
+            # the caller's list must survive execute() unmutated (and be
+            # reusable across runs of differently-configured pipelines)
+            return DJDataset.from_samples(
+                [{**s, "stats": dict(s.get("stats") or {}),
+                  "meta": dict(s.get("meta") or {})}
+                 for s in self._source["samples"]])
+        return None  # jsonl: the Executor streams it from disk
+
+    def _executor(self):
+        from repro.core.executor import Executor
+
+        return Executor(self.to_recipe())
+
+    def execute(self, monitor: Optional[List[dict]] = None, cancel=None):
+        """Lower and run through the Executor (streaming path auto-selected).
+        Returns ``(DJDataset, RunReport)``. ``monitor``/``cancel`` are wired
+        through for async job progress and cancellation."""
+        return self._executor().run(dataset=self._source_dataset(),
+                                    monitor=monitor, cancel=cancel)
+
+    def iter_blocks(self, prefetch: int = 4, cancel=None) -> Iterator[Any]:
+        """Stream output SampleBlocks lazily — the full dataset is never
+        materialized (except at genuine barrier ops). Ignores export_path."""
+        return self._executor().stream_blocks(
+            dataset=self._source_dataset(), prefetch=prefetch, cancel=cancel)
+
+    def iter_samples(self, prefetch: int = 4) -> Iterator[Dict[str, Any]]:
+        for blk in self.iter_blocks(prefetch=prefetch):
+            yield from blk.samples
+
+    def explain(self) -> Dict[str, Any]:
+        """Optimized plan + streaming segments, without running: probes a
+        small head sample, applies fusion/reordering, partitions into
+        pipelineable/barrier segments."""
+        return self._executor().explain(dataset=self._source_dataset())
+
+    # ------------------------------------------------------------------
+    def __repr__(self):
+        src = self._source["kind"] if self._source else "none"
+        chain = " -> ".join(s["name"] for s in self._steps) or "<empty>"
+        return f"Pipeline(source={src}, steps=[{chain}], options={self._options})"
+
+
+# Ray-Data-style alias: a Pipeline IS a lazy dataset handle.
+LazyDataset = Pipeline
+
+read_jsonl = Pipeline.read_jsonl
+from_samples = Pipeline.from_samples
+from_dataset = Pipeline.from_dataset
+from_recipe = Pipeline.from_recipe

@@ -26,6 +26,10 @@ Sample = Dict[str, Any]
 GROUP_KEY = "__group__"
 
 
+class ExecutionCancelled(RuntimeError):
+    """A cancel callback interrupted a run mid-stream (async job cancel)."""
+
+
 def apply_dataset_op(op: Operator, samples: List[Sample]) -> List[Sample]:
     """Apply a dataset-level (barrier) OP to fully-materialized samples."""
     op.setup()
@@ -50,41 +54,54 @@ def apply_dataset_op(op: Operator, samples: List[Sample]) -> List[Sample]:
     raise TypeError(f"{op.name} is not a dataset-level OP")
 
 
-def stream_segments(
+def seed_op_entries(ops: Sequence[Operator]) -> List[dict]:
+    """One zero monitor entry per OP, in order — the shared row shape for
+    both executor paths' live progress."""
+    return [{"op": op.name, "seconds": 0.0, "in": 0, "out": 0,
+             "errors": 0, "speed": float("inf")} for op in ops]
+
+
+def seed_plan_entries(segments: Sequence) -> List[dict]:
+    """One zero monitor entry per OP in plan order. Keyed by GLOBAL op index
+    downstream, not op name — a recipe may legally contain two instances of
+    the same OP class. Pre-seeding keeps per_op aligned with the plan even on
+    empty input, and lets concurrent observers (async job polling) watch the
+    rows fill in while the stream runs."""
+    return seed_op_entries([op for seg in segments for op in seg.ops])
+
+
+def iter_stream_blocks(
     blocks: Iterable[SampleBlock],
     segments: Sequence,  # List[fusion.Segment]
     engine,
-    sink=None,
-    collect: bool = True,
+    entries: Optional[List[dict]] = None,
     n_workers_hint: int = 1,
-) -> tuple:
-    """Core of the streaming executor: drive a lazy block iterator through a
-    planned sequence of segments.
+    cancel=None,
+):
+    """Generator core of the streaming executor: drive a lazy block iterator
+    through a planned sequence of segments, yielding output blocks.
 
     Pipelineable segments stream block-by-block through the engine's
     ``map_block_chain`` (one dispatch per block per segment); barrier segments
     drain the stream, run the dataset-level OP on the materialized samples,
-    and re-split into blocks. Exported blocks go to ``sink`` as they complete,
-    so with ``collect=False`` the full dataset is never materialized (unless a
-    barrier forces it).
-
-    Returns ``(out_blocks, per_op_entries, n_out)`` where ``per_op_entries``
-    is one monitor entry per OP (aggregated across blocks) in plan order.
+    and re-split into blocks. ``entries`` (from :func:`seed_plan_entries`) is
+    mutated in place as blocks complete — live per-op progress. A ``cancel``
+    callable returning True aborts the stream with ExecutionCancelled,
+    checked once per block at the barrier drains and the output drain.
     """
-    # aggregation is keyed by GLOBAL op index, not op name — a recipe may
-    # legally contain two instances of the same OP class. Pre-seeded with
-    # zero entries so per_op stays aligned with the plan even on empty input.
-    agg: Dict[int, dict] = {}
-    _i = 0
-    for _seg in segments:
-        for _op in _seg.ops:
-            agg[_i] = {"op": _op.name, "seconds": 0.0, "in": 0, "out": 0, "errors": 0}
-            _i += 1
+    if entries is None:
+        entries = seed_plan_entries(segments)
 
     def record(op_idx: int, st: dict) -> None:
-        e = agg[op_idx]
+        e = entries[op_idx]
         for k in ("seconds", "in", "out", "errors"):
             e[k] += st[k]
+        dt = e["seconds"]
+        e["speed"] = e["in"] / dt if dt > 0 else float("inf")
+
+    def check_cancel() -> None:
+        if cancel is not None and cancel():
+            raise ExecutionCancelled("streaming run cancelled")
 
     stream: Iterable[SampleBlock] = blocks
     offset = 0
@@ -93,7 +110,10 @@ def stream_segments(
             op = seg.ops[0]
             # drain FIRST: the lazy upstream executes here, and its time
             # belongs to the upstream ops' entries, not the barrier's
-            samples = [s for b in stream for s in b.samples]
+            samples: List[Sample] = []
+            for b in stream:
+                check_cancel()
+                samples.extend(b.samples)
             t0 = time.time()
             n_in = len(samples)
             err0 = len(op.errors)
@@ -112,19 +132,41 @@ def stream_segments(
             stream = run()
         offset += len(seg.ops)
 
+    for blk in stream:
+        check_cancel()
+        yield blk
+
+
+def stream_segments(
+    blocks: Iterable[SampleBlock],
+    segments: Sequence,  # List[fusion.Segment]
+    engine,
+    sink=None,
+    collect: bool = True,
+    n_workers_hint: int = 1,
+    monitor: Optional[List[dict]] = None,
+    cancel=None,
+) -> tuple:
+    """Drain :func:`iter_stream_blocks`, writing completed blocks to ``sink``
+    as they arrive, so with ``collect=False`` the full dataset is never
+    materialized (unless a barrier forces it). A ``monitor`` list receives
+    the live per-op entries up front (async observers see them update).
+
+    Returns ``(out_blocks, per_op_entries, n_out)`` where ``per_op_entries``
+    is one monitor entry per OP (aggregated across blocks) in plan order.
+    """
+    entries = seed_plan_entries(segments)
+    if monitor is not None:
+        monitor.extend(entries)
     out_blocks: List[SampleBlock] = []
     n_out = 0
-    for blk in stream:
+    for blk in iter_stream_blocks(blocks, segments, engine, entries,
+                                  n_workers_hint, cancel):
         n_out += len(blk)
         if sink is not None:
             sink.write_block(blk)
         if collect:
             out_blocks.append(blk)
-    entries = []
-    for idx in sorted(agg):
-        e = agg[idx]
-        dt = e["seconds"]
-        entries.append({**e, "speed": e["in"] / dt if dt > 0 else float("inf")})
     return out_blocks, entries, n_out
 
 
@@ -216,13 +258,11 @@ class DJDataset:
         try:
             blocks, entries, _ = stream_segments(
                 src, segments, self.engine, collect=True,
-                n_workers_hint=max(1, len(self.blocks)),
+                n_workers_hint=max(1, len(self.blocks)), monitor=monitor,
             )
         finally:
             if prefetcher is not None:
                 prefetcher.close()
-        if monitor is not None:
-            monitor.extend(entries)
         return DJDataset(blocks or [SampleBlock([])], self.engine,
                          self.lineage + entries)
 

@@ -26,7 +26,10 @@ from typing import Any, Dict, Iterable, Iterator, List, Optional
 
 from repro.core.adapter import Adapter
 from repro.core.checkpoint import CheckpointManager, recipe_prefix_sigs
-from repro.core.dataset import DJDataset, stream_segments
+from repro.core.dataset import (
+    DJDataset, ExecutionCancelled, iter_stream_blocks, seed_op_entries,
+    seed_plan_entries, stream_segments,
+)
 from repro.core.engine import make_engine
 from repro.core.fusion import optimize, plan_segments
 from repro.core.insight import InsightMiner
@@ -39,6 +42,9 @@ from repro.core.storage import (
 )
 
 PROBE_LIMIT = 1000
+# explain() is a dry-run surface: probe far fewer samples than a real run
+# so the command stays cheap even with slow/model-backed ops in the plan
+EXPLAIN_PROBE_LIMIT = 128
 
 
 @dataclasses.dataclass
@@ -79,10 +85,16 @@ class Executor:
         r = self.recipe
         return not r.insight and not r.checkpoint_dir
 
-    def run(self, dataset: Optional[DJDataset] = None) -> tuple[DJDataset, RunReport]:
+    def run(self, dataset: Optional[DJDataset] = None,
+            monitor: Optional[List[dict]] = None,
+            cancel=None) -> tuple[DJDataset, RunReport]:
+        """Execute the recipe. ``monitor`` (a caller-owned list) receives the
+        live per-op progress rows; ``cancel`` is a callable polled during the
+        run — returning True aborts with ExecutionCancelled. Both power the
+        async job subsystem (repro.api.jobs)."""
         if self.streaming_eligible():
-            return self.run_streaming(dataset)
-        return self.run_barriered(dataset)
+            return self.run_streaming(dataset, monitor=monitor, cancel=cancel)
+        return self.run_barriered(dataset, monitor=monitor, cancel=cancel)
 
     # ------------------------------------------------------------------
     # streaming block-pipelined path
@@ -95,9 +107,72 @@ class Executor:
                            do_fuse=r.use_fusion, do_reorder=r.use_reordering)
         return ops
 
+    def _probe_samples(self, dataset: Optional[DJDataset]) -> List[dict]:
+        if dataset is not None:
+            return dataset.samples()[:PROBE_LIMIT]
+        if self.recipe.dataset_path:
+            return list(read_jsonl(self.recipe.dataset_path, limit=PROBE_LIMIT))
+        return []
+
+    def explain(self, dataset: Optional[DJDataset] = None) -> Dict[str, Any]:
+        """Optimized plan + streaming segments WITHOUT processing the
+        dataset. Fusion/reordering need probed op speeds, so each op runs on
+        a small head sample (EXPLAIN_PROBE_LIMIT rows — much smaller than a
+        real run's probe, so the reordering can differ marginally); with no
+        data source available, optimization falls back to declaration order."""
+        r = self.recipe
+        ops = self._optimize_ops(
+            self._build_ops(), self._probe_samples(dataset)[:EXPLAIN_PROBE_LIMIT])
+        segments = plan_segments(ops)
+        return {
+            "recipe": r.name,
+            "requested": [cfg.get("name") for cfg in r.process],
+            "plan": [op.name for op in ops],
+            "segments": [
+                {"ops": [o.name for o in seg.ops], "barrier": seg.barrier}
+                for seg in segments
+            ],
+            "streaming": self.streaming_eligible(),
+            "engine": r.engine,
+            "np": r.np,
+        }
+
+    def stream_blocks(
+        self, dataset: Optional[DJDataset] = None, prefetch: int = 4,
+        monitor: Optional[List[dict]] = None, cancel=None,
+    ) -> Iterator[Any]:
+        """Lazy generator over output SampleBlocks: probe -> optimize ->
+        stream, with no export and no full materialization (except at
+        barrier ops). Powers ``Pipeline.iter_blocks``."""
+        r = self.recipe
+        if dataset is None and not r.dataset_path:
+            raise ValueError("recipe has no dataset_path and no dataset given")
+        engine = self._make_engine()
+        ops = self._optimize_ops(self._build_ops(), self._probe_samples(dataset))
+        segments = plan_segments(ops)
+        n_workers = getattr(engine, "n_workers", 1) or 1
+        if dataset is not None:
+            src: Iterable[SampleBlock] = iter(dataset.blocks)
+        else:
+            bb = {"block_bytes": r.block_bytes} if r.block_bytes else {}
+            src = iter_sample_blocks(r.dataset_path, n_workers=n_workers, **bb)
+        entries = seed_plan_entries(segments)
+        if monitor is not None:
+            monitor.extend(entries)
+        prefetcher: Optional[BlockPrefetcher] = None
+        if prefetch and dataset is None:
+            src = prefetcher = BlockPrefetcher(src, depth=prefetch)
+        try:
+            yield from iter_stream_blocks(src, segments, engine, entries,
+                                          n_workers, cancel)
+        finally:
+            if prefetcher is not None:
+                prefetcher.close()
+
     def run_streaming(
         self, dataset: Optional[DJDataset] = None,
         materialize: bool = True, prefetch: int = 4,
+        monitor: Optional[List[dict]] = None, cancel=None,
     ) -> tuple[DJDataset, RunReport]:
         """Streaming block-pipelined execution. With ``materialize=False``
         (and an ``export_path``) the output dataset is streamed to disk and
@@ -115,11 +190,7 @@ class Executor:
         # (streaming can't random-sample without a full decode); on corpora
         # sorted by source/length the optimizer plan may differ from the
         # barriered path's random-subset probe
-        if dataset is not None:
-            probe = dataset.samples()[:PROBE_LIMIT]
-        else:
-            probe = list(read_jsonl(r.dataset_path, limit=PROBE_LIMIT))
-        ops = self._optimize_ops(ops, probe)
+        ops = self._optimize_ops(ops, self._probe_samples(dataset))
         plan = [op.name for op in ops]
         segments = plan_segments(ops)
         n_workers = getattr(engine, "n_workers", 1) or 1
@@ -177,7 +248,8 @@ class Executor:
                     is_last = end == bounds[-1]
                     blocks, ent, n_out = stream_segments(
                         src, [seg], engine, sink=sink if is_last else None,
-                        collect=True, n_workers_hint=n_workers)
+                        collect=True, n_workers_hint=n_workers,
+                        monitor=monitor, cancel=cancel)
                     entries.extend(ent)
                     ckpt.save_stage(sigs[end - 1], end,
                                     [s for b in blocks for s in b.samples])
@@ -193,7 +265,8 @@ class Executor:
             else:
                 blocks, entries, n_out = stream_segments(
                     src, [seg for seg, _ in remaining], engine, sink=sink,
-                    collect=materialize, n_workers_hint=n_workers)
+                    collect=materialize, n_workers_hint=n_workers,
+                    monitor=monitor, cancel=cancel)
             ok = True
         finally:
             if sink is not None:
@@ -212,7 +285,9 @@ class Executor:
     # ------------------------------------------------------------------
     # barriered (per-op materializing) path
     # ------------------------------------------------------------------
-    def run_barriered(self, dataset: Optional[DJDataset] = None) -> tuple[DJDataset, RunReport]:
+    def run_barriered(self, dataset: Optional[DJDataset] = None,
+                      monitor: Optional[List[dict]] = None,
+                      cancel=None) -> tuple[DJDataset, RunReport]:
         r = self.recipe
         t0 = time.time()
         engine = self._make_engine()
@@ -248,12 +323,20 @@ class Executor:
         if miner:
             miner.record("load", dataset.samples())
 
-        monitor: List[dict] = []
+        monitor = monitor if monitor is not None else []
+        # pre-seed one zero row per remaining op so async observers see the
+        # full plan size (ops_total) up front, mirroring the streaming path
+        rows = seed_op_entries(ops[resumed_at:])
+        monitor.extend(rows)
         sigs = recipe_prefix_sigs(op_cfgs)
         errors = 0
         for i in range(resumed_at, len(ops)):
+            if cancel is not None and cancel():
+                raise ExecutionCancelled("barriered run cancelled")
             op = ops[i]
-            dataset = dataset.process(op, monitor=monitor)
+            step: List[dict] = []
+            dataset = dataset.process(op, monitor=step)
+            rows[i - resumed_at].update(step[0])
             errors += len(op.errors)
             if ckpt:
                 ckpt.save_stage(sigs[i], i + 1, dataset.samples())

@@ -10,7 +10,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Dict, List, Optional, Union
 
-from repro.core.storage import json_loads
+from repro.core.storage import json_dumps, json_loads
 
 
 @dataclasses.dataclass
@@ -43,6 +43,17 @@ class Recipe:
     def to_dict(self) -> Dict[str, Any]:
         return dataclasses.asdict(self)
 
+    def save(self, path: str) -> None:
+        """Persist in the format ``load`` will parse back: JSON for ``.json``
+        paths, the simple-YAML subset otherwise — lets a fluent Pipeline be
+        frozen into a shareable declarative recipe."""
+        if path.endswith(".json"):
+            with open(path, "wb") as f:
+                f.write(json_dumps(self.to_dict()))
+            return
+        with open(path, "w", encoding="utf-8") as f:
+            f.write(dump_simple_yaml(self.to_dict()))
+
 
 def _scalar(tok: str) -> Any:
     t = tok.strip().strip('"').strip("'")
@@ -59,6 +70,49 @@ def _scalar(tok: str) -> Any:
     except ValueError:
         pass
     return t
+
+
+def _yaml_scalar(v: Any) -> str:
+    if isinstance(v, bool):
+        return "true" if v else "false"
+    if v is None:
+        return "null"
+    if isinstance(v, str):
+        # the subset parser can't round-trip strings it would re-read as a
+        # different type/value (numbers, booleans, padded text, newlines) —
+        # refuse loudly rather than reload a silently different recipe
+        # a trailing ':' would make the dumped line reparse as a list header
+        if ("\n" in v or v.endswith(":") or _scalar(v) != v
+                or not isinstance(_scalar(v), str)):
+            raise ValueError(
+                f"string {v!r} does not survive the simple-YAML subset; "
+                f"save as .json")
+        return v
+    if not isinstance(v, (int, float)):
+        raise ValueError(
+            f"cannot express {v!r} in the simple-YAML subset; save as .json")
+    return str(v)
+
+
+def dump_simple_yaml(d: Dict[str, Any]) -> str:
+    """Inverse of ``parse_simple_yaml`` for recipe dicts: top-level scalars
+    plus a ``process:`` list of ``- op_name:`` blocks with scalar args."""
+    lines: List[str] = []
+    for k, v in d.items():
+        if k == "process" or v is None:
+            continue
+        lines.append(f"{k}: {_yaml_scalar(v)}")
+    lines.append("process:")
+    for cfg in d.get("process", []):
+        cfg = dict(cfg)
+        name = cfg.pop("name")
+        if not cfg:
+            lines.append(f"  - {name}")
+            continue
+        lines.append(f"  - {name}:")
+        for ak, av in cfg.items():
+            lines.append(f"      {ak}: {_yaml_scalar(av)}")
+    return "\n".join(lines) + "\n"
 
 
 def parse_simple_yaml(text: str) -> Dict[str, Any]:

@@ -1,6 +1,10 @@
-"""Operator registry: name -> class, auto-discovery, config round-trip."""
+"""Operator registry: name -> class, auto-discovery, config round-trip,
+typed constructor signatures (powering fluent-API / REST kwarg validation)."""
 from __future__ import annotations
 
+import difflib
+import inspect
+import math
 from typing import Any, Dict, List, Type
 
 from repro.core.ops_base import FusedOP, Operator
@@ -21,6 +25,13 @@ def _ensure_builtin_ops_loaded() -> None:
     import repro.ops  # noqa: F401 — registers the builtin library
 
 
+def unknown_op_message(name: str) -> str:
+    """Error text for a missing OP name, with close-match suggestions."""
+    close = difflib.get_close_matches(str(name), list(OPS), n=3, cutoff=0.6)
+    hint = f" (did you mean {', '.join(close)}?)" if close else ""
+    return f"unknown OP {name!r}{hint}; known: {sorted(OPS)}"
+
+
 def create_op(config: Dict[str, Any]) -> Operator:
     """{'name': ..., **params} -> Operator instance."""
     _ensure_builtin_ops_loaded()
@@ -30,8 +41,78 @@ def create_op(config: Dict[str, Any]) -> Operator:
         ops = [create_op(c) for c in cfg.pop("ops")]
         return FusedOP(ops, **cfg)
     if name not in OPS:
-        raise KeyError(f"unknown OP {name!r}; known: {sorted(OPS)}")
+        raise KeyError(unknown_op_message(name))
     return OPS[name](**cfg)
+
+
+def _json_safe(v: Any) -> Any:
+    if isinstance(v, bool) or v is None or isinstance(v, str):
+        return v
+    if isinstance(v, (int, float)):
+        # orjson (the storage serializer) rejects inf/nan
+        return v if math.isfinite(v) else repr(v)
+    if isinstance(v, (list, tuple)):
+        return [_json_safe(x) for x in v]
+    return repr(v)
+
+
+def op_signature(name: str) -> Dict[str, Any]:
+    """Typed constructor signature of a registered OP: explicit parameter
+    names, defaults and annotations, introspected from ``__init__``. OPs
+    whose ``__init__`` is just ``**params`` report no explicit params and
+    ``accepts_extra`` — kwarg validation is then a no-op for them."""
+    _ensure_builtin_ops_loaded()
+    if name not in OPS:
+        raise KeyError(unknown_op_message(name))
+    cls = OPS[name]
+    params: List[Dict[str, Any]] = []
+    accepts_extra = False
+    for p in list(inspect.signature(cls.__init__).parameters.values())[1:]:
+        if p.kind is p.VAR_KEYWORD:
+            accepts_extra = True
+            continue
+        if p.kind is p.VAR_POSITIONAL:
+            continue
+        entry: Dict[str, Any] = {
+            "name": p.name,
+            "required": p.default is p.empty,
+            "default": None if p.default is p.empty else _json_safe(p.default),
+        }
+        if p.annotation is not p.empty:
+            ann = p.annotation
+            entry["annotation"] = ann if isinstance(ann, str) else getattr(
+                ann, "__name__", str(ann))
+        params.append(entry)
+    return {"name": name, "params": params, "accepts_extra": accepts_extra}
+
+
+def validate_op_config(config: Dict[str, Any], strict: bool = True) -> None:
+    """Fail fast on a bad op config: unknown name -> KeyError (with
+    suggestions); with ``strict``, kwargs not in the OP's explicit signature
+    -> TypeError (every OP takes ``**kw``, so typos like ``threshold`` vs
+    ``jaccard_threshold`` would otherwise be silently absorbed)."""
+    _ensure_builtin_ops_loaded()
+    cfg = dict(config)
+    name = cfg.pop("name", None)
+    if not name:
+        raise KeyError("op config is missing 'name'")
+    if name == "fused_op":
+        for sub in cfg.pop("ops", []):
+            validate_op_config(sub, strict=strict)
+        return
+    sig = op_signature(name)  # raises KeyError on unknown name
+    if not strict:
+        return
+    known = {p["name"] for p in sig["params"]}
+    unknown = sorted(k for k in cfg if k not in known)
+    if unknown and known:
+        raise TypeError(
+            f"{name} got unexpected parameter(s) {unknown}; "
+            f"accepted: {sorted(known)}")
+    missing = sorted(p["name"] for p in sig["params"]
+                     if p["required"] and p["name"] not in cfg)
+    if missing:
+        raise TypeError(f"{name} missing required parameter(s) {missing}")
 
 
 def list_ops() -> List[str]:
@@ -41,6 +122,8 @@ def list_ops() -> List[str]:
 
 def op_info(name: str) -> Dict[str, Any]:
     _ensure_builtin_ops_loaded()
+    if name not in OPS:
+        raise KeyError(unknown_op_message(name))
     cls = OPS[name]
     kind = next(
         (b.__name__ for b in cls.__mro__ if b.__name__ in (
@@ -54,4 +137,5 @@ def op_info(name: str) -> Dict[str, Any]:
         "doc": (cls.__doc__ or "").strip().split("\n")[0],
         "uses_model": cls.uses_model,
         "fusible": cls.fusible,
+        "params": op_signature(name)["params"],
     }

@@ -1,6 +1,8 @@
-"""Command-line tools (paper Listing 1): dj-process / dj-analyze analogues.
+"""Command-line tools (paper Listing 1): dj-process / dj-analyze analogues,
+all thin shells over the shared Pipeline API (repro.api).
 
   python -m repro.interface.cli process --config recipe.{json,yaml}
+  python -m repro.interface.cli explain --config recipe.{json,yaml}
   python -m repro.interface.cli analyze --dataset_path x.jsonl [--auto]
   python -m repro.interface.cli list-ops
 """
@@ -8,6 +10,16 @@ from __future__ import annotations
 
 import argparse
 import sys
+
+
+def _print_report(report) -> None:
+    print(f"recipe={report.recipe} in={report.n_in} out={report.n_out} "
+          f"seconds={report.seconds:.2f} plan={report.plan}")
+    for row in report.per_op:
+        print(f"  {row['op']:40s} {row['seconds']:.3f}s "
+              f"{row['in']}->{row['out']} ({row['speed']:.0f} samples/s)")
+    if report.insight:
+        print(report.insight)
 
 
 def main(argv=None):
@@ -18,9 +30,18 @@ def main(argv=None):
     p_proc.add_argument("--config", required=True)
     p_proc.add_argument("--np", type=int, default=0)
 
+    p_ex = sub.add_parser("explain", help="show the optimized plan/segments "
+                                          "without processing the dataset "
+                                          "(probes a small head sample to "
+                                          "estimate op speeds)")
+    p_ex.add_argument("--config", required=True)
+
     p_an = sub.add_parser("analyze", help="compute default stats + report")
     p_an.add_argument("--dataset_path", required=True)
-    p_an.add_argument("--auto", action="store_true")
+    p_an.add_argument("--auto", action="store_true",
+                      help="auto-discover every applicable stat op")
+    p_an.add_argument("--limit", type=int, default=0,
+                      help="analyze only the first N samples")
 
     sub.add_parser("list-ops", help="print the OP registry")
 
@@ -35,42 +56,41 @@ def main(argv=None):
         return 0
 
     if args.cmd == "process":
-        from repro.core.executor import Executor
+        from repro.api import Pipeline
         from repro.core.recipes import Recipe
 
-        recipe = Recipe.load(args.config)
+        pipe = Pipeline.from_recipe(Recipe.load(args.config))
         if args.np:
-            recipe.np = args.np
-        _, report = Executor(recipe).run()
-        print(f"recipe={report.recipe} in={report.n_in} out={report.n_out} "
-              f"seconds={report.seconds:.2f} plan={report.plan}")
-        for row in report.per_op:
-            print(f"  {row['op']:40s} {row['seconds']:.3f}s "
-                  f"{row['in']}->{row['out']} ({row['speed']:.0f} samples/s)")
-        if report.insight:
-            print(report.insight)
+            pipe = pipe.options(np=args.np)
+        _, report = pipe.execute()
+        _print_report(report)
+        return 0
+
+    if args.cmd == "explain":
+        from repro.api import Pipeline
+        from repro.core.recipes import Recipe
+
+        info = Pipeline.from_recipe(Recipe.load(args.config)).explain()
+        print(f"recipe={info['recipe']} engine={info['engine']} np={info['np']} "
+              f"streaming={info['streaming']}")
+        print(f"requested: {' -> '.join(info['requested'])}")
+        print(f"optimized: {' -> '.join(info['plan'])}")
+        for i, seg in enumerate(info["segments"]):
+            kind = "barrier" if seg["barrier"] else "stream "
+            print(f"  segment {i} [{kind}]: {' -> '.join(seg['ops'])}")
         return 0
 
     if args.cmd == "analyze":
-        from repro.core.dataset import DJDataset
-        from repro.core.insight import snapshot
-        from repro.core.registry import create_op
+        from repro.api import analyze
 
-        ds = DJDataset.load(args.dataset_path)
-        default_ops = [
-            {"name": "text_length_filter"},
-            {"name": "words_num_filter"},
-            {"name": "alnum_ratio_filter"},
-            {"name": "quality_score_filter"},
-        ]
-        for cfg in default_ops:
-            op = create_op(cfg)
-            for s in ds:
-                op.compute_stats(s)
-        snap = snapshot(ds.samples())
-        print(f"n={snap['n']}")
-        for k, st in snap["numeric"].items():
+        res = analyze(args.dataset_path, auto=args.auto,
+                      limit=args.limit or None)
+        print(f"n={res['n']} ops={','.join(res['ops'])}")
+        for k, st in sorted(res["numeric"].items()):
             print(f"  {k:24s} mean={st.mean:.3f} p50={st.p50:.3f} p95={st.p95:.3f}")
+        for k, counts in sorted(res["tags"].items()):
+            top = sorted(counts.items(), key=lambda kv: -kv[1])[:5]
+            print(f"  {k:24s} " + " ".join(f"{t}:{c}" for t, c in top))
         return 0
     return 1
 

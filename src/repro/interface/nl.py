@@ -1,9 +1,15 @@
 """Natural-language interaction (paper §4, Appendix C.4).
 
 Offline ReAct-style loop: a rule-based intent parser maps user requests to
-OPs + parameters (the LLM-agent role), executes through the same code path
-the RESTful API uses, and reports thought/function/result traces — the
-paper's transparency pattern, minus the hosted model.
+OPs + parameters (the LLM-agent role) and *emits a lazy Pipeline* — the same
+programmable surface the CLI and REST layers compile to — so conversational
+requests get fusion, reordering and streaming execution for free, and the
+thought/function/result trace (the paper's transparency pattern) reports the
+optimized plan that actually ran.
+
+Numeric binding is span-aware: each number in the request is bound to the
+*nearest* matched intent that accepts it ("drop short text under 50 and
+dedup at threshold 0.8" no longer cross-contaminates both OPs' args).
 """
 from __future__ import annotations
 
@@ -30,6 +36,18 @@ _INTENTS: List[Tuple[re.Pattern, str, Dict[str, Any]]] = [
 ]
 
 _NUM_RE = re.compile(r"(min(?:imum)?|max(?:imum)?|threshold)\D{0,15}?([\d.]+)", re.I)
+_BARE_NUM_RE = re.compile(r"\d+(?:\.\d+)?")
+# a bare (keyword-less) number further than this from every intent anchor is
+# probably incidental ("my 3 corpora") and stays unbound
+_BARE_GAP_LIMIT = 60
+
+
+def _plausible(param: str, val: float) -> bool:
+    """Range sanity for implicit bindings: a similarity threshold outside
+    (0, 1] would silently turn the op into a no-op."""
+    if "threshold" in param:
+        return 0.0 < val <= 1.0
+    return val >= 0
 
 
 @dataclasses.dataclass
@@ -40,43 +58,149 @@ class AgentTurn:
     result: Optional[dict] = None
 
 
+def _accepted_params(op_name: str) -> set:
+    from repro.core.registry import op_signature
+
+    try:
+        return {p["name"] for p in op_signature(op_name)["params"]}
+    except KeyError:
+        return set()
+
+
+def _resolve_key(op_name: str, defaults: Dict[str, Any], key: Optional[str]) -> Optional[str]:
+    """Map a request keyword (min/max/threshold, or a bare number) onto the
+    parameter the target OP actually accepts (typed registry signatures)."""
+    accepted = _accepted_params(op_name)
+    if key is None:  # bare number -> the intent's primary numeric default
+        for k, v in defaults.items():
+            if isinstance(v, (int, float)) and not isinstance(v, bool):
+                return k
+        return None
+    if key.startswith("min"):
+        cand = "min_val"
+    elif key.startswith("max"):
+        cand = "max_val"
+    else:  # "threshold" — e.g. minhash dedup takes jaccard_threshold
+        cand = "jaccard_threshold" if "jaccard_threshold" in accepted else "threshold"
+    return cand if cand in accepted else None
+
+
+def _span_gap(a: Tuple[int, int], b: Tuple[int, int]) -> int:
+    if a[0] < b[1] and b[0] < a[1]:  # overlap
+        return 0
+    return b[0] - a[1] if b[0] >= a[1] else a[0] - b[1]
+
+
 def parse_intent(request: str) -> List[AgentTurn]:
-    turns: List[AgentTurn] = []
+    hits: List[Tuple[Tuple[int, int], str, Dict[str, Any]]] = []
     for pat, op, defaults in _INTENTS:
-        if pat.search(request):
-            args = dict(defaults)
-            for key, val in _NUM_RE.findall(request):
-                k = key.lower()
-                v = float(val)
-                if k.startswith("min"):
-                    args["min_val"] = v
-                elif k.startswith("max"):
-                    args["max_val"] = v
-                else:
-                    args["threshold"] = v
-            turns.append(AgentTurn(
-                thought=f"request matches '{pat.pattern[:40]}...' -> use {op}",
-                function=op, arguments=args,
-            ))
-    if not turns:
-        turns.append(AgentTurn(
+        m = pat.search(request)
+        if m:
+            hits.append((m.span(), op, dict(defaults)))
+    if not hits:
+        return [AgentTurn(
             thought="no OP intent recognised; ask the user to rephrase",
             function=None, arguments={},
+        )]
+    hits.sort(key=lambda h: h[0][0])  # pipeline order = mention order
+
+    # numbers: keyword-qualified first, then bare numbers not already consumed
+    numbers: List[Tuple[Tuple[int, int], Optional[str], float]] = []
+    consumed: List[Tuple[int, int]] = []
+    for m in _NUM_RE.finditer(request):
+        numbers.append((m.span(), m.group(1).lower(), float(m.group(2))))
+        consumed.append(m.span())
+    for m in _BARE_NUM_RE.finditer(request):
+        if any(m.start() >= s and m.end() <= e for s, e in consumed):
+            continue
+        numbers.append((m.span(), None, float(m.group())))
+
+    bindings: List[str] = []
+    keyword_bound = set()  # (id(args), param) pairs set by qualified numbers
+    for span, key, val in numbers:
+        # nearest intent that accepts the resolved param; an intent mentioned
+        # BEFORE the number wins over a closer one mentioned after it ("drop
+        # short text under 50 and dedup ..." -> 50 belongs to the text filter)
+        candidates = []
+        for hit_span, op, args in hits:
+            k = _resolve_key(op, args, key)
+            if k is None:
+                continue
+            if key is None and (id(args), k) in keyword_bound:
+                continue  # bare numbers never override qualified ones
+            follows = hit_span[0] <= span[0]
+            # bare numbers measure from the intent's ANCHOR (match start):
+            # a greedy intent regex can span the whole request, and span
+            # overlap would then steal numbers from nearer intents
+            gap = abs(span[0] - hit_span[0]) if key is None \
+                else _span_gap(hit_span, span)
+            if key is None and (gap > _BARE_GAP_LIMIT
+                                or not _plausible(k, val)):
+                continue
+            candidates.append((not follows, gap, args, k, op))
+        if candidates:
+            _, _, args, k, op = min(candidates, key=lambda c: c[:2])
+            args[k] = val
+            if key is not None:
+                keyword_bound.add((id(args), k))
+            bindings.append(f"{val:g}->{op}.{k}")
+
+    turns = []
+    for span, op, args in hits:
+        note = "; bound " + ", ".join(b for b in bindings if f"->{op}." in b) \
+            if any(f"->{op}." in b for b in bindings) else ""
+        turns.append(AgentTurn(
+            thought=f"request span {span} -> use {op}{note}",
+            function=op, arguments=args,
         ))
     return turns
 
 
-def run_request(request: str, dataset) -> Tuple[Any, List[AgentTurn]]:
-    """Interprets the request and executes the matched OPs on the dataset."""
-    from repro.core.registry import create_op
+def build_pipeline(request: str, source=None) -> Tuple[Any, List[AgentTurn]]:
+    """Emit a lazy Pipeline for the request (the NL front-end's compile
+    step). ``source`` is a DJDataset, a JSONL path, or None (attach later
+    via pipeline composition)."""
+    from repro.api import Pipeline
 
     turns = parse_intent(request)
-    ds = dataset
+    if source is None:
+        pipe = Pipeline()
+    elif isinstance(source, str):
+        pipe = Pipeline.read_jsonl(source)
+    else:
+        pipe = Pipeline.from_dataset(source)
+    for t in turns:
+        if t.function is not None:
+            pipe = pipe.op(t.function, **t.arguments)
+    return pipe, turns
+
+
+def run_request(request: str, dataset) -> Tuple[Any, List[AgentTurn]]:
+    """Interpret the request, lower it to one Pipeline, and execute it once
+    through the shared Executor path (fusion/streaming included)."""
+    pipe, turns = build_pipeline(request, dataset)
+    if not any(t.function for t in turns):
+        return dataset, turns
+
+    ds, report = pipe.execute()
+    # map the optimized plan's per-op rows back onto the agent turns: exact
+    # rows are consumed once each (two instances of the same op keep their
+    # own counts), fused rows are shared by every member op
+    used = set()
     for t in turns:
         if t.function is None:
             continue
-        op = create_op({"name": t.function, **t.arguments})
-        n0 = len(ds)
-        ds = ds.process(op)
-        t.result = {"status": "SUCCESS", "in": n0, "out": len(ds)}
+        row = None
+        for idx, r in enumerate(report.per_op):
+            if idx not in used and r["op"] == t.function:
+                row = r
+                used.add(idx)
+                break
+        if row is None:
+            row = next((r for r in report.per_op if t.function in r["op"]), None)
+        if row is not None:
+            t.result = {"status": "SUCCESS", "in": row["in"], "out": row["out"],
+                        "via": row["op"]}
+        else:
+            t.result = {"status": "SUCCESS", "in": report.n_in, "out": report.n_out}
     return ds, turns

@@ -1,21 +1,43 @@
 """RESTful API layer (paper §4, Appendix C.2) — dependency-free
-``http.server`` implementation with automatic OP discovery.
+``http.server`` implementation with automatic OP discovery and an async
+job subsystem, all routed through the shared Pipeline API.
 
-  GET  /ops              — discover + register all OP classes
-  GET  /ops/<name>       — one OP's metadata
-  POST /run/<op_name>?dataset_path=...   body: JSON op params
-                         — executes op.run() on the dataset, returns the
-                           processed dataset path
-  POST /process?dataset_path=...          body: JSON recipe
+  GET    /ops              — discover + register all OP classes
+  GET    /ops/<name>       — one OP's metadata + typed signature
+  POST   /run/<op_name>?dataset_path=...   body: JSON op params
+                           — synchronous single-op run
+  POST   /process?dataset_path=...         body: JSON recipe (synchronous)
+  POST   /jobs             body: JSON recipe — submit an async job,
+                           returns {"job_id", ...} immediately
+  GET    /jobs             — job summaries
+  GET    /jobs/<id>        — state + live per-op progress + final report
+  DELETE /jobs/<id>        — cancel (stops at the next block boundary)
+
+Errors are structured: {"error": {"type", "message"}} with 400 for
+malformed bodies/params, 404 for unknown ops/jobs/routes, 409 for invalid
+transitions, 503 when the bounded job store is full.
 """
 from __future__ import annotations
 
 import threading
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
-from typing import Optional
 from urllib.parse import parse_qs, urlparse
 
 from repro.core.storage import json_dumps, json_loads
+
+
+class DJServer(ThreadingHTTPServer):
+    """HTTP server owning the shared JobManager."""
+
+    def __init__(self, addr, handler, max_workers: int = 2, max_jobs: int = 64):
+        super().__init__(addr, handler)
+        from repro.api.jobs import JobManager
+
+        self.jobs = JobManager(max_workers=max_workers, max_jobs=max_jobs)
+
+    def server_close(self):
+        self.jobs.shutdown()
+        super().server_close()
 
 
 class _Handler(BaseHTTPRequestHandler):
@@ -27,9 +49,24 @@ class _Handler(BaseHTTPRequestHandler):
         self.end_headers()
         self.wfile.write(body)
 
+    def _err(self, code: int, etype: str, msg: str):
+        return self._send(code, {"error": {"type": etype, "message": msg}})
+
     def log_message(self, *a):  # quiet
         pass
 
+    def _read_body(self):
+        """Parsed JSON body; raises ValueError on malformed JSON."""
+        n = int(self.headers.get("Content-Length", 0))
+        raw = self.rfile.read(n) if n else b""
+        if not raw:
+            return {}
+        body = json_loads(raw)
+        if not isinstance(body, dict):
+            raise ValueError("JSON body must be an object")
+        return body
+
+    # ------------------------------------------------------------------
     def do_GET(self):
         from repro.core.registry import list_ops, op_info
 
@@ -41,27 +78,73 @@ class _Handler(BaseHTTPRequestHandler):
             try:
                 return self._send(200, op_info(parts[1]))
             except KeyError:
-                return self._send(404, {"error": f"unknown op {parts[1]}"})
-        return self._send(404, {"error": "not found"})
+                return self._err(404, "unknown_op", f"unknown op {parts[1]!r}")
+        if parts == ["jobs"]:
+            return self._send(200, {"jobs": self.server.jobs.list()})
+        if len(parts) == 2 and parts[0] == "jobs":
+            try:
+                return self._send(200, self.server.jobs.get(parts[1]).status())
+            except KeyError:
+                return self._err(404, "unknown_job", f"no job {parts[1]!r}")
+        return self._err(404, "not_found", "not found")
 
+    # ------------------------------------------------------------------
+    def do_DELETE(self):
+        from repro.api.jobs import JobState
+
+        parts = [p for p in urlparse(self.path).path.split("/") if p]
+        if len(parts) == 2 and parts[0] == "jobs":
+            jobs = self.server.jobs
+            try:
+                job = jobs.get(parts[1])
+            except KeyError:
+                return self._err(404, "unknown_job", f"no job {parts[1]!r}")
+            if job.done() and job.state != JobState.CANCELLED:
+                return self._err(409, "already_finished",
+                                 f"job {job.id} already {job.state}")
+            jobs.cancel(job.id)
+            return self._send(202, {"job_id": job.id, "state": job.state})
+        return self._err(404, "not_found", "not found")
+
+    # ------------------------------------------------------------------
     def do_POST(self):
+        from repro.api import Pipeline
+        from repro.api.jobs import JobStoreFull
         from repro.core.dataset import DJDataset
-        from repro.core.executor import Executor
         from repro.core.recipes import Recipe
-        from repro.core.registry import create_op
+        from repro.core.registry import create_op, validate_op_config
 
         url = urlparse(self.path)
         qs = parse_qs(url.query)
-        n = int(self.headers.get("Content-Length", 0))
-        params = json_loads(self.rfile.read(n) or b"{}")
         parts = [p for p in url.path.split("/") if p]
         try:
+            params = self._read_body()
+        except ValueError as e:
+            return self._err(400, "malformed_json", f"invalid JSON body: {e}")
+
+        try:
+            if parts == ["jobs"]:
+                # only path-valued params may come from the query string —
+                # typed Recipe fields (np, use_fusion, ...) would arrive as
+                # strings and corrupt the run; they belong in the JSON body
+                return self._submit_job({**params, **{
+                    k: v[0] for k, v in qs.items()
+                    if k in ("dataset_path", "export_path")}})
+
             dataset_path = qs.get("dataset_path", [None])[0]
             if not dataset_path:
-                return self._send(400, {"error": "dataset_path query param required"})
+                return self._err(400, "missing_param",
+                                 "dataset_path query param required")
             out_path = qs.get("export_path", [dataset_path + ".out.jsonl"])[0]
+
             if len(parts) == 2 and parts[0] == "run":
-                op = create_op({"name": parts[1], **params})
+                try:
+                    validate_op_config({"name": parts[1], **params})
+                    op = create_op({"name": parts[1], **params})
+                except KeyError as e:
+                    return self._err(404, "unknown_op", str(e.args[0] if e.args else e))
+                except TypeError as e:
+                    return self._err(400, "invalid_params", str(e))
                 ds = DJDataset.load(dataset_path)
                 ds = op.run(ds)
                 ds.export(out_path)
@@ -69,22 +152,61 @@ class _Handler(BaseHTTPRequestHandler):
                     "status": "ok", "export_path": out_path,
                     "n_out": len(ds), "errors": len(op.errors),
                 })
+
             if parts == ["process"]:
                 recipe = Recipe.from_dict({**params, "dataset_path": dataset_path,
                                            "export_path": out_path})
-                _, report = Executor(recipe).run()
+                try:
+                    for cfg in recipe.process:
+                        validate_op_config(cfg, strict=False)
+                except KeyError as e:
+                    return self._err(404, "unknown_op", str(e.args[0] if e.args else e))
+                _, report = Pipeline.from_recipe(recipe).execute()
                 return self._send(200, {
                     "status": "ok", "export_path": out_path,
                     "n_in": report.n_in, "n_out": report.n_out,
                     "plan": report.plan, "seconds": report.seconds,
                 })
+        except JobStoreFull as e:
+            return self._err(503, "job_store_full", str(e))
         except Exception as e:  # noqa: BLE001
-            return self._send(500, {"error": f"{type(e).__name__}: {e}"})
-        return self._send(404, {"error": "not found"})
+            return self._err(500, "internal", f"{type(e).__name__}: {e}")
+        return self._err(404, "not_found", "not found")
+
+    def _submit_job(self, spec: dict):
+        """POST /jobs: validate up front (fail fast with 4xx), then enqueue —
+        the handler returns in milliseconds regardless of job duration."""
+        from repro.core.recipes import Recipe
+        from repro.core.registry import validate_op_config
+        from repro.api import Pipeline
+
+        process = spec.get("process")
+        if not isinstance(process, list) or not process:
+            return self._err(400, "missing_param",
+                             "body must contain a non-empty 'process' list")
+        if not spec.get("dataset_path"):
+            return self._err(400, "missing_param", "dataset_path required")
+        try:
+            for cfg in process:
+                if not isinstance(cfg, dict):
+                    raise TypeError(f"op config must be an object, got {cfg!r}")
+                validate_op_config(cfg, strict=bool(spec.get("strict", False)))
+        except KeyError as e:
+            return self._err(404, "unknown_op", str(e.args[0] if e.args else e))
+        except TypeError as e:
+            return self._err(400, "invalid_params", str(e))
+
+        pipe = Pipeline.from_recipe(Recipe.from_dict(
+            {k: v for k, v in spec.items() if k != "strict"}))
+        job = self.server.jobs.submit(pipe)
+        return self._send(202, {"job_id": job.id, "state": job.state,
+                                "poll": f"/jobs/{job.id}"})
 
 
-def serve(host: str = "127.0.0.1", port: int = 8123) -> ThreadingHTTPServer:
-    srv = ThreadingHTTPServer((host, port), _Handler)
+def serve(host: str = "127.0.0.1", port: int = 8123,
+          max_workers: int = 2, max_jobs: int = 64) -> DJServer:
+    srv = DJServer((host, port), _Handler, max_workers=max_workers,
+                   max_jobs=max_jobs)
     t = threading.Thread(target=srv.serve_forever, daemon=True)
     t.start()
     return srv

@@ -1,5 +1,7 @@
 """Interface layer: RESTful server, NL agent, CLI."""
 import json
+import time
+import urllib.error
 import urllib.request
 
 import pytest
@@ -7,7 +9,39 @@ import pytest
 from repro.core.dataset import DJDataset
 from repro.core.storage import write_jsonl
 from repro.data.synthetic import make_corpus
-from repro.interface.nl import parse_intent, run_request
+from repro.interface.nl import build_pipeline, parse_intent, run_request
+
+
+from repro.core.ops_base import Mapper
+from repro.core.registry import register
+
+
+@register("sleepy_mapper")
+class SleepyMapper(Mapper):
+    """Test-only slow mapper: makes async jobs observably long-running."""
+
+    def __init__(self, delay: float = 0.002, **kw):
+        super().__init__(delay=delay, **kw)
+        self.delay = delay
+
+    def process_single(self, sample):
+        time.sleep(self.delay)
+        return sample
+
+
+def _get(url):
+    with urllib.request.urlopen(url) as r:
+        return r.status, json.loads(r.read())
+
+
+def _req(url, data=None, method="POST"):
+    req = urllib.request.Request(url, data=data, method=method,
+                                 headers={"Content-Type": "application/json"})
+    try:
+        with urllib.request.urlopen(req) as r:
+            return r.status, json.loads(r.read())
+    except urllib.error.HTTPError as e:
+        return e.code, json.loads(e.read())
 
 
 def test_nl_intent_parsing():
@@ -66,6 +100,129 @@ def test_restful_server(tmp_path):
         srv.shutdown()
 
 
+def test_nl_span_aware_number_binding():
+    turns = parse_intent("drop short text under 50 and dedup at threshold 0.8")
+    by_fn = {t.function: t.arguments for t in turns}
+    assert by_fn["text_length_filter"]["min_val"] == 50
+    assert by_fn["document_minhash_deduplicator"]["jaccard_threshold"] == 0.8
+    # no cross-contamination: the 0.8 never reached the text filter
+    assert "threshold" not in by_fn["text_length_filter"]
+    assert by_fn["document_minhash_deduplicator"]["jaccard_threshold"] != 50
+
+    # a greedy intent regex spanning the whole request must not steal a
+    # bare number from the nearer intent
+    turns = parse_intent("filter low quality below 0.6 and drop short text")
+    by_fn = {t.function: t.arguments for t in turns}
+    assert by_fn["quality_score_filter"]["min_val"] == 0.6
+    assert by_fn["text_length_filter"]["min_val"] == 80  # default kept
+
+
+def test_nl_emits_pipeline():
+    pipe, turns = build_pipeline("lowercase everything then dedup the corpus")
+    names = [s["name"] for s in pipe._steps]
+    assert names == ["lowercase_mapper", "document_minhash_deduplicator"]
+    info = pipe.explain()  # lazy plan, explainable without a source
+    assert info["segments"][-1]["barrier"] is True
+
+
+def test_restful_error_codes(tmp_path):
+    from repro.interface.server import serve
+
+    src = str(tmp_path / "d.jsonl")
+    write_jsonl(src, make_corpus(20, seed=7))
+    srv = serve(port=0)
+    port = srv.server_address[1]
+    base = f"http://127.0.0.1:{port}"
+    try:
+        # unknown op name -> 404 structured payload (was a 500 KeyError)
+        code, out = _req(f"{base}/run/nope_mapper?dataset_path={src}", b"{}")
+        assert code == 404 and out["error"]["type"] == "unknown_op"
+        # malformed JSON body -> 400 (was a 500)
+        code, out = _req(f"{base}/run/lowercase_mapper?dataset_path={src}",
+                         b"{not json")
+        assert code == 400 and out["error"]["type"] == "malformed_json"
+        # bad kwargs -> 400 with the typed-signature message
+        code, out = _req(f"{base}/run/text_length_filter?dataset_path={src}",
+                         json.dumps({"min_len": 5}).encode())
+        assert code == 400 and out["error"]["type"] == "invalid_params"
+        # unknown op inside a recipe -> 404
+        code, out = _req(f"{base}/process?dataset_path={src}",
+                         json.dumps({"process": [{"name": "bogus_op"}]}).encode())
+        assert code == 404 and out["error"]["type"] == "unknown_op"
+        # op metadata now exposes the typed signature
+        code, out = _get(f"{base}/ops/text_length_filter")
+        assert code == 200
+        assert {p["name"] for p in out["params"]} == {"min_val", "max_val"}
+    finally:
+        srv.shutdown()
+        srv.server_close()
+
+
+def test_restful_job_lifecycle(tmp_path):
+    from repro.interface.server import serve
+
+    src = str(tmp_path / "d.jsonl")
+    write_jsonl(src, make_corpus(200, seed=8))
+    out_path = str(tmp_path / "job.jsonl")
+    srv = serve(port=0)
+    port = srv.server_address[1]
+    base = f"http://127.0.0.1:{port}"
+    try:
+        spec = {
+            "dataset_path": src, "export_path": out_path,
+            "process": [{"name": "sleepy_mapper", "delay": 0.02}],
+            "block_bytes": 512, "use_fusion": False, "use_reordering": False,
+        }
+        t0 = time.time()
+        # typed fields in the query string must be ignored (np=9 as the
+        # STRING "9" used to pass validation and crash the worker)
+        code, out = _req(f"{base}/jobs?np=9&use_fusion=true",
+                         json.dumps(spec).encode())
+        submit_seconds = time.time() - t0
+        assert code == 202 and out["state"] in ("queued", "running")
+        assert submit_seconds < 1.0  # returns immediately; the run takes ~4s
+        job_id = out["job_id"]
+
+        # poll: per-op progress rows fill while the job runs
+        deadline = time.time() + 30
+        rows = []
+        while time.time() < deadline:
+            code, st = _get(f"{base}/jobs/{job_id}")
+            rows = st["progress"]["per_op"]
+            if st["state"] == "running" and rows and rows[0]["in"] > 0:
+                break
+            time.sleep(0.02)
+        else:
+            pytest.fail("job never reported per-op progress")
+        assert rows[0]["op"] == "sleepy_mapper" and rows[0]["in"] < 200
+
+        # cancel mid-run
+        code, out = _req(f"{base}/jobs/{job_id}", method="DELETE")
+        assert code == 202
+        deadline = time.time() + 30
+        while time.time() < deadline:
+            code, st = _get(f"{base}/jobs/{job_id}")
+            if st["state"] not in ("queued", "running"):
+                break
+            time.sleep(0.02)
+        assert st["state"] == "cancelled"
+
+        # job appears in the listing; unknown ids 404
+        code, listing = _get(f"{base}/jobs")
+        assert any(j["job_id"] == job_id for j in listing["jobs"])
+        code, out = _req(f"{base}/jobs/missing", method="DELETE")
+        assert code == 404 and out["error"]["type"] == "unknown_job"
+        code, out = _req(f"{base}/jobs",
+                         json.dumps({"dataset_path": src,
+                                     "process": [{"name": "no_such"}]}).encode())
+        assert code == 404 and out["error"]["type"] == "unknown_op"
+        code, out = _req(f"{base}/jobs", json.dumps({"dataset_path": src}).encode())
+        assert code == 400 and out["error"]["type"] == "missing_param"
+    finally:
+        srv.shutdown()
+        srv.server_close()
+
+
 def test_cli(tmp_path, capsys):
     from repro.core.recipes import Recipe
     from repro.interface.cli import main
@@ -87,3 +244,43 @@ def test_cli(tmp_path, capsys):
 
     assert main(["analyze", "--dataset_path", src]) == 0
     assert "text_len" in capsys.readouterr().out
+
+
+def test_cli_explain_and_auto_analyze(tmp_path, capsys):
+    from repro.interface.cli import main
+
+    src = str(tmp_path / "d.jsonl")
+    write_jsonl(src, make_corpus(40, seed=9))
+    rec = tmp_path / "r.json"
+    rec.write_text(json.dumps({
+        "name": "explain-test", "dataset_path": src,
+        "process": [
+            {"name": "text_length_filter", "min_val": 100},
+            {"name": "words_num_filter", "min_val": 5},
+            {"name": "document_minhash_deduplicator"},
+        ],
+    }))
+    assert main(["explain", "--config", str(rec)]) == 0
+    out = capsys.readouterr().out
+    assert "optimized:" in out and "segment" in out
+    assert "fused<" in out  # the two filters were fused
+    assert "[barrier]: document_minhash_deduplicator" in out
+
+    # --auto used to be parsed but silently ignored; now it widens the
+    # stat-op set beyond the 4 defaults
+    assert main(["analyze", "--dataset_path", src]) == 0
+    default_out = capsys.readouterr().out
+    assert main(["analyze", "--dataset_path", src, "--auto"]) == 0
+    auto_out = capsys.readouterr().out
+    assert "text_len" in auto_out
+    assert len(auto_out.splitlines()) > len(default_out.splitlines())
+
+
+def test_analyze_does_not_mutate_samples():
+    from repro.api import analyze
+
+    samples = make_corpus(30, seed=10)
+    before = [json.dumps(s, sort_keys=True) for s in samples]
+    res = analyze(samples)
+    assert res["n"] == 30 and "text_len" in res["numeric"]
+    assert [json.dumps(s, sort_keys=True) for s in samples] == before

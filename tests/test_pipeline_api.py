@@ -1,0 +1,294 @@
+"""Lazy Pipeline API: lowering equivalence, explain, validation, jobs."""
+import time
+
+import pytest
+
+import repro.api as dj
+from repro.api.jobs import JobManager, JobState
+from repro.core.dataset import DJDataset
+from repro.core.executor import Executor
+from repro.core.ops_base import Mapper
+from repro.core.recipes import Recipe
+from repro.core.registry import register
+from repro.core.storage import write_jsonl
+from repro.data.synthetic import make_corpus
+
+
+@register("snail_mapper")
+class SnailMapper(Mapper):
+    """Test-only slow mapper: sleeps per sample to make runs cancellable."""
+
+    def __init__(self, delay: float = 0.002, **kw):
+        super().__init__(delay=delay, **kw)
+        self.delay = delay
+
+    def process_single(self, sample):
+        time.sleep(self.delay)
+        return sample
+
+
+RECIPE_PROCESS = [
+    {"name": "whitespace_normalization_mapper"},
+    {"name": "text_length_filter", "min_val": 100},
+    {"name": "words_num_filter", "min_val": 5},
+    {"name": "document_minhash_deduplicator", "jaccard_threshold": 0.7},
+]
+
+
+def _fixture(tmp_path, n=300, seed=0):
+    src = str(tmp_path / "corpus.jsonl")
+    write_jsonl(src, make_corpus(n, seed=seed))
+    return src
+
+
+def _pipeline(src, out):
+    return (dj.read_jsonl(src)
+            .map("whitespace_normalization_mapper")
+            .filter("text_length_filter", min_val=100)
+            .filter("words_num_filter", min_val=5)
+            .dedup(jaccard_threshold=0.7)
+            .write_jsonl(out))
+
+
+def test_lowering_equivalence_with_recipe_run(tmp_path):
+    """A fluent pipeline must produce the SAME optimized plan and
+    byte-identical export as the equivalent recipe through Executor.run.
+
+    Reordering is pinned off: it sorts commutative filters by wall-clock
+    probed speed, so two independent probe runs can legitimately swap
+    near-equal filters — that nondeterminism belongs to the scheduler, not
+    to the lowering under test (fusion stays on)."""
+    src = _fixture(tmp_path)
+    out_a = str(tmp_path / "a.jsonl")
+    out_b = str(tmp_path / "b.jsonl")
+
+    recipe = Recipe.from_dict({"name": "fixture", "dataset_path": src,
+                               "export_path": out_a, "use_reordering": False,
+                               "process": RECIPE_PROCESS})
+    pipe = _pipeline(src, out_b).options(use_reordering=False)
+
+    # the lowering itself is the identity on the op chain
+    assert pipe.to_recipe().process == RECIPE_PROCESS
+    assert pipe.to_recipe().dataset_path == src
+
+    _, rep_recipe = Executor(recipe).run()
+    _, rep_pipe = pipe.execute()
+
+    assert rep_pipe.plan == rep_recipe.plan
+    assert any(op.startswith("fused<") for op in rep_pipe.plan)
+    assert rep_pipe.n_out == rep_recipe.n_out
+    with open(out_a, "rb") as fa, open(out_b, "rb") as fb:
+        assert fa.read() == fb.read()
+
+
+def test_pipeline_is_lazy_and_immutable(tmp_path):
+    src = _fixture(tmp_path, n=50)
+    base = dj.read_jsonl(src)
+    chained = base.filter("text_length_filter", min_val=100)
+    assert base._steps == ()  # chaining returned a NEW pipeline
+    assert len(chained._steps) == 1
+    # nothing has executed: no export file, no blocks decoded
+    assert not (tmp_path / "o.jsonl").exists()
+
+
+def test_explain_reports_segments_without_running(tmp_path):
+    src = _fixture(tmp_path)
+    info = _pipeline(src, str(tmp_path / "never_written.jsonl")).explain()
+    assert info["streaming"] is True
+    assert info["requested"][0] == "whitespace_normalization_mapper"
+    # fusion folded the two adjacent filters
+    assert any(op.startswith("fused<") for op in info["plan"])
+    assert info["segments"][-1] == {
+        "ops": ["document_minhash_deduplicator"], "barrier": True}
+    assert not (tmp_path / "never_written.jsonl").exists()
+
+
+def test_iter_blocks_streams_matching_output(tmp_path):
+    src = _fixture(tmp_path)
+    pipe = (dj.read_jsonl(src)
+            .map("whitespace_normalization_mapper")
+            .filter("text_length_filter", min_val=100))
+    ds, rep = pipe.execute()
+    streamed = [s for b in pipe.iter_blocks() for s in b.samples]
+    assert len(streamed) == rep.n_out
+    assert streamed == ds.samples()
+
+
+def test_kwarg_and_type_validation():
+    with pytest.raises(KeyError, match="did you mean"):
+        dj.Pipeline().op("text_lenght_filter")
+    with pytest.raises(TypeError, match="unexpected parameter"):
+        dj.Pipeline().filter("text_length_filter", min_len=10)
+    with pytest.raises(TypeError, match="not a Filter"):
+        dj.Pipeline().filter("lowercase_mapper")
+    with pytest.raises(TypeError, match="use .filter"):
+        dj.Pipeline().map("text_length_filter")
+    with pytest.raises(TypeError, match="unknown option"):
+        dj.Pipeline().options(engien="local")
+
+
+def test_from_samples_and_recipe_roundtrip(tmp_path):
+    samples = make_corpus(80, seed=4)
+    pipe = dj.from_samples(samples).filter("text_length_filter", min_val=200)
+    ds, rep = pipe.execute()
+    assert rep.n_in == 80 and len(ds) == rep.n_out
+    assert all(len(s["text"]) >= 200 for s in ds)
+    # the caller's samples were not mutated by the run (no ctx, no stats)
+    assert all("__ctx__" not in s for s in samples)
+    assert all(not s.get("stats") for s in samples)
+
+    for fname in ("frozen.json", "frozen.yaml"):
+        path = str(tmp_path / fname)
+        pipe.save_recipe(path, name="frozen")
+        rec = Recipe.load(path)
+        assert rec.name == "frozen"
+        assert rec.process == [{"name": "text_length_filter", "min_val": 200}]
+        assert dj.from_recipe(rec)._steps == tuple(rec.process)
+
+    # strings the YAML subset would reload as a different value are refused
+    bad = dj.Pipeline().map("text_formatter", text_key="123")
+    with pytest.raises(ValueError, match="simple-YAML"):
+        bad.save_recipe(str(tmp_path / "bad.yaml"))
+    bad.save_recipe(str(tmp_path / "bad.json"))  # JSON handles it fine
+
+
+def test_from_dataset_carries_engine():
+    from repro.core.engine import make_engine
+
+    ds = DJDataset.from_samples(make_corpus(20, seed=14),
+                                engine=make_engine("parallel", n_workers=2))
+    rec = dj.from_dataset(ds).filter("text_length_filter", min_val=10).to_recipe()
+    assert rec.engine == "parallel" and rec.np == 2
+    # explicit override still wins
+    rec2 = dj.from_dataset(ds).with_engine("local").to_recipe()
+    assert rec2.engine == "local"
+
+
+def test_job_manager_lifecycle(tmp_path):
+    src = _fixture(tmp_path, n=200, seed=5)
+    out = str(tmp_path / "job_out.jsonl")
+    # fusion/reordering off -> no adapter probe -> the slow op only ever
+    # runs inside the stream, where cancellation is polled per block
+    pipe = (dj.read_jsonl(src).op("snail_mapper", delay=0.02)
+            .write_jsonl(out)
+            .options(block_bytes=512, use_fusion=False, use_reordering=False))
+
+    jm = JobManager(max_workers=1, max_jobs=8)
+    try:
+        t0 = time.time()
+        job = jm.submit(pipe)
+        assert time.time() - t0 < 0.5  # submit never blocks on the run
+        assert job.state in (JobState.QUEUED, JobState.RUNNING)
+
+        # live per-op progress: rows fill in while the job runs
+        deadline = time.time() + 30
+        while time.time() < deadline:
+            st = jm.get(job.id).status()
+            rows = st["progress"]["per_op"]
+            if st["state"] == JobState.RUNNING and rows and rows[0]["in"] > 0:
+                break
+            time.sleep(0.02)
+        else:
+            pytest.fail("job never reported per-op progress")
+        assert rows[0]["op"] == "snail_mapper"
+        assert 0 < rows[0]["in"] < 200  # genuinely mid-run
+
+        jm.cancel(job.id)
+        deadline = time.time() + 30
+        while time.time() < deadline and not jm.get(job.id).done():
+            time.sleep(0.02)
+        st = jm.get(job.id).status()
+        assert st["state"] == JobState.CANCELLED
+        # cancelled export never became visible
+        assert not (tmp_path / "job_out.jsonl").exists()
+
+        # a fresh fast job completes and reports
+        job2 = jm.submit(dj.read_jsonl(src)
+                         .filter("text_length_filter", min_val=100))
+        deadline = time.time() + 30
+        while time.time() < deadline and not jm.get(job2.id).done():
+            time.sleep(0.02)
+        st2 = jm.get(job2.id).status()
+        assert st2["state"] == JobState.SUCCEEDED
+        assert st2["report"]["n_in"] == 200
+        assert st2["report"]["plan"] == ["text_length_filter"]
+    finally:
+        jm.shutdown()
+
+
+def test_job_pool_reaches_max_workers(tmp_path):
+    """Two slow jobs must run concurrently with max_workers=2, even when the
+    second is submitted after the first already started."""
+    src = _fixture(tmp_path, n=100, seed=11)
+    slow = (dj.read_jsonl(src).op("snail_mapper", delay=0.01)
+            .options(block_bytes=512, use_fusion=False, use_reordering=False))
+    jm = JobManager(max_workers=2, max_jobs=8)
+    try:
+        a = jm.submit(slow)
+        time.sleep(0.2)  # a is mid-run before b is submitted
+        b = jm.submit(slow)
+        deadline = time.time() + 10
+        while time.time() < deadline:
+            if (jm.get(a.id).state == JobState.RUNNING
+                    and jm.get(b.id).state == JobState.RUNNING):
+                break
+            time.sleep(0.02)
+        else:
+            pytest.fail("second worker never picked up the queued job")
+    finally:
+        for j in (a, b):
+            jm.cancel(j.id)
+        jm.shutdown()
+
+
+def test_cancel_queued_job_never_runs(tmp_path):
+    src = _fixture(tmp_path, n=100, seed=12)
+    slow = (dj.read_jsonl(src).op("snail_mapper", delay=0.01)
+            .options(block_bytes=512, use_fusion=False, use_reordering=False))
+    jm = JobManager(max_workers=1, max_jobs=8)
+    try:
+        blocker = jm.submit(slow)
+        queued = jm.submit(slow.write_jsonl(str(tmp_path / "never.jsonl")))
+        jm.cancel(queued.id)
+        assert jm.get(queued.id).state == JobState.CANCELLED
+        jm.cancel(blocker.id)
+        deadline = time.time() + 10
+        while time.time() < deadline and not jm.get(blocker.id).done():
+            time.sleep(0.02)
+        # the cancelled-while-queued job never executed
+        assert jm.get(queued.id).state == JobState.CANCELLED
+        assert not (tmp_path / "never.jsonl").exists()
+    finally:
+        jm.shutdown()
+
+
+def test_barriered_jobs_seed_full_plan(tmp_path):
+    """insight forces the barriered path; ops_total must reflect the whole
+    plan from the start, not just completed ops."""
+    src = _fixture(tmp_path, n=60, seed=13)
+    pipe = (dj.read_jsonl(src)
+            .map("whitespace_normalization_mapper")
+            .filter("text_length_filter", min_val=100)
+            .insight())
+    monitor = []
+    _, rep = pipe.execute(monitor=monitor)
+    assert not rep.streaming
+    assert [r["op"] for r in monitor] == rep.plan
+    assert monitor is not rep.per_op or len(monitor) == len(rep.plan)
+
+
+def test_job_store_is_bounded(tmp_path):
+    src = _fixture(tmp_path, n=20, seed=6)
+    jm = JobManager(max_workers=1, max_jobs=2)
+    try:
+        fast = dj.read_jsonl(src).map("lowercase_mapper")
+        a = jm.submit(fast)
+        deadline = time.time() + 30
+        while time.time() < deadline and not jm.get(a.id).done():
+            time.sleep(0.02)
+        jm.submit(fast)
+        jm.submit(fast)  # evicts the finished oldest instead of failing
+        with pytest.raises(KeyError):
+            jm.get(a.id)
+    finally:
+        jm.shutdown()
