@@ -1,11 +1,21 @@
 """Paper Table 2: MinHash dedup time vs dataset size (+ §E.1's 3.3x
-balanced-vs-vanilla comparison).
+balanced-vs-vanilla comparison), plus the streaming-vs-barriered dedup
+comparison (``run_streaming_mode``): a map -> filter -> dedup -> filter
+recipe executed (a) fully barriered, (b) streaming with dedup as a barrier
+segment, (c) streaming with the incremental keep-first stage, (d) streaming
+with the exact two-pass stage — wall-clock, peak traced memory, byte-level
+output checks.
 
 Validated ratios (scaled to this container):
   * 5x data  -> 4.02-5.62x time in the paper; we report time(5x)/time(1x).
   * balanced union-find + hash aggregation vs naive chaining.
+  * streaming keep-first >= 1.5x over the barriered run, flat memory.
 """
 from __future__ import annotations
+
+import os
+import tempfile
+import tracemalloc
 
 import numpy as np
 
@@ -68,5 +78,119 @@ def run(base_n: int = 600, scales=(1, 5), n_perm: int = 128):
          "TPU kernel (interpret mode; compiled-TPU timing N/A on CPU)")
 
 
+# ---------------------------------------------------------------------------
+# streaming dedup vs. the barriered run (ISSUE 3 acceptance benchmark)
+# ---------------------------------------------------------------------------
+
+MIN_STREAM_SPEEDUP = 1.5
+MIN_BLOCKS = 8
+_DEDUP = "document_minhash_deduplicator"
+
+
+def _dedup_recipe(src: str, out: str, mode: str, block_bytes: int,
+                  engine: str = "parallel"):
+    from repro.core.recipes import Recipe
+
+    return Recipe(
+        name=f"bench_dedup_{mode}", dataset_path=src, export_path=out,
+        process=[
+            {"name": "clean_links_mapper"},
+            {"name": "whitespace_normalization_mapper"},
+            {"name": "text_length_filter", "min_val": 30},
+            {"name": "words_num_filter", "min_val": 5},
+            {"name": _DEDUP, "jaccard_threshold": 0.6, "streaming": mode,
+             "super_batch": 512},
+            {"name": "alnum_ratio_filter", "min_val": 0.5},
+            {"name": "quality_score_filter", "min_val": 0.05},
+        ],
+        block_bytes=block_bytes, engine=engine, np=2,
+        use_fusion=False, use_reordering=False)
+
+
+def run_streaming_mode(n: int = 3000, quick: bool = False):
+    """map -> filter -> dedup -> filter, end-to-end through Executor.run:
+    wall-clock per mode, output equivalence, and peak traced memory for the
+    stream-to-disk configuration (keep-first holds O(band index), the
+    barriered run holds the whole dataset)."""
+    from repro.core.executor import Executor
+    from repro.core.storage import read_jsonl, write_jsonl
+
+    if quick:
+        n = 800
+    corpus = make_corpus(n, seed=11, dup_frac=0.3, near_dup_frac=0.15,
+                         multimodal_frac=0.0)
+    tmp = tempfile.mkdtemp(prefix="bench_dedup_stream_")
+    src = os.path.join(tmp, "in.jsonl")
+    write_jsonl(src, corpus)
+    block_bytes = max(1, os.path.getsize(src) // (MIN_BLOCKS + 2))
+    repeat = 1 if quick else 2
+
+    out = {m: os.path.join(tmp, f"out_{m}.jsonl")
+           for m in ("barriered", "off", "keep_first", "exact")}
+    t_bar = timeit(lambda: Executor(_dedup_recipe(
+        src, out["barriered"], "off", block_bytes)).run_barriered(), repeat=repeat)
+    emit("dedup_e2e_barriered", t_bar, f"n={n} full per-op materialization")
+
+    times = {}
+    for mode in ("off", "keep_first", "exact"):
+        ex = Executor(_dedup_recipe(src, out[mode], mode, block_bytes))
+        assert ex.streaming_eligible()
+        times[mode] = timeit(lambda ex=ex: ex.run(), repeat=repeat)
+        _, rep = Executor(_dedup_recipe(src, out[mode], mode, block_bytes)).run()
+        assert rep.streaming
+        emit(f"dedup_e2e_stream_{mode}", times[mode],
+             f"{t_bar / times[mode]:.2f}x vs barriered")
+
+    # output contracts: exact (and the barrier segment) reproduce the
+    # barriered bytes; keep-first keeps a superset of the exact keep set
+    with open(out["barriered"], "rb") as f:
+        ref = f.read()
+    with open(out["exact"], "rb") as f:
+        assert f.read() == ref, "exact streaming must be byte-identical"
+    with open(out["off"], "rb") as f:
+        assert f.read() == ref, "barrier-segment streaming must match"
+    kept_exact = {s["text"] for s in read_jsonl(out["exact"])}
+    kept_kf = {s["text"] for s in read_jsonl(out["keep_first"])}
+    assert kept_exact <= kept_kf, "keep-first must keep a superset"
+
+    # peak traced memory, stream-to-disk configuration (local engine —
+    # tracemalloc cannot see worker processes)
+    tracemalloc.start()
+    Executor(_dedup_recipe(src, out["keep_first"], "keep_first", block_bytes,
+                           engine="local")).run_streaming(materialize=False)
+    _, peak_s = tracemalloc.get_traced_memory()
+    tracemalloc.stop()
+    tracemalloc.start()
+    Executor(_dedup_recipe(src, out["barriered"], "off", block_bytes,
+                           engine="local")).run_barriered()
+    _, peak_b = tracemalloc.get_traced_memory()
+    tracemalloc.stop()
+
+    try:
+        import resource
+
+        rss = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+    except Exception:  # noqa: BLE001 — resource is POSIX-only
+        rss = 0
+    speedup = t_bar / times["keep_first"]
+    emit("dedup_stream_speedup", times["keep_first"],
+         f"keep_first {speedup:.2f}x vs barriered (target >={MIN_STREAM_SPEEDUP}x), "
+         f"peak mem {peak_s / 2**20:.1f}MB vs {peak_b / 2**20:.1f}MB "
+         f"({peak_b / max(peak_s, 1):.2f}x lower), process ru_maxrss {rss}KB")
+    if not quick:  # quick corpora are too small for stable wall-clock margins
+        assert speedup >= MIN_STREAM_SPEEDUP, (
+            f"streaming dedup speedup {speedup:.2f}x < {MIN_STREAM_SPEEDUP}x")
+        assert peak_s < peak_b, "streaming dedup peak memory must be lower"
+    return speedup
+
+
 if __name__ == "__main__":
-    run()
+    import sys
+
+    from benchmarks.common import dump_json, parse_bench_args
+
+    quick, json_path = parse_bench_args(sys.argv[1:])
+    run(base_n=150 if quick else 600)
+    run_streaming_mode(quick=quick)
+    if json_path:
+        dump_json(json_path)

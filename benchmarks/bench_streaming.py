@@ -113,4 +113,9 @@ def run(n: int = 4000, quick: bool = False):
 if __name__ == "__main__":
     import sys
 
-    run(quick="--quick" in sys.argv)
+    from benchmarks.common import dump_json, parse_bench_args
+
+    quick, json_path = parse_bench_args(sys.argv[1:])
+    run(quick=quick)
+    if json_path:
+        dump_json(json_path)

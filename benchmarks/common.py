@@ -20,3 +20,27 @@ ROWS: List[Tuple[str, float, str]] = []
 def emit(name: str, seconds: float, derived: str = "") -> None:
     ROWS.append((name, seconds * 1e6, derived))
     print(f"{name},{seconds * 1e6:.1f},{derived}")
+
+
+def dump_json(path: str) -> None:
+    """Write every emitted row to ``path`` as JSON — the CI bench-smoke
+    artifact format (one object per row: name, us_per_call, derived)."""
+    import json
+
+    with open(path, "w") as f:
+        json.dump([{"name": n, "us_per_call": u, "derived": d}
+                   for n, u, d in ROWS], f, indent=2)
+    print(f"[bench] wrote {len(ROWS)} rows to {path}")
+
+
+def parse_bench_args(argv: List[str]) -> Tuple[bool, str]:
+    """Shared benchmark CLI: returns (quick, json_path). Accepts
+    ``--quick`` and ``--json PATH``."""
+    quick = "--quick" in argv
+    json_path = ""
+    if "--json" in argv:
+        i = argv.index("--json")
+        if i + 1 >= len(argv):
+            raise SystemExit("--json requires a PATH argument")
+        json_path = argv[i + 1]
+    return quick, json_path

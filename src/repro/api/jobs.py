@@ -5,10 +5,19 @@ with a bounded in-memory job store: ``submit()`` returns immediately (a
 TB-scale run must not block a synchronous HTTP handler), status polling
 reads the live per-op monitor rows the streaming executor mutates in
 place, and ``cancel()`` flips an event the executor polls once per block.
+
+With a ``job_dir``, every state transition snapshots the store to
+``<job_dir>/jobs.jsonl`` (one JSON record per job, atomic replace), and a
+restarted manager restores prior jobs from it: finished jobs report their
+final state, progress rows and report unchanged; jobs that were queued or
+running when the process died surface as ``failed`` with an
+"interrupted by restart" error (their threads are gone — honesty over
+optimism). Restored jobs are status-only (``restored: true``).
 """
 from __future__ import annotations
 
 import dataclasses
+import os
 import queue
 import threading
 import time
@@ -17,6 +26,7 @@ from collections import OrderedDict
 from typing import Any, Dict, List, Optional
 
 from repro.core.dataset import ExecutionCancelled
+from repro.core.storage import json_dumps, json_loads
 
 
 class JobState:
@@ -50,6 +60,7 @@ class Job:
     started_at: Optional[float] = None
     finished_at: Optional[float] = None
     cancel_event: threading.Event = dataclasses.field(default_factory=threading.Event)
+    restored: bool = False  # loaded from a snapshot — status-only, no pipeline
 
     def cancel(self) -> None:
         self.cancel_event.set()
@@ -69,6 +80,8 @@ class Job:
             "finished_at": self.finished_at,
             "error": self.error,
         }
+        if self.restored:
+            out["restored"] = True
         if verbose:
             rows = [dict(r) for r in list(self.monitor)]
             for r in rows:
@@ -80,7 +93,7 @@ class Job:
             }
             if self.report is not None:
                 rep = self.report
-                out["report"] = {
+                out["report"] = rep if isinstance(rep, dict) else {
                     "recipe": rep.recipe, "n_in": rep.n_in, "n_out": rep.n_out,
                     "seconds": rep.seconds, "plan": rep.plan,
                     "errors": rep.errors, "streaming": rep.streaming,
@@ -97,14 +110,77 @@ class JobManager:
     retained jobs are still live.
     """
 
-    def __init__(self, max_workers: int = 2, max_jobs: int = 64):
+    def __init__(self, max_workers: int = 2, max_jobs: int = 64,
+                 job_dir: Optional[str] = None):
         self.max_workers = max(1, max_workers)
         self.max_jobs = max(1, max_jobs)
+        self.job_dir = job_dir
         self._jobs: "OrderedDict[str, Job]" = OrderedDict()
         self._queue: "queue.Queue[Optional[str]]" = queue.Queue()
         self._lock = threading.Lock()
+        self._persist_lock = threading.Lock()  # serializes snapshot writes
         self._workers: List[threading.Thread] = []
         self._shutdown = False
+        if job_dir:
+            os.makedirs(job_dir, exist_ok=True)
+            self._restore()
+
+    # ------------------------------------------------------------------
+    # JSONL snapshot persistence
+    # ------------------------------------------------------------------
+    def _snapshot_path(self) -> Optional[str]:
+        return os.path.join(self.job_dir, "jobs.jsonl") if self.job_dir else None
+
+    def _persist(self) -> None:
+        """Atomically rewrite the snapshot (one status record per job).
+        Cheap at the store's bounded size; called on every transition."""
+        path = self._snapshot_path()
+        if path is None:
+            return
+        tmp = path + ".tmp"
+        with self._persist_lock:
+            # serialize INSIDE the write lock: a snapshot built before the
+            # lock could capture pre-transition state yet win the write
+            # race, persisting a stale (e.g. still-running) record over the
+            # newer one
+            with self._lock:
+                jobs = list(self._jobs.values())
+            lines = [json_dumps(j.status(verbose=True)) for j in jobs]
+            with open(tmp, "wb") as f:
+                for ln in lines:
+                    f.write(ln + b"\n")
+            os.replace(tmp, path)
+
+    def _restore(self) -> None:
+        """Load prior jobs from the snapshot. Jobs that were live when the
+        previous process died cannot be resumed (their threads are gone) —
+        they restore as FAILED with an explicit interruption error."""
+        path = self._snapshot_path()
+        if path is None or not os.path.exists(path):
+            return
+        with open(path, "rb") as f:
+            for raw in f:
+                raw = raw.strip()
+                if not raw:
+                    continue
+                try:
+                    rec = json_loads(raw)
+                except ValueError:
+                    continue  # torn line from a mid-write crash
+                job = Job(id=rec.get("job_id") or uuid.uuid4().hex[:12],
+                          pipeline=None, restored=True)
+                job.state = rec.get("state", JobState.FAILED)
+                job.error = rec.get("error")
+                job.created_at = rec.get("created_at") or job.created_at
+                job.started_at = rec.get("started_at")
+                job.finished_at = rec.get("finished_at")
+                job.monitor = list(rec.get("progress", {}).get("per_op") or [])
+                job.report = rec.get("report")
+                if job.state not in JobState.TERMINAL:
+                    job.state = JobState.FAILED
+                    job.error = "interrupted by server restart"
+                    job.finished_at = job.finished_at or time.time()
+                self._jobs[job.id] = job
 
     # ------------------------------------------------------------------
     def submit(self, pipeline, job_id: Optional[str] = None) -> Job:
@@ -122,6 +198,7 @@ class JobManager:
             self._jobs[job.id] = job
             self._ensure_workers()
         self._queue.put(job.id)
+        self._persist()
         return job
 
     def get(self, job_id: str) -> Job:
@@ -142,6 +219,7 @@ class JobManager:
             if job.state == JobState.QUEUED:
                 job.state = JobState.CANCELLED
                 job.finished_at = time.time()
+        self._persist()
         return job
 
     def shutdown(self, wait: bool = False) -> None:
@@ -182,6 +260,7 @@ class JobManager:
                     continue
                 job.state = JobState.RUNNING
                 job.started_at = time.time()
+            self._persist()
             try:
                 _, report = job.pipeline.execute(
                     monitor=job.monitor, cancel=job.cancel_event.is_set)
@@ -194,3 +273,4 @@ class JobManager:
                 job.state = JobState.FAILED
             finally:
                 job.finished_at = time.time()
+                self._persist()

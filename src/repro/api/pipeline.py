@@ -117,8 +117,17 @@ class Pipeline:
         _check_kind("filter", name)
         return self.op(name, **kwargs)
 
-    def dedup(self, name: str = "document_minhash_deduplicator", **kwargs) -> "Pipeline":
+    def dedup(self, name: str = "document_minhash_deduplicator",
+              streaming: Optional[str] = None, **kwargs) -> "Pipeline":
+        """Deduplicate. ``streaming`` picks the execution protocol under the
+        streaming executor: ``"off"`` (dataset barrier, exact),
+        ``"keep_first"`` (incremental stage, bounded memory, keeps a
+        documented superset of the exact result) or ``"exact"`` (two-pass
+        incremental stage, byte-identical to the barrier). ``None`` defers
+        to the op's own default."""
         _check_kind("dedup", name)
+        if streaming is not None:
+            kwargs["streaming"] = streaming
         return self.op(name, **kwargs)
 
     def select(self, name: str, **kwargs) -> "Pipeline":

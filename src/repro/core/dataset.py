@@ -77,6 +77,7 @@ def iter_stream_blocks(
     entries: Optional[List[dict]] = None,
     n_workers_hint: int = 1,
     cancel=None,
+    observer=None,
 ):
     """Generator core of the streaming executor: drive a lazy block iterator
     through a planned sequence of segments, yielding output blocks.
@@ -84,10 +85,15 @@ def iter_stream_blocks(
     Pipelineable segments stream block-by-block through the engine's
     ``map_block_chain`` (one dispatch per block per segment); barrier segments
     drain the stream, run the dataset-level OP on the materialized samples,
-    and re-split into blocks. ``entries`` (from :func:`seed_plan_entries`) is
-    mutated in place as blocks complete — live per-op progress. A ``cancel``
-    callable returning True aborts the stream with ExecutionCancelled,
-    checked once per block at the barrier drains and the output drain.
+    and re-split into blocks; *stateful* segments (streaming-capable dedup,
+    ``Segment.stateful``) thread the op's incremental state through the block
+    stream on the driver — blocks keep flowing, no materialization.
+    ``entries`` (from :func:`seed_plan_entries`) is mutated in place as
+    blocks complete — live per-op progress. A ``cancel`` callable returning
+    True aborts the stream with ExecutionCancelled, checked once per block at
+    the barrier drains, the stateful-stage ingests and the output drain.
+    An ``observer`` (``observer.tap(label, stream)`` returning a wrapped
+    stream) sees each segment's output blocks — the streaming insight hook.
     """
     if entries is None:
         entries = seed_plan_entries(segments)
@@ -103,10 +109,68 @@ def iter_stream_blocks(
         if cancel is not None and cancel():
             raise ExecutionCancelled("streaming run cancelled")
 
+    def charge(op_idx: int, st: dict) -> None:
+        # presign-mapper work belongs to the dedup op's entry, but only its
+        # time and errors — the stage itself owns the in/out counts (the
+        # mapper is 1->1 and would double-count)
+        entries[op_idx]["seconds"] += st["seconds"]
+        entries[op_idx]["errors"] += st["errors"]
+
+    # Stateful (streaming-dedup) stages can push their embarrassingly-
+    # parallel precompute (shingle + signature) into the engine's block
+    # dispatch. When a pipelineable chain directly precedes the stage, the
+    # sig mapper is APPENDED to that chain — no extra worker pool, the
+    # signatures ride the dispatch that was happening anyway and overlap
+    # with the driver-side band indexing. A stage with no preceding chain
+    # gets its own dispatch over the raw source.
+    segments = list(segments)
+    states: Dict[int, Any] = {}
+    attached: Dict[int, tuple] = {}  # chain seg idx -> (sig_ops, dedup op idx)
+    off = 0
+    prev_chain: Optional[int] = None
+    for idx, seg in enumerate(segments):
+        if getattr(seg, "stateful", False):
+            op = seg.ops[0]
+            op.setup()
+            state = op.streaming_state()
+            sig_ops = getattr(state, "presign_ops", lambda: None)()
+            if sig_ops and prev_chain == idx - 1:
+                attached[idx - 1] = (sig_ops, off)
+                states[idx] = (state, True)  # upstream already pre-signs
+            elif sig_ops:
+                states[idx] = (state, sig_ops)
+            else:
+                states[idx] = (state, None)
+            prev_chain = None
+        elif seg.barrier:
+            prev_chain = None
+        else:
+            prev_chain = idx
+        off += len(seg.ops)
+
     stream: Iterable[SampleBlock] = blocks
     offset = 0
-    for seg in segments:
-        if seg.barrier:
+    for idx, seg in enumerate(segments):
+        if getattr(seg, "stateful", False):
+            state, presign = states[idx]
+
+            def run_stateful(state=state, presign=presign, upstream=stream,
+                             offset=offset):
+                src = upstream
+                if presign not in (True, None):  # dedicated presign dispatch
+                    def presigned(upstream=src, sig_ops=presign):
+                        for blk, sig_stats in engine.map_block_chain(sig_ops, upstream):
+                            for st in sig_stats:
+                                charge(offset, st)
+                            yield blk
+                    src = presigned()
+                for blk, st in state.stream_blocks(src, check_cancel):
+                    record(offset, st)
+                    if len(blk):
+                        yield blk
+
+            stream = run_stateful()
+        elif seg.barrier:
             op = seg.ops[0]
             # drain FIRST: the lazy upstream executes here, and its time
             # belongs to the upstream ops' entries, not the barrier's
@@ -123,13 +187,24 @@ def iter_stream_blocks(
             stream = iter(split_blocks(out, n_workers=max(1, n_workers_hint),
                                        total_hint_bytes=max(1, len(out)) * 256))
         else:
-            def run(seg=seg, upstream=stream, offset=offset):
-                for blk, stats in engine.map_block_chain(seg.ops, upstream):
-                    # run_chain emits one entry per op in chain order
+            sig_ops, sig_owner = attached.get(idx, (None, None))
+            def run(seg=seg, upstream=stream, offset=offset,
+                    sig_ops=sig_ops, sig_owner=sig_owner):
+                chain = seg.ops + (sig_ops or [])
+                n_own = len(seg.ops)
+                for blk, stats in engine.map_block_chain(chain, upstream):
+                    # run_chain emits one entry per op in chain order; any
+                    # appended presign-mapper entries are charged to the
+                    # downstream dedup op they belong to
                     for k, st in enumerate(stats):
-                        record(offset + k, st)
+                        if k < n_own:
+                            record(offset + k, st)
+                        else:
+                            charge(sig_owner, st)
                     yield blk
             stream = run()
+        if observer is not None:
+            stream = observer.tap("+".join(o.name for o in seg.ops), stream)
         offset += len(seg.ops)
 
     for blk in stream:
@@ -146,6 +221,7 @@ def stream_segments(
     n_workers_hint: int = 1,
     monitor: Optional[List[dict]] = None,
     cancel=None,
+    observer=None,
 ) -> tuple:
     """Drain :func:`iter_stream_blocks`, writing completed blocks to ``sink``
     as they arrive, so with ``collect=False`` the full dataset is never
@@ -161,7 +237,7 @@ def stream_segments(
     out_blocks: List[SampleBlock] = []
     n_out = 0
     for blk in iter_stream_blocks(blocks, segments, engine, entries,
-                                  n_workers_hint, cancel):
+                                  n_workers_hint, cancel, observer):
         n_out += len(blk)
         if sink is not None:
             sink.write_block(blk)

@@ -369,9 +369,16 @@ class ShardedEngine:
 
     name = "sharded"
 
-    def __init__(self, mesh=None, fallback: Optional[LocalEngine] = None):
+    # device-sized super-batch: consecutive blocks are merged until this many
+    # rows are pending before a vectorized chain dispatch, so jit'd array
+    # programs see a few large arrays instead of many block-sized ones
+    SUPER_BATCH_ROWS = 4096
+
+    def __init__(self, mesh=None, fallback: Optional[LocalEngine] = None,
+                 super_batch_rows: Optional[int] = None):
         self.mesh = mesh
         self.fallback = fallback or LocalEngine()
+        self.super_batch_rows = max(1, super_batch_rows or self.SUPER_BATCH_ROWS)
 
     def map_batches(self, op, blocks, batch_size):
         fn = getattr(op, "compute_stats_arrays", None)
@@ -392,36 +399,64 @@ class ShardedEngine:
             n += len(blk)
         return out_blocks, EngineStats(seconds=time.time() - t0, samples=n, engine=self.name)
 
+    def _chain_samples(
+        self, ops: List[Operator], samples: List[Sample],
+        batch_size: Optional[int],
+    ) -> Tuple[List[Sample], List[dict]]:
+        """Drive one batch of samples through the chain: vectorized OPs run
+        as array programs, the rest fall back to the host chain."""
+        stats: List[dict] = []
+        for op in ops:
+            fn = getattr(op, "compute_stats_arrays", None)
+            if fn is not None and hasattr(op, "keep") and samples:
+                t0 = time.perf_counter()
+                n_in = len(samples)
+                stat_name, values = fn(samples)
+                kept = []
+                for s, v in zip(samples, np.asarray(values)):
+                    s.setdefault("stats", {})[stat_name] = float(v)
+                    if op.keep(s):
+                        kept.append(s)
+                samples = kept
+                stats.append({
+                    "op": op.name, "in": n_in, "out": len(samples),
+                    "seconds": time.perf_counter() - t0, "errors": 0,
+                })
+            else:
+                samples, sub = run_chain([op], samples, batch_size)
+                stats.extend(sub)
+        return samples, stats
+
     def map_block_chain(
         self, ops: List[Operator], blocks: Iterable[SampleBlock],
         batch_size: Optional[int] = None,
     ) -> Iterator[Tuple[SampleBlock, List[dict]]]:
-        """Streaming: per block, vectorized OPs run as array programs and the
-        rest fall back to the host chain — still one pass per block."""
+        """Streaming with super-batching (ROADMAP item): when the chain has a
+        vectorized OP, consecutive blocks are accumulated into device-sized
+        super-batches (``super_batch_rows``) before dispatch, so the jit'd
+        array program runs over one large sharded array instead of once per
+        host-sized block — fewer dispatches, full mesh occupancy. Chains with
+        no vectorized OP keep per-block latency."""
         for op in ops:
             op.setup()
+        vectorized = any(
+            getattr(op, "compute_stats_arrays", None) is not None
+            and hasattr(op, "keep") for op in ops)
+        if not vectorized:
+            for blk in blocks:
+                samples, stats = self._chain_samples(ops, blk.samples, batch_size)
+                yield SampleBlock(samples, nbytes=0), stats
+            return
+
+        pending: List[Sample] = []
         for blk in blocks:
-            samples = blk.samples
-            stats: List[dict] = []
-            for op in ops:
-                fn = getattr(op, "compute_stats_arrays", None)
-                if fn is not None and hasattr(op, "keep") and samples:
-                    t0 = time.perf_counter()
-                    n_in = len(samples)
-                    stat_name, values = fn(samples)
-                    kept = []
-                    for s, v in zip(samples, np.asarray(values)):
-                        s.setdefault("stats", {})[stat_name] = float(v)
-                        if op.keep(s):
-                            kept.append(s)
-                    samples = kept
-                    stats.append({
-                        "op": op.name, "in": n_in, "out": len(samples),
-                        "seconds": time.perf_counter() - t0, "errors": 0,
-                    })
-                else:
-                    samples, sub = run_chain([op], samples, batch_size)
-                    stats.extend(sub)
+            pending.extend(blk.samples)
+            if len(pending) >= self.super_batch_rows:
+                samples, stats = self._chain_samples(ops, pending, batch_size)
+                pending = []
+                yield SampleBlock(samples, nbytes=0), stats
+        if pending:
+            samples, stats = self._chain_samples(ops, pending, batch_size)
             yield SampleBlock(samples, nbytes=0), stats
 
 

@@ -9,20 +9,27 @@ Two execution paths through the runtime layer:
     between OPs. Required for per-OP insight mining and per-OP checkpoints.
   * streaming — the OP plan is partitioned into pipelineable segments
     (chains of batch-level Mappers/Filters) separated by barrier OPs
-    (Deduplicator / Selector / Grouper / Aggregator); each block traverses a
-    whole segment in ONE worker dispatch, fed by a bounded prefetch queue
-    from the streaming JSONL reader and exported block-by-block, so the full
-    dataset is only materialized at genuine barriers (paper §E.3, Fig. 4f).
+    (Selector / Grouper / Aggregator — and Deduplicator unless it opted into
+    the incremental streaming protocol, which runs as a stateful stream
+    STAGE instead); each block traverses a whole segment in ONE worker
+    dispatch, fed by a bounded prefetch queue from the streaming JSONL
+    reader and exported block-by-block, so the full dataset is only
+    materialized at genuine barriers (paper §E.3, Fig. 4f). Insight mining
+    rides the stream too (one snapshot per segment, SegmentInsightRecorder),
+    and the optimizer probe is a uniform reservoir over the first scan
+    window of the live block stream.
 
-``run()`` selects the streaming path automatically when the recipe has no
-barrier-requiring checkpoint/insight constraints; ``run_streaming()`` forces
-it (checkpointing then happens at segment boundaries instead of per-op).
+``run()`` selects the streaming path automatically unless the recipe
+checkpoints (operator-level checkpoints persist whole stages);
+``run_streaming()`` forces it (checkpointing then happens at segment
+boundaries instead of per-op).
 """
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import time
-from typing import Any, Dict, Iterable, Iterator, List, Optional
+from typing import Any, Dict, Iterable, Iterator, List, Optional, Tuple
 
 from repro.core.adapter import Adapter
 from repro.core.checkpoint import CheckpointManager, recipe_prefix_sigs
@@ -32,16 +39,19 @@ from repro.core.dataset import (
 )
 from repro.core.engine import make_engine
 from repro.core.fusion import optimize, plan_segments
-from repro.core.insight import InsightMiner
+from repro.core.insight import InsightMiner, SegmentInsightRecorder
 from repro.core.ops_base import Operator
 from repro.core.recipes import Recipe
 from repro.core.registry import create_op
 from repro.core.storage import (
     BlockPrefetcher, BlockWriter, SampleBlock, iter_sample_blocks,
-    read_jsonl, split_blocks,
+    read_jsonl, reservoir_sample, split_blocks,
 )
 
 PROBE_LIMIT = 1000
+# streaming probe: uniform reservoir over the first PROBE_SCAN_FACTOR x
+# PROBE_LIMIT rows of the block stream (vs. the old head-biased first-1000)
+PROBE_SCAN_FACTOR = 8
 # explain() is a dry-run surface: probe far fewer samples than a real run
 # so the command stays cheap even with slow/model-backed ops in the plan
 EXPLAIN_PROBE_LIMIT = 128
@@ -80,10 +90,12 @@ class Executor:
         return make_engine(r.engine, **({"n_workers": r.np} if r.engine == "parallel" else {}))
 
     def streaming_eligible(self) -> bool:
-        """Streaming drops the per-op dataset-wide barrier, so anything that
-        needs the full dataset after EVERY op keeps the barriered path."""
-        r = self.recipe
-        return not r.insight and not r.checkpoint_dir
+        """Streaming drops the per-op dataset-wide barrier. Insight mining
+        rides the block stream now (SegmentInsightRecorder: one timeline
+        entry per segment instead of per op), so only operator-level
+        checkpointing — which must persist whole stages — keeps the
+        barriered path on auto-selection."""
+        return not self.recipe.checkpoint_dir
 
     def run(self, dataset: Optional[DJDataset] = None,
             monitor: Optional[List[dict]] = None,
@@ -109,10 +121,36 @@ class Executor:
 
     def _probe_samples(self, dataset: Optional[DJDataset]) -> List[dict]:
         if dataset is not None:
-            return dataset.samples()[:PROBE_LIMIT]
+            # in-memory: hand the adapter the full pool — probe_small_batch
+            # picks its own random subset, matching the barriered path
+            return dataset.samples()
         if self.recipe.dataset_path:
             return list(read_jsonl(self.recipe.dataset_path, limit=PROBE_LIMIT))
         return []
+
+    def _probe_blocks(self, src: Iterable[SampleBlock]
+                      ) -> Tuple[List[dict], Iterable[SampleBlock]]:
+        """Reservoir-sampled probe over the first block pass.
+
+        Replaces the head-biased ``read_jsonl(limit=1000)`` probe for
+        streamed file sources: scan blocks off the live stream until the
+        reservoir window has seen PROBE_SCAN_FACTOR x PROBE_LIMIT rows (or
+        the stream ends), draw a uniform PROBE_LIMIT-row sample from that
+        window, and plan right then — the replan happens exactly once, when
+        the reservoir fills. The scanned blocks are replayed ahead of the
+        remaining stream, so nothing is decoded twice and resident memory
+        stays O(scan window). Deterministic (fixed seed + first-seen order),
+        so checkpoint resume re-derives the identical optimized plan."""
+        scanned: List[SampleBlock] = []
+        seen = 0
+        for blk in src:
+            scanned.append(blk)
+            seen += len(blk)
+            if seen >= PROBE_LIMIT * PROBE_SCAN_FACTOR:
+                break
+        probe = reservoir_sample(
+            (s for b in scanned for s in b.samples), PROBE_LIMIT)
+        return probe, itertools.chain(scanned, src)
 
     def explain(self, dataset: Optional[DJDataset] = None) -> Dict[str, Any]:
         """Optimized plan + streaming segments WITHOUT processing the
@@ -129,7 +167,8 @@ class Executor:
             "requested": [cfg.get("name") for cfg in r.process],
             "plan": [op.name for op in ops],
             "segments": [
-                {"ops": [o.name for o in seg.ops], "barrier": seg.barrier}
+                {"ops": [o.name for o in seg.ops], "barrier": seg.barrier,
+                 "stateful": seg.stateful}
                 for seg in segments
             ],
             "streaming": self.streaming_eligible(),
@@ -148,14 +187,18 @@ class Executor:
         if dataset is None and not r.dataset_path:
             raise ValueError("recipe has no dataset_path and no dataset given")
         engine = self._make_engine()
-        ops = self._optimize_ops(self._build_ops(), self._probe_samples(dataset))
-        segments = plan_segments(ops)
+        ops = self._build_ops()
         n_workers = getattr(engine, "n_workers", 1) or 1
         if dataset is not None:
             src: Iterable[SampleBlock] = iter(dataset.blocks)
+            ops = self._optimize_ops(ops, self._probe_samples(dataset))
         else:
             bb = {"block_bytes": r.block_bytes} if r.block_bytes else {}
             src = iter_sample_blocks(r.dataset_path, n_workers=n_workers, **bb)
+            if r.use_fusion or r.use_reordering:
+                probe, src = self._probe_blocks(src)
+                ops = self._optimize_ops(ops, probe)
+        segments = plan_segments(ops)
         entries = seed_plan_entries(segments)
         if monitor is not None:
             monitor.extend(entries)
@@ -186,14 +229,32 @@ class Executor:
             raise ValueError("recipe has no dataset_path and no dataset given")
 
         ops = self._build_ops()
-        # NOTE: with a file source the probe sees the first PROBE_LIMIT rows
-        # (streaming can't random-sample without a full decode); on corpora
-        # sorted by source/length the optimizer plan may differ from the
-        # barriered path's random-subset probe
-        ops = self._optimize_ops(ops, self._probe_samples(dataset))
+        n_workers = getattr(engine, "n_workers", 1) or 1
+
+        # source FIRST: with a file source the probe rides the live block
+        # stream (uniform reservoir over the first scan window, replayed
+        # ahead of the remaining stream) instead of a separate head-biased
+        # read_jsonl(limit=...) pass
+        counter = {"n": 0}
+        counted = None
+        if dataset is not None:
+            counter["n"] = len(dataset)
+            src: Iterable[SampleBlock] = iter(dataset.blocks)
+            ops = self._optimize_ops(ops, self._probe_samples(dataset))
+        else:
+            bb = {"block_bytes": r.block_bytes} if r.block_bytes else {}
+            counted = _count_blocks(
+                iter_sample_blocks(r.dataset_path, n_workers=n_workers, **bb), counter)
+            src = counted
+            if r.use_fusion or r.use_reordering:
+                # NOTE: on a checkpoint resume this scan is still required —
+                # the resume point is keyed by the OPTIMIZED plan's prefix
+                # sigs, and only the identical (deterministic) probe
+                # re-derives the identical plan
+                probe, src = self._probe_blocks(src)
+                ops = self._optimize_ops(ops, probe)
         plan = [op.name for op in ops]
         segments = plan_segments(ops)
-        n_workers = getattr(engine, "n_workers", 1) or 1
 
         # segment-boundary checkpointing (only when forced via run_streaming
         # with a checkpoint_dir — run() routes checkpointed recipes here only
@@ -210,21 +271,15 @@ class Executor:
         if ckpt:
             resumed_at, resumed_samples = ckpt.resume_point(op_cfgs, allowed=set(bounds))
 
-        counter = {"n": 0}
         if resumed_samples is not None:
             # original input size was persisted by the first (pre-crash) run;
             # fall back to the resumed-stage count if it predates that
-            counter["n"] = ckpt.get_meta("n_in", len(resumed_samples))
-            src: Iterable[SampleBlock] = iter(split_blocks(
+            counter = {"n": ckpt.get_meta("n_in", len(resumed_samples))}
+            if counted is not None:
+                counted.close()  # release the probed file stream promptly
+            src = iter(split_blocks(
                 resumed_samples, n_workers=n_workers,
                 total_hint_bytes=max(1, len(resumed_samples)) * 256))
-        elif dataset is not None:
-            counter["n"] = len(dataset)
-            src = iter(dataset.blocks)
-        else:
-            bb = {"block_bytes": r.block_bytes} if r.block_bytes else {}
-            src = _count_blocks(
-                iter_sample_blocks(r.dataset_path, n_workers=n_workers, **bb), counter)
         # sink first: a sink constructor failure must not strand a prefetch
         # thread that is already decoding blocks
         sink = BlockWriter(r.export_path) if r.export_path else None
@@ -233,6 +288,11 @@ class Executor:
         # blocks have no decode latency to overlap
         if prefetch and dataset is None and resumed_samples is None:
             src = prefetcher = BlockPrefetcher(src, depth=prefetch)
+        # streaming insight: tap the source (the "load" snapshot) and every
+        # segment's output stream — per-segment timeline, no barriers
+        recorder = SegmentInsightRecorder() if r.insight else None
+        if recorder is not None:
+            src = recorder.tap("load", src)
 
         remaining = [(seg, end) for seg, end in zip(segments, bounds) if end > resumed_at]
         entries: List[dict] = []
@@ -249,7 +309,7 @@ class Executor:
                     blocks, ent, n_out = stream_segments(
                         src, [seg], engine, sink=sink if is_last else None,
                         collect=True, n_workers_hint=n_workers,
-                        monitor=monitor, cancel=cancel)
+                        monitor=monitor, cancel=cancel, observer=recorder)
                     entries.extend(ent)
                     ckpt.save_stage(sigs[end - 1], end,
                                     [s for b in blocks for s in b.samples])
@@ -266,7 +326,7 @@ class Executor:
                 blocks, entries, n_out = stream_segments(
                     src, [seg for seg, _ in remaining], engine, sink=sink,
                     collect=materialize, n_workers_hint=n_workers,
-                    monitor=monitor, cancel=cancel)
+                    monitor=monitor, cancel=cancel, observer=recorder)
             ok = True
         finally:
             if sink is not None:
@@ -279,6 +339,7 @@ class Executor:
             recipe=r.name, n_in=counter["n"], n_out=n_out,
             seconds=time.time() - t0, per_op=entries, plan=plan,
             resumed_at=resumed_at, errors=errors, streaming=True,
+            insight=recorder.report() if recorder is not None else "",
         )
         return DJDataset(blocks or [SampleBlock([])], engine), report
 

@@ -14,22 +14,32 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.adapter import OpProbe
 from repro.core.ops_base import (
-    BARRIER_TYPES, Filter, FusedOP, Mapper, Operator,
+    BARRIER_TYPES, Deduplicator, Filter, FusedOP, Mapper, Operator,
 )
 
 
+def is_stream_stage_op(op: Operator) -> bool:
+    """Dataset-level op that opted into the incremental streaming protocol
+    (``Deduplicator.supports_streaming``) — planned as a stateful stream
+    stage, not a barrier."""
+    return isinstance(op, Deduplicator) and op.supports_streaming()
+
+
 def is_barrier_op(op: Operator) -> bool:
-    return isinstance(op, BARRIER_TYPES)
+    return isinstance(op, BARRIER_TYPES) and not is_stream_stage_op(op)
 
 
 @dataclasses.dataclass
 class Segment:
-    """A unit of the streaming plan: either a chain of batch-level OPs
+    """A unit of the streaming plan: a chain of batch-level OPs
     (Mappers / Filters / FusedOPs) that one block can traverse end-to-end in
-    a single worker dispatch, or a single barrier OP."""
+    a single worker dispatch, a single barrier OP, or a single *stateful*
+    stream-stage OP (streaming-capable dedup) that consumes and emits blocks
+    incrementally on the driver."""
 
     ops: List[Operator]
     barrier: bool = False
+    stateful: bool = False
 
     def __len__(self):
         return len(self.ops)
@@ -38,19 +48,27 @@ class Segment:
 def plan_segments(ops: Sequence[Operator]) -> List[Segment]:
     """Partition an (already optimized) op plan into pipelineable segments
     separated by barrier ops. Consecutive non-barrier ops form one segment;
-    every barrier op is its own segment."""
+    every barrier op is its own segment; a streaming-capable dedup op is its
+    own NON-barrier (stateful) segment — blocks still flow through it."""
     segs: List[Segment] = []
     cur: List[Operator] = []
+
+    def cut():
+        nonlocal cur
+        if cur:
+            segs.append(Segment(cur))
+            cur = []
+
     for op in ops:
-        if is_barrier_op(op):
-            if cur:
-                segs.append(Segment(cur))
-                cur = []
+        if is_stream_stage_op(op):
+            cut()
+            segs.append(Segment([op], stateful=True))
+        elif is_barrier_op(op):
+            cut()
             segs.append(Segment([op], barrier=True))
         else:
             cur.append(op)
-    if cur:
-        segs.append(Segment(cur))
+    cut()
     return segs
 
 

@@ -56,6 +56,112 @@ def snapshot(samples: List[dict]) -> Dict[str, Any]:
     }
 
 
+class _NumericAcc:
+    """Bounded accumulator for one numeric stat in one stage: exact
+    count/mean/std from running sums, percentiles/histogram from a uniform
+    reservoir — O(reservoir), never O(samples)."""
+
+    __slots__ = ("n", "total", "sq", "reservoir", "cap", "_rng")
+
+    def __init__(self, cap: int = 4096, seed: int = 0):
+        self.n = 0
+        self.total = 0.0
+        self.sq = 0.0
+        self.reservoir: List[float] = []
+        self.cap = cap
+        self._rng = np.random.default_rng(seed)
+
+    def add(self, v: float) -> None:
+        self.n += 1
+        self.total += v
+        self.sq += v * v
+        if len(self.reservoir) < self.cap:  # Algorithm R
+            self.reservoir.append(v)
+        else:
+            j = int(self._rng.integers(self.n))
+            if j < self.cap:
+                self.reservoir[j] = v
+
+    def summary(self) -> StatSummary:
+        s = StatSummary.from_values(np.asarray(self.reservoir))
+        if self.n:
+            # exact moments from the running sums; the reservoir only
+            # approximates the order statistics / histogram
+            s.count = self.n
+            s.mean = self.total / self.n
+            s.std = float(np.sqrt(max(0.0, self.sq / self.n - s.mean ** 2)))
+        return s
+
+
+class SegmentInsightRecorder:
+    """Streaming-path insight mining (paper §F.3 without the barrier).
+
+    The barriered path snapshots the WHOLE dataset after every op; a
+    streaming run never materializes it. This recorder taps each segment's
+    output block stream and accumulates the same signals incrementally:
+    sample counts, exact numeric means/stds plus reservoir-sampled
+    percentiles/histograms (:class:`_NumericAcc`), and tag counts — bounded
+    memory regardless of dataset size. Each ``tap`` allocates its own stage
+    (repeated labels get a ``#2`` suffix, so a recipe that legally uses the
+    same op in two segments keeps two timeline entries). ``to_miner()``
+    rebuilds an InsightMiner timeline (one entry per segment instead of per
+    op) so ``diffs()``/``report()`` work unchanged on streamed runs.
+    """
+
+    def __init__(self):
+        self._order: List[str] = []
+        self._acc: Dict[str, Dict[str, Any]] = {}
+
+    def tap(self, label: str, stream):
+        """Wrap a block stream; observes every block that flows through.
+        Registers a FRESH stage per call, even if no block ever arrives."""
+        key, k = label, 2
+        while key in self._acc:
+            key, k = f"{label}#{k}", k + 1
+        self._stage(key)
+
+        def gen():
+            for blk in stream:
+                self.observe(key, blk.samples)
+                yield blk
+        return gen()
+
+    def _stage(self, label: str) -> Dict[str, Any]:
+        if label not in self._acc:
+            self._order.append(label)
+            self._acc[label] = {"n": 0, "numeric": {}, "tags": {}}
+        return self._acc[label]
+
+    def observe(self, label: str, samples: List[dict]) -> None:
+        acc = self._stage(label)
+        acc["n"] += len(samples)
+        for s in samples:
+            for k, v in (s.get("stats") or {}).items():
+                if isinstance(v, (int, float)) and not isinstance(v, bool):
+                    num = acc["numeric"].get(k)
+                    if num is None:
+                        num = acc["numeric"][k] = _NumericAcc()
+                    num.add(float(v))
+                elif isinstance(v, str):
+                    tag = acc["tags"].setdefault(k, {})
+                    tag[v] = tag.get(v, 0) + 1
+
+    def to_miner(self) -> "InsightMiner":
+        miner = InsightMiner()
+        for label in self._order:
+            acc = self._acc[label]
+            miner.timeline.append({"op": label, "snap": {
+                "n": acc["n"],
+                "numeric": {k: num.summary()
+                            for k, num in acc["numeric"].items()},
+                "tags": acc["tags"],
+            }})
+        return miner
+
+    def report(self) -> str:
+        return self.to_miner().report()
+
+
 class InsightMiner:
     def __init__(self, volume_flag: float = 0.5, mean_shift_flag: float = 0.25):
         self.volume_flag = volume_flag

@@ -177,12 +177,30 @@ class Filter(Operator):
 
 
 class Deduplicator(Operator):
-    """Dataset-level: computes hashes then drops duplicates (see dedup/)."""
+    """Dataset-level: computes hashes then drops duplicates (see dedup/).
+
+    Streaming protocol: a Deduplicator that can run as an *incremental
+    pipeline stage* (consuming and emitting blocks without a dataset-wide
+    barrier) reports ``supports_streaming() -> True`` and provides a fresh
+    per-run state object via ``streaming_state()`` (see
+    ``repro.core.dedup.streaming``). ``fusion.plan_segments`` then plans it
+    as a stateful stream segment instead of a barrier, and ``dedup()`` stays
+    the barriered fallback.
+    """
 
     dataset_level = True
 
     def dedup(self, samples: List[Sample]) -> List[Sample]:
         raise NotImplementedError
+
+    def supports_streaming(self) -> bool:
+        """True when this op (as configured) can run incrementally."""
+        return False
+
+    def streaming_state(self):
+        """Fresh stateful stream-stage driver; consumed by ONE segment
+        traversal (``state.stream_blocks(blocks, check_cancel)``)."""
+        raise NotImplementedError(f"{self.name} has no streaming variant")
 
     def process_batch(self, batch):  # pragma: no cover — executed dataset-level
         return batch

@@ -195,6 +195,26 @@ def iter_sample_blocks(
         yield blk
 
 
+def reservoir_sample(stream: Iterable[Any], k: int, seed: int = 0) -> List[Any]:
+    """Uniform k-sample over a stream (Vitter's Algorithm R): O(k) memory,
+    one pass, no full decode. Selected items are returned in first-seen
+    order so downstream probing stays deterministic. Replaces the
+    head-biased ``read_jsonl(limit=k)`` probe for streamed sources."""
+    import random
+
+    rng = random.Random(seed)
+    sample: List[tuple] = []  # (stream_index, item)
+    for i, item in enumerate(stream):
+        if len(sample) < k:
+            sample.append((i, item))
+        else:
+            j = rng.randrange(i + 1)
+            if j < k:
+                sample[j] = (i, item)
+    sample.sort(key=lambda t: t[0])
+    return [item for _, item in sample]
+
+
 class BlockWriter:
     """Streaming block sink: appends blocks to one JSONL (optionally .zst)
     file as they arrive, holding at most one block in flight. Writes go to a

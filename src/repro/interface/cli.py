@@ -76,7 +76,8 @@ def main(argv=None):
         print(f"requested: {' -> '.join(info['requested'])}")
         print(f"optimized: {' -> '.join(info['plan'])}")
         for i, seg in enumerate(info["segments"]):
-            kind = "barrier" if seg["barrier"] else "stream "
+            kind = "barrier" if seg["barrier"] else (
+                "stateful" if seg.get("stateful") else "stream ")
             print(f"  segment {i} [{kind}]: {' -> '.join(seg['ops'])}")
         return 0
 

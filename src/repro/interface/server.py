@@ -29,11 +29,15 @@ from repro.core.storage import json_dumps, json_loads
 class DJServer(ThreadingHTTPServer):
     """HTTP server owning the shared JobManager."""
 
-    def __init__(self, addr, handler, max_workers: int = 2, max_jobs: int = 64):
+    def __init__(self, addr, handler, max_workers: int = 2, max_jobs: int = 64,
+                 job_dir: str = None):
         super().__init__(addr, handler)
         from repro.api.jobs import JobManager
 
-        self.jobs = JobManager(max_workers=max_workers, max_jobs=max_jobs)
+        # job_dir makes the store durable: a restarted server reports prior
+        # jobs from the JSONL snapshot (interrupted ones surface as failed)
+        self.jobs = JobManager(max_workers=max_workers, max_jobs=max_jobs,
+                               job_dir=job_dir)
 
     def server_close(self):
         self.jobs.shutdown()
@@ -204,9 +208,10 @@ class _Handler(BaseHTTPRequestHandler):
 
 
 def serve(host: str = "127.0.0.1", port: int = 8123,
-          max_workers: int = 2, max_jobs: int = 64) -> DJServer:
+          max_workers: int = 2, max_jobs: int = 64,
+          job_dir: str = None) -> DJServer:
     srv = DJServer((host, port), _Handler, max_workers=max_workers,
-                   max_jobs=max_jobs)
+                   max_jobs=max_jobs, job_dir=job_dir)
     t = threading.Thread(target=srv.serve_forever, daemon=True)
     t.start()
     return srv

@@ -7,14 +7,35 @@ import numpy as np
 
 from repro.kernels.minhash.minhash import BLOCK_D, BLOCK_P, minhash_pallas
 
+# smallest shingle-axis bucket; buckets grow by powers of two (64, 128, ...)
+_MIN_BUCKET_S = 64
+
+
+def _bucket_up(n: int, base: int) -> int:
+    """Next power-of-two multiple of ``base`` that is >= n."""
+    m = base
+    while m < n:
+        m *= 2
+    return m
+
 
 def minhash_signatures(
     hashes: np.ndarray, mask: np.ndarray, a: np.ndarray, b: np.ndarray,
-    interpret: bool = True,
+    interpret: bool = True, bucket: bool = True,
 ) -> jnp.ndarray:
     """hashes (D, S) uint64/uint32, mask (D, S) bool, a/b (P,) any int ->
     (D, P) uint32 signatures. Inputs are folded to uint32 and padded to
-    kernel block multiples."""
+    kernel block multiples.
+
+    With ``bucket`` (default), D and S pad up to power-of-two buckets
+    instead of exact block multiples: the S axis is a compile-time shape
+    (the kernel statically unrolls its chunk loop), so the streaming
+    ``SignatureBatcher`` — which dispatches super-batch after super-batch
+    with varying doc counts and shingle widths — would otherwise compile a
+    fresh kernel per distinct shape. Bucketing bounds the compile cache to
+    O(log) shapes; padded shingles carry ``mask=False`` (min-ignored) and
+    padded doc rows are sliced off, so values never change.
+    """
     h32 = (np.asarray(hashes, np.uint64) & 0xFFFFFFFF).astype(np.uint32) ^ (
         np.asarray(hashes, np.uint64) >> np.uint64(32)
     ).astype(np.uint32)
@@ -22,11 +43,12 @@ def minhash_signatures(
     b32 = np.asarray(b, np.uint64).astype(np.uint32)
     d, s = h32.shape
     p = a32.shape[0]
-    pd = (-d) % BLOCK_D
+    pd = (_bucket_up(d, BLOCK_D) if bucket else d + ((-d) % BLOCK_D)) - d
+    ps = (_bucket_up(s, _MIN_BUCKET_S) - s) if bucket else 0
     pp = (-p) % BLOCK_P
-    if pd:
-        h32 = np.pad(h32, ((0, pd), (0, 0)))
-        mask = np.pad(mask, ((0, pd), (0, 0)))
+    if pd or ps:
+        h32 = np.pad(h32, ((0, pd), (0, ps)))
+        mask = np.pad(mask, ((0, pd), (0, ps)))
     if pp:
         a32 = np.pad(a32, (0, pp), constant_values=1)
         b32 = np.pad(b32, (0, pp))

@@ -7,8 +7,53 @@ from typing import List
 import numpy as np
 
 from repro.core.dedup.minhash import minhash_dedup_indices
-from repro.core.ops_base import Deduplicator
+from repro.core.ops_base import Deduplicator, Mapper
 from repro.core.registry import register
+
+# sample-level carriers for worker-computed signatures; the streaming dedup
+# stage pops them before samples reach any sink/observer
+MH_DOC_KEY = "__mh_doc__"
+MH_SIG_KEY = "__mh_sig__"
+
+
+@register("minhash_signature_mapper")
+class MinHashSignatureMapper(Mapper):
+    """INTERNAL: worker-side shingle + MinHash-signature precompute for the
+    streaming dedup stage. Planted by ``StreamingMinHashState.presign_ops``
+    in front of the stateful segment so the embarrassingly-parallel 99% of
+    dedup compute rides the engine's pipelined block dispatch (overlapping
+    with driver-side band indexing) instead of serializing on the driver.
+    Annotates samples in place with numpy arrays under MH_DOC_KEY /
+    MH_SIG_KEY — never let these reach an export (the dedup stage strips
+    them)."""
+
+    commutative = False  # planted immediately before its dedup stage; pinned
+
+    def __init__(self, num_permutations: int = 128, ngram: int = 5,
+                 seed: int = 42, **kw):
+        super().__init__(num_permutations=num_permutations, ngram=ngram,
+                         seed=seed, **kw)
+        self._perm = None
+
+    def setup(self):
+        if self._perm is None:
+            from repro.core.dedup.minhash import make_permutations
+
+            self._perm = make_permutations(
+                self.params["num_permutations"], self.params["seed"])
+
+    def process_batch(self, batch):
+        from repro.core.dedup.minhash import shingle_hashes, signature_ref
+
+        a, b = self._perm
+        for s in batch:
+            d = shingle_hashes(s.get("text", ""), n=self.params["ngram"])
+            # signature from the RAW shingles (bit-exact with the barriered
+            # path); ship the uniqued array — Jaccard has set semantics, and
+            # unique halves the bytes crossing the worker boundary
+            s[MH_SIG_KEY] = signature_ref(d, a, b)
+            s[MH_DOC_KEY] = np.unique(d)
+        return batch
 
 
 @register("exact_text_deduplicator")
@@ -30,15 +75,51 @@ class ExactTextDeduplicator(Deduplicator):
 @register("document_minhash_deduplicator")
 class DocumentMinHashDeduplicator(Deduplicator):
     """MinHash-LSH fuzzy dedup (paper's minhash_deduplicator; engine-agnostic
-    algorithm parameters: jaccard_threshold / num_permutations)."""
+    algorithm parameters: jaccard_threshold / num_permutations).
+
+    ``streaming`` selects the execution protocol under the streaming
+    executor (``repro.core.dedup.streaming``):
+
+    * ``"off"`` (default) — dataset barrier, exact batch result.
+    * ``"keep_first"`` — single-pass incremental stage: blocks flow through,
+      O(index) resident memory; keeps a documented *superset* of the exact
+      result (retroactive component merges can't retract emitted docs).
+    * ``"exact"`` — two-pass incremental stage: pass 1 spills samples to
+      disk while building the pair registry, finalize replays with final
+      components — byte-identical to the barriered result, still bounded
+      resident memory.
+
+    ``super_batch`` sizes the cross-block signature super-batches,
+    ``spill_dir`` hosts the shingle/sample spill files (tmpdir by default).
+    """
 
     def __init__(self, jaccard_threshold: float = 0.7, num_permutations: int = 128,
                  num_bands: int = 16, ngram: int = 5, backend: str = "balanced",
-                 n_partitions: int = 8, use_kernel: bool = False, **kw):
+                 n_partitions: int = 8, use_kernel: bool = False,
+                 streaming: str = "off", super_batch: int = 2048,
+                 spill_dir: str = None, **kw):
+        if streaming not in ("off", "keep_first", "exact"):
+            raise ValueError(
+                f"streaming must be 'off', 'keep_first' or 'exact', got {streaming!r}")
         super().__init__(
             jaccard_threshold=jaccard_threshold, num_permutations=num_permutations,
             num_bands=num_bands, ngram=ngram, backend=backend,
-            n_partitions=n_partitions, use_kernel=use_kernel, **kw)
+            n_partitions=n_partitions, use_kernel=use_kernel,
+            streaming=streaming, super_batch=super_batch, spill_dir=spill_dir, **kw)
+
+    def supports_streaming(self) -> bool:
+        return self.params.get("streaming", "off") in ("keep_first", "exact")
+
+    def streaming_state(self):
+        from repro.core.dedup.streaming import StreamingMinHashState
+
+        p = self.params
+        return StreamingMinHashState(
+            n_perm=p["num_permutations"], n_bands=p["num_bands"],
+            ngram=p["ngram"], jaccard_threshold=p["jaccard_threshold"],
+            backend=p["backend"], n_partitions=p["n_partitions"],
+            use_kernel=p["use_kernel"], exact=p["streaming"] == "exact",
+            super_batch=p["super_batch"], spill_dir=p["spill_dir"])
 
     def dedup(self, samples):
         p = self.params
@@ -54,6 +135,26 @@ class DocumentMinHashDeduplicator(Deduplicator):
                 s.setdefault("stats", {})["dup_component"] = int(c)
                 out.append(s)
         return out
+
+
+@register("streaming_minhash_deduplicator")
+class StreamingMinHashDeduplicator(DocumentMinHashDeduplicator):
+    """Streaming-first registration of MinHash dedup: identical algorithm,
+    but defaults to the incremental keep-first pipeline stage so recipes /
+    Pipelines / REST jobs opt into streaming dedup by op name alone.
+    (Full signature restated so typed-signature kwarg validation keeps
+    accepting the algorithm parameters.)"""
+
+    def __init__(self, jaccard_threshold: float = 0.7, num_permutations: int = 128,
+                 num_bands: int = 16, ngram: int = 5, backend: str = "balanced",
+                 n_partitions: int = 8, use_kernel: bool = False,
+                 streaming: str = "keep_first", super_batch: int = 2048,
+                 spill_dir: str = None, **kw):
+        super().__init__(
+            jaccard_threshold=jaccard_threshold, num_permutations=num_permutations,
+            num_bands=num_bands, ngram=ngram, backend=backend,
+            n_partitions=n_partitions, use_kernel=use_kernel, streaming=streaming,
+            super_batch=super_batch, spill_dir=spill_dir, **kw)
 
 
 @register("distributed_minhash_deduplicator")

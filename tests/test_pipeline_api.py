@@ -99,7 +99,8 @@ def test_explain_reports_segments_without_running(tmp_path):
     # fusion folded the two adjacent filters
     assert any(op.startswith("fused<") for op in info["plan"])
     assert info["segments"][-1] == {
-        "ops": ["document_minhash_deduplicator"], "barrier": True}
+        "ops": ["document_minhash_deduplicator"], "barrier": True,
+        "stateful": False}
     assert not (tmp_path / "never_written.jsonl").exists()
 
 
@@ -263,13 +264,14 @@ def test_cancel_queued_job_never_runs(tmp_path):
 
 
 def test_barriered_jobs_seed_full_plan(tmp_path):
-    """insight forces the barriered path; ops_total must reflect the whole
-    plan from the start, not just completed ops."""
+    """checkpointing forces the barriered path (insight rides the stream
+    now); ops_total must reflect the whole plan from the start, not just
+    completed ops."""
     src = _fixture(tmp_path, n=60, seed=13)
     pipe = (dj.read_jsonl(src)
             .map("whitespace_normalization_mapper")
             .filter("text_length_filter", min_val=100)
-            .insight())
+            .checkpoint(str(tmp_path / "ckpt")))
     monitor = []
     _, rep = pipe.execute(monitor=monitor)
     assert not rep.streaming

@@ -199,11 +199,14 @@ def test_run_auto_selection(tmp_path, corpus):
     write_jsonl(src, corpus[:60])
     base = dict(dataset_path=src, process=MIXED[:2])
     assert Executor(Recipe(name="a", **base)).streaming_eligible()
-    assert not Executor(Recipe(name="b", insight=True, **base)).streaming_eligible()
+    # insight now rides the stream (SegmentInsightRecorder) — only
+    # operator-level checkpointing still forces the barriered path
+    assert Executor(Recipe(name="b", insight=True, **base)).streaming_eligible()
     assert not Executor(
         Recipe(name="c", checkpoint_dir=str(tmp_path / "ck"), **base)).streaming_eligible()
     _, rep = Executor(Recipe(name="d", insight=True, **base)).run()
-    assert not rep.streaming and rep.insight
+    assert rep.streaming and rep.insight
+    assert "load ->" in rep.insight, "per-segment timeline must start at load"
 
 
 def test_streaming_checkpoint_at_segment_boundaries(tmp_path, corpus):

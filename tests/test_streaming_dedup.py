@@ -1,0 +1,430 @@
+"""Streaming incremental MinHash-LSH dedup subsystem: component unit tests,
+keep-first/exact semantics vs the barriered oracle, end-to-end streaming
+equivalence, cancellation, checkpoint/resume across a dedup segment, the
+per-segment insight recorder, the reservoir probe, and job persistence."""
+import os
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.dataset import ExecutionCancelled
+from repro.core.dedup.minhash import (
+    candidate_pairs_hash_agg, jaccard, jaccard_unique, lsh_bands,
+    make_permutations, minhash_dedup_indices, shingle_hashes, signature_ref,
+    signatures_batch_vectorized,
+)
+from repro.core.dedup.streaming import (
+    LSHBandIndex, ShingleStore, SignatureBatcher, StreamingMinHashState,
+    StreamingUnionFind,
+)
+from repro.core.executor import Executor
+from repro.core.fusion import plan_segments
+from repro.core.recipes import Recipe
+from repro.core.registry import create_op
+from repro.core.storage import (
+    SampleBlock, read_jsonl, reservoir_sample, write_jsonl,
+)
+from repro.data.synthetic import make_corpus
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return make_corpus(400, seed=13, dup_frac=0.25, near_dup_frac=0.15)
+
+
+def dedup_recipe(src, out, mode, engine="local", **extra):
+    return Recipe(
+        name=f"t-{mode}", dataset_path=src, export_path=out,
+        process=[
+            {"name": "whitespace_normalization_mapper"},
+            {"name": "text_length_filter", "min_val": 30},
+            {"name": "document_minhash_deduplicator",
+             "jaccard_threshold": 0.6, "streaming": mode, "super_batch": 128},
+            {"name": "alnum_ratio_filter", "min_val": 0.6},
+        ],
+        block_bytes=4096, engine=engine, **extra)
+
+
+# ---------------------------------------------------------------------------
+# components
+# ---------------------------------------------------------------------------
+
+
+def test_signature_batcher_matches_reference(corpus):
+    texts = [s["text"] for s in corpus[:60]]
+    a, b = make_permutations(64)
+    batcher = SignatureBatcher(n_perm=64, super_batch=16)
+    sigs, payloads = [], []
+    for i, t in enumerate(texts):
+        batcher.add(t, i)
+        while batcher.ready:
+            p, _, s = batcher.flush()
+            payloads.extend(p)
+            sigs.append(s)
+    p, _, s = batcher.flush()
+    payloads.extend(p)
+    sigs.append(s)
+    got = np.concatenate([s for s in sigs if s.size])
+    ref = np.stack([signature_ref(shingle_hashes(t), a, b) for t in texts])
+    assert np.array_equal(got, ref), "super-batching must not change values"
+    assert payloads == list(range(len(texts))), "payload order must survive"
+    assert batcher.dispatches < len(texts), "batching must amortize dispatches"
+
+
+def test_vectorized_signatures_bit_exact(corpus):
+    a, b = make_permutations(128)
+    docs = [shingle_hashes(s["text"]) for s in corpus[:50]] + [
+        np.zeros(0, np.uint64)]
+    vec = signatures_batch_vectorized(docs, a, b)
+    ref = np.stack([signature_ref(d, a, b) for d in docs])
+    assert np.array_equal(vec, ref)
+
+
+def test_band_index_reproduces_hash_agg_pairs(corpus):
+    texts = [s["text"] for s in corpus[:80]]
+    a, b = make_permutations(32)
+    sigs = np.stack([signature_ref(shingle_hashes(t), a, b) for t in texts])
+    keys = lsh_bands(sigs, 8)
+    ref_pairs = set(candidate_pairs_hash_agg(keys))
+    idx = LSHBandIndex(8)
+    got = set()
+    for i, t in enumerate(texts):
+        for _, head, doc in idx.insert(i, keys[i], shingle_hashes(t)):
+            got.add((head, doc))
+    assert got == ref_pairs, "incremental insert must find the same candidates"
+
+
+def test_jaccard_unique_equals_set_jaccard(corpus):
+    for s, t in zip(corpus[:20], corpus[1:21]):
+        da, db = shingle_hashes(s["text"]), shingle_hashes(t["text"])
+        assert jaccard_unique(np.unique(da), np.unique(db)) == \
+            pytest.approx(jaccard(da, db))
+
+
+def test_shingle_store_spills_and_reloads():
+    store = ShingleStore(max_resident=4)
+    arrays = {i: np.arange(i + 1, dtype=np.uint64) * 7 for i in range(12)}
+    for i, arr in arrays.items():
+        store.put(i, arr)
+    assert store.spilled > 0, "past the resident budget entries must spill"
+    for i, arr in arrays.items():
+        assert np.array_equal(store.get(i), arr), f"doc {i} corrupted by spill"
+    assert store.reloads > 0
+    store.close()
+    assert store._path is None
+
+
+def test_streaming_union_find_keep_first():
+    uf = StreamingUnionFind()
+    for x in range(6):
+        uf.add(x)
+    uf.union(3, 5)
+    uf.union(1, 3)
+    assert uf.component_min(5) == 1
+    assert uf.component_min(0) == 0
+    uf.union(0, 5)
+    assert uf.component_min(3) == 0
+    assert not uf.union(1, 5), "already connected"
+
+
+# ---------------------------------------------------------------------------
+# planning
+# ---------------------------------------------------------------------------
+
+
+def test_plan_segments_streaming_dedup_is_stateful():
+    mk = lambda mode: [
+        create_op({"name": "whitespace_normalization_mapper"}),
+        create_op({"name": "document_minhash_deduplicator", "streaming": mode}),
+        create_op({"name": "text_length_filter", "min_val": 1}),
+    ]
+    segs = plan_segments(mk("keep_first"))
+    assert [(s.barrier, s.stateful) for s in segs] == [
+        (False, False), (False, True), (False, False)]
+    segs_off = plan_segments(mk("off"))
+    assert [(s.barrier, s.stateful) for s in segs_off] == [
+        (False, False), (True, False), (False, False)]
+
+
+def test_explain_reports_stateful_segments(tmp_path, corpus):
+    src = str(tmp_path / "in.jsonl")
+    write_jsonl(src, corpus[:50])
+    r = dedup_recipe(src, str(tmp_path / "o.jsonl"), "keep_first")
+    info = Executor(r).explain()
+    flags = [(tuple(s["ops"]), s["barrier"], s["stateful"])
+             for s in info["segments"]]
+    assert any(st and not b for _, b, st in flags), f"no stateful seg: {flags}"
+
+
+def test_streaming_op_validates_mode():
+    with pytest.raises(ValueError, match="streaming"):
+        create_op({"name": "document_minhash_deduplicator", "streaming": "bogus"})
+    op = create_op({"name": "streaming_minhash_deduplicator"})
+    assert op.supports_streaming()
+
+
+# ---------------------------------------------------------------------------
+# keep-first vs exact semantics (oracle = minhash_dedup_indices)
+# ---------------------------------------------------------------------------
+
+
+def run_state(texts, **kw):
+    """Drive texts through a StreamingMinHashState; returns kept indices."""
+    samples = [{"text": t, "meta": {"i": i}, "stats": {}}
+               for i, t in enumerate(texts)]
+    blocks = [SampleBlock(samples[i:i + 7]) for i in range(0, len(samples), 7)]
+    state = StreamingMinHashState(**kw)
+    kept = []
+    for blk, _ in state.stream_blocks(iter(blocks)):
+        kept.extend(s["meta"]["i"] for s in blk.samples)
+    return kept
+
+
+def test_exact_mode_equals_barriered_oracle(corpus):
+    texts = [s["text"] for s in corpus[:150]]
+    kw = dict(n_perm=64, n_bands=8, jaccard_threshold=0.5, super_batch=32)
+    keep_mask, _ = minhash_dedup_indices(texts, n_perm=64, n_bands=8,
+                                         jaccard_threshold=0.5)
+    exact = run_state(texts, exact=True, **kw)
+    assert exact == [i for i in range(len(texts)) if keep_mask[i]]
+
+
+def test_keep_first_superset_of_exact(corpus):
+    texts = [s["text"] for s in corpus[:150]]
+    kw = dict(n_perm=64, n_bands=8, jaccard_threshold=0.5, super_batch=32)
+    keep_mask, comp = minhash_dedup_indices(texts, n_perm=64, n_bands=8,
+                                            jaccard_threshold=0.5)
+    kf = set(run_state(texts, exact=False, **kw))
+    exact = {i for i in range(len(texts)) if keep_mask[i]}
+    assert exact <= kf, "exact keep set must be contained in keep-first's"
+    # every final component's first member is kept by both policies
+    firsts = {}
+    for i, c in enumerate(comp):
+        firsts.setdefault(int(c), i)
+    assert set(firsts.values()) <= kf
+
+
+def test_keep_first_containment_property():
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    vocab = ["alpha", "beta", "gamma", "delta", "eps", "zeta", "eta", "theta"]
+    doc = st.lists(st.sampled_from(vocab), min_size=0, max_size=12).map(" ".join)
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.lists(doc, min_size=0, max_size=30))
+    def check(texts):
+        kw = dict(n_perm=16, n_bands=4, ngram=3, jaccard_threshold=0.4,
+                  super_batch=5)
+        keep_mask, comp = minhash_dedup_indices(
+            texts, n_perm=16, n_bands=4, ngram=3, jaccard_threshold=0.4)
+        exact = {i for i in range(len(texts)) if keep_mask[i]}
+        kf = set(run_state(texts, exact=False, **kw))
+        # (1) containment: keep-first retains everything exact retains
+        assert exact <= kf
+        # (2) superset-consistency: anything keep-first drops, exact drops
+        #     for the same reason (same final component as an earlier doc)
+        for i in set(range(len(texts))) - kf:
+            earlier = [j for j in range(i) if comp[j] == comp[i]]
+            assert earlier, f"doc {i} dropped without an earlier duplicate"
+
+    check()
+
+
+# ---------------------------------------------------------------------------
+# end-to-end through Executor.run
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("engine", ["local", "parallel"])
+def test_streaming_dedup_e2e_exact_byte_identical(tmp_path, corpus, engine):
+    src = str(tmp_path / "in.jsonl")
+    write_jsonl(src, corpus)
+    out_s = str(tmp_path / f"s-{engine}.jsonl")
+    out_b = str(tmp_path / f"b-{engine}.jsonl")
+    np_kw = {"np": 2} if engine == "parallel" else {}
+    _, rep = Executor(dedup_recipe(src, out_s, "exact", engine, **np_kw)).run()
+    assert rep.streaming, "streaming dedup must keep the streaming path"
+    Executor(dedup_recipe(src, out_b, "off", engine, **np_kw)).run_barriered()
+    with open(out_s, "rb") as f_s, open(out_b, "rb") as f_b:
+        assert f_s.read() == f_b.read()
+    assert [e["op"] for e in rep.per_op] == rep.plan
+    assert rep.per_op[2]["in"] == rep.per_op[1]["out"] > 0
+
+
+def test_streaming_dedup_e2e_keep_first_contract(tmp_path, corpus):
+    src = str(tmp_path / "in.jsonl")
+    write_jsonl(src, corpus)
+    out_kf = str(tmp_path / "kf.jsonl")
+    out_ex = str(tmp_path / "ex.jsonl")
+    _, rep = Executor(dedup_recipe(src, out_kf, "keep_first")).run()
+    assert rep.streaming
+    Executor(dedup_recipe(src, out_ex, "exact")).run()
+    kf = [s["text"] for s in read_jsonl(out_kf)]
+    ex = [s["text"] for s in read_jsonl(out_ex)]
+    assert set(ex) <= set(kf)
+    # keep-first preserves arrival order of survivors
+    pos = {t: i for i, t in enumerate(kf)}
+    assert [pos[t] for t in ex if t in pos] == sorted(
+        pos[t] for t in ex if t in pos)
+
+
+def test_mid_dedup_cancellation_cleans_spills(tmp_path, corpus):
+    src = str(tmp_path / "in.jsonl")
+    write_jsonl(src, corpus)
+    spill = tmp_path / "spill"
+    out = str(tmp_path / "o.jsonl")
+    r = Recipe(
+        name="cancel", dataset_path=src, export_path=out,
+        process=[
+            {"name": "whitespace_normalization_mapper"},
+            {"name": "document_minhash_deduplicator", "streaming": "exact",
+             "super_batch": 16, "spill_dir": str(spill)},
+            {"name": "text_length_filter", "min_val": 1},
+        ],
+        block_bytes=2048, use_fusion=False, use_reordering=False)
+    calls = {"n": 0}
+
+    def cancel():
+        calls["n"] += 1
+        return calls["n"] > 4
+
+    with pytest.raises(ExecutionCancelled):
+        Executor(r).run(cancel=cancel)
+    # the stage's finally-close must remove its spill files
+    assert not os.path.exists(out), "cancelled run must not publish an export"
+    leftovers = list(spill.glob("*")) if spill.exists() else []
+    assert leftovers == [], f"spill files leaked: {leftovers}"
+
+
+def test_checkpoint_resume_across_streaming_dedup_segment(tmp_path, corpus):
+    src = str(tmp_path / "in.jsonl")
+    write_jsonl(src, corpus[:120])
+    out = str(tmp_path / "o.jsonl")
+    r = dedup_recipe(src, out, "keep_first",
+                     checkpoint_dir=str(tmp_path / "ckpt"),
+                     use_fusion=False, use_reordering=False)
+    _, rep1 = Executor(r).run_streaming()
+    assert rep1.resumed_at == 0 and rep1.streaming
+    with open(out, "rb") as f:
+        first = f.read()
+    # segments: [mapper+filter][dedup][filter] -> stages at {2, 3, 4}
+    _, rep2 = Executor(r).run_streaming()
+    assert rep2.resumed_at == 4, "resume must land on the final dedup-crossing stage"
+    assert rep2.n_out == rep1.n_out and rep2.n_in == rep1.n_in == 120
+    with open(out, "rb") as f:
+        assert f.read() == first, "resumed export must be identical"
+
+
+def test_streaming_insight_records_per_segment(tmp_path, corpus):
+    src = str(tmp_path / "in.jsonl")
+    write_jsonl(src, corpus[:100])
+    r = dedup_recipe(src, str(tmp_path / "o.jsonl"), "keep_first",
+                     insight=True)
+    _, rep = Executor(r).run()
+    assert rep.streaming and rep.insight
+    assert "load ->" in rep.insight
+    assert "document_minhash_deduplicator" in rep.insight
+
+
+def test_pipeline_dedup_streaming_kwarg(tmp_path, corpus):
+    from repro.api import Pipeline
+
+    src = str(tmp_path / "in.jsonl")
+    write_jsonl(src, corpus[:80])
+    out = str(tmp_path / "o.jsonl")
+    p = (Pipeline.read_jsonl(src)
+         .filter("text_length_filter", min_val=10)
+         .dedup(streaming="keep_first")
+         .write_jsonl(out))
+    info = p.explain()
+    assert any(s["stateful"] for s in info["segments"])
+    _, rep = p.execute()
+    assert rep.streaming and rep.n_out > 0
+    with pytest.raises(TypeError):
+        Pipeline.read_jsonl(src).dedup(streaming_mode="keep_first")
+
+
+# ---------------------------------------------------------------------------
+# reservoir probe
+# ---------------------------------------------------------------------------
+
+
+def test_reservoir_sample_uniform_and_deterministic():
+    items = list(range(10_000))
+    a = reservoir_sample(iter(items), 100, seed=7)
+    b = reservoir_sample(iter(items), 100, seed=7)
+    assert a == b, "same seed must reproduce the same sample"
+    assert a == sorted(a), "selected items keep first-seen order"
+    assert len(set(a)) == 100
+    assert np.mean(a) == pytest.approx(np.mean(items), rel=0.25), \
+        "sample must not be head-biased"
+    assert reservoir_sample(iter(range(5)), 100) == list(range(5))
+    assert reservoir_sample(iter([]), 3) == []
+
+
+def test_probe_blocks_replays_scanned_blocks(tmp_path, corpus):
+    src = str(tmp_path / "in.jsonl")
+    write_jsonl(src, corpus)
+    r = Recipe(name="p", dataset_path=src, process=[
+        {"name": "text_length_filter", "min_val": 1}], block_bytes=2048)
+    ex = Executor(r)
+    from repro.core.storage import iter_sample_blocks
+
+    blocks = iter_sample_blocks(src, block_bytes=2048)
+    probe, stream = ex._probe_blocks(blocks)
+    assert 0 < len(probe) <= 1000
+    replayed = [s["meta"]["id"] for b in stream for s in b.samples]
+    assert replayed == [s["meta"]["id"] for s in corpus], \
+        "probe must not consume or reorder the stream"
+
+
+# ---------------------------------------------------------------------------
+# job persistence
+# ---------------------------------------------------------------------------
+
+
+def test_job_manager_persists_and_restores(tmp_path, corpus):
+    from repro.api import Pipeline
+    from repro.api.jobs import JobManager
+
+    src = str(tmp_path / "in.jsonl")
+    write_jsonl(src, corpus[:60])
+    jd = str(tmp_path / "jobs")
+    m = JobManager(max_workers=1, job_dir=jd)
+    try:
+        p = (Pipeline.read_jsonl(src)
+             .filter("text_length_filter", min_val=10)
+             .dedup(streaming="keep_first"))
+        job = m.submit(p)
+        deadline = time.time() + 30
+        while not job.done() and time.time() < deadline:
+            time.sleep(0.05)
+        assert job.state == "succeeded"
+    finally:
+        m.shutdown(wait=True)
+
+    m2 = JobManager(max_workers=1, job_dir=jd)
+    st = m2.get(job.id).status()
+    assert st["restored"] and st["state"] == "succeeded"
+    assert st["progress"]["ops_total"] == 2
+    assert st["report"]["n_out"] > 0
+    m2.shutdown()
+
+
+def test_job_manager_marks_interrupted_jobs_failed(tmp_path):
+    from repro.api.jobs import JobManager
+    from repro.core.storage import json_dumps
+
+    jd = tmp_path / "jobs"
+    jd.mkdir()
+    with open(jd / "jobs.jsonl", "wb") as f:
+        f.write(json_dumps({"job_id": "j-run", "state": "running",
+                            "created_at": 1.0}) + b"\n")
+        f.write(b"{torn line\n")
+    m = JobManager(job_dir=str(jd))
+    job = m.get("j-run")
+    assert job.state == "failed"
+    assert "interrupted" in job.error
+    m.shutdown()
