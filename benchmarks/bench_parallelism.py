@@ -1,16 +1,34 @@
-"""Paper Fig. 10b: OP-wise hierarchical parallelism — multithreading for an
-I/O-intensive OP (reads per-image sidecar files, as image_aspect_ratio_filter
-reads images)."""
+"""Runtime parallelism benchmarks.
+
+1. Paper Fig. 10b: OP-wise hierarchical parallelism — multithreading for an
+   I/O-intensive OP (reads per-image sidecar files, as
+   image_aspect_ratio_filter reads images).
+2. Straggler injection: the adaptive WindowedDispatcher's speculative
+   re-dispatch on the STREAMING chain path (``map_block_chain``). ~10% of
+   blocks are artificially slow; the first attempt at a slow block stalls
+   (flag file marks the attempt, so a speculative backup runs at full speed
+   and the stalled original unwedges once the backup lands its done-marker —
+   a straggler that recovers, as a wedged I/O worker does). Reports
+   redispatch counts and end-to-end speedup vs. speculation disabled (the
+   pre-dispatcher behavior of the chain path), asserting byte-identical,
+   in-order output.
+
+CLI: ``--quick`` (CI-sized) and ``--json PATH`` (BENCH_*.json artifact).
+"""
 from __future__ import annotations
 
 import json
 import os
+import sys
 import tempfile
+import time
 
-from benchmarks.common import emit, timeit
+from benchmarks.common import dump_json, emit, parse_bench_args, timeit
 from repro.core.dataset import DJDataset
-from repro.core.engine import LocalEngine
-from repro.core.ops_base import Filter
+from repro.core.engine import LocalEngine, ParallelEngine
+from repro.core.ops_base import Filter, Mapper
+from repro.core.registry import create_op, register
+from repro.core.storage import SampleBlock
 from repro.data.synthetic import make_corpus
 
 
@@ -38,7 +56,93 @@ class SidecarAspectRatioFilter(Filter):
         return s["stats"]["aspect_ratio_max"] <= self.params["max_ratio"]
 
 
-def run(n: int = 800):
+@register("straggler_injection_mapper")
+class StragglerInjectionMapper(Mapper):
+    """Stalls on a marked sample the FIRST time its block is attempted.
+
+    The first attempt atomically claims ``<key>.flag`` and then stalls up to
+    ``delay`` seconds — polling for ``<key>.done``, which any LATER attempt
+    (a speculative backup, which sees the flag already claimed and runs at
+    full speed) writes on its way through. With speculation disabled every
+    slow block eats the full ``delay``; with speculation the backup finishes
+    in milliseconds and the stalled original recovers immediately after.
+    """
+
+    _name = "straggler_injection_mapper"
+
+    def __init__(self, flag_dir: str, delay: float = 1.0, **kw):
+        super().__init__(flag_dir=flag_dir, delay=delay, **kw)
+
+    def process_single(self, s):
+        key = s.get("meta", {}).get("straggle_key")
+        if key:
+            flag = os.path.join(self.params["flag_dir"], key + ".flag")
+            done = os.path.join(self.params["flag_dir"], key + ".done")
+            try:
+                os.close(os.open(flag, os.O_CREAT | os.O_EXCL | os.O_WRONLY))
+            except FileExistsError:
+                # later attempt: full speed; unwedge the stalled original
+                os.close(os.open(done, os.O_CREAT | os.O_WRONLY))
+            else:
+                deadline = time.time() + self.params["delay"]
+                while time.time() < deadline and not os.path.exists(done):
+                    time.sleep(0.01)
+        s["text"] = s.get("text", "").strip()
+        return s
+
+
+def _make_blocks(n_blocks: int, rows_per_block: int, slow_every: int):
+    corpus = make_corpus(n_blocks * rows_per_block, seed=31)
+    blocks = []
+    for b in range(n_blocks):
+        rows = [dict(s) for s in corpus[b * rows_per_block:(b + 1) * rows_per_block]]
+        if b % slow_every == 3:  # ~10% of blocks, first one early enough for
+            rows[0] = dict(rows[0])  # the completion estimator to be warm
+            rows[0]["meta"] = dict(rows[0].get("meta", {}), straggle_key=f"blk{b}")
+        blocks.append(SampleBlock(rows))
+    return blocks
+
+
+def run_straggler(quick: bool = False):
+    n_blocks = 12 if quick else 20
+    rows = 30 if quick else 50
+    delay = 0.6 if quick else 1.2
+    slow_every = 10  # 10% of blocks straggle
+
+    def run_once(speculate: bool):
+        with tempfile.TemporaryDirectory() as flags:
+            cfgs = [
+                {"name": "straggler_injection_mapper", "flag_dir": flags, "delay": delay},
+                {"name": "whitespace_normalization_mapper"},
+            ]
+            eng = ParallelEngine(n_workers=2, straggler_factor=2.0,
+                                 speculate=speculate, min_completions=2)
+            ops = [create_op(c) for c in cfgs]
+            blocks = _make_blocks(n_blocks, rows, slow_every)
+            t0 = time.perf_counter()
+            texts = [s["text"]
+                     for blk, _ in eng.map_block_chain(ops, iter(blocks))
+                     for s in blk.samples]
+            return texts, time.perf_counter() - t0, eng.dispatch_log[-1]
+
+    base_texts, base_t, base_sum = run_once(speculate=False)
+    spec_texts, spec_t, spec_sum = run_once(speculate=True)
+
+    assert spec_texts == base_texts, \
+        "speculative re-dispatch must keep output byte-identical and in order"
+    assert base_sum["redispatches"] == 0
+    assert spec_sum["redispatches"] >= 1, \
+        f"expected speculation to fire on slow blocks: {spec_sum}"
+    speedup = base_t / max(spec_t, 1e-9)
+    emit("straggler_chain_no_speculation", base_t, "baseline (chain path pre-dispatcher)")
+    emit("straggler_chain_speculative", spec_t,
+         f"{speedup:.2f}x; redispatches={spec_sum['redispatches']} "
+         f"wins={spec_sum['speculation_wins']}")
+    assert speedup >= 1.5, \
+        f"speculative chain dispatch speedup {speedup:.2f}x < 1.5x (10% slow blocks)"
+
+
+def run_hierarchical(n: int = 800):
     corpus = make_corpus(n, seed=31, multimodal_frac=0.9)
     with tempfile.TemporaryDirectory() as root:
         for s in corpus:
@@ -61,4 +165,8 @@ def run(n: int = 800):
 
 
 if __name__ == "__main__":
-    run()
+    quick, json_path = parse_bench_args(sys.argv[1:])
+    run_straggler(quick=quick)
+    run_hierarchical(n=200 if quick else 800)
+    if json_path:
+        dump_json(json_path)

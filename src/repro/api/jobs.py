@@ -97,6 +97,9 @@ class Job:
                     "recipe": rep.recipe, "n_in": rep.n_in, "n_out": rep.n_out,
                     "seconds": rep.seconds, "plan": rep.plan,
                     "errors": rep.errors, "streaming": rep.streaming,
+                    # per-segment adaptive-dispatch summaries (redispatches,
+                    # quarantined workers, window) — docs/runtime.md
+                    "dispatch": list(getattr(rep, "dispatch", ()) or ()),
                 }
         return out
 

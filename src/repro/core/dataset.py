@@ -56,9 +56,12 @@ def apply_dataset_op(op: Operator, samples: List[Sample]) -> List[Sample]:
 
 def seed_op_entries(ops: Sequence[Operator]) -> List[dict]:
     """One zero monitor entry per OP, in order — the shared row shape for
-    both executor paths' live progress."""
+    both executor paths' live progress. ``redispatches`` counts speculative
+    straggler re-submissions (charged to a segment's first op on the
+    streaming path, per-call engine stats on the barriered path)."""
     return [{"op": op.name, "seconds": 0.0, "in": 0, "out": 0,
-             "errors": 0, "speed": float("inf")} for op in ops]
+             "errors": 0, "speed": float("inf"), "redispatches": 0}
+            for op in ops]
 
 
 def seed_plan_entries(segments: Sequence) -> List[dict]:
@@ -116,6 +119,19 @@ def iter_stream_blocks(
         entries[op_idx]["seconds"] += st["seconds"]
         entries[op_idx]["errors"] += st["errors"]
 
+    charged_dispatch: set = set()  # summaries already attributed (by identity)
+
+    def charge_dispatch(op_idx: int, label: str, n0: int) -> None:
+        # attribute the engine's dispatch summaries (appended when a
+        # map_block_chain call finishes) to the segment's first op row.
+        # Label-matched because lazily chained segments interleave, and
+        # identity-deduped because two segments may share an op-name label
+        # (all segment generators run on the driver thread — no races)
+        for s in (getattr(engine, "dispatch_log", None) or [])[n0:]:
+            if s.get("label") == label and id(s) not in charged_dispatch:
+                charged_dispatch.add(id(s))
+                entries[op_idx]["redispatches"] += s.get("redispatches", 0)
+
     # Stateful (streaming-dedup) stages can push their embarrassingly-
     # parallel precompute (shingle + signature) into the engine's block
     # dispatch. When a pipelineable chain directly precedes the stage, the
@@ -159,10 +175,15 @@ def iter_stream_blocks(
                 src = upstream
                 if presign not in (True, None):  # dedicated presign dispatch
                     def presigned(upstream=src, sig_ops=presign):
-                        for blk, sig_stats in engine.map_block_chain(sig_ops, upstream):
-                            for st in sig_stats:
-                                charge(offset, st)
-                            yield blk
+                        label = "+".join(o.name for o in sig_ops)
+                        n0 = len(getattr(engine, "dispatch_log", ()))
+                        try:
+                            for blk, sig_stats in engine.map_block_chain(sig_ops, upstream):
+                                for st in sig_stats:
+                                    charge(offset, st)
+                                yield blk
+                        finally:
+                            charge_dispatch(offset, label, n0)
                     src = presigned()
                 for blk, st in state.stream_blocks(src, check_cancel):
                     record(offset, st)
@@ -192,16 +213,21 @@ def iter_stream_blocks(
                     sig_ops=sig_ops, sig_owner=sig_owner):
                 chain = seg.ops + (sig_ops or [])
                 n_own = len(seg.ops)
-                for blk, stats in engine.map_block_chain(chain, upstream):
-                    # run_chain emits one entry per op in chain order; any
-                    # appended presign-mapper entries are charged to the
-                    # downstream dedup op they belong to
-                    for k, st in enumerate(stats):
-                        if k < n_own:
-                            record(offset + k, st)
-                        else:
-                            charge(sig_owner, st)
-                    yield blk
+                label = "+".join(o.name for o in chain)
+                n0 = len(getattr(engine, "dispatch_log", ()))
+                try:
+                    for blk, stats in engine.map_block_chain(chain, upstream):
+                        # run_chain emits one entry per op in chain order; any
+                        # appended presign-mapper entries are charged to the
+                        # downstream dedup op they belong to
+                        for k, st in enumerate(stats):
+                            if k < n_own:
+                                record(offset + k, st)
+                            else:
+                                charge(sig_owner, st)
+                        yield blk
+                finally:
+                    charge_dispatch(offset, label, n0)
             stream = run()
         if observer is not None:
             stream = observer.tap("+".join(o.name for o in seg.ops), stream)
@@ -347,11 +373,13 @@ class DJDataset:
         n_before = len(self)
         bs = batch_size or op.default_batch_size
 
+        redispatches = 0
         if isinstance(op, BARRIER_TYPES):
             out = apply_dataset_op(op, self.samples())
             new_blocks = split_blocks(out, n_workers=max(1, len(self.blocks)))
         else:
-            new_blocks, _ = self.engine.map_batches(op, self.blocks, bs)
+            new_blocks, es = self.engine.map_batches(op, self.blocks, bs)
+            redispatches = int(es.get("redispatches", 0))
 
         if drop_empty:
             new_blocks = [
@@ -365,6 +393,7 @@ class DJDataset:
             "op": op.name, "seconds": dt, "in": n_before, "out": n_after,
             "errors": len(op.errors),
             "speed": n_before / dt if dt > 0 else float("inf"),
+            "redispatches": redispatches,
         }
         if monitor is not None:
             monitor.append(entry)

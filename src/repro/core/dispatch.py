@@ -1,0 +1,372 @@
+"""Adaptive windowed block dispatcher (paper §5: adaptive execution).
+
+One shared subsystem replaces the hand-rolled wait loops that used to live in
+``ParallelEngine.map_batches``, ``ParallelEngine.map_block_chain`` and
+``LocalEngine``'s threaded chain window. The :class:`WindowedDispatcher` owns:
+
+* the **bounded in-flight window** — at most ``window`` blocks are submitted
+  but not yet yielded, so results stream back in input order with bounded
+  buffering;
+* **per-block start/finish timing** and a running completion-time estimator
+  (median over a recent-completions deque);
+* **speculative re-dispatch** — once ``min_completions`` blocks have
+  finished, any block running longer than ``straggler_factor`` x the median
+  completion time gets ONE backup submission; the first finisher wins and the
+  loser is cancelled (or its result discarded when already running);
+* **failure retries** — a failed submission is retried while a backup is
+  still in flight or attempts remain; only when *every* submission for a
+  block has failed does the dispatcher surface an error outcome (the engine
+  then decides pass-through);
+* **adaptive window sizing** — the window grows when workers drain the queue
+  faster than blocks arrive (observed queue-wait << compute) and shrinks when
+  blocks pile up in the executor queue (queue-wait >> compute), bounded to
+  ``[n_workers + 1, 4 x n_workers]`` (see :func:`window_bounds`);
+* **per-worker health accounting** — a worker (process pid / thread ident)
+  that fails ``worker_failure_limit`` tasks is *quarantined*: subsequent
+  submissions carry the quarantine set and the worker-side guard bounces the
+  task back (without running it) for re-dispatch to a healthy worker, instead
+  of pass-through-ing the quarantined worker's blocks.
+
+The dispatcher is pool-agnostic: it drives any ``concurrent.futures``
+executor. For process pools the task function and its arguments must be
+picklable (the worker-side guard ``_guarded`` is module-level for exactly
+that reason); thread pools may pass closures.
+"""
+from __future__ import annotations
+
+import collections
+import concurrent.futures as cf
+import os
+import threading
+import time
+from typing import Any, Callable, Dict, Iterable, Iterator, List, Optional, Tuple
+
+# completion-time floor: sub-50ms medians would make speculation fire on
+# scheduler jitter alone
+MEDIAN_FLOOR = 0.05
+
+_END = object()  # iterator sentinel (None could be a legitimate item)
+
+
+class WorkerQuarantined(Exception):
+    """Raised by the worker-side guard when a quarantined worker picks up a
+    task: the payload is NOT executed; the dispatcher re-dispatches."""
+
+    def __init__(self, worker_id: str):
+        super().__init__(worker_id)
+        self.worker_id = worker_id
+
+
+class WorkerTaskFailure(Exception):
+    """A task payload raised in the worker. Carries the worker id (health
+    accounting) and, when the underlying exception exposes ``op_index`` (see
+    ``engine.ChainOpFailure``), which op of a chain failed. Picklable via
+    default (class, args) reduction."""
+
+    def __init__(self, worker_id: str, message: str, op_index: int = -1):
+        super().__init__(worker_id, message, op_index)
+        self.worker_id = worker_id
+        self.message = message
+        self.op_index = op_index
+
+
+def _worker_id() -> str:
+    # pid distinguishes process-pool workers; thread ident distinguishes
+    # thread-pool workers inside one process
+    return f"{os.getpid()}:{threading.get_ident()}"
+
+
+def _guarded(fn, args, quarantined, t_submit: float, bounce_pause: float):
+    """Worker-side wrapper: quarantine check + timing + failure attribution.
+
+    Returns ``(worker_id, queue_wait, compute_seconds, payload)``. The pause
+    before a quarantine bounce keeps an idle bad worker from starving the
+    queue by bouncing every task faster than healthy workers can pick one up.
+    """
+    wid = _worker_id()
+    if wid in quarantined:
+        if bounce_pause:
+            time.sleep(bounce_pause)
+        raise WorkerQuarantined(wid)
+    t_start = time.time()
+    try:
+        payload = fn(*args)
+    except Exception as e:  # noqa: BLE001 — re-raised with attribution
+        raise WorkerTaskFailure(
+            wid, f"{type(e).__name__}: {e}", getattr(e, "op_index", -1)
+        ) from None
+    return wid, max(0.0, t_start - t_submit), time.time() - t_start, payload
+
+
+class _Flight:
+    """One block's dispatch state: all in-flight submissions + outcome."""
+
+    __slots__ = ("idx", "item", "futures", "backups", "failures", "bounces",
+                 "done", "payload", "error", "t_submit")
+
+    def __init__(self, idx: int, item: Any):
+        self.idx = idx
+        self.item = item
+        self.futures: set = set()
+        self.backups: set = set()
+        self.failures = 0
+        self.bounces = 0
+        self.done = False
+        self.payload: Any = None
+        self.error: Optional[Dict[str, Any]] = None
+        self.t_submit = time.time()
+
+
+def window_bounds(n_workers: int) -> Tuple[int, int, int]:
+    """(start, min, max) of the adaptive in-flight window — the single
+    source of truth shared by the dispatcher and ``explain()``'s policy.
+    The floor keeps one block buffered beyond the worker count so in-order
+    head-of-line draining can't leave a worker idle."""
+    return max(2, 2 * n_workers), max(2, n_workers + 1), max(4, 4 * n_workers)
+
+
+def dispatch_policy(n_workers: int, straggler_factor: float, speculate: bool,
+                    worker_failure_limit: int) -> Dict[str, Any]:
+    """Static description of the adaptive-dispatch knobs for ``explain()``."""
+    start, lo, hi = window_bounds(n_workers)
+    return {
+        "speculation": bool(speculate),
+        "straggler_factor": straggler_factor,
+        "window": {"start": start, "min": lo, "max": hi, "adaptive": True},
+        "quarantine_after_failures": worker_failure_limit,
+    }
+
+
+class WindowedDispatcher:
+    """Drive an item iterator through a pool with a bounded adaptive window,
+    yielding ``(item, payload, error)`` in input order.
+
+    ``payload`` is whatever ``fn(*args_of(item))`` returned (None when the
+    block failed); ``error`` is None on success, else
+    ``{"error", "op_index", "attempts"}`` — surfaced only after every
+    submission for the block failed, so a live backup always gets to win.
+    """
+
+    def __init__(self, pool, n_workers: int, *, straggler_factor: float = 3.0,
+                 speculate: bool = True, min_completions: Optional[int] = None,
+                 max_attempts: int = 2, worker_failure_limit: int = 3,
+                 adaptive_window: bool = True, bounce_limit: Optional[int] = None,
+                 bounce_pause: float = 0.02, poll: float = 0.05,
+                 label: str = "", log: Optional[List[dict]] = None,
+                 meta: Optional[Dict[str, Any]] = None):
+        self.pool = pool
+        self.n_workers = max(1, n_workers)
+        self.straggler_factor = straggler_factor
+        self.speculate = speculate
+        self.min_completions = min_completions or max(3, self.n_workers)
+        self.max_attempts = max(1, max_attempts)
+        self.worker_failure_limit = max(1, worker_failure_limit)
+        self.adaptive_window = adaptive_window
+        self.bounce_limit = bounce_limit if bounce_limit is not None else 2 * self.n_workers
+        self.bounce_pause = bounce_pause
+        self.poll = poll
+        self.label = label
+        self.log = log
+        self.meta = meta or {}
+
+        self.window, self.min_window, self.max_window = window_bounds(self.n_workers)
+        self._window_start = self.window
+
+        # health / outcome accounting
+        self.quarantined: set = set()
+        self._quarantine_disabled = False  # set when the WHOLE pool failed
+        self.worker_failures: Dict[str, int] = collections.defaultdict(int)
+        self.redispatches = 0        # speculative backups submitted
+        self.retries = 0             # failure-driven resubmissions
+        self.speculation_wins = 0    # backups that beat their original
+        self.bounces = 0             # quarantine bounces
+        self.pass_throughs = 0       # blocks whose every submission failed
+        self.blocks = 0              # blocks yielded
+
+        # timing estimators
+        self._times: collections.deque = collections.deque(maxlen=64)
+        self._waits: collections.deque = collections.deque(maxlen=32)
+        self._computes: collections.deque = collections.deque(maxlen=32)
+        self._successes = 0
+
+        self._pending: set = set()
+        self._fut2idx: Dict[cf.Future, int] = {}
+        self.summary: Optional[Dict[str, Any]] = None
+
+    # ------------------------------------------------------------------
+    def _submit(self, fl: _Flight, fn, args, quarantine: Optional[frozenset] = None,
+                backup: bool = False) -> cf.Future:
+        q = frozenset(self.quarantined) if quarantine is None else quarantine
+        try:
+            f = self.pool.submit(_guarded, fn, args, q, time.time(), self.bounce_pause)
+        except Exception:
+            # pool is broken (worker OOM-killed / segfaulted mid-run) or shut
+            # down: keep the run alive by finishing this block in-process
+            f = cf.Future()
+            try:
+                f.set_result(_guarded(fn, args, frozenset(), time.time(), 0.0))
+            except Exception as e:  # noqa: BLE001 — surfaced as outcome
+                f.set_exception(e)
+        fl.futures.add(f)
+        if backup:
+            fl.backups.add(f)
+        self._fut2idx[f] = fl.idx
+        self._pending.add(f)
+        return f
+
+    def _resolve(self, fl: _Flight, payload=None, error=None) -> None:
+        fl.done = True
+        fl.payload = payload
+        fl.error = error
+        for other in fl.futures:
+            other.cancel()  # running losers finish; their results are stale
+        fl.futures.clear()
+
+    def _record_worker_failure(self, wid: Optional[str]) -> None:
+        if not wid or self._quarantine_disabled:
+            return
+        self.worker_failures[wid] += 1
+        if self.worker_failures[wid] >= self.worker_failure_limit:
+            self.quarantined.add(wid)
+        if len(self.quarantined) >= self.n_workers:
+            # the whole pool failing is an op/data problem, not worker
+            # health — quarantining everyone would only add a bounce storm
+            # on top of the per-block retry/pass-through handling
+            self.quarantined.clear()
+            self.worker_failures.clear()
+            self._quarantine_disabled = True
+
+    def _adapt_window(self) -> None:
+        if not self.adaptive_window or self._successes % 8 != 0 or not self._waits:
+            return
+        wait = sum(self._waits) / len(self._waits)
+        compute = max(sum(self._computes) / len(self._computes), 1e-6)
+        ratio = wait / compute
+        if ratio > 2.0:      # deep executor backlog: blocks queue far longer
+            self.window = max(self.min_window, self.window - 1)   # than they compute
+        elif ratio < 0.25:   # queue drains instantly: risk of idle workers
+            self.window = min(self.max_window, self.window + 1)
+
+    def _handle_done(self, f: cf.Future, flights: Dict[int, _Flight], fn, args_of) -> None:
+        idx = self._fut2idx.pop(f, None)
+        self._pending.discard(f)
+        if idx is None or idx not in flights:
+            return
+        fl = flights[idx]
+        fl.futures.discard(f)
+        if fl.done:
+            return  # stale loser of a won race
+        try:
+            wid, wait, compute, payload = f.result()
+        except WorkerQuarantined:
+            self.bounces += 1
+            fl.bounces += 1
+            # after too many bounces (e.g. every worker quarantined), force
+            # the run anywhere rather than ping-ponging forever
+            q = frozenset() if fl.bounces > self.bounce_limit else None
+            self._submit(fl, fn, args_of(fl.item), quarantine=q,
+                         backup=f in fl.backups)
+            return
+        except Exception as e:  # noqa: BLE001 — WorkerTaskFailure or pool break
+            self._record_worker_failure(getattr(e, "worker_id", None))
+            fl.failures += 1
+            err = {
+                "error": getattr(e, "message", f"{type(e).__name__}: {e}"),
+                "op_index": getattr(e, "op_index", -1),
+                "attempts": fl.failures,
+            }
+            if fl.futures:
+                return  # a backup is still in flight — it must get to win
+            if fl.failures < self.max_attempts:
+                self.retries += 1
+                self._submit(fl, fn, args_of(fl.item))
+                return
+            self.pass_throughs += 1
+            self._resolve(fl, error=err)
+            return
+        if f in fl.backups:
+            self.speculation_wins += 1
+        self._successes += 1
+        self._times.append(wait + compute)
+        self._waits.append(wait)
+        self._computes.append(compute)
+        self._adapt_window()
+        self._resolve(fl, payload=payload)
+
+    def _speculate(self, flights: Dict[int, _Flight], fn, args_of) -> None:
+        # gate on the unbounded success counter: _times is a bounded deque
+        # (maxlen 64), so comparing its length would permanently disable
+        # speculation whenever min_completions exceeds the deque size
+        # (e.g. the default max(3, n_workers) on a >64-core machine)
+        if not self.speculate or self._successes < self.min_completions \
+                or not self._times:
+            return
+        times = sorted(self._times)
+        med = times[len(times) // 2]
+        threshold = self.straggler_factor * max(med, MEDIAN_FLOOR)
+        now = time.time()
+        for fl in flights.values():
+            if (not fl.done and not fl.backups and fl.failures == 0
+                    and fl.futures and now - fl.t_submit > threshold):
+                self._submit(fl, fn, args_of(fl.item), backup=True)
+                self.redispatches += 1
+
+    # ------------------------------------------------------------------
+    def run(self, items: Iterable[Any], fn: Callable,
+            args_of: Callable[[Any], tuple]) -> Iterator[Tuple[Any, Any, Optional[dict]]]:
+        """In-order generator over ``(item, payload, error)``. The summary is
+        built (and appended to ``log``) even when the consumer abandons the
+        stream early."""
+        try:
+            it = iter(items)
+            flights: Dict[int, _Flight] = {}
+            next_idx = 0
+            next_yield = 0
+            exhausted = False
+            while True:
+                # fill the window (submitted-but-not-yielded bounds buffering)
+                while not exhausted and next_idx - next_yield < self.window:
+                    item = next(it, _END)
+                    if item is _END:
+                        exhausted = True
+                        break
+                    fl = _Flight(next_idx, item)
+                    flights[next_idx] = fl
+                    next_idx += 1
+                    self._submit(fl, fn, args_of(item))
+                # drain resolved head-of-line flights in input order
+                while next_yield in flights and flights[next_yield].done:
+                    fl = flights.pop(next_yield)
+                    next_yield += 1
+                    self.blocks += 1
+                    yield fl.item, fl.payload, fl.error
+                if exhausted and not flights:
+                    break
+                if not self._pending:
+                    continue  # flights resolved between the two drains above
+                done, _ = cf.wait(self._pending, timeout=self.poll,
+                                  return_when=cf.FIRST_COMPLETED)
+                for f in done:
+                    self._handle_done(f, flights, fn, args_of)
+                self._speculate(flights, fn, args_of)
+        finally:
+            self._finalize()
+
+    def _finalize(self) -> None:
+        if self.summary is not None:
+            return
+        self.summary = {
+            "label": self.label,
+            "blocks": self.blocks,
+            "redispatches": self.redispatches,
+            "retries": self.retries,
+            "speculation_wins": self.speculation_wins,
+            "bounces": self.bounces,
+            "pass_throughs": self.pass_throughs,
+            "quarantined": sorted(self.quarantined),
+            "window_start": self._window_start,
+            "window_final": self.window,
+            **self.meta,
+        }
+        if self.log is not None:
+            self.log.append(self.summary)

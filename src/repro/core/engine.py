@@ -9,14 +9,17 @@
     host path). Model-based OPs score batches through the model substrate.
 
 Engines share one interface (``map_batches``), so OPs are engine-agnostic —
-the Facade-pattern property the paper emphasises.
+the Facade-pattern property the paper emphasises. All multi-worker dispatch
+(ParallelEngine's batch and chain paths, LocalEngine's threaded chain
+window) runs through the shared adaptive ``WindowedDispatcher``
+(``repro.core.dispatch``): bounded adaptive in-flight window, speculative
+straggler re-dispatch, failure retries, per-worker quarantine.
 """
 from __future__ import annotations
 
-import collections
 import concurrent.futures as cf
+import copy
 import os
-import queue
 import threading
 import time
 from typing import Any, Dict, Iterable, Iterator, List, Optional, Tuple
@@ -24,6 +27,7 @@ from typing import Any, Dict, Iterable, Iterator, List, Optional, Tuple
 import numpy as np
 
 from repro.core import schema as S
+from repro.core.dispatch import WindowedDispatcher, dispatch_policy
 from repro.core.ops_base import Operator, OpError
 from repro.core.storage import SampleBlock, split_blocks
 
@@ -32,6 +36,22 @@ Sample = Dict[str, Any]
 
 class EngineStats(dict):
     pass
+
+
+class ChainOpFailure(Exception):
+    """A hard failure (escaping the per-sample exception manager) while
+    driving a block through op ``op_index`` of a chain. Picklable via the
+    default (class, args) reduction, so worker processes can attribute the
+    failing op instead of the consumer pinning errors to ``ops[0]``."""
+
+    def __init__(self, op_index: int, op_name: str, message: str):
+        super().__init__(op_index, op_name, message)
+        self.op_index = op_index
+        self.op_name = op_name
+        self.message = message
+
+    def __str__(self):
+        return f"op[{self.op_index}] {self.op_name}: {self.message}"
 
 
 def _iter_batches(samples: List[Sample], batch_size: int):
@@ -52,16 +72,21 @@ def run_chain(
     caller aggregates across blocks so per-op lineage keeps working.
     """
     stats: List[dict] = []
-    for op in ops:
+    for k, op in enumerate(ops):
         t0 = time.perf_counter()
         n_in = len(samples)
         err0 = len(op.errors)
-        bs = batch_size or op.default_batch_size
-        out: List[Sample] = []
-        for i in range(0, len(samples), bs):
-            out.extend(op.run_batch_safe(samples[i : i + bs], i))
-        if drop_empty:
-            out = [s for s in out if not S.is_empty(s)]
+        try:
+            bs = batch_size or op.default_batch_size
+            out: List[Sample] = []
+            for i in range(0, len(samples), bs):
+                out.extend(op.run_batch_safe(samples[i : i + bs], i))
+            if drop_empty:
+                out = [s for s in out if not S.is_empty(s)]
+        except ChainOpFailure:
+            raise
+        except Exception as e:  # escaped the per-sample exception manager
+            raise ChainOpFailure(k, op.name, f"{type(e).__name__}: {e}") from e
         samples = out
         stats.append({
             "op": op.name, "in": n_in, "out": len(samples),
@@ -71,11 +96,38 @@ def run_chain(
     return samples, stats
 
 
+def _chain_failure(ops: List[Operator], blk: SampleBlock, err: dict):
+    """Pass-through outcome for a chain block whose every dispatch failed:
+    synthesized per-op stats plus an OpError pinned to the op that actually
+    failed (``err["op_index"]`` from ChainOpFailure, 0 when unattributable),
+    so per-op lineage still accounts for the block's samples."""
+    k = err.get("op_index", -1)
+    k = k if 0 <= k < len(ops) else 0
+    stats = [{"op": o.name, "in": len(blk.samples), "out": len(blk.samples),
+              "seconds": 0.0, "errors": 1 if j == k else 0}
+             for j, o in enumerate(ops)]
+    ops[k].errors.append(OpError(
+        ops[k].name, -1,
+        f"worker failed on chain block ({err.get('attempts', 1)} attempts): "
+        f"{err.get('error')}"))
+    return list(blk.samples), stats
+
+
 class LocalEngine:
     name = "local"
 
-    def __init__(self, n_threads: int = 1):
+    def __init__(self, n_threads: int = 1, straggler_factor: float = 3.0,
+                 speculate: bool = True):
         self.n_threads = n_threads
+        self.straggler_factor = straggler_factor
+        self.speculate = speculate
+        self.redispatches = 0  # cumulative; per-call counts live in dispatch_log
+        self.dispatch_log: List[dict] = []
+
+    def dispatch_policy(self) -> dict:
+        return {"engine": self.name,
+                **dispatch_policy(self.n_threads, self.straggler_factor,
+                                  self.speculate and self.n_threads > 1, 3)}
 
     def map_batches(
         self, op: Operator, blocks: List[SampleBlock], batch_size: int
@@ -149,37 +201,47 @@ class LocalEngine:
         tls = threading.local()  # one clone chain per worker thread, not per block
 
         def work(samples):
+            # thread pools share objects (the process pool's pickling copies
+            # per dispatch): process a private copy so a speculative backup
+            # or retry never mutates dicts a straggling original still
+            # writes. Copied here, on the pool thread, overlapped with
+            # compute — not serialized on the dispatch loop.
+            samples = copy.deepcopy(samples)
             local_ops = getattr(tls, "ops", None)
             if local_ops is None:
                 local_ops = [create_op(c) for c in cfgs]
                 for o in local_ops:
                     o.setup()
                 tls.ops = local_ops
+            for o in local_ops:
+                # reused clones must not re-report past blocks; cleared on
+                # entry (not after run_chain) so a hard chain failure can't
+                # leak this block's errors into the thread's next block
+                o.errors = []
             out, stats = run_chain(local_ops, samples, batch_size)
             errs = [(k, e) for k, o in enumerate(local_ops) for e in o.errors]
-            for o in local_ops:
-                o.errors = []  # reused clones must not re-report past blocks
             return out, stats, errs
 
-        blocks_it = iter(blocks)
         with cf.ThreadPoolExecutor(threads) as pool:
-            inflight: "collections.deque" = collections.deque()
-
-            def submit_next() -> bool:
-                blk = next(blocks_it, None)
-                if blk is None:
-                    return False
-                inflight.append(pool.submit(work, blk.samples))
-                return True
-
-            while len(inflight) < 2 * threads and submit_next():
-                pass
-            while inflight:
-                out, stats, errs = inflight.popleft().result()
-                for k, e in errs:  # merged on the main thread — no races
-                    ops[k].errors.append(e)
-                submit_next()
-                yield SampleBlock(out, nbytes=0), stats
+            disp = WindowedDispatcher(
+                pool, threads, straggler_factor=self.straggler_factor,
+                speculate=self.speculate,
+                label="+".join(op.name for op in ops),
+                log=self.dispatch_log, meta={"engine": self.name})
+            gen = disp.run(blocks, work, lambda blk: (blk.samples,))
+            try:
+                for blk, payload, err in gen:
+                    if err is None:
+                        out, stats, errs = payload
+                        for k, e in errs:  # merged on the main thread — no races
+                            ops[k].errors.append(e)
+                    else:
+                        out, stats = _chain_failure(ops, blk, err)
+                    yield SampleBlock(out, nbytes=0), stats
+            finally:
+                gen.close()
+                if disp.summary is not None:
+                    self.redispatches += disp.summary["redispatches"]
 
 
 def _worker_apply(op_config: Dict[str, Any], samples: List[Sample], batch_size: int):
@@ -202,9 +264,15 @@ def _worker_apply_chain(
     and drive the block through it in one dispatch."""
     from repro.core.registry import create_op
 
-    ops = [create_op(c) for c in op_configs]
-    for op in ops:
-        op.setup()
+    ops = []
+    for k, c in enumerate(op_configs):
+        try:
+            op = create_op(c)
+            op.setup()
+        except Exception as e:  # attribute rebuild/setup failures to op k too
+            raise ChainOpFailure(k, str(c.get("name", "?")),
+                                 f"{type(e).__name__}: {e}") from e
+        ops.append(op)
     out, stats = run_chain(ops, samples, batch_size)
     # errors carry the op's index in the chain — attribution by name would
     # merge two instances of the same OP class
@@ -213,19 +281,47 @@ def _worker_apply_chain(
 
 
 class ParallelEngine:
-    """Multi-process engine with straggler re-dispatch.
+    """Multi-process engine; all dispatch runs through the shared
+    :class:`~repro.core.dispatch.WindowedDispatcher`.
 
-    Speculative execution: once >=50% of blocks finish, any block running
-    longer than ``straggler_factor`` x the median completion time gets a
-    backup submission; first finisher wins.
+    Speculative execution: once ``min_completions`` blocks finish, any block
+    running longer than ``straggler_factor`` x the median completion time
+    gets a backup submission; first finisher wins, the loser is cancelled.
+    A worker that fails ``worker_failure_limit`` tasks is quarantined (its
+    blocks re-dispatch to healthy workers instead of passing through).
     """
 
     name = "parallel"
 
-    def __init__(self, n_workers: Optional[int] = None, straggler_factor: float = 3.0):
+    def __init__(self, n_workers: Optional[int] = None, straggler_factor: float = 3.0,
+                 speculate: bool = True, min_completions: Optional[int] = None,
+                 worker_failure_limit: int = 3):
         self.n_workers = n_workers or max(1, (os.cpu_count() or 2) - 1)
         self.straggler_factor = straggler_factor
-        self.redispatches = 0
+        self.speculate = speculate
+        self.min_completions = min_completions
+        self.worker_failure_limit = worker_failure_limit
+        self.redispatches = 0  # cumulative; per-call counts in EngineStats/dispatch_log
+        self.dispatch_log: List[dict] = []
+
+    def _dispatcher(self, pool, label: str) -> WindowedDispatcher:
+        return WindowedDispatcher(
+            pool, self.n_workers, straggler_factor=self.straggler_factor,
+            speculate=self.speculate, min_completions=self.min_completions,
+            worker_failure_limit=self.worker_failure_limit,
+            label=label, log=self.dispatch_log, meta={"engine": self.name})
+
+    def dispatch_policy(self) -> dict:
+        return {"engine": self.name,
+                **dispatch_policy(self.n_workers, self.straggler_factor,
+                                  self.speculate, self.worker_failure_limit)}
+
+    def _fallback(self) -> "LocalEngine":
+        # non-reconstructible op: host path, but any dispatch summaries it
+        # logs still land in THIS engine's report
+        fb = LocalEngine()
+        fb.dispatch_log = self.dispatch_log
+        return fb
 
     def map_batches(self, op, blocks, batch_size):
         try:
@@ -233,65 +329,40 @@ class ParallelEngine:
             from repro.core.registry import create_op
             create_op(cfg)  # picklability / reconstructibility probe
         except Exception:
-            return LocalEngine().map_batches(op, blocks, batch_size)
+            return self._fallback().map_batches(op, blocks, batch_size)
 
         t0 = time.time()
-        results: Dict[int, List[Sample]] = {}
-        errors: List[dict] = []
+        out_blocks: List[SampleBlock] = []
         with cf.ProcessPoolExecutor(self.n_workers) as pool:
-            futs = {
-                pool.submit(_worker_apply, cfg, blk.samples, batch_size): idx
-                for idx, blk in enumerate(blocks)
-            }
-            start = {idx: time.time() for idx in futs.values()}
-            times: List[float] = []
-            backups: Dict[int, cf.Future] = {}
-            pending = set(futs)
-            while pending or any(i not in results for i in range(len(blocks))):
-                done, pending = cf.wait(pending, timeout=0.05, return_when=cf.FIRST_COMPLETED)
-                for f in done:
-                    idx = futs[f]
-                    if idx not in results:
-                        try:
-                            out, errs = f.result()
-                            results[idx] = out
-                            errors.extend(errs)
-                            times.append(time.time() - start[idx])
-                        except Exception as e:
-                            # worker died: pass the input block through so the
-                            # run completes, but surface the failure — a
-                            # silent pass-through resurrects rows a Filter
-                            # should have dropped
-                            results[idx] = [s for s in blocks[idx].samples]
-                            errors.append({
-                                "op": op.name, "index": idx,
-                                "error": f"worker failed on block {idx}: "
-                                         f"{type(e).__name__}: {e}",
-                            })
-                if all(i in results for i in range(len(blocks))):
-                    break
-                # straggler mitigation
-                if times and len(times) >= max(1, len(blocks) // 2):
-                    med = float(np.median(times))
-                    now = time.time()
-                    for f, idx in list(futs.items()):
-                        if (
-                            idx not in results and idx not in backups
-                            and now - start[idx] > self.straggler_factor * max(med, 0.05)
-                        ):
-                            b = pool.submit(_worker_apply, cfg, blocks[idx].samples, batch_size)
-                            backups[idx] = b
-                            futs[b] = idx
-                            pending.add(b)
-                            self.redispatches += 1
-        out_blocks = [SampleBlock(results[i]) for i in range(len(blocks))]
-        for e in errors:
-            op.errors.append(OpError(**e))
+            disp = self._dispatcher(pool, label=op.name)
+            for idx, (blk, payload, err) in enumerate(disp.run(
+                    blocks, _worker_apply,
+                    lambda b: (cfg, b.samples, batch_size))):
+                if err is None:
+                    out, errs = payload
+                    for e in errs:
+                        op.errors.append(OpError(**e))
+                    out_blocks.append(SampleBlock(out))
+                else:
+                    # every submission for this block failed: pass the input
+                    # through so the run completes, but surface the failure —
+                    # a silent pass-through resurrects rows a Filter should
+                    # have dropped
+                    out_blocks.append(SampleBlock(list(blk.samples)))
+                    op.errors.append(OpError(
+                        op.name, idx,
+                        f"worker failed on block {idx} "
+                        f"({err['attempts']} attempts): {err['error']}"))
+        summary = disp.summary or {}
+        self.redispatches += summary.get("redispatches", 0)
         return out_blocks, EngineStats(
             seconds=time.time() - t0,
             samples=sum(len(b) for b in blocks),
             engine=self.name,
-            redispatches=self.redispatches,
+            # per-call delta (the cumulative count previously reported here
+            # inflated later runs' stats)
+            redispatches=summary.get("redispatches", 0),
+            quarantined=len(summary.get("quarantined", ())),
         )
 
     def map_block_chain(
@@ -299,9 +370,10 @@ class ParallelEngine:
         batch_size: Optional[int] = None,
     ) -> Iterator[Tuple[SampleBlock, List[dict]]]:
         """Streaming: one worker dispatch drives a block through the whole
-        segment chain. A bounded in-flight window (2x workers) keeps every
-        worker busy without materializing the block stream; results are
-        yielded in input order so outputs are deterministic."""
+        segment chain via the shared WindowedDispatcher — bounded adaptive
+        in-flight window, speculative straggler re-dispatch, worker
+        quarantine. Results are yielded in input order so outputs stay
+        deterministic (a speculative backup computes the identical block)."""
         try:
             cfgs = [op.config() for op in ops]
             from repro.core.registry import create_op
@@ -309,53 +381,26 @@ class ParallelEngine:
             for c in cfgs:
                 create_op(c)  # picklability / reconstructibility probe
         except Exception:
-            yield from LocalEngine().map_block_chain(ops, blocks, batch_size)
+            yield from self._fallback().map_block_chain(ops, blocks, batch_size)
             return
 
-        window = max(2, 2 * self.n_workers)
-        blocks_it = iter(blocks)
         with cf.ProcessPoolExecutor(self.n_workers) as pool:
-            inflight: "collections.deque" = collections.deque()
-
-            def submit_next() -> bool:
-                blk = next(blocks_it, None)
-                if blk is None:
-                    return False
-                try:
-                    fut = pool.submit(_worker_apply_chain, cfgs, blk.samples, batch_size)
-                except Exception:
-                    # pool is broken (worker OOM-killed/segfaulted): keep the
-                    # run alive by finishing this block in-process
-                    fut = cf.Future()
-                    try:
-                        fut.set_result(_worker_apply_chain(cfgs, blk.samples, batch_size))
-                    except Exception as e:  # noqa: BLE001 — surfaced below
-                        fut.set_exception(e)
-                inflight.append((fut, blk))
-                return True
-
-            while len(inflight) < window and submit_next():
-                pass
-            while inflight:
-                fut, blk = inflight.popleft()
-                try:
-                    out, stats, errs = fut.result()
-                    for k, e in errs:
-                        ops[k].errors.append(OpError(**e))
-                except Exception as e:
-                    out = list(blk.samples)  # pass through, but recorded
-                    # synthesize pass-through stats so per-op lineage still
-                    # accounts for this block's samples
-                    stats = [{"op": o.name, "in": len(blk.samples),
-                              "out": len(blk.samples), "seconds": 0.0,
-                              "errors": 1 if k == 0 else 0}
-                             for k, o in enumerate(ops)]
-                    ops[0].errors.append(OpError(
-                        ops[0].name, -1,
-                        f"worker failed on chain block: {type(e).__name__}: {e}",
-                    ))
-                submit_next()
-                yield SampleBlock(out, nbytes=0), stats
+            disp = self._dispatcher(pool, label="+".join(op.name for op in ops))
+            gen = disp.run(blocks, _worker_apply_chain,
+                           lambda b: (cfgs, b.samples, batch_size))
+            try:
+                for blk, payload, err in gen:
+                    if err is None:
+                        out, stats, errs = payload
+                        for k, e in errs:
+                            ops[k].errors.append(OpError(**e))
+                    else:
+                        out, stats = _chain_failure(ops, blk, err)
+                    yield SampleBlock(out, nbytes=0), stats
+            finally:
+                gen.close()
+                if disp.summary is not None:
+                    self.redispatches += disp.summary["redispatches"]
 
 
 class ShardedEngine:
@@ -379,6 +424,16 @@ class ShardedEngine:
         self.mesh = mesh
         self.fallback = fallback or LocalEngine()
         self.super_batch_rows = max(1, super_batch_rows or self.SUPER_BATCH_ROWS)
+
+    @property
+    def dispatch_log(self) -> List[dict]:
+        return self.fallback.dispatch_log  # host-path dispatches land here
+
+    def dispatch_policy(self) -> dict:
+        # vectorized chains run in-process (no dispatch window); the host
+        # fallback path inherits the fallback engine's adaptive policy
+        return {"engine": self.name, "vectorized": "in-process",
+                "fallback": self.fallback.dispatch_policy()}
 
     def map_batches(self, op, blocks, batch_size):
         fn = getattr(op, "compute_stats_arrays", None)

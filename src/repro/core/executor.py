@@ -69,6 +69,9 @@ class RunReport:
     insight: str = ""
     errors: int = 0
     streaming: bool = False
+    # one summary per engine dispatch call (label = segment's op chain):
+    # redispatches, speculation_wins, retries, quarantined workers, window
+    dispatch: List[dict] = dataclasses.field(default_factory=list)
 
 
 def _count_blocks(blocks: Iterable[SampleBlock], counter: Dict[str, int]) -> Iterator[SampleBlock]:
@@ -174,6 +177,9 @@ class Executor:
             "streaming": self.streaming_eligible(),
             "engine": r.engine,
             "np": r.np,
+            # adaptive-dispatch policy the run will use (window sizing,
+            # speculation, quarantine — docs/runtime.md "Adaptive dispatch")
+            "dispatch": self._make_engine().dispatch_policy(),
         }
 
     def stream_blocks(
@@ -340,6 +346,7 @@ class Executor:
             seconds=time.time() - t0, per_op=entries, plan=plan,
             resumed_at=resumed_at, errors=errors, streaming=True,
             insight=recorder.report() if recorder is not None else "",
+            dispatch=list(getattr(engine, "dispatch_log", ())),
         )
         return DJDataset(blocks or [SampleBlock([])], engine), report
 
@@ -413,5 +420,6 @@ class Executor:
             seconds=time.time() - t0, per_op=monitor, plan=plan,
             resumed_at=resumed_at,
             insight=miner.report() if miner else "", errors=errors,
+            dispatch=list(getattr(engine, "dispatch_log", ())),
         )
         return dataset, report

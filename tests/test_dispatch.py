@@ -1,0 +1,313 @@
+"""Adaptive windowed dispatcher: speculative straggler re-dispatch on the
+streaming chain path, failure retries (backup wins over a failed original),
+per-call redispatch deltas, failing-op attribution, and worker quarantine."""
+import concurrent.futures as cf
+import os
+import threading
+import time
+
+import pytest
+
+from repro.core import dispatch as D
+from repro.core.dataset import DJDataset
+from repro.core.engine import LocalEngine, ParallelEngine
+from repro.core.executor import Executor
+from repro.core.recipes import Recipe
+from repro.core.registry import create_op, register
+from repro.core.ops_base import Mapper
+from repro.core.storage import write_jsonl
+from repro.data.synthetic import make_corpus
+
+
+# ---------------------------------------------------------------------------
+# injected fixtures (registered so forked worker processes can rebuild them)
+# ---------------------------------------------------------------------------
+
+
+@register("sleep_once_mapper")
+class SleepOnceMapper(Mapper):
+    """Sleeps ``delay`` on a marked sample the FIRST time its block is
+    attempted (atomic flag-file claim) — a speculative backup runs fast."""
+
+    _name = "sleep_once_mapper"
+
+    def __init__(self, flag_dir: str, delay: float = 0.8, **kw):
+        super().__init__(flag_dir=flag_dir, delay=delay, **kw)
+
+    def process_single(self, s):
+        key = s.get("meta", {}).get("straggle_key")
+        if key:
+            try:
+                os.close(os.open(os.path.join(self.params["flag_dir"], key),
+                                 os.O_CREAT | os.O_EXCL | os.O_WRONLY))
+                time.sleep(self.params["delay"])
+            except FileExistsError:
+                pass
+        s["text"] = s.get("text", "").strip()
+        return s
+
+
+@register("io_sleep_once_mapper")
+class IOSleepOnceMapper(SleepOnceMapper):
+    """io_intensive variant — routes LocalEngine onto its threaded window."""
+
+    _name = "io_sleep_once_mapper"
+    io_intensive = True
+
+
+@register("prefix_once_mapper")
+class PrefixOnceMapper(Mapper):
+    """NON-idempotent: applied twice, the marker doubles — catches a
+    speculative backup sharing (and re-mutating) the original's dicts."""
+
+    _name = "prefix_once_mapper"
+
+    def process_single(self, s):
+        s["text"] = "X" + s.get("text", "")
+        return s
+
+
+@register("fail_once_setup_op")
+class FailOnceSetupMapper(Mapper):
+    """Worker-level failure (escapes the per-sample exception manager) on the
+    first dispatch only — the retry/backup must win, not pass-through."""
+
+    _name = "fail_once_setup_op"
+
+    def __init__(self, flag_dir: str, **kw):
+        super().__init__(flag_dir=flag_dir, **kw)
+
+    def setup(self):
+        try:
+            os.close(os.open(os.path.join(self.params["flag_dir"], "failed"),
+                             os.O_CREAT | os.O_EXCL | os.O_WRONLY))
+        except FileExistsError:
+            return
+        raise RuntimeError("injected one-time worker failure")
+
+    def process_single(self, s):
+        s["text"] = s.get("text", "").upper()
+        return s
+
+
+@register("always_fail_setup_op")
+class AlwaysFailSetupMapper(Mapper):
+    _name = "always_fail_setup_op"
+
+    def setup(self):
+        raise RuntimeError("permanently broken op")
+
+    def process_single(self, s):  # pragma: no cover — setup always raises
+        return s
+
+
+def _marked_blocks(n_samples=160, n_blocks=8, slow=(3,)):
+    corpus = make_corpus(n_samples, seed=17)
+    blocks = DJDataset.from_samples([dict(s) for s in corpus],
+                                    n_blocks_hint=n_blocks).blocks
+    for b in slow:
+        s = dict(blocks[b].samples[0])
+        s["meta"] = dict(s.get("meta", {}), straggle_key=f"blk{b}")
+        blocks[b].samples[0] = s
+    return blocks
+
+
+# ---------------------------------------------------------------------------
+# speculation on the streaming chain path
+# ---------------------------------------------------------------------------
+
+
+def test_chain_speculation_fires_and_output_identical(tmp_path):
+    cfgs = [{"name": "sleep_once_mapper", "flag_dir": str(tmp_path), "delay": 0.8},
+            {"name": "whitespace_normalization_mapper"}]
+    blocks = _marked_blocks()
+    # ref on UNMARKED blocks (same text output, no flag claims, no sleeping):
+    # the parallel run below must see virgin flag files so originals stall
+    ref = [s["text"]
+           for blk, _ in LocalEngine().map_block_chain(
+               [create_op(c) for c in cfgs], iter(_marked_blocks(slow=())))
+           for s in blk.samples]
+
+    eng = ParallelEngine(n_workers=2, straggler_factor=2.0, min_completions=2)
+    got = [s["text"]
+           for blk, _ in eng.map_block_chain([create_op(c) for c in cfgs],
+                                             iter(blocks))
+           for s in blk.samples]
+    assert got == ref, "speculation must keep outputs byte-identical, in order"
+    summary = eng.dispatch_log[-1]
+    assert summary["redispatches"] >= 1, f"speculation never fired: {summary}"
+    assert summary["speculation_wins"] >= 1
+    assert summary["pass_throughs"] == 0
+    assert eng.redispatches >= 1  # cumulative counter still maintained
+
+
+def test_local_threaded_speculation_no_shared_mutation(tmp_path):
+    """Thread pools share objects: a speculative backup must process its own
+    copy, never re-mutating dicts the straggling original still writes."""
+    cfgs = [{"name": "io_sleep_once_mapper", "flag_dir": str(tmp_path), "delay": 0.6},
+            {"name": "prefix_once_mapper"}]
+    ref = [s["text"]
+           for blk, _ in LocalEngine().map_block_chain(
+               [create_op(c) for c in cfgs], iter(_marked_blocks(slow=())))
+           for s in blk.samples]
+    eng = LocalEngine(n_threads=2, straggler_factor=2.0, speculate=True)
+    got = [s["text"]
+           for blk, _ in eng.map_block_chain([create_op(c) for c in cfgs],
+                                             iter(_marked_blocks()))
+           for s in blk.samples]
+    assert got == ref, "threaded speculation must not double-apply mutations"
+    assert all(not t.startswith("XX") for t in got)
+    assert eng.dispatch_log[-1]["engine"] == "local"
+
+
+def test_speculation_disabled_never_redispatches(tmp_path):
+    cfgs = [{"name": "sleep_once_mapper", "flag_dir": str(tmp_path), "delay": 0.2}]
+    eng = ParallelEngine(n_workers=2, speculate=False, min_completions=2,
+                         straggler_factor=2.0)
+    list(eng.map_block_chain([create_op(c) for c in cfgs],
+                             iter(_marked_blocks())))
+    assert eng.dispatch_log[-1]["redispatches"] == 0
+
+
+# ---------------------------------------------------------------------------
+# failure handling: retry/backup wins; pass-through only when ALL failed
+# ---------------------------------------------------------------------------
+
+
+def test_failed_dispatch_retries_instead_of_pass_through(tmp_path):
+    op = create_op({"name": "fail_once_setup_op", "flag_dir": str(tmp_path)})
+    blocks = DJDataset.from_samples(make_corpus(80, seed=5), n_blocks_hint=4).blocks
+    eng = ParallelEngine(n_workers=2, speculate=False)
+    out, stats = eng.map_batches(op, blocks, 64)
+    texts = [s["text"] for b in out for s in b.samples]
+    assert texts and all(t == t.upper() for t in texts), \
+        "retried block must carry the op's REAL output, not the input pass-through"
+    assert not op.errors, "a won retry is not a block failure"
+    assert eng.dispatch_log[-1]["retries"] >= 1
+    assert stats["redispatches"] == 0  # retries are not speculation
+
+
+def test_pass_through_only_after_all_attempts_fail():
+    op = create_op({"name": "always_fail_setup_op"})
+    corpus = make_corpus(60, seed=9)
+    blocks = DJDataset.from_samples([dict(s) for s in corpus], n_blocks_hint=3).blocks
+    eng = ParallelEngine(n_workers=2, speculate=False)
+    out, _ = eng.map_batches(op, blocks, 64)
+    assert [s["text"] for b in out for s in b.samples] == \
+           [s["text"] for s in corpus], "exhausted block passes input through"
+    assert len(op.errors) == len(blocks)
+    assert all("attempts" in e.error for e in op.errors)
+    assert eng.dispatch_log[-1]["pass_throughs"] == len(blocks)
+
+
+# ---------------------------------------------------------------------------
+# per-call EngineStats delta (was: cumulative count inflating later runs)
+# ---------------------------------------------------------------------------
+
+
+def test_engine_stats_reports_per_call_redispatch_delta():
+    eng = ParallelEngine(n_workers=2)
+    eng.redispatches = 7  # as if earlier calls speculated
+    op = create_op({"name": "whitespace_normalization_mapper"})
+    blocks = DJDataset.from_samples(make_corpus(40, seed=2), n_blocks_hint=2).blocks
+    _, stats = eng.map_batches(op, blocks, 64)
+    assert stats["redispatches"] == 0, "EngineStats must report THIS call's count"
+    assert eng.redispatches == 7, "cumulative counter untouched by a clean call"
+
+
+# ---------------------------------------------------------------------------
+# chain failures attribute the failing op (was: always pinned to ops[0])
+# ---------------------------------------------------------------------------
+
+
+def test_chain_failure_attributed_to_failing_op():
+    cfgs = [{"name": "whitespace_normalization_mapper"},
+            {"name": "always_fail_setup_op"}]
+    ops = [create_op(c) for c in cfgs]
+    corpus = make_corpus(40, seed=11)
+    blocks = DJDataset.from_samples([dict(s) for s in corpus], n_blocks_hint=2).blocks
+    eng = ParallelEngine(n_workers=2, speculate=False)
+    out = list(eng.map_block_chain(ops, iter(blocks)))
+    assert not ops[0].errors, "healthy op must not absorb the failure"
+    assert len(ops[1].errors) == len(blocks)
+    assert all("permanently broken op" in e.error for e in ops[1].errors)
+    for _, stats in out:
+        assert [st["errors"] for st in stats] == [0, 1], \
+            "synthesized stats must pin the error to the failing op's row"
+    # pass-through keeps the samples flowing
+    assert sum(len(b) for b, _ in out) == len(corpus)
+
+
+# ---------------------------------------------------------------------------
+# worker quarantine
+# ---------------------------------------------------------------------------
+
+
+def test_quarantined_worker_stops_receiving_blocks():
+    lock = threading.Lock()
+    executed = []
+    state = {"bad": None}
+
+    def fn(item):
+        wid = D._worker_id()
+        with lock:
+            if state["bad"] is None:
+                state["bad"] = wid  # first thread to run a task goes bad
+            executed.append((wid, item))
+        if wid == state["bad"]:
+            raise RuntimeError("wedged worker")
+        time.sleep(0.005)
+        return item * 2
+
+    log = []
+    with cf.ThreadPoolExecutor(2) as pool:
+        disp = D.WindowedDispatcher(
+            pool, 2, speculate=False, max_attempts=8, worker_failure_limit=2,
+            bounce_limit=100, label="quarantine", log=log)
+        results = list(disp.run(range(40), fn, lambda x: (x,)))
+
+    assert [p for _, p, _ in results] == [x * 2 for x in range(40)]
+    assert all(e is None for _, _, e in results)
+    summary = log[-1]
+    assert summary["quarantined"] == [state["bad"]]
+    bad_execs = [i for w, i in executed if w == state["bad"]]
+    # pre-quarantine in-flight submissions may still land on the bad worker;
+    # once quarantined it only bounces (payload never executes there again)
+    assert len(bad_execs) <= 8, f"quarantined worker kept executing: {bad_execs}"
+    assert summary["bounces"] >= 1
+
+
+def test_window_stays_within_bounds():
+    log = []
+    with cf.ThreadPoolExecutor(2) as pool:
+        disp = D.WindowedDispatcher(pool, 2, speculate=False, label="w", log=log)
+        results = list(disp.run(range(64), lambda x: x, lambda x: (x,)))
+    assert [p for _, p, _ in results] == list(range(64))
+    s = log[-1]
+    assert disp.min_window <= s["window_final"] <= disp.max_window
+    assert s["blocks"] == 64
+
+
+# ---------------------------------------------------------------------------
+# executor / report surfacing
+# ---------------------------------------------------------------------------
+
+
+def test_run_report_surfaces_dispatch_and_monitor_rows(tmp_path):
+    src = str(tmp_path / "in.jsonl")
+    write_jsonl(src, make_corpus(120, seed=21))
+    r = Recipe(name="d", dataset_path=src, engine="parallel", np=2,
+               process=[{"name": "whitespace_normalization_mapper"},
+                        {"name": "text_length_filter", "min_val": 10}],
+               block_bytes=4096)
+    _, rep = Executor(r).run()
+    assert rep.streaming
+    assert rep.dispatch, "RunReport.dispatch must carry per-segment summaries"
+    assert rep.dispatch[0]["label"] == "+".join(rep.plan)
+    for key in ("redispatches", "quarantined", "window_final"):
+        assert key in rep.dispatch[0]
+    assert all("redispatches" in row for row in rep.per_op)
+    # explain() documents the adaptive-dispatch policy without running
+    ex = Executor(r).explain()
+    assert ex["dispatch"]["speculation"] is True
+    assert ex["dispatch"]["window"]["adaptive"] is True
