@@ -1,0 +1,177 @@
+"""Cluster throughput + failover benchmark (paper §5.2 scale claim, scaled
+down to CI size).
+
+Measures multi-job throughput of the distributed job queue at 1 / 2 / 4
+REAL runner subprocesses sharing one ``cluster_dir``, and the kill-mid-job
+recovery path (SIGKILL the lease holder, time lease-expiry -> re-claim ->
+checkpoint-resume -> completion).
+
+Hard asserts (correctness, never flake-prone wall-clock alone):
+  * every submitted job succeeds at every runner count;
+  * the killed job completes on the surviving runner at attempt 2 with a
+    checkpoint resume, byte-identical to an uninterrupted run;
+  * 2-runner throughput >= 1.7x 1-runner throughput on the multi-job
+    workload (jobs are sleep-paced, so the ratio measures scheduling, not
+    the host's core count).
+
+Usage: python benchmarks/bench_cluster.py [--quick] [--json PATH]
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import sys
+import tempfile
+import time
+
+sys.path.insert(0, os.path.dirname(__file__))                    # common
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_ROOT, "tests"))                 # harness
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+
+from common import dump_json, emit, parse_bench_args  # noqa: E402
+from cluster_harness import (  # noqa: E402
+    checkpoint_stages, lease_owner, make_recipe, reference_output,
+    sigkill_runner, start_runner, stop_runner, wait_for, write_corpus,
+)
+from repro.api.cluster import ClusterQueue  # noqa: E402
+
+LEASE_TTL = 2.0
+DEFER = 0.05  # greedy claims: throughput runs measure scheduling, not politeness
+
+
+def _job_recipe(src: str, out: str, delay: float) -> dict:
+    return {
+        "name": "bench-cluster-job",
+        "dataset_path": src,
+        "export_path": out,
+        "process": [
+            {"name": "whitespace_normalization_mapper"},
+            {"name": "sleep_mapper", "delay": delay},
+            {"name": "text_length_filter", "min_val": 20},
+        ],
+        "use_fusion": False,
+        "use_reordering": False,
+    }
+
+
+def _start_runners(cdir: str, n: int):
+    runners = [start_runner(cdir, f"bench-runner-{i}", lease_ttl=LEASE_TTL,
+                            poll=0.05, defer=DEFER) for i in range(n)]
+    q = ClusterQueue(cdir)
+    wait_for(lambda: len(q.runner_cards()) >= n, 60,
+             message=f"{n} runner cards live")
+    return runners
+
+
+def run_throughput(n_runners: int, n_jobs: int, delay: float,
+                   n_samples: int) -> float:
+    """Jobs/sec with ``n_runners`` subprocesses draining ``n_jobs`` equal
+    sleep-paced jobs. Runners are started and idle BEFORE the clock starts —
+    interpreter startup is deployment cost, not queue throughput."""
+    base = tempfile.mkdtemp(prefix=f"djc{n_runners}_")
+    try:
+        src = write_corpus(os.path.join(base, "corpus.jsonl"), n=n_samples)
+        cdir = os.path.join(base, "cluster")
+        q = ClusterQueue(cdir, lease_ttl=LEASE_TTL)
+        runners = _start_runners(cdir, n_runners)
+        try:
+            t0 = time.time()
+            jids = [q.submit(_job_recipe(
+                src, os.path.join(base, f"out{i}.jsonl"), delay))
+                for i in range(n_jobs)]
+            wait_for(lambda: all(q.state_of(j) == "succeeded" for j in jids),
+                     600, interval=0.05, message="queue drained")
+            dt = time.time() - t0
+        finally:
+            for p in runners:
+                stop_runner(p)
+        for i in range(n_jobs):
+            assert os.path.exists(os.path.join(base, f"out{i}.jsonl")), \
+                f"job {i} left no export"
+        return n_jobs / dt
+    finally:
+        shutil.rmtree(base, ignore_errors=True)
+
+
+def run_kill_recovery(delay: float, n_samples: int) -> dict:
+    """SIGKILL the lease holder mid-segment; measure expiry -> re-claim ->
+    resume -> completion on the survivor, and verify byte-identity."""
+    base = tempfile.mkdtemp(prefix="djkill_")
+    try:
+        src = write_corpus(os.path.join(base, "corpus.jsonl"), n=n_samples)
+        out = os.path.join(base, "out.jsonl")
+        recipe = make_recipe(src, out, slow_delay=delay)
+        ref = reference_output(recipe, os.path.join(base, "ref.jsonl"))
+
+        cdir = os.path.join(base, "cluster")
+        q = ClusterQueue(cdir, lease_ttl=LEASE_TTL)
+        runners = _start_runners(cdir, 2)
+        names = {runners[0].pid: "bench-runner-0",
+                 runners[1].pid: "bench-runner-1"}
+        try:
+            jid = q.submit(recipe)
+            wait_for(lambda: lease_owner(q, jid) is not None, 60,
+                     message="claim")
+            owner = lease_owner(q, jid)
+            wait_for(lambda: len(checkpoint_stages(q, jid)) >= 2, 120,
+                     message="segment checkpoints")
+            victim = next(p for p in runners if names[p.pid] == owner)
+            t_kill = time.time()
+            sigkill_runner(victim)
+            wait_for(lambda: q.state_of(jid) == "succeeded", 300,
+                     message="failover completion")
+            recovery = time.time() - t_kill
+        finally:
+            for p in runners:
+                try:
+                    stop_runner(p)
+                except Exception:  # noqa: BLE001 — victim already dead
+                    pass
+        st = q.status(jid)
+        assert st["attempt"] == 2, f"expected re-lease, got {st['attempt']}"
+        assert st["report"]["resumed_at"] > 0, "must resume, not restart"
+        with open(out, "rb") as f:
+            assert f.read() == ref, "failover output must be byte-identical"
+        return {"recovery_seconds": recovery,
+                "resumed_at": st["report"]["resumed_at"]}
+    finally:
+        shutil.rmtree(base, ignore_errors=True)
+
+
+def main(argv) -> int:
+    quick, json_path = parse_bench_args(argv)
+    if quick:
+        n_jobs, delay, n_samples, runner_counts = 6, 0.025, 40, (1, 2, 4)
+    else:
+        n_jobs, delay, n_samples, runner_counts = 12, 0.04, 60, (1, 2, 4)
+
+    throughput = {}
+    for n in runner_counts:
+        tp = run_throughput(n, n_jobs, delay, n_samples)
+        throughput[n] = tp
+        emit(f"cluster_throughput_{n}runners", 1.0 / tp,
+             derived=f"{tp:.2f} jobs/s ({n_jobs} jobs)")
+
+    speedup2 = throughput[2] / throughput[1]
+    emit("cluster_speedup_2runners", 0.0, derived=f"{speedup2:.2f}x vs 1")
+    if 4 in throughput:
+        emit("cluster_speedup_4runners", 0.0,
+             derived=f"{throughput[4] / throughput[1]:.2f}x vs 1")
+
+    rec = run_kill_recovery(delay, n_samples + 40)
+    emit("cluster_kill_recovery", rec["recovery_seconds"],
+         derived=f"resumed_at={rec['resumed_at']} attempt=2 byte-identical")
+
+    assert speedup2 >= 1.7, \
+        f"2-runner throughput only {speedup2:.2f}x of 1-runner (need >=1.7x)"
+    print(f"[bench_cluster] OK: 2-runner speedup {speedup2:.2f}x, "
+          f"kill recovery {rec['recovery_seconds']:.1f}s")
+
+    if json_path:
+        dump_json(json_path)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

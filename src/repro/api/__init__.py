@@ -5,14 +5,20 @@ jobs and the NL agent all lower to the same deferred plan and dispatch
 through the adaptive Executor (fusion / reordering / streaming segments).
 """
 from repro.api.analysis import DEFAULT_ANALYZE_OPS, analyze, discover_stat_ops
-from repro.api.jobs import Job, JobManager, JobState, JobStoreFull
+from repro.api.cluster import (
+    ClusterQueue, ClusterRunner, Lease, PlacementPolicy,
+)
+from repro.api.jobs import (
+    ClusterJobHandle, Job, JobManager, JobState, JobStoreFull,
+)
 from repro.api.pipeline import (
     LazyDataset, Pipeline, from_dataset, from_recipe, from_samples, read_jsonl,
 )
 
 __all__ = [
     "DEFAULT_ANALYZE_OPS", "analyze", "discover_stat_ops",
-    "Job", "JobManager", "JobState", "JobStoreFull",
+    "ClusterQueue", "ClusterRunner", "Lease", "PlacementPolicy",
+    "ClusterJobHandle", "Job", "JobManager", "JobState", "JobStoreFull",
     "LazyDataset", "Pipeline",
     "read_jsonl", "from_samples", "from_dataset", "from_recipe",
 ]

@@ -1,0 +1,819 @@
+"""Distributed job queue + multi-node runner placement (paper §5.2: the
+cloud-scale half of "adaptive execution").
+
+The PR-3 JobManager was a single-process daemon pool: one server node ran
+every job and a crashed run was merely *reported* as failed. This module is
+the multi-node substrate beneath it — a durable, filesystem-coordinated job
+queue from which N independent **runner processes** (threads, local
+processes, or nodes sharing a filesystem) lease jobs with heartbeats and
+TTLs, plus lease-expiry failover that resumes a dead runner's job from its
+last segment-boundary checkpoint on a surviving runner.
+
+Every coordination primitive is a plain POSIX file operation that behaves on
+a shared filesystem (NFS-style): atomic claim via ``O_CREAT | O_EXCL``,
+atomic publish via ``os.replace``, and an append-only fsync'd JSONL event
+log. No sockets, no third-party broker — a runner is just a process pointed
+at the same ``cluster_dir``.
+
+Layout under ``cluster_dir/``::
+
+  queue/<job_id>.json        job spec: recipe dict + submit metadata
+  claims/<job_id>.a<N>.json  lease for attempt N: runner, deadline, renewals
+  results/<job_id>.json      terminal record: state, report | error, attempt
+  progress/<job_id>.json     live per-op monitor rows (heartbeat rewrites)
+  cancel/<job_id>            cancellation marker (existence = cancelled)
+  runners/<runner_id>.json   runner card: alive_at, capacity, active,
+                             throughput EWMA, quarantine history
+  health/<runner_id>.json    dispatch.HealthRegistry file (worker slots)
+  checkpoints/<job_id>/      segment-boundary checkpoints (failover resume)
+  log.jsonl                  append-only fsync'd event log
+
+Lease protocol (attempt-numbered claims):
+
+* a claim is ``claims/<job_id>.a<N>.json`` created with ``O_EXCL`` — exactly
+  one runner wins attempt N;
+* the **current** lease is the highest-numbered claim; a lease whose
+  ``deadline`` (renewed by heartbeat to ``now + ttl``) has passed is
+  *expired* and the job becomes claimable again at attempt N+1;
+* a zombie runner (alive but past its deadline — GC pause, network hiccup)
+  discovers the loss at its next heartbeat: ``renew`` fails once a newer
+  attempt exists, the zombie aborts its run and discards its output, so the
+  re-claimed attempt's export is the only one published;
+* a re-claimed job resumes from the deepest segment-boundary checkpoint the
+  dead attempt persisted (``checkpoints/<job_id>``) instead of restarting.
+
+Placement is demand-side (Ray-lease-style): runners *pull*, but a runner
+only claims when :class:`PlacementPolicy` ranks it best among live runner
+cards — scored by observed throughput, resident (free) capacity, and
+persisted WindowedDispatcher quarantine history — unless the job has waited
+past the deference window (so a lone slow runner still makes progress).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import socket
+import threading
+import time
+import uuid
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from repro.core.storage import json_dumps, json_loads
+
+# job states mirrored from repro.api.jobs.JobState (no import cycle)
+QUEUED = "queued"
+RUNNING = "running"
+SUCCEEDED = "succeeded"
+FAILED = "failed"
+CANCELLED = "cancelled"
+TERMINAL = (SUCCEEDED, FAILED, CANCELLED)
+
+DEFAULT_LEASE_TTL = 15.0   # seconds a lease lives between heartbeats
+DEFAULT_RUNNER_TTL = 30.0  # seconds before a runner card is considered dead
+DEFAULT_DEFER = 2.0        # seconds a worse-placed runner defers to a better one
+
+
+def _json_num(v: Any) -> Any:
+    # monitor rows use inf for not-yet-run speeds; the serializer rejects inf
+    if isinstance(v, float) and (v != v or abs(v) == float("inf")):
+        return 0.0
+    return v
+
+
+def _sanitize_rows(rows: List[dict]) -> List[dict]:
+    return [{k: _json_num(v) for k, v in dict(r).items()} for r in rows]
+
+
+def _read_json(path: str) -> Optional[Dict[str, Any]]:
+    """Best-effort JSON file read: None on missing/torn/mid-write files —
+    readers race writers by design on a shared filesystem."""
+    try:
+        with open(path, "rb") as f:
+            raw = f.read()
+    except (FileNotFoundError, OSError):
+        return None
+    if not raw:
+        return None
+    try:
+        data = json_loads(raw)
+    except ValueError:
+        return None
+    return data if isinstance(data, dict) else None
+
+
+def _write_json_atomic(path: str, payload: Dict[str, Any]) -> None:
+    tmp = f"{path}.{os.getpid()}.{threading.get_ident()}.tmp"
+    with open(tmp, "wb") as f:
+        f.write(json_dumps(payload))
+    os.replace(tmp, path)
+
+
+@dataclasses.dataclass
+class Lease:
+    """One runner's exclusive hold on one job attempt."""
+
+    job_id: str
+    runner_id: str
+    attempt: int
+    deadline: float
+    ttl: float
+
+    def expired(self, now: Optional[float] = None) -> bool:
+        return (now if now is not None else time.time()) > self.deadline
+
+
+class PlacementPolicy:
+    """Scores runner cards for demand-side placement.
+
+    ``score`` favours runners with (a) higher observed throughput (EWMA of
+    samples/sec over completed jobs), (b) more resident free capacity, and
+    (c) fewer persisted worker quarantines (a runner whose WindowedDispatcher
+    kept quarantining workers is a machine the scheduler should trust less —
+    the ROADMAP's cross-run health item). A runner with no free slot scores
+    0 and never claims.
+    """
+
+    def __init__(self, defer_seconds: float = DEFAULT_DEFER):
+        self.defer_seconds = defer_seconds
+
+    @staticmethod
+    def score(card: Dict[str, Any]) -> float:
+        capacity = max(1, int(card.get("capacity", 1)))
+        free = capacity - int(card.get("active", 0))
+        if free <= 0:
+            return 0.0
+        throughput = float(card.get("throughput", 0.0)) or 1.0
+        quarantines = int(card.get("quarantines", 0))
+        return throughput * (free / capacity) / (1.0 + quarantines)
+
+    def should_claim(self, runner_id: str, cards: List[Dict[str, Any]],
+                     waited: float) -> bool:
+        """Claim when this runner is the best-placed live candidate, or the
+        job has already waited out the deference window (starvation guard:
+        a lone or uniformly-bad pool still drains the queue)."""
+        if waited >= self.defer_seconds:
+            return True
+        mine = next((c for c in cards if c.get("runner_id") == runner_id), None)
+        if mine is None:
+            return True  # no card yet — claiming beats stalling
+        my_score = self.score(mine)
+        if my_score <= 0.0:
+            return False
+        for c in cards:
+            if c.get("runner_id") == runner_id:
+                continue
+            s = self.score(c)
+            # deterministic tie-break so two equal runners don't both defer
+            if s > my_score or (s == my_score
+                                and str(c.get("runner_id")) < runner_id):
+                return False
+        return True
+
+
+class ClusterQueue:
+    """Durable shared-store job queue (see module docstring for protocol)."""
+
+    SUBDIRS = ("queue", "claims", "results", "progress", "cancel",
+               "runners", "health", "checkpoints")
+
+    def __init__(self, cluster_dir: str, lease_ttl: float = DEFAULT_LEASE_TTL,
+                 runner_ttl: float = DEFAULT_RUNNER_TTL):
+        self.dir = os.path.abspath(cluster_dir)
+        self.lease_ttl = lease_ttl
+        self.runner_ttl = runner_ttl
+        for sub in self.SUBDIRS:
+            os.makedirs(os.path.join(self.dir, sub), exist_ok=True)
+
+    # ------------------------------------------------------------------
+    # paths
+    # ------------------------------------------------------------------
+    def _p(self, *parts: str) -> str:
+        return os.path.join(self.dir, *parts)
+
+    def spec_path(self, job_id: str) -> str:
+        return self._p("queue", f"{job_id}.json")
+
+    def claim_path(self, job_id: str, attempt: int) -> str:
+        return self._p("claims", f"{job_id}.a{attempt}.json")
+
+    def result_path(self, job_id: str) -> str:
+        return self._p("results", f"{job_id}.json")
+
+    def progress_path(self, job_id: str) -> str:
+        return self._p("progress", f"{job_id}.json")
+
+    def cancel_path(self, job_id: str) -> str:
+        return self._p("cancel", job_id)
+
+    def checkpoint_dir(self, job_id: str) -> str:
+        return self._p("checkpoints", job_id)
+
+    def health_path(self, runner_id: str) -> str:
+        return self._p("health", f"{runner_id}.json")
+
+    # ------------------------------------------------------------------
+    # event log
+    # ------------------------------------------------------------------
+    def log_event(self, event: str, **fields: Any) -> None:
+        """Append one event to the fsync'd JSONL log. O_APPEND keeps
+        concurrent single-line appends from interleaving; fsync makes the
+        record durable before the caller proceeds (a claim that is not on
+        disk is a claim a failover reader never saw)."""
+        rec = json_dumps({"ts": time.time(), "event": event, **fields})
+        fd = os.open(self._p("log.jsonl"),
+                     os.O_WRONLY | os.O_APPEND | os.O_CREAT, 0o644)
+        try:
+            os.write(fd, rec + b"\n")
+            os.fsync(fd)
+        finally:
+            os.close(fd)
+
+    def read_log(self) -> List[Dict[str, Any]]:
+        out: List[Dict[str, Any]] = []
+        try:
+            with open(self._p("log.jsonl"), "rb") as f:
+                for line in f:
+                    line = line.strip()
+                    if not line:
+                        continue
+                    try:
+                        out.append(json_loads(line))
+                    except ValueError:
+                        continue  # torn tail from a crashed writer
+        except FileNotFoundError:
+            pass
+        return out
+
+    # ------------------------------------------------------------------
+    # submission / inspection
+    # ------------------------------------------------------------------
+    def submit(self, recipe: Dict[str, Any],
+               job_id: Optional[str] = None) -> str:
+        """Enqueue a job spec (a Recipe dict). Returns the job id. The spec
+        is the unit of durability: any runner that can read the shared dir
+        can execute it."""
+        job_id = job_id or uuid.uuid4().hex[:12]
+        if os.path.exists(self.spec_path(job_id)):
+            raise ValueError(f"job id {job_id!r} already exists")
+        _write_json_atomic(self.spec_path(job_id), {
+            "job_id": job_id,
+            "recipe": dict(recipe),
+            "submitted_at": time.time(),
+        })
+        self.log_event("submitted", job_id=job_id)
+        return job_id
+
+    def job_ids(self) -> List[str]:
+        """All job ids, oldest-first. Sorted by spec-file mtime (one scandir,
+        no JSON decodes — this runs on every runner poll) with the id as the
+        tie-break; the atomic-replace publish makes mtime ≈ submit time."""
+        try:
+            entries = list(os.scandir(self._p("queue")))
+        except FileNotFoundError:
+            return []
+        keyed = []
+        for e in entries:
+            if not e.name.endswith(".json"):
+                continue
+            try:
+                mtime = e.stat().st_mtime
+            except OSError:
+                continue  # submitted/removed under our feet
+            keyed.append((mtime, e.name[:-5]))
+        return [jid for _, jid in sorted(keyed)]
+
+    def _result_ids(self) -> set:
+        try:
+            return {n[:-5] for n in os.listdir(self._p("results"))
+                    if n.endswith(".json")}
+        except FileNotFoundError:
+            return set()
+
+    def _cancel_ids(self) -> set:
+        try:
+            return set(os.listdir(self._p("cancel")))
+        except FileNotFoundError:
+            return set()
+
+    def _claims_by_job(self) -> Dict[str, Lease]:
+        """Current (highest-attempt) lease per job from ONE claims listdir —
+        the per-job ``current_lease`` scan is O(claims) each, which made the
+        runner poll O(jobs x claims)."""
+        best_name: Dict[str, Tuple[int, str]] = {}
+        try:
+            names = os.listdir(self._p("claims"))
+        except FileNotFoundError:
+            return {}
+        for n in names:
+            if not n.endswith(".json"):
+                continue
+            jid, _, attempt_s = n[:-5].rpartition(".a")
+            try:
+                attempt = int(attempt_s)
+            except ValueError:
+                continue
+            if not jid:
+                continue
+            if jid not in best_name or attempt > best_name[jid][0]:
+                best_name[jid] = (attempt, n)
+        out: Dict[str, Lease] = {}
+        for jid, (attempt, name) in best_name.items():
+            rec = _read_json(self._p("claims", name))
+            if rec is None:
+                continue
+            out[jid] = Lease(job_id=jid, runner_id=rec.get("runner_id", "?"),
+                             attempt=int(rec.get("attempt", attempt)),
+                             deadline=float(rec.get("deadline", 0.0)),
+                             ttl=float(rec.get("ttl", self.lease_ttl)))
+        return out
+
+    def read_spec(self, job_id: str) -> Dict[str, Any]:
+        spec = _read_json(self.spec_path(job_id))
+        if spec is None:
+            raise KeyError(job_id)
+        return spec
+
+    def current_lease(self, job_id: str) -> Optional[Lease]:
+        """Highest-attempt claim on the job, expired or not."""
+        best: Optional[Dict[str, Any]] = None
+        try:
+            names = os.listdir(self._p("claims"))
+        except FileNotFoundError:
+            return None
+        prefix = f"{job_id}.a"
+        for n in names:
+            if not (n.startswith(prefix) and n.endswith(".json")):
+                continue
+            rec = _read_json(self._p("claims", n))
+            if rec and (best is None or rec.get("attempt", 0) > best.get("attempt", 0)):
+                best = rec
+        if best is None:
+            return None
+        return Lease(job_id=job_id, runner_id=best.get("runner_id", "?"),
+                     attempt=int(best.get("attempt", 1)),
+                     deadline=float(best.get("deadline", 0.0)),
+                     ttl=float(best.get("ttl", self.lease_ttl)))
+
+    def is_cancelled(self, job_id: str) -> bool:
+        return os.path.exists(self.cancel_path(job_id))
+
+    def state_of(self, job_id: str) -> str:
+        result = _read_json(self.result_path(job_id))
+        if result is not None:
+            return result.get("state", FAILED)
+        if self.is_cancelled(job_id):
+            return CANCELLED
+        lease = self.current_lease(job_id)
+        if lease is not None and not lease.expired():
+            return RUNNING
+        return QUEUED
+
+    def status(self, job_id: str, verbose: bool = True) -> Dict[str, Any]:
+        """REST-shaped merged view of one job (same keys as Job.status so
+        the /jobs contract is identical in single-node and cluster mode)."""
+        spec = self.read_spec(job_id)  # KeyError -> caller maps to 404
+        result = _read_json(self.result_path(job_id)) or {}
+        lease = self.current_lease(job_id)
+        out: Dict[str, Any] = {
+            "job_id": job_id,
+            "state": self.state_of(job_id),
+            "created_at": spec.get("submitted_at"),
+            "started_at": result.get("started_at"),
+            "finished_at": result.get("finished_at"),
+            "error": result.get("error"),
+            "cluster": True,
+        }
+        if lease is not None:
+            out["runner_id"] = lease.runner_id
+            out["attempt"] = lease.attempt
+            if out["started_at"] is None and out["state"] == RUNNING:
+                out["started_at"] = lease.deadline - lease.ttl
+        if verbose:
+            rows = list((result.get("progress") or {}).get("per_op") or [])
+            if not rows:
+                prog = _read_json(self.progress_path(job_id)) or {}
+                rows = list(prog.get("per_op") or [])
+            out["progress"] = {
+                "per_op": rows,
+                "ops_started": sum(1 for r in rows if r.get("in", 0) > 0),
+                "ops_total": len(rows),
+            }
+            if result.get("report") is not None:
+                out["report"] = result["report"]
+        return out
+
+    def jobs(self) -> List[Dict[str, Any]]:
+        return [self.status(jid, verbose=False) for jid in self.job_ids()]
+
+    def depth(self) -> int:
+        """Jobs with no terminal result and no live lease — the claimable
+        backlog (the /cluster "queue depth")."""
+        n = 0
+        for jid in self.job_ids():
+            if self.state_of(jid) == QUEUED:
+                n += 1
+        return n
+
+    def live_count(self) -> int:
+        """Queued + running jobs — the bound JobManager.max_jobs applies to
+        in cluster mode (terminal results are durable and don't count)."""
+        results = self._result_ids()
+        cancelled = self._cancel_ids()
+        return sum(1 for jid in self.job_ids()
+                   if jid not in results and jid not in cancelled)
+
+    def cancel(self, job_id: str) -> None:
+        self.read_spec(job_id)  # KeyError for unknown ids
+        fd = os.open(self.cancel_path(job_id),
+                     os.O_WRONLY | os.O_CREAT, 0o644)
+        os.close(fd)
+        self.log_event("cancel_requested", job_id=job_id)
+
+    # ------------------------------------------------------------------
+    # runner cards
+    # ------------------------------------------------------------------
+    def write_card(self, card: Dict[str, Any]) -> None:
+        _write_json_atomic(
+            self._p("runners", f"{card['runner_id']}.json"),
+            {**card, "alive_at": time.time()})
+
+    def runner_cards(self, live_only: bool = True) -> List[Dict[str, Any]]:
+        cards: List[Dict[str, Any]] = []
+        try:
+            names = os.listdir(self._p("runners"))
+        except FileNotFoundError:
+            return cards
+        now = time.time()
+        for n in names:
+            if not n.endswith(".json"):
+                continue
+            card = _read_json(self._p("runners", n))
+            if card is None:
+                continue
+            card["alive"] = (now - card.get("alive_at", 0.0)) <= self.runner_ttl
+            if card["alive"] or not live_only:
+                cards.append(card)
+        return sorted(cards, key=lambda c: str(c.get("runner_id")))
+
+    # ------------------------------------------------------------------
+    # leasing
+    # ------------------------------------------------------------------
+    def try_claim(self, job_id: str, runner_id: str,
+                  ttl: Optional[float] = None) -> Optional[Lease]:
+        """Attempt-numbered exclusive claim. Returns the Lease, or None when
+        another runner holds (or just won) the job."""
+        if os.path.exists(self.result_path(job_id)) or self.is_cancelled(job_id):
+            return None
+        prev = self.current_lease(job_id)
+        if prev is not None and not prev.expired():
+            return None
+        attempt = 1 if prev is None else prev.attempt + 1
+        ttl = ttl or self.lease_ttl
+        lease = Lease(job_id=job_id, runner_id=runner_id, attempt=attempt,
+                      deadline=time.time() + ttl, ttl=ttl)
+        path = self.claim_path(job_id, attempt)
+        try:
+            # O_EXCL: the one coordination primitive a shared POSIX
+            # filesystem gives us that is atomic across nodes
+            fd = os.open(path, os.O_WRONLY | os.O_CREAT | os.O_EXCL, 0o644)
+        except FileExistsError:
+            return None  # lost the race for this attempt
+        try:
+            os.write(fd, json_dumps(dataclasses.asdict(lease)))
+            os.fsync(fd)
+        finally:
+            os.close(fd)
+        self.log_event("claimed", job_id=job_id, runner_id=runner_id,
+                       attempt=attempt)
+        if prev is not None:
+            self.log_event("requeued_after_expiry", job_id=job_id,
+                           dead_runner=prev.runner_id, attempt=attempt)
+        return lease
+
+    def next_job(self, runner_id: str,
+                 policy: Optional[PlacementPolicy] = None,
+                 ttl: Optional[float] = None) -> Optional[Lease]:
+        """Claim the oldest claimable job this runner is well-placed for.
+        This is the hot path (every runner, every poll): terminal/leased
+        jobs are filtered through three one-listdir indexes, and spec JSON
+        is only decoded for jobs that are actually claimable."""
+        policy = policy or PlacementPolicy()
+        cards = self.runner_cards()
+        now = time.time()
+        results = self._result_ids()
+        cancelled = self._cancel_ids()
+        claims = self._claims_by_job()
+        for jid in self.job_ids():
+            if jid in results or jid in cancelled:
+                continue
+            held = claims.get(jid)
+            if held is not None and not held.expired(now):
+                continue
+            spec = _read_json(self.spec_path(jid)) or {}
+            waited = now - spec.get("submitted_at", now)
+            if not policy.should_claim(runner_id, cards, waited):
+                continue
+            lease = self.try_claim(jid, runner_id, ttl=ttl)
+            if lease is not None:
+                return lease
+        return None
+
+    def renew(self, lease: Lease, ttl: Optional[float] = None) -> bool:
+        """Heartbeat: push the deadline out. Returns False when the lease
+        was lost — a newer attempt exists (we expired and someone re-claimed)
+        or the job finished/was cancelled elsewhere. A False return obliges
+        the runner to abort and discard its output."""
+        cur = self.current_lease(lease.job_id)
+        if cur is None or cur.attempt != lease.attempt \
+                or cur.runner_id != lease.runner_id:
+            return False
+        if os.path.exists(self.result_path(lease.job_id)):
+            return False
+        lease.ttl = ttl or lease.ttl
+        lease.deadline = time.time() + lease.ttl
+        _write_json_atomic(self.claim_path(lease.job_id, lease.attempt),
+                           dataclasses.asdict(lease))
+        return True
+
+    def expired_leases(self) -> List[Lease]:
+        """Current leases past their deadline on unfinished jobs — the
+        failover backlog surfaced by /cluster (claiming them is implicit in
+        ``next_job``; this is observability, not a state change)."""
+        out: List[Lease] = []
+        for jid in self.job_ids():
+            if os.path.exists(self.result_path(jid)):
+                continue
+            lease = self.current_lease(jid)
+            if lease is not None and lease.expired():
+                out.append(lease)
+        return out
+
+    # ------------------------------------------------------------------
+    # completion
+    # ------------------------------------------------------------------
+    def complete(self, lease: Lease, state: str,
+                 report: Optional[Dict[str, Any]] = None,
+                 error: Optional[str] = None,
+                 started_at: Optional[float] = None,
+                 progress: Optional[List[dict]] = None) -> bool:
+        """Publish the terminal record. Attempt-monotonic: a stale attempt
+        (a zombie that never noticed its lease loss) can never overwrite a
+        newer attempt's result. Returns whether the record was published."""
+        existing = _read_json(self.result_path(lease.job_id))
+        if existing is not None and int(existing.get("attempt", 0)) > lease.attempt:
+            self.log_event("stale_result_discarded", job_id=lease.job_id,
+                           runner_id=lease.runner_id, attempt=lease.attempt,
+                           kept_attempt=existing.get("attempt"))
+            return False
+        payload: Dict[str, Any] = {
+            "job_id": lease.job_id, "state": state,
+            "runner_id": lease.runner_id, "attempt": lease.attempt,
+            "started_at": started_at, "finished_at": time.time(),
+            "error": error, "report": report,
+        }
+        if progress is not None:
+            payload["progress"] = {"per_op": _sanitize_rows(progress)}
+        _write_json_atomic(self.result_path(lease.job_id), payload)
+        self.log_event("finished", job_id=lease.job_id, state=state,
+                       runner_id=lease.runner_id, attempt=lease.attempt)
+        return True
+
+    # ------------------------------------------------------------------
+    # overview (GET /cluster, cli cluster-status)
+    # ------------------------------------------------------------------
+    def overview(self) -> Dict[str, Any]:
+        states: Dict[str, int] = {}
+        leases: List[Dict[str, Any]] = []
+        now = time.time()
+        for jid in self.job_ids():
+            st = self.state_of(jid)
+            states[st] = states.get(st, 0) + 1
+            lease = self.current_lease(jid)
+            if lease is not None and st in (RUNNING, QUEUED):
+                leases.append({**dataclasses.asdict(lease),
+                               "expired": lease.expired(now)})
+        cards = self.runner_cards(live_only=False)
+        for c in cards:
+            c["score"] = PlacementPolicy.score(c)
+        return {
+            "enabled": True,
+            "cluster_dir": self.dir,
+            "queue_depth": states.get(QUEUED, 0),
+            "jobs": states,
+            "runners": cards,
+            "leases": leases,
+        }
+
+
+class ClusterRunner:
+    """One job-leasing worker process/thread.
+
+    The runner loop: publish a runner card (heartbeat), reap-and-claim the
+    oldest well-placed job, execute it with segment-boundary checkpoints
+    under the cluster dir, renew the lease from a heartbeat thread while the
+    run streams, and publish the terminal record. ``capacity`` > 1 executes
+    that many leased jobs concurrently in threads (resident capacity — the
+    placement score's denominator).
+    """
+
+    def __init__(self, cluster_dir: str, runner_id: Optional[str] = None,
+                 capacity: int = 1, lease_ttl: Optional[float] = None,
+                 poll: float = 0.2, policy: Optional[PlacementPolicy] = None,
+                 use_cluster_health: bool = True):
+        self.queue = ClusterQueue(cluster_dir) if isinstance(cluster_dir, str) \
+            else cluster_dir
+        self.runner_id = runner_id or f"{socket.gethostname()}-{os.getpid():x}-{uuid.uuid4().hex[:4]}"
+        self.capacity = max(1, capacity)
+        self.lease_ttl = lease_ttl or self.queue.lease_ttl
+        self.poll = poll
+        self.policy = policy or PlacementPolicy()
+        self.use_cluster_health = use_cluster_health
+        self.jobs_done = 0
+        self.throughput = 0.0  # samples/sec EWMA over completed jobs
+        self._active: Dict[str, threading.Thread] = {}
+        self._lock = threading.Lock()
+
+    # ------------------------------------------------------------------
+    def _card(self) -> Dict[str, Any]:
+        from repro.core.dispatch import HealthRegistry
+
+        quarantines = 0
+        if self.use_cluster_health:
+            quarantines = HealthRegistry(
+                self.queue.health_path(self.runner_id)).total_quarantines()
+        with self._lock:
+            active = len(self._active)
+        return {
+            "runner_id": self.runner_id,
+            "pid": os.getpid(),
+            "host": socket.gethostname(),
+            "capacity": self.capacity,
+            "active": active,
+            "throughput": round(self.throughput, 3),
+            "jobs_done": self.jobs_done,
+            "quarantines": quarantines,
+        }
+
+    def publish_card(self) -> None:
+        self.queue.write_card(self._card())
+
+    # ------------------------------------------------------------------
+    def _build_executor(self, job_id: str, spec: Dict[str, Any]):
+        from repro.core.executor import Executor
+        from repro.core.recipes import Recipe
+
+        recipe = Recipe.from_dict(spec.get("recipe") or {})
+        # failover resume: checkpoints live in the SHARED dir, keyed by job,
+        # so a surviving runner resumes the dead runner's segments
+        recipe.checkpoint_dir = recipe.checkpoint_dir or self.queue.checkpoint_dir(job_id)
+        if self.use_cluster_health and not recipe.health_path:
+            # worker-slot quarantine history persists per runner and feeds
+            # the placement score via the runner card
+            recipe.health_path = self.queue.health_path(self.runner_id)
+        return Executor(recipe)
+
+    def _execute(self, lease: Lease) -> None:
+        from repro.core.dataset import ExecutionCancelled
+
+        queue = self.queue
+        job_id = lease.job_id
+        started_at = time.time()
+        monitor: List[dict] = []
+        cancel_event = threading.Event()
+        lease_lost = threading.Event()
+        hb_stop = threading.Event()
+
+        def heartbeat() -> None:
+            # renew at ttl/3 so two missed beats still precede expiry;
+            # publish live progress + honour cancel markers on the way.
+            # Transient I/O errors (the NFS hiccups this design targets) and
+            # monitor-row races must cost at most one beat — a dead
+            # heartbeat thread means spurious expiry + double execution
+            while not hb_stop.wait(max(0.05, lease.ttl / 3.0)):
+                try:
+                    if queue.is_cancelled(job_id):
+                        cancel_event.set()
+                    if not queue.renew(lease):
+                        lease_lost.set()
+                        cancel_event.set()
+                        return
+                except Exception:  # noqa: BLE001 — missed beat, not death
+                    continue
+                try:
+                    _write_json_atomic(queue.progress_path(job_id),
+                                       {"per_op": _sanitize_rows(monitor),
+                                        "runner_id": self.runner_id,
+                                        "attempt": lease.attempt})
+                    self.publish_card()
+                except Exception:  # noqa: BLE001 — progress is best-effort
+                    pass
+
+        hb = threading.Thread(target=heartbeat, daemon=True,
+                              name=f"dj-lease-hb-{job_id}")
+        hb.start()
+        state, report, error = FAILED, None, None
+        try:
+            spec = queue.read_spec(job_id)
+            executor = self._build_executor(job_id, spec)
+            # run_streaming (not run): segment-boundary checkpoints are the
+            # failover-resume unit; materialize=False keeps the runner's
+            # memory bounded — output streams to the spec's export_path
+            _, rep = executor.run_streaming(
+                materialize=False, monitor=monitor,
+                cancel=cancel_event.is_set)
+            report = {
+                "recipe": rep.recipe, "n_in": rep.n_in, "n_out": rep.n_out,
+                "seconds": rep.seconds, "plan": rep.plan,
+                "errors": rep.errors, "streaming": rep.streaming,
+                "resumed_at": rep.resumed_at,
+                "dispatch": list(rep.dispatch or ()),
+            }
+            state = SUCCEEDED
+            if rep.seconds > 0 and rep.n_in:
+                inst = rep.n_in / rep.seconds
+                self.throughput = inst if self.throughput == 0.0 \
+                    else 0.7 * self.throughput + 0.3 * inst
+        except ExecutionCancelled:
+            state = CANCELLED
+        except Exception as e:  # noqa: BLE001 — job isolation boundary
+            state, error = FAILED, f"{type(e).__name__}: {e}"
+        finally:
+            hb_stop.set()
+            hb.join(timeout=max(1.0, lease.ttl))
+            # final ownership check: a stall can outlive the TTL without the
+            # heartbeat ever observing the loss (it stops with the run) —
+            # re-verify before publishing so a zombie can't clobber the
+            # failover attempt's result. complete() is attempt-monotonic as
+            # the last line of defence against the remaining race window.
+            owned = not lease_lost.is_set()
+            if owned:
+                try:
+                    owned = queue.renew(lease)
+                except Exception:  # noqa: BLE001 — can't prove ownership
+                    owned = False
+            if not owned:
+                # we are the zombie of a failed-over job: the re-claimed
+                # attempt owns the result now — discard ours, only log
+                queue.log_event("lease_lost_abort", job_id=job_id,
+                                runner_id=self.runner_id,
+                                attempt=lease.attempt)
+            else:
+                self.jobs_done += 1
+                queue.complete(lease, state, report=report, error=error,
+                               started_at=started_at, progress=monitor)
+            with self._lock:
+                self._active.pop(job_id, None)
+            self.publish_card()
+
+    # ------------------------------------------------------------------
+    def run_once(self) -> bool:
+        """Claim and execute at most one job synchronously. Returns whether
+        a job ran (test/bench hook — the daemon path is ``run_forever``)."""
+        self.publish_card()
+        lease = self.queue.next_job(self.runner_id, policy=self.policy,
+                                    ttl=self.lease_ttl)
+        if lease is None:
+            return False
+        with self._lock:
+            self._active[lease.job_id] = threading.current_thread()
+        self._execute(lease)
+        return True
+
+    def run_forever(self, stop: Optional[Callable[[], bool]] = None) -> None:
+        """Lease-execute loop until ``stop()`` goes True. With capacity > 1
+        jobs execute on daemon threads and the loop keeps claiming while
+        slots are free."""
+        last_card = 0.0
+        while not (stop and stop()):
+            now = time.time()
+            if now - last_card >= max(0.5, self.queue.runner_ttl / 3.0):
+                self.publish_card()
+                last_card = now
+            with self._lock:
+                free = self.capacity - len(self._active)
+            lease = None
+            if free > 0:
+                lease = self.queue.next_job(self.runner_id, policy=self.policy,
+                                            ttl=self.lease_ttl)
+            if lease is None:
+                time.sleep(self.poll)
+                continue
+            t = threading.Thread(target=self._execute, args=(lease,),
+                                 daemon=True,
+                                 name=f"dj-runner-{lease.job_id}")
+            with self._lock:
+                self._active[lease.job_id] = t
+            t.start()
+            self.publish_card()
+
+    def drain(self, timeout: float = 30.0) -> None:
+        """Wait for in-flight jobs (shutdown path for in-process runners)."""
+        deadline = time.time() + timeout
+        while time.time() < deadline:
+            with self._lock:
+                threads = list(self._active.values())
+            threads = [t for t in threads
+                       if t is not threading.current_thread() and t.is_alive()]
+            if not threads:
+                return
+            threads[0].join(timeout=0.2)

@@ -12,7 +12,18 @@ restarted manager restores prior jobs from it: finished jobs report their
 final state, progress rows and report unchanged; jobs that were queued or
 running when the process died surface as ``failed`` with an
 "interrupted by restart" error (their threads are gone — honesty over
-optimism). Restored jobs are status-only (``restored: true``).
+optimism). Restored jobs are status-only (``restored: true``). Restore
+respects ``max_jobs``: a snapshot larger than the bound keeps only the
+newest records, evicting oldest-first like the live store.
+
+With a ``cluster_dir``, the manager becomes a **thin client of the
+distributed queue** (``repro.api.cluster``): ``submit`` durably enqueues
+the lowered recipe, status/list/cancel read and write the shared store, and
+execution is done by whatever runners lease from the queue — including the
+manager's own in-process runner (one ``ClusterRunner`` of ``max_workers``
+capacity), so single-node deployments keep working with zero extra
+processes while multi-node ones just point more ``dj runner`` processes at
+the same dir. The REST contract is unchanged either way.
 """
 from __future__ import annotations
 
@@ -104,8 +115,33 @@ class Job:
         return out
 
 
+class ClusterJobHandle:
+    """Job-shaped view over a cluster-queue job: quacks like :class:`Job`
+    (``id``/``state``/``status()``/``done()``/``cancel()``) so the REST
+    handlers serve single-node and cluster jobs through one code path, but
+    every read goes to the shared store — the handle holds no job state."""
+
+    def __init__(self, cluster, job_id: str):
+        self._cluster = cluster
+        self.id = job_id
+
+    @property
+    def state(self) -> str:
+        return self._cluster.state_of(self.id)
+
+    def done(self) -> bool:
+        return self.state in JobState.TERMINAL
+
+    def cancel(self) -> None:
+        self._cluster.cancel(self.id)
+
+    def status(self, verbose: bool = True) -> Dict[str, Any]:
+        return self._cluster.status(self.id, verbose=verbose)
+
+
 class JobManager:
-    """Bounded thread-pool runner + bounded in-memory job store.
+    """Bounded thread-pool runner + bounded in-memory job store — or, with a
+    ``cluster_dir``, a thin client of the distributed cluster queue.
 
     Workers are daemon threads fed from a queue, so an interpreter exit never
     blocks on a stuck job; ``max_jobs`` bounds the store — submitting past it
@@ -114,16 +150,38 @@ class JobManager:
     """
 
     def __init__(self, max_workers: int = 2, max_jobs: int = 64,
-                 job_dir: Optional[str] = None):
+                 job_dir: Optional[str] = None,
+                 cluster_dir: Optional[str] = None,
+                 start_runner: bool = True):
         self.max_workers = max(1, max_workers)
         self.max_jobs = max(1, max_jobs)
         self.job_dir = job_dir
+        self.cluster = None
+        self._runner = None
+        self._runner_stop = threading.Event()
+        self._runner_thread: Optional[threading.Thread] = None
         self._jobs: "OrderedDict[str, Job]" = OrderedDict()
         self._queue: "queue.Queue[Optional[str]]" = queue.Queue()
         self._lock = threading.Lock()
         self._persist_lock = threading.Lock()  # serializes snapshot writes
         self._workers: List[threading.Thread] = []
         self._shutdown = False
+        if cluster_dir:
+            from repro.api.cluster import ClusterQueue, ClusterRunner
+
+            self.cluster = ClusterQueue(cluster_dir)
+            if start_runner:
+                # single-node mode IS cluster mode with one in-process
+                # runner: same queue, same leases, same failover semantics
+                self._runner = ClusterRunner(
+                    self.cluster, capacity=self.max_workers,
+                    runner_id=f"inproc-{os.getpid():x}")
+                self._runner_thread = threading.Thread(
+                    target=self._runner.run_forever,
+                    args=(self._runner_stop.is_set,),
+                    daemon=True, name="dj-inproc-runner")
+                self._runner_thread.start()
+            return
         if job_dir:
             os.makedirs(job_dir, exist_ok=True)
             self._restore()
@@ -184,10 +242,33 @@ class JobManager:
                     job.error = "interrupted by server restart"
                     job.finished_at = job.finished_at or time.time()
                 self._jobs[job.id] = job
+        # the restored store must honour the bound a smaller max_jobs imposes
+        # (a restarted server may be configured tighter than the one that
+        # wrote the snapshot): evict oldest-first, like the live store — all
+        # restored jobs are terminal by construction, so eviction never fails
+        while len(self._jobs) > self.max_jobs:
+            self._jobs.popitem(last=False)
 
     # ------------------------------------------------------------------
-    def submit(self, pipeline, job_id: Optional[str] = None) -> Job:
-        """Enqueue a pipeline; returns the (queued) Job immediately."""
+    def submit(self, pipeline, job_id: Optional[str] = None):
+        """Enqueue a pipeline; returns the (queued) Job immediately. In
+        cluster mode the pipeline is lowered to its recipe and durably
+        enqueued in the shared store (so it needs a file-backed source)."""
+        if self.cluster is not None:
+            if self._shutdown:
+                raise RuntimeError("JobManager is shut down")
+            recipe = pipeline.to_recipe().to_dict()
+            if not recipe.get("dataset_path"):
+                raise ValueError(
+                    "cluster jobs need a file-backed source (dataset_path): "
+                    "in-memory samples cannot be leased by remote runners")
+            # same bound, same 503: max_jobs caps the LIVE backlog (terminal
+            # results are durable on disk and don't count against it)
+            if self.cluster.live_count() >= self.max_jobs:
+                raise JobStoreFull(
+                    f"cluster backlog full ({self.max_jobs} live jobs)")
+            jid = self.cluster.submit(recipe, job_id=job_id)
+            return ClusterJobHandle(self.cluster, jid)
         job = Job(id=job_id or uuid.uuid4().hex[:12], pipeline=pipeline)
         with self._lock:
             if self._shutdown:
@@ -204,20 +285,27 @@ class JobManager:
         self._persist()
         return job
 
-    def get(self, job_id: str) -> Job:
+    def get(self, job_id: str):
+        if self.cluster is not None:
+            self.cluster.read_spec(job_id)  # KeyError -> caller maps to 404
+            return ClusterJobHandle(self.cluster, job_id)
         with self._lock:
             return self._jobs[job_id]  # KeyError -> caller maps to 404
 
     def list(self) -> List[Dict[str, Any]]:
+        if self.cluster is not None:
+            return self.cluster.jobs()
         with self._lock:
             jobs = list(self._jobs.values())
         return [j.status(verbose=False) for j in jobs]
 
-    def cancel(self, job_id: str) -> Job:
+    def cancel(self, job_id: str):
         """Request cancellation. Queued jobs flip to cancelled immediately;
         running jobs stop at the next block boundary."""
         job = self.get(job_id)
         job.cancel()
+        if self.cluster is not None:
+            return job
         with self._lock:
             if job.state == JobState.QUEUED:
                 job.state = JobState.CANCELLED
@@ -225,10 +313,24 @@ class JobManager:
         self._persist()
         return job
 
+    def cluster_status(self) -> Dict[str, Any]:
+        """GET /cluster payload: runner cards + scores, live/expired leases,
+        queue depth. ``enabled: False`` outside cluster mode."""
+        if self.cluster is None:
+            return {"enabled": False}
+        return self.cluster.overview()
+
     def shutdown(self, wait: bool = False) -> None:
         with self._lock:
             self._shutdown = True
             workers = list(self._workers)
+        if self.cluster is not None:
+            self._runner_stop.set()
+            if wait and self._runner is not None:
+                self._runner.drain(timeout=10.0)
+            if wait and self._runner_thread is not None:
+                self._runner_thread.join(timeout=5)
+            return
         for _ in workers:
             self._queue.put(None)
         if wait:

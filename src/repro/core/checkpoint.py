@@ -39,6 +39,15 @@ class CheckpointManager:
     def _manifest_path(self) -> str:
         return os.path.join(self.dir, "manifest.json")
 
+    def _write_manifest(self, manifest: Dict[str, Any]) -> None:
+        # atomic publish: a crash (SIGKILL) mid-write must never leave a torn
+        # manifest — cluster failover reads this file from a SURVIVING
+        # process to decide where to resume
+        tmp = f"{self._manifest_path()}.{os.getpid()}.tmp"
+        with open(tmp, "wb") as f:
+            f.write(json_dumps(manifest))
+        os.replace(tmp, self._manifest_path())
+
     def save_stage(self, sig: str, op_index: int, samples: List[dict]) -> None:
         tmp = self._stage_path(sig) + ".tmp"
         write_jsonl(tmp, samples)
@@ -46,15 +55,13 @@ class CheckpointManager:
         manifest = self.load_manifest()
         manifest["stages"] = {**manifest.get("stages", {}), sig: {
             "op_index": op_index, "n": len(samples)}}
-        with open(self._manifest_path(), "wb") as f:
-            f.write(json_dumps(manifest))
+        self._write_manifest(manifest)
 
     def set_meta(self, key: str, value: Any) -> None:
         """Persist a run-level fact (e.g. original input size) in the manifest."""
         manifest = self.load_manifest()
         manifest[key] = value
-        with open(self._manifest_path(), "wb") as f:
-            f.write(json_dumps(manifest))
+        self._write_manifest(manifest)
 
     def get_meta(self, key: str, default: Any = None) -> Any:
         return self.load_manifest().get(key, default)
@@ -64,6 +71,11 @@ class CheckpointManager:
             with open(self._manifest_path(), "rb") as f:
                 return json_loads(f.read())
         except FileNotFoundError:
+            return {"stages": {}}
+        except ValueError:
+            # torn/corrupt manifest (crash predating atomic writes, or a
+            # mid-replace read on a lax shared filesystem): resuming from
+            # nothing is always safe — restart beats a permanently dead job
             return {"stages": {}}
 
     def resume_point(

@@ -25,7 +25,17 @@ One shared subsystem replaces the hand-rolled wait loops that used to live in
   that fails ``worker_failure_limit`` tasks is *quarantined*: subsequent
   submissions carry the quarantine set and the worker-side guard bounces the
   task back (without running it) for re-dispatch to a healthy worker, instead
-  of pass-through-ing the quarantined worker's blocks.
+  of pass-through-ing the quarantined worker's blocks;
+* **preemptive loser cancellation** — when a speculative race resolves while
+  the losing submission is still running, the dispatcher flips the flight's
+  entry on a shared *preempt board*; cooperative task functions (the engines'
+  chain runners) poll it between batches and exit early with
+  :class:`TaskPreempted`, so a sleeping straggler stops occupying its worker
+  instead of draining to completion;
+* **cross-run health persistence** — with a :class:`HealthRegistry`, worker
+  quarantines are recorded per pool *slot* (arrival order) into a JSON file;
+  a slot quarantined in one run starts the next run on *probation* (a single
+  failure re-quarantines it) until it proves itself with a success.
 
 The dispatcher is pool-agnostic: it drives any ``concurrent.futures``
 executor. For process pools the task function and its arguments must be
@@ -36,6 +46,7 @@ from __future__ import annotations
 
 import collections
 import concurrent.futures as cf
+import itertools
 import os
 import threading
 import time
@@ -47,6 +58,11 @@ MEDIAN_FLOOR = 0.05
 
 _END = object()  # iterator sentinel (None could be a legitimate item)
 
+# per-process dispatcher sequence: namespaces preempt-board keys so a board
+# shared across sequential dispatch calls (one Manager per engine) never
+# lets run N's flight indices collide with run N+1's
+_BOARD_SEQ = itertools.count()
+
 
 class WorkerQuarantined(Exception):
     """Raised by the worker-side guard when a quarantined worker picks up a
@@ -55,6 +71,93 @@ class WorkerQuarantined(Exception):
     def __init__(self, worker_id: str):
         super().__init__(worker_id)
         self.worker_id = worker_id
+
+
+class TaskPreempted(Exception):
+    """Raised by a cooperative task function (via its ``should_stop`` poll)
+    after the dispatcher resolved the flight to another submission: the
+    partial work is discarded and the worker freed immediately."""
+
+
+class HealthRegistry:
+    """Cross-run worker-health persistence (JSON file, atomic rewrite).
+
+    Worker ids (pid:tid) do not survive a run, so health is keyed by stable
+    *slot* labels — the dispatcher maps worker ids to ``w0, w1, ...`` in
+    arrival order, approximating "the Nth worker of this pool" the way a
+    scheduler tracks node slots. Semantics:
+
+    * ``note_quarantine(slot)`` marks the slot quarantined (sticky across
+      save/load);
+    * a quarantined slot is *on probation* in later runs: the dispatcher
+      drops its failure allowance to one strike;
+    * ``note_recovery(slot)`` (a probation worker completing a task) clears
+      the flag; cumulative counters survive for placement scoring.
+    """
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = path
+        self.slots: Dict[str, Dict[str, int]] = {}
+        if path and os.path.exists(path):
+            try:
+                with open(path, "rb") as f:
+                    from repro.core.storage import json_loads
+
+                    data = json_loads(f.read())
+                slots = data.get("slots", {}) if isinstance(data, dict) else {}
+                self.slots = {
+                    str(k): {"failures": int(v.get("failures", 0)),
+                             "quarantines": int(v.get("quarantines", 0)),
+                             "recoveries": int(v.get("recoveries", 0)),
+                             "probation": int(v.get("probation", 0))}
+                    for k, v in slots.items() if isinstance(v, dict)
+                }
+            except (ValueError, OSError):
+                self.slots = {}  # torn/corrupt file: start fresh, not crash
+
+    def _slot(self, key: str) -> Dict[str, int]:
+        return self.slots.setdefault(
+            key, {"failures": 0, "quarantines": 0, "recoveries": 0,
+                  "probation": 0})
+
+    def note_failure(self, key: str) -> None:
+        self._slot(key)["failures"] += 1
+
+    def note_quarantine(self, key: str) -> None:
+        s = self._slot(key)
+        s["quarantines"] += 1
+        s["probation"] = 1
+
+    def note_recovery(self, key: str) -> None:
+        s = self._slot(key)
+        if s["probation"]:
+            s["recoveries"] += 1
+            s["probation"] = 0
+
+    def forgive(self, key: str) -> None:
+        """Clear probation without counting a recovery — used when a
+        whole-pool failure retroactively discredits the quarantines."""
+        self._slot(key)["probation"] = 0
+
+    def on_probation(self, key: str) -> bool:
+        return bool(self.slots.get(key, {}).get("probation"))
+
+    def total_quarantines(self) -> int:
+        return sum(s["quarantines"] for s in self.slots.values())
+
+    def snapshot(self) -> Dict[str, Any]:
+        return {"slots": {k: dict(v) for k, v in self.slots.items()}}
+
+    def save(self) -> None:
+        if not self.path:
+            return
+        from repro.core.storage import json_dumps
+
+        os.makedirs(os.path.dirname(os.path.abspath(self.path)), exist_ok=True)
+        tmp = f"{self.path}.{os.getpid()}.tmp"
+        with open(tmp, "wb") as f:
+            f.write(json_dumps(self.snapshot()))
+        os.replace(tmp, self.path)
 
 
 class WorkerTaskFailure(Exception):
@@ -76,12 +179,19 @@ def _worker_id() -> str:
     return f"{os.getpid()}:{threading.get_ident()}"
 
 
-def _guarded(fn, args, quarantined, t_submit: float, bounce_pause: float):
+def _guarded(fn, args, quarantined, t_submit: float, bounce_pause: float,
+             board=None, key=None):
     """Worker-side wrapper: quarantine check + timing + failure attribution.
 
     Returns ``(worker_id, queue_wait, compute_seconds, payload)``. The pause
     before a quarantine bounce keeps an idle bad worker from starving the
     queue by bouncing every task faster than healthy workers can pick one up.
+
+    With a preempt ``board`` (any shared mapping — a plain dict for thread
+    pools, a ``multiprocessing.Manager().dict()`` proxy for process pools),
+    the task function is called with a trailing ``should_stop`` callable it
+    may poll between batches; a True poll means the flight already resolved
+    elsewhere and the function should raise :class:`TaskPreempted`.
     """
     wid = _worker_id()
     if wid in quarantined:
@@ -89,8 +199,20 @@ def _guarded(fn, args, quarantined, t_submit: float, bounce_pause: float):
             time.sleep(bounce_pause)
         raise WorkerQuarantined(wid)
     t_start = time.time()
+
+    def _poll() -> bool:
+        try:
+            return bool(board.get(key))
+        except Exception:  # noqa: BLE001 — Manager proxy torn down: the
+            return True    # dispatch is over, stopping is the right answer
+
     try:
-        payload = fn(*args)
+        if board is not None:
+            payload = fn(*args, _poll)
+        else:
+            payload = fn(*args)
+    except TaskPreempted:
+        raise  # the dispatcher counts preempted losers, never wraps them
     except Exception as e:  # noqa: BLE001 — re-raised with attribution
         raise WorkerTaskFailure(
             wid, f"{type(e).__name__}: {e}", getattr(e, "op_index", -1)
@@ -153,7 +275,9 @@ class WindowedDispatcher:
                  adaptive_window: bool = True, bounce_limit: Optional[int] = None,
                  bounce_pause: float = 0.02, poll: float = 0.05,
                  label: str = "", log: Optional[List[dict]] = None,
-                 meta: Optional[Dict[str, Any]] = None):
+                 meta: Optional[Dict[str, Any]] = None,
+                 preempt_board: Optional[Any] = None,
+                 health: Optional[HealthRegistry] = None):
         self.pool = pool
         self.n_workers = max(1, n_workers)
         self.straggler_factor = straggler_factor
@@ -168,6 +292,14 @@ class WindowedDispatcher:
         self.label = label
         self.log = log
         self.meta = meta or {}
+        # shared mapping polled by cooperative task fns (dict for thread
+        # pools, Manager().dict() proxy for process pools); None disables
+        # preemptive loser cancellation
+        self.preempt_board = preempt_board
+        self._board_ns = f"d{next(_BOARD_SEQ)}:"
+        self.health = health
+        self._slots: Dict[str, str] = {}  # wid -> stable slot label
+        self._run_quarantined_slots: set = set()
 
         self.window, self.min_window, self.max_window = window_bounds(self.n_workers)
         self._window_start = self.window
@@ -182,6 +314,8 @@ class WindowedDispatcher:
         self.bounces = 0             # quarantine bounces
         self.pass_throughs = 0       # blocks whose every submission failed
         self.blocks = 0              # blocks yielded
+        self.preempt_signals = 0     # losers told to stop (board flipped)
+        self.preempted = 0           # losers observed exiting early
 
         # timing estimators
         self._times: collections.deque = collections.deque(maxlen=64)
@@ -194,11 +328,25 @@ class WindowedDispatcher:
         self.summary: Optional[Dict[str, Any]] = None
 
     # ------------------------------------------------------------------
+    def _slot_key(self, wid: str) -> str:
+        # stable per-run slot labels in arrival order; approximates "the Nth
+        # worker of the pool" so HealthRegistry survives pid churn across runs
+        if wid not in self._slots:
+            self._slots[wid] = f"w{len(self._slots)}"
+        return self._slots[wid]
+
+    def _failure_limit(self, wid: str) -> int:
+        if self.health is not None and self.health.on_probation(self._slot_key(wid)):
+            return 1  # probation: one strike re-quarantines
+        return self.worker_failure_limit
+
     def _submit(self, fl: _Flight, fn, args, quarantine: Optional[frozenset] = None,
                 backup: bool = False) -> cf.Future:
         q = frozenset(self.quarantined) if quarantine is None else quarantine
         try:
-            f = self.pool.submit(_guarded, fn, args, q, time.time(), self.bounce_pause)
+            f = self.pool.submit(_guarded, fn, args, q, time.time(),
+                                 self.bounce_pause, self.preempt_board,
+                                 f"{self._board_ns}{fl.idx}")
         except Exception:
             # pool is broken (worker OOM-killed / segfaulted mid-run) or shut
             # down: keep the run alive by finishing this block in-process
@@ -218,16 +366,31 @@ class WindowedDispatcher:
         fl.done = True
         fl.payload = payload
         fl.error = error
+        signalled = False
         for other in fl.futures:
-            other.cancel()  # running losers finish; their results are stale
+            if not other.cancel() and self.preempt_board is not None:
+                # already running: cancel() can't stop it, but the preempt
+                # board can — the loser's should_stop poll now reads True and
+                # it exits with TaskPreempted at its next batch boundary
+                # instead of draining (and occupying its worker) to the end
+                self.preempt_board[f"{self._board_ns}{fl.idx}"] = True
+                signalled = True
+        if signalled:
+            self.preempt_signals += 1
         fl.futures.clear()
 
     def _record_worker_failure(self, wid: Optional[str]) -> None:
         if not wid or self._quarantine_disabled:
             return
         self.worker_failures[wid] += 1
-        if self.worker_failures[wid] >= self.worker_failure_limit:
+        if self.health is not None:
+            self.health.note_failure(self._slot_key(wid))
+        if self.worker_failures[wid] >= self._failure_limit(wid):
             self.quarantined.add(wid)
+            if self.health is not None:
+                slot = self._slot_key(wid)
+                self.health.note_quarantine(slot)
+                self._run_quarantined_slots.add(slot)
         if len(self.quarantined) >= self.n_workers:
             # the whole pool failing is an op/data problem, not worker
             # health — quarantining everyone would only add a bounce storm
@@ -235,6 +398,11 @@ class WindowedDispatcher:
             self.quarantined.clear()
             self.worker_failures.clear()
             self._quarantine_disabled = True
+            if self.health is not None:
+                # don't poison the next run with probation for every slot
+                for slot in self._run_quarantined_slots:
+                    self.health.forgive(slot)
+                self._run_quarantined_slots.clear()
 
     def _adapt_window(self) -> None:
         if not self.adaptive_window or self._successes % 8 != 0 or not self._waits:
@@ -247,14 +415,26 @@ class WindowedDispatcher:
         elif ratio < 0.25:   # queue drains instantly: risk of idle workers
             self.window = min(self.max_window, self.window + 1)
 
+    def _note_preempted(self, f: cf.Future) -> bool:
+        try:
+            preempted = (not f.cancelled()
+                         and isinstance(f.exception(), TaskPreempted))
+        except cf.CancelledError:
+            return False
+        if preempted:
+            self.preempted += 1
+        return preempted
+
     def _handle_done(self, f: cf.Future, flights: Dict[int, _Flight], fn, args_of) -> None:
         idx = self._fut2idx.pop(f, None)
         self._pending.discard(f)
         if idx is None or idx not in flights:
+            self._note_preempted(f)  # loser of an already-yielded flight
             return
         fl = flights[idx]
         fl.futures.discard(f)
         if fl.done:
+            self._note_preempted(f)
             return  # stale loser of a won race
         try:
             wid, wait, compute, payload = f.result()
@@ -286,6 +466,13 @@ class WindowedDispatcher:
             return
         if f in fl.backups:
             self.speculation_wins += 1
+        if self.health is not None:
+            slot = self._slot_key(wid)
+            # a success clears PRIOR-run probation (the worker proved
+            # itself); a quarantine earned THIS run must survive to the
+            # next one even if bounce-forced tasks later succeed here
+            if slot not in self._run_quarantined_slots:
+                self.health.note_recovery(slot)
         self._successes += 1
         self._times.append(wait + compute)
         self._waits.append(wait)
@@ -355,6 +542,17 @@ class WindowedDispatcher:
     def _finalize(self) -> None:
         if self.summary is not None:
             return
+        # sweep losers that exited (preempted or otherwise) after their
+        # flight was yielded but before the consumer closed the stream
+        for f in list(self._pending):
+            if f.done():
+                self._pending.discard(f)
+                self._note_preempted(f)
+        if self.health is not None:
+            try:
+                self.health.save()
+            except OSError:
+                pass  # health persistence must never fail a run
         self.summary = {
             "label": self.label,
             "blocks": self.blocks,
@@ -363,6 +561,8 @@ class WindowedDispatcher:
             "speculation_wins": self.speculation_wins,
             "bounces": self.bounces,
             "pass_throughs": self.pass_throughs,
+            "preempt_signals": self.preempt_signals,
+            "preempted": self.preempted,
             "quarantined": sorted(self.quarantined),
             "window_start": self._window_start,
             "window_final": self.window,

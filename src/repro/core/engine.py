@@ -27,7 +27,9 @@ from typing import Any, Dict, Iterable, Iterator, List, Optional, Tuple
 import numpy as np
 
 from repro.core import schema as S
-from repro.core.dispatch import WindowedDispatcher, dispatch_policy
+from repro.core.dispatch import (
+    HealthRegistry, TaskPreempted, WindowedDispatcher, dispatch_policy,
+)
 from repro.core.ops_base import Operator, OpError
 from repro.core.storage import SampleBlock, split_blocks
 
@@ -62,6 +64,7 @@ def _iter_batches(samples: List[Sample], batch_size: int):
 def run_chain(
     ops: List[Operator], samples: List[Sample],
     batch_size: Optional[int] = None, drop_empty: bool = True,
+    should_stop=None,
 ) -> Tuple[List[Sample], List[dict]]:
     """Drive one block's samples through a whole op chain in a single pass.
 
@@ -70,6 +73,10 @@ def run_chain(
     barrier per op. Returns (out_samples, per-op stats) where each stats entry
     is {"op", "in", "out", "seconds", "errors"} for THIS block only — the
     caller aggregates across blocks so per-op lineage keeps working.
+
+    ``should_stop`` is the dispatcher's preemption poll: checked between
+    batches, a True result raises :class:`TaskPreempted` so a speculative
+    loser frees its worker instead of draining the rest of the chain.
     """
     stats: List[dict] = []
     for k, op in enumerate(ops):
@@ -80,10 +87,12 @@ def run_chain(
             bs = batch_size or op.default_batch_size
             out: List[Sample] = []
             for i in range(0, len(samples), bs):
+                if should_stop is not None and should_stop():
+                    raise TaskPreempted(f"chain preempted at op[{k}] {op.name}")
                 out.extend(op.run_batch_safe(samples[i : i + bs], i))
             if drop_empty:
                 out = [s for s in out if not S.is_empty(s)]
-        except ChainOpFailure:
+        except (ChainOpFailure, TaskPreempted):
             raise
         except Exception as e:  # escaped the per-sample exception manager
             raise ChainOpFailure(k, op.name, f"{type(e).__name__}: {e}") from e
@@ -117,12 +126,15 @@ class LocalEngine:
     name = "local"
 
     def __init__(self, n_threads: int = 1, straggler_factor: float = 3.0,
-                 speculate: bool = True):
+                 speculate: bool = True, health_path: Optional[str] = None):
         self.n_threads = n_threads
         self.straggler_factor = straggler_factor
         self.speculate = speculate
         self.redispatches = 0  # cumulative; per-call counts live in dispatch_log
         self.dispatch_log: List[dict] = []
+        # cross-run worker-slot health (docs/runtime.md): quarantines persist
+        # to health_path; previously-quarantined slots start on probation
+        self.health = HealthRegistry(health_path) if health_path else None
 
     def dispatch_policy(self) -> dict:
         return {"engine": self.name,
@@ -200,7 +212,7 @@ class LocalEngine:
 
         tls = threading.local()  # one clone chain per worker thread, not per block
 
-        def work(samples):
+        def work(samples, should_stop=None):
             # thread pools share objects (the process pool's pickling copies
             # per dispatch): process a private copy so a speculative backup
             # or retry never mutates dicts a straggling original still
@@ -218,7 +230,8 @@ class LocalEngine:
                 # entry (not after run_chain) so a hard chain failure can't
                 # leak this block's errors into the thread's next block
                 o.errors = []
-            out, stats = run_chain(local_ops, samples, batch_size)
+            out, stats = run_chain(local_ops, samples, batch_size,
+                                   should_stop=should_stop)
             errs = [(k, e) for k, o in enumerate(local_ops) for e in o.errors]
             return out, stats, errs
 
@@ -227,7 +240,9 @@ class LocalEngine:
                 pool, threads, straggler_factor=self.straggler_factor,
                 speculate=self.speculate,
                 label="+".join(op.name for op in ops),
-                log=self.dispatch_log, meta={"engine": self.name})
+                log=self.dispatch_log, meta={"engine": self.name},
+                # plain dict: thread-pool workers share the driver's heap
+                preempt_board={}, health=self.health)
             gen = disp.run(blocks, work, lambda blk: (blk.samples,))
             try:
                 for blk, payload, err in gen:
@@ -258,10 +273,13 @@ def _worker_apply(op_config: Dict[str, Any], samples: List[Sample], batch_size: 
 
 def _worker_apply_chain(
     op_configs: List[Dict[str, Any]], samples: List[Sample],
-    batch_size: Optional[int] = None,
+    batch_size: Optional[int] = None, should_stop=None,
 ):
     """Runs in a worker process: rebuild the whole segment chain from configs
-    and drive the block through it in one dispatch."""
+    and drive the block through it in one dispatch. ``should_stop`` is the
+    dispatcher's preemption poll (a Manager-proxy read), threaded into
+    ``run_chain`` so a losing speculative submission exits at the next batch
+    boundary instead of draining."""
     from repro.core.registry import create_op
 
     ops = []
@@ -273,7 +291,7 @@ def _worker_apply_chain(
             raise ChainOpFailure(k, str(c.get("name", "?")),
                                  f"{type(e).__name__}: {e}") from e
         ops.append(op)
-    out, stats = run_chain(ops, samples, batch_size)
+    out, stats = run_chain(ops, samples, batch_size, should_stop=should_stop)
     # errors carry the op's index in the chain — attribution by name would
     # merge two instances of the same OP class
     errors = [(k, e.__dict__) for k, op in enumerate(ops) for e in op.errors]
@@ -295,7 +313,7 @@ class ParallelEngine:
 
     def __init__(self, n_workers: Optional[int] = None, straggler_factor: float = 3.0,
                  speculate: bool = True, min_completions: Optional[int] = None,
-                 worker_failure_limit: int = 3):
+                 worker_failure_limit: int = 3, health_path: Optional[str] = None):
         self.n_workers = n_workers or max(1, (os.cpu_count() or 2) - 1)
         self.straggler_factor = straggler_factor
         self.speculate = speculate
@@ -303,13 +321,39 @@ class ParallelEngine:
         self.worker_failure_limit = worker_failure_limit
         self.redispatches = 0  # cumulative; per-call counts in EngineStats/dispatch_log
         self.dispatch_log: List[dict] = []
+        self.health = HealthRegistry(health_path) if health_path else None
+        self._preempt_mgr: Any = None  # lazy Manager; False = unavailable
+        self._preempt_dict: Any = None
 
-    def _dispatcher(self, pool, label: str) -> WindowedDispatcher:
+    def _dispatcher(self, pool, label: str, preempt_board=None) -> WindowedDispatcher:
         return WindowedDispatcher(
             pool, self.n_workers, straggler_factor=self.straggler_factor,
             speculate=self.speculate, min_completions=self.min_completions,
             worker_failure_limit=self.worker_failure_limit,
-            label=label, log=self.dispatch_log, meta={"engine": self.name})
+            label=label, log=self.dispatch_log, meta={"engine": self.name},
+            preempt_board=preempt_board, health=self.health)
+
+    def _preempt_board(self):
+        """Manager-backed shared dict readable from worker processes: the
+        preemption channel for the chain path. ONE Manager per engine (its
+        server process costs ~100ms to start — per-segment churn would pay
+        that on every chain call), shared across dispatch calls; dispatcher
+        key namespacing keeps sequential runs from colliding. Returns None
+        when the Manager can't start (preemption then degrades to the old
+        cancel-only behavior rather than failing the run); the Manager dies
+        with the engine (its finalizer runs on GC / interpreter exit)."""
+        if self._preempt_mgr is False:
+            return None
+        if self._preempt_mgr is None:
+            try:
+                import multiprocessing
+
+                self._preempt_mgr = multiprocessing.Manager()
+                self._preempt_dict = self._preempt_mgr.dict()
+            except Exception:  # noqa: BLE001 — sandboxed envs without semaphores
+                self._preempt_mgr = False
+                return None
+        return self._preempt_dict
 
     def dispatch_policy(self) -> dict:
         return {"engine": self.name,
@@ -384,8 +428,10 @@ class ParallelEngine:
             yield from self._fallback().map_block_chain(ops, blocks, batch_size)
             return
 
+        board = self._preempt_board() if self.speculate else None
         with cf.ProcessPoolExecutor(self.n_workers) as pool:
-            disp = self._dispatcher(pool, label="+".join(op.name for op in ops))
+            disp = self._dispatcher(pool, label="+".join(op.name for op in ops),
+                                    preempt_board=board)
             gen = disp.run(blocks, _worker_apply_chain,
                            lambda b: (cfgs, b.samples, batch_size))
             try:

@@ -90,7 +90,12 @@ class Executor:
 
     def _make_engine(self):
         r = self.recipe
-        return make_engine(r.engine, **({"n_workers": r.np} if r.engine == "parallel" else {}))
+        kw: Dict[str, Any] = {}
+        if r.engine == "parallel":
+            kw["n_workers"] = r.np
+        if r.health_path and r.engine in ("local", "parallel"):
+            kw["health_path"] = r.health_path
+        return make_engine(r.engine, **kw)
 
     def streaming_eligible(self) -> bool:
         """Streaming drops the per-op dataset-wide barrier. Insight mining

@@ -26,6 +26,9 @@ class Recipe:
     checkpoint_dir: Optional[str] = None
     insight: bool = False
     block_bytes: Optional[int] = None  # None -> storage.DEFAULT_BLOCK_BYTES
+    # cross-run worker-health file (dispatch.HealthRegistry): quarantines
+    # persist here and previously-quarantined slots start on probation
+    health_path: Optional[str] = None
 
     @classmethod
     def from_dict(cls, d: Dict[str, Any]) -> "Recipe":

@@ -5,6 +5,8 @@ all thin shells over the shared Pipeline API (repro.api).
   python -m repro.interface.cli explain --config recipe.{json,yaml}
   python -m repro.interface.cli analyze --dataset_path x.jsonl [--auto]
   python -m repro.interface.cli list-ops
+  python -m repro.interface.cli runner --cluster_dir DIR [--capacity N]
+  python -m repro.interface.cli cluster-status --cluster_dir DIR
 """
 from __future__ import annotations
 
@@ -45,6 +47,29 @@ def main(argv=None):
 
     sub.add_parser("list-ops", help="print the OP registry")
 
+    p_run = sub.add_parser("runner", help="run a cluster job runner: lease "
+                                          "jobs from a shared cluster_dir, "
+                                          "execute them with heartbeats and "
+                                          "segment-checkpoint failover")
+    p_run.add_argument("--cluster_dir", required=True)
+    p_run.add_argument("--runner_id", default=None)
+    p_run.add_argument("--capacity", type=int, default=1,
+                       help="concurrent jobs this runner holds leases for")
+    p_run.add_argument("--lease_ttl", type=float, default=None,
+                       help="seconds a lease survives without a heartbeat")
+    p_run.add_argument("--poll", type=float, default=0.2)
+    p_run.add_argument("--defer", type=float, default=None, dest="defer_s",
+                       help="placement deference window in seconds (how long "
+                            "a worse-placed runner leaves a job for a better "
+                            "one before claiming it anyway)")
+    p_run.add_argument("--once", action="store_true",
+                       help="claim and run at most one job, then exit")
+
+    p_cs = sub.add_parser("cluster-status", help="print the cluster queue "
+                                                 "overview (runners, leases, "
+                                                 "queue depth)")
+    p_cs.add_argument("--cluster_dir", required=True)
+
     args = ap.parse_args(argv)
 
     if args.cmd == "list-ops":
@@ -79,6 +104,52 @@ def main(argv=None):
             kind = "barrier" if seg["barrier"] else (
                 "stateful" if seg.get("stateful") else "stream ")
             print(f"  segment {i} [{kind}]: {' -> '.join(seg['ops'])}")
+        return 0
+
+    if args.cmd == "runner":
+        from repro.api.cluster import ClusterQueue, ClusterRunner, PlacementPolicy
+
+        queue = ClusterQueue(args.cluster_dir)
+        if args.lease_ttl:
+            queue.lease_ttl = args.lease_ttl
+        policy = None if args.defer_s is None \
+            else PlacementPolicy(defer_seconds=args.defer_s)
+        runner = ClusterRunner(queue, runner_id=args.runner_id,
+                               capacity=args.capacity,
+                               lease_ttl=args.lease_ttl, poll=args.poll,
+                               policy=policy)
+        print(f"runner {runner.runner_id} leasing from {queue.dir} "
+              f"(capacity={runner.capacity}, ttl={runner.lease_ttl}s)",
+              flush=True)
+        if args.once:
+            ran = runner.run_once()
+            print(f"runner {runner.runner_id}: "
+                  f"{'ran one job' if ran else 'queue empty'}")
+            return 0
+        try:
+            runner.run_forever()
+        except KeyboardInterrupt:
+            runner.drain()
+        return 0
+
+    if args.cmd == "cluster-status":
+        from repro.api.cluster import ClusterQueue
+
+        ov = ClusterQueue(args.cluster_dir).overview()
+        jobs = " ".join(f"{k}={v}" for k, v in sorted(ov["jobs"].items()))
+        print(f"cluster {ov['cluster_dir']}")
+        print(f"queue_depth={ov['queue_depth']} {jobs}")
+        for c in ov["runners"]:
+            live = "live" if c.get("alive") else "dead"
+            print(f"  runner {c['runner_id']:28s} [{live}] "
+                  f"active={c.get('active', 0)}/{c.get('capacity', 1)} "
+                  f"throughput={c.get('throughput', 0.0):.1f}/s "
+                  f"quarantines={c.get('quarantines', 0)} "
+                  f"score={c.get('score', 0.0):.2f}")
+        for l in ov["leases"]:
+            mark = "EXPIRED" if l["expired"] else "live"
+            print(f"  lease {l['job_id']} -> {l['runner_id']} "
+                  f"attempt={l['attempt']} [{mark}]")
         return 0
 
     if args.cmd == "analyze":

@@ -12,6 +12,15 @@ job subsystem, all routed through the shared Pipeline API.
   GET    /jobs             — job summaries
   GET    /jobs/<id>        — state + live per-op progress + final report
   DELETE /jobs/<id>        — cancel (stops at the next block boundary)
+  GET    /cluster          — cluster overview: runner cards + placement
+                           scores, live/expired leases, queue depth
+                           ({"enabled": false} outside cluster mode)
+
+With ``serve(cluster_dir=...)`` the job subsystem runs on the distributed
+cluster queue (repro.api.cluster): submissions are durably enqueued in the
+shared store and executed by whichever runners lease them — the server's own
+in-process runner and/or external ``dj runner`` processes. The /jobs
+contract is identical in both modes.
 
 Errors are structured: {"error": {"type", "message"}} with 400 for
 malformed bodies/params, 404 for unknown ops/jobs/routes, 409 for invalid
@@ -30,14 +39,16 @@ class DJServer(ThreadingHTTPServer):
     """HTTP server owning the shared JobManager."""
 
     def __init__(self, addr, handler, max_workers: int = 2, max_jobs: int = 64,
-                 job_dir: str = None):
+                 job_dir: str = None, cluster_dir: str = None):
         super().__init__(addr, handler)
         from repro.api.jobs import JobManager
 
         # job_dir makes the store durable: a restarted server reports prior
-        # jobs from the JSONL snapshot (interrupted ones surface as failed)
+        # jobs from the JSONL snapshot (interrupted ones surface as failed);
+        # cluster_dir replaces the in-memory store with the distributed
+        # queue (durable, multi-runner, lease failover)
         self.jobs = JobManager(max_workers=max_workers, max_jobs=max_jobs,
-                               job_dir=job_dir)
+                               job_dir=job_dir, cluster_dir=cluster_dir)
 
     def server_close(self):
         self.jobs.shutdown()
@@ -90,6 +101,8 @@ class _Handler(BaseHTTPRequestHandler):
                 return self._send(200, self.server.jobs.get(parts[1]).status())
             except KeyError:
                 return self._err(404, "unknown_job", f"no job {parts[1]!r}")
+        if parts == ["cluster"]:
+            return self._send(200, self.server.jobs.cluster_status())
         return self._err(404, "not_found", "not found")
 
     # ------------------------------------------------------------------
@@ -209,9 +222,10 @@ class _Handler(BaseHTTPRequestHandler):
 
 def serve(host: str = "127.0.0.1", port: int = 8123,
           max_workers: int = 2, max_jobs: int = 64,
-          job_dir: str = None) -> DJServer:
+          job_dir: str = None, cluster_dir: str = None) -> DJServer:
     srv = DJServer((host, port), _Handler, max_workers=max_workers,
-                   max_jobs=max_jobs, job_dir=job_dir)
+                   max_jobs=max_jobs, job_dir=job_dir,
+                   cluster_dir=cluster_dir)
     t = threading.Thread(target=srv.serve_forever, daemon=True)
     t.start()
     return srv

@@ -2,6 +2,7 @@
 from __future__ import annotations
 
 import re
+import time
 from typing import List
 
 from repro.core.ops_base import Mapper
@@ -130,6 +131,27 @@ class SentenceAugmentationMapper(Mapper):
         rng = np.random.default_rng(self.seed + len(words))
         keep = rng.random(len(words)) >= self.drop_rate
         return _set_text(s, " ".join(w for w, k in zip(words, keep) if k))
+
+
+@register("sleep_mapper")
+class SleepMapper(Mapper):
+    """Identity mapper that sleeps ``delay`` seconds per sample.
+
+    Pacing / fault-injection utility: makes runs long enough to observe live
+    progress, exercise speculative re-dispatch and preemption, and (in the
+    cluster test harness) guarantee a runner can be killed mid-job. The small
+    default batch keeps the chain runner's preemption poll responsive."""
+
+    default_batch_size = 4
+
+    def __init__(self, delay: float = 0.01, **kw):
+        super().__init__(delay=delay, **kw)
+        self.delay = max(0.0, float(delay))
+
+    def process_single(self, s):
+        if self.delay:
+            time.sleep(self.delay)
+        return s
 
 
 @register("generate_qa_from_text_mapper")

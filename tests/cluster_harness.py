@@ -1,0 +1,132 @@
+"""Fault-injection utilities for the cluster subsystem tests and bench.
+
+Spawns REAL runner processes (``python -m repro.interface.cli runner``)
+against a shared ``cluster_dir``, lets tests SIGKILL one mid-segment, and
+provides the polling/assertion helpers the failover tests (and the
+server-restart tests) share. Importable from both ``tests/`` and
+``benchmarks/`` — no pytest dependency.
+"""
+from __future__ import annotations
+
+import os
+import signal
+import subprocess
+import sys
+import time
+from typing import Callable, Dict, List, Optional
+
+REPO_SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+
+
+def runner_env() -> Dict[str, str]:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = REPO_SRC + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    return env
+
+
+def start_runner(cluster_dir: str, runner_id: str, *, lease_ttl: float = 2.0,
+                 poll: float = 0.1, capacity: int = 1,
+                 defer: Optional[float] = None,
+                 once: bool = False) -> subprocess.Popen:
+    """Spawn a real runner subprocess leasing from ``cluster_dir``."""
+    cmd = [sys.executable, "-m", "repro.interface.cli", "runner",
+           "--cluster_dir", cluster_dir, "--runner_id", runner_id,
+           "--lease_ttl", str(lease_ttl), "--poll", str(poll),
+           "--capacity", str(capacity)]
+    if defer is not None:
+        cmd += ["--defer", str(defer)]
+    if once:
+        cmd.append("--once")
+    return subprocess.Popen(cmd, env=runner_env(),
+                            stdout=subprocess.PIPE, stderr=subprocess.STDOUT)
+
+
+def stop_runner(proc: subprocess.Popen, timeout: float = 5.0) -> None:
+    if proc.poll() is None:
+        proc.terminate()
+        try:
+            proc.wait(timeout=timeout)
+        except subprocess.TimeoutExpired:
+            proc.kill()
+            proc.wait(timeout=timeout)
+    if proc.stdout:
+        proc.stdout.close()
+
+
+def sigkill_runner(proc: subprocess.Popen) -> None:
+    """The fault injection: no cleanup, no lease release, no goodbye."""
+    os.kill(proc.pid, signal.SIGKILL)
+    proc.wait(timeout=10)
+    if proc.stdout:
+        proc.stdout.close()
+
+
+def wait_for(pred: Callable[[], bool], timeout: float = 30.0,
+             interval: float = 0.05, message: str = "condition") -> None:
+    deadline = time.time() + timeout
+    while time.time() < deadline:
+        if pred():
+            return
+        time.sleep(interval)
+    raise AssertionError(f"timed out after {timeout}s waiting for {message}")
+
+
+def make_recipe(src: str, out: str, *, slow_delay: float = 0.02,
+                fast_delay: float = 0.0, min_len: int = 20) -> Dict:
+    """Multi-segment job recipe for kill-mid-job tests: a fast mapper chain,
+    a dedup BARRIER (forcing a segment-boundary checkpoint), then a slow
+    chain the test kills a runner inside. Fusion/reordering are pinned off
+    so every attempt derives the identical plan — the resume contract keys
+    checkpoints to the optimized plan's prefix signatures."""
+    process: List[Dict] = [{"name": "whitespace_normalization_mapper"}]
+    if fast_delay:
+        process.append({"name": "sleep_mapper", "delay": fast_delay})
+    process += [
+        {"name": "document_minhash_deduplicator", "jaccard_threshold": 0.7},
+        {"name": "sleep_mapper", "delay": slow_delay},
+        {"name": "text_length_filter", "min_val": min_len},
+    ]
+    return {
+        "name": "cluster-harness-job",
+        "dataset_path": src,
+        "export_path": out,
+        "process": process,
+        "use_fusion": False,
+        "use_reordering": False,
+    }
+
+
+def write_corpus(path: str, n: int = 120, seed: int = 0) -> str:
+    from repro.core.storage import write_jsonl
+    from repro.data.synthetic import make_corpus
+
+    write_jsonl(path, make_corpus(n, seed=seed))
+    return path
+
+
+def reference_output(recipe: Dict, out: str) -> bytes:
+    """Uninterrupted single-process run of the same recipe — the
+    byte-identity oracle for failover tests."""
+    from repro.core.executor import Executor
+    from repro.core.recipes import Recipe
+
+    ref = dict(recipe, export_path=out, checkpoint_dir=None)
+    Executor(Recipe.from_dict(ref)).run_streaming(materialize=False)
+    with open(out, "rb") as f:
+        return f.read()
+
+
+def checkpoint_stages(queue, job_id: str) -> List[str]:
+    """Names of persisted stage files for a job (mid-run progress signal)."""
+    d = queue.checkpoint_dir(job_id)
+    try:
+        return sorted(n for n in os.listdir(d)
+                      if n.startswith("stage-") and n.endswith(".jsonl"))
+    except FileNotFoundError:
+        return []
+
+
+def lease_owner(queue, job_id: str) -> Optional[str]:
+    lease = queue.current_lease(job_id)
+    return None if lease is None else lease.runner_id

@@ -1,0 +1,392 @@
+"""Distributed job queue + multi-node runner placement (repro.api.cluster):
+lease protocol units, placement policy, JobManager-as-thin-client, the REST
+/cluster surface, and the subprocess fault-injection suite (SIGKILL a runner
+mid-segment -> lease expiry -> re-queue -> checkpoint resume -> byte-identical
+output)."""
+import json
+import os
+import time
+import urllib.request
+
+import pytest
+
+import repro.api as dj
+from repro.api.cluster import ClusterQueue, ClusterRunner, PlacementPolicy
+from cluster_harness import (
+    checkpoint_stages, lease_owner, make_recipe, reference_output,
+    sigkill_runner, start_runner, stop_runner, wait_for, write_corpus,
+)
+
+
+# ---------------------------------------------------------------------------
+# queue + lease protocol units (no subprocesses — fast)
+# ---------------------------------------------------------------------------
+
+
+def _spec(tmp_path, name="unit", n=40):
+    src = write_corpus(str(tmp_path / f"{name}.jsonl"), n=n)
+    return make_recipe(src, str(tmp_path / f"{name}.out.jsonl"),
+                       slow_delay=0.0)
+
+
+def test_submit_claim_complete_lifecycle(tmp_path):
+    q = ClusterQueue(str(tmp_path / "c"), lease_ttl=5.0)
+    jid = q.submit(_spec(tmp_path))
+    assert q.state_of(jid) == "queued"
+    assert q.depth() == 1
+
+    lease = q.try_claim(jid, "r1")
+    assert lease is not None and lease.attempt == 1
+    assert q.state_of(jid) == "running"
+    assert q.depth() == 0
+    assert q.renew(lease)
+
+    q.complete(lease, "succeeded", report={"n_out": 1})
+    assert q.state_of(jid) == "succeeded"
+    st = q.status(jid)
+    assert st["state"] == "succeeded" and st["report"]["n_out"] == 1
+    assert st["runner_id"] == "r1" and st["attempt"] == 1
+    # the fsync'd event log recorded the whole lifecycle in order
+    events = [e["event"] for e in q.read_log()]
+    assert events == ["submitted", "claimed", "finished"]
+
+
+def test_claim_is_exclusive_per_attempt(tmp_path):
+    q = ClusterQueue(str(tmp_path / "c"), lease_ttl=5.0)
+    jid = q.submit(_spec(tmp_path))
+    assert q.try_claim(jid, "r1") is not None
+    assert q.try_claim(jid, "r2") is None, "live lease must block re-claims"
+
+
+def test_expired_lease_requeues_at_next_attempt(tmp_path):
+    q = ClusterQueue(str(tmp_path / "c"), lease_ttl=0.1)
+    jid = q.submit(_spec(tmp_path))
+    first = q.try_claim(jid, "r1", ttl=0.1)
+    assert first is not None
+    time.sleep(0.15)
+    assert q.state_of(jid) == "queued", "expired lease -> claimable again"
+    assert q.expired_leases() and q.expired_leases()[0].runner_id == "r1"
+
+    second = q.try_claim(jid, "r2")
+    assert second is not None and second.attempt == 2
+    # the zombie's heartbeat must fail once the job was re-claimed
+    assert not q.renew(first), "a superseded lease can never renew"
+    events = [e["event"] for e in q.read_log()]
+    assert "requeued_after_expiry" in events
+
+
+def test_cancel_blocks_claims_and_is_terminal(tmp_path):
+    q = ClusterQueue(str(tmp_path / "c"))
+    jid = q.submit(_spec(tmp_path))
+    q.cancel(jid)
+    assert q.state_of(jid) == "cancelled"
+    assert q.try_claim(jid, "r1") is None
+    with pytest.raises(KeyError):
+        q.cancel("nope")
+
+
+def test_placement_scores_throughput_capacity_quarantines():
+    fast = {"runner_id": "a", "capacity": 2, "active": 0, "throughput": 100.0,
+            "quarantines": 0}
+    busy = dict(fast, runner_id="b", active=2)
+    slow = dict(fast, runner_id="c", throughput=10.0)
+    flaky = dict(fast, runner_id="d", quarantines=4)
+    assert PlacementPolicy.score(busy) == 0.0, "no free slot -> never claims"
+    assert PlacementPolicy.score(fast) > PlacementPolicy.score(slow)
+    assert PlacementPolicy.score(fast) > PlacementPolicy.score(flaky), \
+        "persisted worker-quarantine history must penalize placement"
+
+    pol = PlacementPolicy(defer_seconds=60.0)
+    cards = [fast, busy, slow, flaky]
+    assert pol.should_claim("a", cards, waited=0.0)
+    assert not pol.should_claim("c", cards, waited=0.0), \
+        "a worse-placed runner defers to the better one"
+    assert pol.should_claim("c", cards, waited=61.0), \
+        "deference must expire so the queue never starves"
+
+
+def test_next_job_drains_fifo(tmp_path):
+    q = ClusterQueue(str(tmp_path / "c"))
+    a = q.submit(_spec(tmp_path, "a"))
+    time.sleep(0.01)
+    b = q.submit(_spec(tmp_path, "b"))
+    lease = q.next_job("r1")
+    assert lease is not None and lease.job_id == a
+    lease2 = q.next_job("r1")
+    assert lease2 is not None and lease2.job_id == b
+
+
+# ---------------------------------------------------------------------------
+# JobManager as a thin client (in-process runner = single-node cluster mode)
+# ---------------------------------------------------------------------------
+
+
+def _pipeline(tmp_path, n=120, delay=0.0, name="corpus"):
+    src = write_corpus(str(tmp_path / f"{name}.jsonl"), n=n)
+    out = str(tmp_path / f"{name}.out.jsonl")
+    pipe = dj.read_jsonl(src).map("whitespace_normalization_mapper")
+    if delay:
+        pipe = pipe.map("sleep_mapper", delay=delay)
+    return (pipe.filter("text_length_filter", min_val=20)
+            .write_jsonl(out).options(use_reordering=False)), out
+
+
+def test_job_manager_cluster_mode_lifecycle(tmp_path):
+    mgr = dj.JobManager(max_workers=2, cluster_dir=str(tmp_path / "c"))
+    try:
+        pipe, out = _pipeline(tmp_path)
+        job = mgr.submit(pipe)
+        assert isinstance(job, dj.ClusterJobHandle)
+        wait_for(job.done, 60, message="cluster job finishes")
+        st = job.status()
+        assert st["state"] == "succeeded" and st["cluster"] is True
+        # REST-contract shape: same keys the single-node Job.status() serves
+        for key in ("job_id", "state", "created_at", "finished_at", "error",
+                    "progress"):
+            assert key in st
+        assert st["report"]["n_out"] > 0
+        assert os.path.exists(out)
+        assert mgr.get(job.id).state == "succeeded"
+        assert any(j["job_id"] == job.id for j in mgr.list())
+        with pytest.raises(KeyError):
+            mgr.get("missing")
+    finally:
+        mgr.shutdown(wait=True)
+
+
+def test_job_manager_cluster_mode_cancel(tmp_path):
+    mgr = dj.JobManager(max_workers=1, cluster_dir=str(tmp_path / "c"))
+    try:
+        slow, _ = _pipeline(tmp_path, delay=0.02)
+        blocker = mgr.submit(slow)  # occupies the only runner slot
+        queued = mgr.submit(slow)
+        mgr.cancel(queued.id)
+        assert queued.state == "cancelled"
+        wait_for(blocker.done, 60, message="blocker finishes")
+    finally:
+        mgr.shutdown(wait=True)
+
+
+def test_cluster_submit_requires_file_source(tmp_path):
+    mgr = dj.JobManager(cluster_dir=str(tmp_path / "c"), start_runner=False)
+    with pytest.raises(ValueError, match="file-backed"):
+        mgr.submit(dj.from_samples([{"text": "x"}]))
+    mgr.shutdown()
+
+
+def test_cluster_backlog_honours_max_jobs(tmp_path):
+    """The 503 half of the REST contract survives cluster mode: max_jobs
+    bounds the LIVE backlog (terminal results don't count)."""
+    mgr = dj.JobManager(max_jobs=1, cluster_dir=str(tmp_path / "c"),
+                        start_runner=False)  # nothing drains the queue
+    try:
+        pipe, _ = _pipeline(tmp_path)
+        mgr.submit(pipe)
+        with pytest.raises(dj.JobStoreFull):
+            mgr.submit(pipe)
+    finally:
+        mgr.shutdown()
+
+
+def test_stale_attempt_cannot_clobber_newer_result(tmp_path):
+    """A zombie runner that never saw its lease loss must not overwrite the
+    failover attempt's result: complete() is attempt-monotonic."""
+    q = ClusterQueue(str(tmp_path / "c"), lease_ttl=0.1)
+    jid = q.submit(_spec(tmp_path))
+    zombie = q.try_claim(jid, "zombie", ttl=0.1)
+    time.sleep(0.15)
+    takeover = q.try_claim(jid, "survivor")
+    assert takeover is not None and takeover.attempt == 2
+    assert q.complete(takeover, "succeeded", report={"n_out": 5})
+    assert not q.complete(zombie, "failed", error="zombie woke up late")
+    st = q.status(jid)
+    assert st["state"] == "succeeded" and st["runner_id"] == "survivor"
+    assert any(e["event"] == "stale_result_discarded" for e in q.read_log())
+
+
+def test_torn_checkpoint_manifest_resumes_from_scratch(tmp_path):
+    """SIGKILL can land mid-manifest-write (pre-atomic-write snapshots, or a
+    mid-replace read on a lax shared FS): the surviving attempt must treat a
+    torn manifest as 'no checkpoints' and restart, never fail the job."""
+    from repro.core.checkpoint import CheckpointManager
+
+    ckpt = CheckpointManager(str(tmp_path / "ck"))
+    ckpt.save_stage("sig0", 1, [{"text": "x"}])
+    with open(os.path.join(str(tmp_path / "ck"), "manifest.json"), "w") as f:
+        f.write('{"stages": {"torn')
+    assert CheckpointManager(str(tmp_path / "ck")).load_manifest() == \
+        {"stages": {}}
+    n_done, samples = CheckpointManager(str(tmp_path / "ck")).resume_point(
+        [{"name": "whitespace_normalization_mapper"}])
+    assert n_done == 0 and samples is None
+
+
+# ---------------------------------------------------------------------------
+# REST surface
+# ---------------------------------------------------------------------------
+
+
+def _get(port, path):
+    with urllib.request.urlopen(f"http://127.0.0.1:{port}{path}") as r:
+        return json.loads(r.read())
+
+
+def test_rest_cluster_endpoint_and_jobs_contract(tmp_path):
+    from repro.interface.server import serve
+
+    srv = serve(port=0, max_workers=1, cluster_dir=str(tmp_path / "c"))
+    port = srv.server_address[1]
+    try:
+        ov = _get(port, "/cluster")
+        assert ov["enabled"] is True
+        assert ov["queue_depth"] == 0
+        wait_for(lambda: any(c["runner_id"].startswith("inproc-")
+                             for c in _get(port, "/cluster")["runners"]),
+                 10, message="in-process runner card")
+
+        src = write_corpus(str(tmp_path / "corpus.jsonl"), n=60)
+        body = json.dumps({
+            "dataset_path": src,
+            "export_path": str(tmp_path / "out.jsonl"),
+            "use_reordering": False,
+            "process": [{"name": "whitespace_normalization_mapper"}],
+        }).encode()
+        req = urllib.request.Request(f"http://127.0.0.1:{port}/jobs",
+                                     data=body, method="POST",
+                                     headers={"Content-Type": "application/json"})
+        with urllib.request.urlopen(req) as r:
+            sub = json.loads(r.read())
+        assert r.status == 202 and sub["poll"] == f"/jobs/{sub['job_id']}"
+
+        wait_for(lambda: _get(port, f"/jobs/{sub['job_id']}")["state"]
+                 in ("succeeded", "failed"), 60, message="REST job")
+        st = _get(port, f"/jobs/{sub['job_id']}")
+        assert st["state"] == "succeeded"
+        assert st["report"]["n_out"] > 0
+        assert _get(port, "/jobs")["jobs"][0]["job_id"] == sub["job_id"]
+    finally:
+        srv.server_close()
+
+
+def test_rest_cluster_endpoint_disabled_in_single_node_mode():
+    from repro.interface.server import serve
+
+    srv = serve(port=0)
+    try:
+        assert _get(srv.server_address[1], "/cluster") == {"enabled": False}
+    finally:
+        srv.server_close()
+
+
+# ---------------------------------------------------------------------------
+# fault injection: real runner subprocesses, SIGKILL mid-segment
+# ---------------------------------------------------------------------------
+
+
+def test_sigkill_failover_resumes_from_checkpoint_byte_identical(tmp_path):
+    """The acceptance scenario: two real runner processes share a cluster
+    dir; the one holding the lease is SIGKILLed mid-segment (after the
+    barrier checkpoint, inside the slow chain). The lease must expire, the
+    job re-queue at attempt 2, the survivor resume from the persisted
+    segment boundary (resumed_at > 0, NOT a restart), and the final export
+    must be byte-identical to an uninterrupted run."""
+    src = write_corpus(str(tmp_path / "corpus.jsonl"), n=120)
+    out = str(tmp_path / "out.jsonl")
+    recipe = make_recipe(src, out, slow_delay=0.04)
+    ref = reference_output(recipe, str(tmp_path / "ref.jsonl"))
+
+    q = ClusterQueue(str(tmp_path / "cluster"), lease_ttl=2.0)
+    jid = q.submit(recipe)
+    r1 = start_runner(q.dir, "runner-1", lease_ttl=2.0)
+    r2 = start_runner(q.dir, "runner-2", lease_ttl=2.0)
+    try:
+        wait_for(lambda: lease_owner(q, jid) is not None, 60, message="claim")
+        owner = lease_owner(q, jid)
+        # mid-segment: the chain+barrier checkpoints exist, the slow final
+        # segment is in flight — precisely the state a restart used to lose
+        wait_for(lambda: len(checkpoint_stages(q, jid)) >= 2, 60,
+                 message="segment-boundary checkpoints")
+        time.sleep(0.3)
+        sigkill_runner(r1 if owner == "runner-1" else r2)
+
+        wait_for(lambda: q.state_of(jid) == "succeeded", 120,
+                 message="failover completion")
+        st = q.status(jid)
+        assert st["attempt"] == 2, "job must be re-leased, not restarted in place"
+        assert st["runner_id"] != owner
+        assert st["report"]["resumed_at"] > 0, \
+            "survivor must resume from the checkpoint, not re-run from scratch"
+        with open(out, "rb") as f:
+            assert f.read() == ref, "failover output must be byte-identical"
+        events = [e["event"] for e in q.read_log()]
+        assert "requeued_after_expiry" in events
+    finally:
+        for p in (r1, r2):
+            try:
+                stop_runner(p)
+            except Exception:
+                pass
+
+
+def test_two_runners_split_a_multi_job_queue(tmp_path):
+    """Placement sanity on real processes: N quick jobs drain across two
+    runners, and both actually execute work (no claim monopolies)."""
+    q = ClusterQueue(str(tmp_path / "cluster"), lease_ttl=5.0)
+    jids = []
+    for i in range(4):
+        src = write_corpus(str(tmp_path / f"in{i}.jsonl"), n=60, seed=i)
+        jids.append(q.submit(make_recipe(
+            src, str(tmp_path / f"out{i}.jsonl"), slow_delay=0.01)))
+    r1 = start_runner(q.dir, "runner-1", lease_ttl=5.0)
+    r2 = start_runner(q.dir, "runner-2", lease_ttl=5.0)
+    try:
+        wait_for(lambda: all(q.state_of(j) == "succeeded" for j in jids),
+                 120, message="queue drained")
+        owners = {q.status(j)["runner_id"] for j in jids}
+        assert owners == {"runner-1", "runner-2"}, \
+            f"expected both runners to take work, got {owners}"
+        for i in range(4):
+            assert os.path.exists(str(tmp_path / f"out{i}.jsonl"))
+    finally:
+        for p in (r1, r2):
+            try:
+                stop_runner(p)
+            except Exception:
+                pass
+
+
+# ---------------------------------------------------------------------------
+# server-restart durability (harness reuse — no subprocesses needed)
+# ---------------------------------------------------------------------------
+
+
+def test_cluster_store_survives_manager_restart(tmp_path):
+    """The PR-3 JSONL snapshot marked interrupted jobs failed; the cluster
+    store is stronger: a RESTARTED manager (new process lifecycle, same
+    cluster_dir) still serves finished jobs verbatim, and an unfinished job
+    is re-leased by the new manager's runner instead of being declared dead."""
+    cdir = str(tmp_path / "c")
+    mgr_a = dj.JobManager(max_workers=1, cluster_dir=cdir)
+    try:
+        pipe, out = _pipeline(tmp_path)
+        done = mgr_a.submit(pipe)
+        wait_for(done.done, 60, message="first-life job")
+        done_report = done.status()["report"]
+    finally:
+        mgr_a.shutdown(wait=True)
+
+    # second life: a fresh manager on the same shared store
+    mgr_b = dj.JobManager(max_workers=1, cluster_dir=cdir)
+    try:
+        st = mgr_b.get(done.id).status()
+        assert st["state"] == "succeeded"
+        assert st["report"] == done_report, "results must survive restarts"
+
+        # a job submitted while no runner lived is picked up by the new one
+        pipe2, out2 = _pipeline(tmp_path, n=60, name="second-life")
+        orphan = mgr_b.cluster.submit(pipe2.to_recipe().to_dict())
+        wait_for(lambda: mgr_b.cluster.state_of(orphan) == "succeeded", 60,
+                 message="orphan job adopted after restart")
+        assert os.path.exists(out2)
+    finally:
+        mgr_b.shutdown(wait=True)

@@ -55,6 +55,43 @@ class IOSleepOnceMapper(SleepOnceMapper):
     io_intensive = True
 
 
+@register("slow_first_attempt_mapper")
+class SlowFirstAttemptMapper(Mapper):
+    """Sleeps ``delay`` per marked sample on the FIRST attempt of a block
+    (atomic flag-file claim per straggle_key) — a speculative backup runs
+    fast and wins. The slow (losing) attempt drops a ``drained-<key>``
+    marker if it ever reaches the block's last sample: the preemption
+    regression test asserts that marker never appears."""
+
+    _name = "slow_first_attempt_mapper"
+    io_intensive = True  # routes LocalEngine onto its threaded window
+
+    def __init__(self, flag_dir: str, delay: float = 0.1, **kw):
+        super().__init__(flag_dir=flag_dir, delay=delay, **kw)
+        self._claims = {}
+
+    def process_single(self, s):
+        key = s.get("meta", {}).get("straggle_key")
+        if key:
+            claimed = self._claims.get(key)
+            if claimed is None:
+                try:
+                    os.close(os.open(os.path.join(self.params["flag_dir"], key),
+                                     os.O_CREAT | os.O_EXCL | os.O_WRONLY))
+                    claimed = True
+                except FileExistsError:
+                    claimed = False
+                self._claims[key] = claimed
+            if claimed:
+                time.sleep(self.params["delay"])
+                if s.get("meta", {}).get("last_of_block"):
+                    with open(os.path.join(self.params["flag_dir"],
+                                           f"drained-{key}"), "w") as f:
+                        f.write("loser drained to completion")
+        s["text"] = s.get("text", "").strip()
+        return s
+
+
 @register("prefix_once_mapper")
 class PrefixOnceMapper(Mapper):
     """NON-idempotent: applied twice, the marker doubles — catches a
@@ -286,6 +323,216 @@ def test_window_stays_within_bounds():
     s = log[-1]
     assert disp.min_window <= s["window_final"] <= disp.max_window
     assert s["blocks"] == 64
+
+
+# ---------------------------------------------------------------------------
+# preemptive loser cancellation (ROADMAP leak: a sleeper used to occupy its
+# worker until it drained the whole chain)
+# ---------------------------------------------------------------------------
+
+
+def test_losing_original_is_preempted_not_drained(tmp_path):
+    """When a speculative backup wins, the straggling original must be
+    preemptively cancelled (exit at its next batch boundary), not left
+    draining on its worker: the drain marker must never appear, the summary
+    must record the preempt signal, and wall-clock must beat the drain."""
+    corpus = make_corpus(48, seed=23)
+    blocks = DJDataset.from_samples([dict(s) for s in corpus],
+                                    n_blocks_hint=6).blocks
+    # block 1: every sample marked -> 24 batches x 0.12s of first-attempt
+    # sleeping; the final sample drops the drain marker if ever reached
+    straggler = [dict(s, meta={"straggle_key": "blk1"})
+                 for s in blocks[1].samples for _ in range(3)]
+    straggler[-1]["meta"] = dict(straggler[-1]["meta"], last_of_block=True)
+    from repro.core.storage import SampleBlock
+    blocks[1] = SampleBlock(straggler)
+    total = sum(len(b.samples) for b in blocks)
+
+    cfgs = [{"name": "slow_first_attempt_mapper", "flag_dir": str(tmp_path),
+             "delay": 0.12}]
+    drain_seconds = len(straggler) * 0.12  # what a drained loser would cost
+
+    eng = LocalEngine(n_threads=2, straggler_factor=2.0, speculate=True)
+    t0 = time.time()
+    out = list(eng.map_block_chain([create_op(c) for c in cfgs],
+                                   iter(blocks), batch_size=2))
+    elapsed = time.time() - t0
+
+    assert sum(len(b.samples) for b, _ in out) == total
+    summary = eng.dispatch_log[-1]
+    assert summary["speculation_wins"] >= 1, f"backup never won: {summary}"
+    assert summary["preempt_signals"] >= 1, \
+        f"winning backup must signal the running loser: {summary}"
+    assert not os.path.exists(str(tmp_path / "drained-blk1")), \
+        "the losing original drained its block instead of being preempted"
+    # the engine's pool shutdown waits for the loser, so a drained loser
+    # would push elapsed past drain_seconds; a preempted one exits within
+    # about one batch (2 x 0.12s)
+    assert elapsed < drain_seconds * 0.7, \
+        f"run took {elapsed:.2f}s — the loser occupied its worker to the end"
+
+
+def test_preempted_losers_are_counted():
+    """Direct dispatcher check: a cooperative fn that honours should_stop is
+    counted under summary['preempted'] (observed early exits)."""
+    attempts = {"slow": 0}
+    lock = threading.Lock()
+
+    def fn(item, should_stop):
+        if item == "slow":
+            with lock:
+                attempts["slow"] += 1
+                first = attempts["slow"] == 1
+            if first:  # the original spins until preempted; the backup is fast
+                while not should_stop():
+                    time.sleep(0.005)
+                raise D.TaskPreempted("observed the board")
+            return item
+        time.sleep(0.02)  # keep the stream alive past the loser's exit
+        return item
+
+    log = []
+    with cf.ThreadPoolExecutor(2) as pool:
+        disp = D.WindowedDispatcher(pool, 2, straggler_factor=2.0,
+                                    min_completions=2, label="preempt",
+                                    log=log, preempt_board={})
+        items = ["a", "b", "slow", "c", "d", "e", "f", "g"]
+        results = list(disp.run(items, fn, lambda x: (x,)))
+    got = [p for _, p, _ in results]
+    assert got == items, "the winning backup must supply the payload"
+    assert log[-1]["preempt_signals"] == 1
+    assert log[-1]["preempted"] == 1
+    assert log[-1]["speculation_wins"] == 1
+
+
+# ---------------------------------------------------------------------------
+# cross-run worker-health persistence (HealthRegistry)
+# ---------------------------------------------------------------------------
+
+
+def _run_dispatch(health, fail_first_n=0, n_workers=2, limit=2, items=24):
+    """One dispatcher 'run' over a single REAL worker thread (slot identity
+    is then deterministic: the only wid ever seen maps to slot w0) with the
+    first ``fail_first_n`` executions failing."""
+    calls = {"n": 0}
+
+    def fn(item):
+        calls["n"] += 1
+        if calls["n"] <= fail_first_n:
+            raise RuntimeError("injected worker failure")
+        return item
+
+    log = []
+    with cf.ThreadPoolExecutor(1) as pool:
+        disp = D.WindowedDispatcher(
+            pool, n_workers, speculate=False, max_attempts=10,
+            worker_failure_limit=limit, bounce_limit=3, bounce_pause=0.0,
+            label="health", log=log, health=health)
+        results = list(disp.run(range(items), fn, lambda x: (x,)))
+    assert all(e is None for _, _, e in results)
+    return log[-1]
+
+
+def test_quarantine_persists_and_probation_limits_next_run(tmp_path):
+    """ROADMAP item: quarantine was in-run only. A worker slot quarantined in
+    run 1 must start run 2 on probation (one strike re-quarantines), and a
+    clean probation run must clear it again."""
+    path = str(tmp_path / "health.json")
+
+    # run 1: two failures hit the default limit -> quarantined, persisted
+    summary = _run_dispatch(D.HealthRegistry(path), fail_first_n=2, limit=2)
+    assert summary["quarantined"], "run 1 must quarantine the bad worker"
+    reloaded = D.HealthRegistry(path)
+    assert reloaded.on_probation("w0"), \
+        "quarantine must survive into the next run as probation"
+    assert reloaded.total_quarantines() == 1
+
+    # run 2: probation drops the allowance to ONE strike (limit is 3 here)
+    disp = D.WindowedDispatcher(None, 2,
+                                worker_failure_limit=3, health=reloaded)
+    assert disp._failure_limit("some-wid") == 1, \
+        "probation slot must be one-strike"
+    summary2 = _run_dispatch(reloaded, fail_first_n=1, limit=3)
+    assert summary2["quarantined"], \
+        "a single failure must re-quarantine a probation worker"
+    assert D.HealthRegistry(path).on_probation("w0")
+
+    # run 3: a clean run recovers the slot — full allowance next time
+    _run_dispatch(D.HealthRegistry(path), fail_first_n=0)
+    final = D.HealthRegistry(path)
+    assert not final.on_probation("w0")
+    assert final.slots["w0"]["recoveries"] >= 1
+    disp3 = D.WindowedDispatcher(None, 2,
+                                 worker_failure_limit=3, health=final)
+    assert disp3._failure_limit("any-wid") == 3
+
+
+def test_health_registry_roundtrip_property(tmp_path):
+    """Hypothesis property: the health file round-trips through ARBITRARY
+    quarantine/failure/recovery/forgive sequences — reload always equals the
+    in-memory state, and probation is exactly 'quarantined since the last
+    recovery/forgive'."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    ops = st.lists(st.tuples(
+        st.sampled_from(["failure", "quarantine", "recovery", "forgive"]),
+        st.sampled_from(["w0", "w1", "w2"])), max_size=60)
+
+    @settings(max_examples=60, deadline=None)
+    @given(seq=ops)
+    def check(seq):
+        path = str(tmp_path / "h.json")
+        if os.path.exists(path):
+            os.remove(path)
+        reg = D.HealthRegistry(path)
+        expected_probation = {}
+        for op, key in seq:
+            getattr(reg, f"note_{op}" if op != "forgive" else "forgive")(key)
+            if op == "quarantine":
+                expected_probation[key] = True
+            elif op in ("recovery", "forgive"):
+                expected_probation[key] = False
+        reg.save()
+        back = D.HealthRegistry(path)
+        assert back.snapshot() == reg.snapshot()
+        for key, prob in expected_probation.items():
+            assert back.on_probation(key) == prob
+        assert back.total_quarantines() == reg.total_quarantines()
+
+    check()
+
+
+def test_corrupt_health_file_starts_fresh(tmp_path):
+    path = str(tmp_path / "health.json")
+    with open(path, "w") as f:
+        f.write("{torn mid-write")
+    reg = D.HealthRegistry(path)
+    assert reg.slots == {}
+    reg.note_quarantine("w0")
+    reg.save()
+    assert D.HealthRegistry(path).on_probation("w0")
+
+
+def test_recipe_health_path_reaches_engine(tmp_path):
+    """Recipe.health_path plumbs through the Executor into the engine (and
+    is settable from the fluent API like any other option)."""
+    from repro.api import Pipeline
+
+    path = str(tmp_path / "health.json")
+    src = str(tmp_path / "in.jsonl")
+    write_jsonl(src, make_corpus(30, seed=3))
+    pipe = (Pipeline.read_jsonl(src)
+            .map("whitespace_normalization_mapper")
+            .options(health_path=path, engine="parallel", np=2))
+    eng = Executor(pipe.to_recipe())._make_engine()
+    assert eng.health is not None and eng.health.path == path
+    # pre-seeded probation is visible to the engine's dispatchers
+    reg = D.HealthRegistry(path)
+    reg.note_quarantine("w0")
+    reg.save()
+    eng2 = Executor(pipe.to_recipe())._make_engine()
+    assert eng2.health.on_probation("w0")
 
 
 # ---------------------------------------------------------------------------

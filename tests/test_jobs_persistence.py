@@ -1,0 +1,119 @@
+"""JobManager JSONL-snapshot persistence edge cases PR 3 left untested:
+torn/corrupt snapshot lines, submit racing the persist path, and restoring a
+snapshot larger than the configured ``max_jobs`` bound."""
+import json
+import os
+import threading
+import time
+
+import repro.api as dj
+from repro.api.jobs import JobManager
+from cluster_harness import wait_for, write_corpus
+
+
+def _snapshot_line(job_id, state="succeeded", created_at=None):
+    return json.dumps({
+        "job_id": job_id, "state": state,
+        "created_at": created_at or time.time(),
+        "started_at": None, "finished_at": time.time(),
+        "error": None,
+        "progress": {"per_op": [], "ops_started": 0, "ops_total": 0},
+    })
+
+
+def _write_snapshot(job_dir, lines):
+    os.makedirs(job_dir, exist_ok=True)
+    with open(os.path.join(job_dir, "jobs.jsonl"), "w") as f:
+        f.write("\n".join(lines) + "\n")
+
+
+def test_restore_skips_corrupt_and_truncated_lines(tmp_path):
+    """A crash mid-rewrite can tear a line; a disk hiccup can corrupt one.
+    Restore must keep every parseable record and drop the garbage — not
+    raise, and not discard the whole snapshot."""
+    job_dir = str(tmp_path / "jobs")
+    good_a = _snapshot_line("aaa111")
+    good_b = _snapshot_line("bbb222", state="failed")
+    truncated = _snapshot_line("ccc333")[:25]  # torn mid-object
+    _write_snapshot(job_dir, [good_a, "{not json at all", truncated,
+                              "", good_b])
+    mgr = JobManager(job_dir=job_dir)
+    try:
+        ids = {j["job_id"] for j in mgr.list()}
+        assert ids == {"aaa111", "bbb222"}
+        assert mgr.get("aaa111").status()["restored"] is True
+        assert mgr.get("bbb222").state == "failed"
+    finally:
+        mgr.shutdown()
+
+
+def test_restore_trims_snapshot_larger_than_max_jobs(tmp_path):
+    """A restarted server may be configured with a smaller store than the one
+    that wrote the snapshot; the bound must hold after restore, evicting
+    oldest-first exactly like the live store does."""
+    job_dir = str(tmp_path / "jobs")
+    t0 = time.time()
+    _write_snapshot(job_dir, [
+        _snapshot_line(f"job{i}", created_at=t0 + i) for i in range(6)])
+    mgr = JobManager(max_jobs=3, job_dir=job_dir)
+    try:
+        ids = [j["job_id"] for j in mgr.list()]
+        assert len(ids) == 3, "restore must honour max_jobs"
+        assert ids == ["job3", "job4", "job5"], \
+            "eviction must drop the OLDEST snapshot records"
+        # the bounded store still accepts new work after a trimmed restore
+        src = write_corpus(str(tmp_path / "c.jsonl"), n=30)
+        job = mgr.submit(dj.read_jsonl(src)
+                         .map("whitespace_normalization_mapper"))
+        wait_for(job.done, 30, message="post-restore submit")
+        assert len(mgr.list()) <= 3
+    finally:
+        mgr.shutdown(wait=True)
+
+
+def test_concurrent_submits_during_persist_are_snapshot_consistent(tmp_path):
+    """submit() persists outside its store lock; hammer it from threads and
+    verify no submission is lost, the store stays bounded, and the final
+    snapshot on disk is valid JSONL containing every terminal job."""
+    job_dir = str(tmp_path / "jobs")
+    src = write_corpus(str(tmp_path / "c.jsonl"), n=20)
+    mgr = JobManager(max_workers=2, max_jobs=64, job_dir=job_dir)
+    pipe = (dj.read_jsonl(src).map("whitespace_normalization_mapper")
+            .options(use_reordering=False, use_fusion=False))
+    ids, errors = [], []
+    lock = threading.Lock()
+
+    def hammer(k):
+        try:
+            for i in range(4):
+                job = mgr.submit(pipe, job_id=f"t{k}-{i}")
+                with lock:
+                    ids.append(job.id)
+        except Exception as e:  # noqa: BLE001 — surfaced as test failure
+            errors.append(e)
+
+    threads = [threading.Thread(target=hammer, args=(k,)) for k in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    try:
+        assert not errors
+        assert len(ids) == 16
+        wait_for(lambda: all(mgr.get(i).done() for i in ids), 60,
+                 message="all concurrent jobs finish")
+        # every line of the final snapshot parses; every job is present
+        mgr._persist()
+        with open(os.path.join(job_dir, "jobs.jsonl"), "rb") as f:
+            records = [json.loads(line) for line in f if line.strip()]
+        assert {r["job_id"] for r in records} == set(ids)
+        assert all(r["state"] == "succeeded" for r in records)
+
+        # and a restart restores exactly that view
+        mgr2 = JobManager(job_dir=job_dir)
+        try:
+            assert {j["job_id"] for j in mgr2.list()} == set(ids)
+        finally:
+            mgr2.shutdown()
+    finally:
+        mgr.shutdown(wait=True)
