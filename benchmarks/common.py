@@ -1,6 +1,7 @@
 """Shared benchmark helpers: timing + CSV rows (name,us_per_call,derived)."""
 from __future__ import annotations
 
+import os
 import time
 from typing import Callable, List, Tuple
 
@@ -12,6 +13,42 @@ def timeit(fn: Callable, repeat: int = 1) -> float:
         fn()
         best = min(best, time.perf_counter() - t0)
     return best
+
+
+def run_forked(fn: Callable, repeat: int = 1) -> Tuple[float, int]:
+    """Run ``fn()`` in a forked child per repeat; returns (best seconds,
+    max peak-RSS bytes) measured via ``os.wait4``'s rusage. Forking isolates
+    the measurement: the parent's allocator high-water mark (earlier bench
+    phases, corpora) never pollutes the child's ru_maxrss, and worker
+    subprocesses ARE included (RUSAGE_CHILDREN folds into the wait4 child).
+    Falls back to in-process timing + RUSAGE_SELF where fork is missing."""
+    import resource
+
+    if not hasattr(os, "fork"):  # pragma: no cover - non-POSIX fallback
+        best = timeit(fn, repeat=repeat)
+        return best, resource.getrusage(resource.RUSAGE_SELF).ru_maxrss * 1024
+    best, rss = float("inf"), 0
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        pid = os.fork()
+        if pid == 0:  # child
+            code = 0
+            try:
+                fn()
+            except BaseException:  # noqa: BLE001 — report, then hard-exit
+                import traceback
+
+                traceback.print_exc()
+                code = 1
+            finally:
+                os._exit(code)
+        _, status, ru = os.wait4(pid, 0)
+        dt = time.perf_counter() - t0
+        if not (os.WIFEXITED(status) and os.WEXITSTATUS(status) == 0):
+            raise RuntimeError(f"forked bench child failed (status={status})")
+        best = min(best, dt)
+        rss = max(rss, ru.ru_maxrss * 1024)  # linux: ru_maxrss is KiB
+    return best, rss
 
 
 ROWS: List[Tuple[str, float, str]] = []

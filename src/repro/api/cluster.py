@@ -108,6 +108,24 @@ def _write_json_atomic(path: str, payload: Dict[str, Any]) -> None:
     os.replace(tmp, path)
 
 
+def _mem_headroom_frac() -> Optional[float]:
+    """MemAvailable / MemTotal from /proc/meminfo — the runner card's
+    memory-headroom signal. None where /proc is unavailable (macOS)."""
+    try:
+        with open("/proc/meminfo", "r", encoding="ascii") as f:
+            fields = {}
+            for line in f:
+                k, _, v = line.partition(":")
+                fields[k.strip()] = v
+                if "MemTotal" in fields and "MemAvailable" in fields:
+                    break
+        total = float(fields["MemTotal"].split()[0])
+        avail = float(fields["MemAvailable"].split()[0])
+        return avail / total if total > 0 else None
+    except (OSError, KeyError, ValueError, IndexError):
+        return None
+
+
 @dataclasses.dataclass
 class Lease:
     """One runner's exclusive hold on one job attempt."""
@@ -144,7 +162,14 @@ class PlacementPolicy:
             return 0.0
         throughput = float(card.get("throughput", 0.0)) or 1.0
         quarantines = int(card.get("quarantines", 0))
-        return throughput * (free / capacity) / (1.0 + quarantines)
+        base = throughput * (free / capacity) / (1.0 + quarantines)
+        # memory headroom (block-pipeline working sets are RAM-bound): a
+        # runner near OOM scores down to 25% of its base; cards from older
+        # runners without the field are unaffected
+        mem_frac = card.get("mem_frac")
+        if mem_frac is not None:
+            base *= 0.25 + 0.75 * min(1.0, max(0.0, float(mem_frac)))
+        return base
 
     def should_claim(self, runner_id: str, cards: List[Dict[str, Any]],
                      waited: float) -> bool:
@@ -643,7 +668,7 @@ class ClusterRunner:
                 self.queue.health_path(self.runner_id)).total_quarantines()
         with self._lock:
             active = len(self._active)
-        return {
+        card = {
             "runner_id": self.runner_id,
             "pid": os.getpid(),
             "host": socket.gethostname(),
@@ -653,6 +678,10 @@ class ClusterRunner:
             "jobs_done": self.jobs_done,
             "quarantines": quarantines,
         }
+        mem = _mem_headroom_frac()
+        if mem is not None:
+            card["mem_frac"] = round(mem, 4)
+        return card
 
     def publish_card(self) -> None:
         self.queue.write_card(self._card())
@@ -670,7 +699,32 @@ class ClusterRunner:
             # worker-slot quarantine history persists per runner and feeds
             # the placement score via the runner card
             recipe.health_path = self.queue.health_path(self.runner_id)
+        if recipe.fixed_plan is None and (recipe.use_fusion or recipe.use_reordering):
+            # pin the optimized plan at first claim: reordering is derived
+            # from a sampled probe of the stream, so a failover attempt
+            # could otherwise re-derive a DIFFERENT op order than the one
+            # the checkpoints it resumes were produced under
+            recipe.fixed_plan = self._pin_plan(job_id, recipe)
         return Executor(recipe)
+
+    def _pin_plan(self, job_id: str, recipe) -> List[Dict[str, Any]]:
+        """First claimer resolves the optimized plan and publishes it under
+        the job's checkpoint dir; every later attempt replays the persisted
+        plan verbatim (deterministic failover)."""
+        from repro.core.executor import Executor
+
+        ckpt = self.queue.checkpoint_dir(job_id)
+        os.makedirs(ckpt, exist_ok=True)
+        path = os.path.join(ckpt, "plan.json")
+        rec = _read_json(path)
+        if rec is not None and isinstance(rec.get("plan"), list):
+            return rec["plan"]
+        plan = Executor(recipe).resolve_plan()
+        _write_json_atomic(path, {"job_id": job_id, "plan": plan,
+                                  "pinned_at": time.time()})
+        self.queue.log_event("plan_pinned", job_id=job_id,
+                             runner_id=self.runner_id, n_ops=len(plan))
+        return plan
 
     def _execute(self, lease: Lease) -> None:
         from repro.core.dataset import ExecutionCancelled

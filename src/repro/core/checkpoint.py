@@ -11,7 +11,7 @@ import hashlib
 import os
 from typing import Any, Dict, List, Optional, Tuple
 
-from repro.core.storage import json_dumps, json_loads, read_jsonl, write_jsonl
+from repro.core.storage import json_dumps, json_loads, read_jsonl
 
 
 def _op_sig(op_config: Dict[str, Any]) -> str:
@@ -49,12 +49,20 @@ class CheckpointManager:
         os.replace(tmp, self._manifest_path())
 
     def save_stage(self, sig: str, op_index: int, samples: List[dict]) -> None:
+        from repro.core.columnar import maybe_compress
+
+        # stage payload = the JSONL bytes, zstd-compressed when the codec is
+        # available (negotiated per stage and recorded in the manifest, so a
+        # resume reads exactly what was written)
+        raw = b"".join(json_dumps(s) + b"\n" for s in samples)
+        codec, payload = maybe_compress(raw)
         tmp = self._stage_path(sig) + ".tmp"
-        write_jsonl(tmp, samples)
+        with open(tmp, "wb") as f:
+            f.write(payload)
         os.replace(tmp, self._stage_path(sig))  # atomic publish
         manifest = self.load_manifest()
         manifest["stages"] = {**manifest.get("stages", {}), sig: {
-            "op_index": op_index, "n": len(samples)}}
+            "op_index": op_index, "n": len(samples), "codec": codec}}
         self._write_manifest(manifest)
 
     def set_meta(self, key: str, value: Any) -> None:
@@ -94,7 +102,16 @@ class CheckpointManager:
                 continue
             sig = sigs[i]
             if sig in stages and os.path.exists(self._stage_path(sig)):
-                return i + 1, list(read_jsonl(self._stage_path(sig)))
+                codec = stages[sig].get("codec", "raw")
+                if codec == "raw":
+                    # also covers stages written before payload compression
+                    return i + 1, list(read_jsonl(self._stage_path(sig)))
+                from repro.core.columnar import maybe_decompress
+
+                with open(self._stage_path(sig), "rb") as f:
+                    raw = maybe_decompress(codec, f.read())
+                return i + 1, [json_loads(line)
+                               for line in raw.splitlines() if line.strip()]
         return 0, None
 
     def gc(self, keep_last: int = 2) -> None:

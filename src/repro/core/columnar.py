@@ -1,0 +1,605 @@
+"""Struct-of-arrays sample blocks (the Arrow-style block format).
+
+A :class:`ColumnBlock` holds one block of samples as typed columns instead
+of a list of per-row dicts: string fields live in offset-indexed UTF-8
+buffers, homogeneous numeric fields in numpy arrays, and everything else in
+per-row JSON fragments (or raw Python objects for non-JSON carriers such as
+the minhash signature arrays). JSONL is demoted to an import/export codec:
+``storage.iter_sample_blocks`` builds ColumnBlocks at ingest and
+``BlockWriter`` serializes them back without materializing dicts.
+
+The format is **canonical-ordering-stable**: per-row key order is recorded
+in compact "plans" (one tuple of column indices per distinct ordering), so
+``decode(encode(rows))`` reproduces ``json_dumps(row)`` byte-for-byte —
+the invariant every streaming/barriered/failover byte-identity test rests
+on. Columns of kind:
+
+* ``str`` — ``(offsets int64[n+1], utf8 bytes)``; absent rows are
+  zero-length slices (never read back — plans gate presence).
+* ``f64`` / ``i64`` — dense numpy arrays (Python ``float``/``int`` only;
+  ``bool`` is routed to ``obj`` so ``true`` never re-encodes as ``1``).
+* ``obj`` — ``(offsets, bytes)`` of ``json_dumps`` fragments for nested
+  dicts/lists, bools, None, mixed-type and out-of-int64 values. Fragments
+  come from the canonical dumper, so splicing them verbatim into an export
+  line is byte-identical to re-dumping the decoded value.
+* ``py`` — plain list fallback for values ``json_dumps`` rejects (numpy
+  arrays planted by the presign mapper); these never reach an export.
+
+Blocks are immutable until ``.samples`` is first accessed: that decodes
+once, caches, and makes the row dicts authoritative (ops may mutate them
+in place — the dedup stage pops signature carriers, for example). All
+columnar transforms (``take``, ``with_stat``, ``with_py_column``) build new
+blocks and are only legal on non-materialized blocks, which is what lets
+speculative re-dispatch share one input block across attempts.
+
+Optional zstd compression for spill/checkpoint payloads is negotiated at
+runtime (``maybe_compress``/``maybe_decompress``) — absent ``zstandard``
+the bytes pass through unchanged with a ``raw`` tag.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Iterable, Iterator, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.storage import json_dumps, json_loads
+
+try:  # optional spill codec — CI installs zstandard, the floor build skips it
+    import zstandard as _zstd
+except ImportError:  # pragma: no cover - exercised on the floor build
+    _zstd = None
+
+_I64_MIN = -(1 << 63)
+_I64_MAX = (1 << 63) - 1
+
+Sample = Dict[str, Any]
+
+
+def _is_empty_sample(s: Sample) -> bool:
+    meta = s.get("meta")
+    return bool(isinstance(meta, dict) and meta.get("__empty__"))
+
+
+def _classify(v: Any) -> str:
+    t = type(v)
+    if t is str:
+        return "str"
+    if t is float:
+        return "f64"
+    if t is int:
+        return "i64" if _I64_MIN <= v <= _I64_MAX else "obj"
+    return "obj"  # dict/list/bool/None/mixed — json fragments (py fallback)
+
+
+class ColumnBlock:
+    """One block of samples in struct-of-arrays layout (see module doc)."""
+
+    __slots__ = ("keys", "kinds", "data", "plans", "row_plan", "n",
+                 "nbytes", "may_have_empty", "_samples")
+
+    def __init__(self, keys, kinds, data, plans, row_plan, n, nbytes,
+                 may_have_empty=False):
+        self.keys = keys                # tuple[str] column names
+        self.kinds = kinds              # tuple[str] column kinds
+        self.data = data                # per-column payload (see module doc)
+        self.plans = plans              # list[tuple[int]] distinct key orders
+        self.row_plan = row_plan        # int32[n] plan index per row
+        self.n = n
+        self.nbytes = nbytes
+        self.may_have_empty = may_have_empty
+        self._samples: Optional[List[Sample]] = None
+
+    # -- construction ------------------------------------------------------
+
+    @classmethod
+    def from_samples(cls, samples: Sequence[Sample],
+                     nbytes: Optional[int] = None,
+                     may_have_empty: Optional[bool] = None) -> "ColumnBlock":
+        """Encode row dicts into columns. Raises ``TypeError`` on non-string
+        keys (caller falls back to a row SampleBlock)."""
+        n = len(samples)
+        if n:
+            blk = cls._from_uniform(samples, nbytes, may_have_empty)
+            if blk is not None:
+                return blk
+        keys: List[str] = []
+        kinds: List[Optional[str]] = []
+        key_ix: Dict[str, int] = {}
+        col_rows: List[List[int]] = []   # present row indices, ascending
+        col_vals: List[List[Any]] = []   # present values, row order
+        plans: List[Tuple[int, ...]] = []
+        plan_ix: Dict[Tuple[int, ...], int] = {}
+        row_plan = np.empty(n, np.int32)
+        empties = False
+        for i, s in enumerate(samples):
+            pk: List[int] = []
+            for k, v in s.items():
+                if type(k) is not str:
+                    raise TypeError(f"non-string sample key: {k!r}")
+                ci = key_ix.get(k)
+                if ci is None:
+                    ci = key_ix[k] = len(keys)
+                    keys.append(k)
+                    kinds.append(None)
+                    col_rows.append([])
+                    col_vals.append([])
+                col_rows[ci].append(i)
+                col_vals[ci].append(v)
+                nk = _classify(v)
+                if kinds[ci] is None:
+                    kinds[ci] = nk
+                elif kinds[ci] != nk:
+                    kinds[ci] = "obj"
+                pk.append(ci)
+            pt = tuple(pk)
+            pi = plan_ix.get(pt)
+            if pi is None:
+                pi = plan_ix[pt] = len(plans)
+                plans.append(pt)
+            row_plan[i] = pi
+            if may_have_empty is None and not empties:
+                empties = _is_empty_sample(s)
+        data: List[Any] = []
+        for ci, kind in enumerate(kinds):
+            rows, vals = col_rows[ci], col_vals[ci]
+            if kind == "str":
+                data.append(_ragged(n, rows, [v.encode("utf-8") for v in vals]))
+            elif kind == "f64":
+                arr = np.zeros(n, np.float64)
+                arr[rows] = vals
+                data.append(arr)
+            elif kind == "i64":
+                arr = np.zeros(n, np.int64)
+                arr[rows] = vals
+                data.append(arr)
+            else:
+                try:
+                    frags = [json_dumps(v) for v in vals]
+                except (TypeError, ValueError):
+                    kinds[ci] = "py"
+                    lst: List[Any] = [None] * n
+                    for r, v in zip(rows, vals):
+                        lst[r] = v
+                    data.append(lst)
+                    continue
+                data.append(_ragged(n, rows, frags))
+        blk = cls(tuple(keys), tuple(kinds), data, plans, row_plan, n, 0,
+                  may_have_empty=empties if may_have_empty is None
+                  else may_have_empty)
+        blk.nbytes = nbytes if nbytes is not None else blk.buffer_bytes()
+        return blk
+
+    @classmethod
+    def _from_uniform(cls, samples: Sequence[Sample], nbytes, may_have_empty
+                      ) -> Optional["ColumnBlock"]:
+        """Fast encode for the common shape — every row shares one key
+        order — skipping the per-row plan bookkeeping the generic loop pays.
+        Returns ``None`` when rows disagree (generic path takes over)."""
+        n = len(samples)
+        keys = list(samples[0].keys())
+        for s in samples:
+            if list(s.keys()) != keys:
+                return None
+        for k in keys:
+            if type(k) is not str:
+                raise TypeError(f"non-string sample key: {k!r}")
+        kinds: List[str] = []
+        data: List[Any] = []
+        for k in keys:
+            vals = [s[k] for s in samples]
+            ts = set(map(type, vals))
+            if ts == {str}:
+                kind = "str"
+            elif ts == {float}:
+                kind = "f64"
+            elif ts == {int}:
+                kind = ("i64" if _I64_MIN <= min(vals) and max(vals) <= _I64_MAX
+                        else "obj")
+            else:
+                kind = "obj"
+            if kind == "str":
+                data.append(_ragged_from_frags([v.encode("utf-8") for v in vals]))
+            elif kind == "f64":
+                data.append(np.asarray(vals, np.float64))
+            elif kind == "i64":
+                data.append(np.asarray(vals, np.int64))
+            else:
+                try:
+                    data.append(_ragged_from_frags([json_dumps(v) for v in vals]))
+                except (TypeError, ValueError):
+                    kind = "py"
+                    data.append(list(vals))
+            kinds.append(kind)
+        empties = (any(map(_is_empty_sample, samples))
+                   if may_have_empty is None else may_have_empty)
+        blk = cls(tuple(keys), tuple(kinds), data,
+                  [tuple(range(len(keys)))], np.zeros(n, np.int32), n, 0,
+                  may_have_empty=empties)
+        blk.nbytes = nbytes if nbytes is not None else blk.buffer_bytes()
+        return blk
+
+    # -- introspection -----------------------------------------------------
+
+    def __len__(self) -> int:
+        return self.n
+
+    @property
+    def materialized(self) -> bool:
+        return self._samples is not None
+
+    def has_column(self, key: str) -> bool:
+        return key in self.keys
+
+    def buffer_bytes(self) -> int:
+        """Actual resident bytes of the column buffers (the cheap,
+        real memory-pressure signal the dispatcher consumes)."""
+        total = self.row_plan.nbytes
+        for kind, d in zip(self.kinds, self.data):
+            if kind in ("str", "obj"):
+                total += d[0].nbytes + len(d[1])
+            elif kind == "py":
+                total += 64 * self.n  # rough: object headers + pointers
+            else:
+                total += d.nbytes
+        return total
+
+    # -- row shim ----------------------------------------------------------
+
+    def _value(self, ci: int, i: int) -> Any:
+        kind = self.kinds[ci]
+        d = self.data[ci]
+        if kind == "str":
+            offs, buf = d
+            return buf[offs[i]:offs[i + 1]].decode("utf-8")
+        if kind == "f64":
+            return float(d[i])
+        if kind == "i64":
+            return int(d[i])
+        if kind == "obj":
+            offs, buf = d
+            return json_loads(buf[offs[i]:offs[i + 1]])
+        return d[i]
+
+    def decode_rows(self) -> List[Sample]:
+        """Fresh, private decode (never cached) — for concurrent consumers
+        (speculative thread attempts) that must not share mutable rows."""
+        rp, plans = self.row_plan.tolist(), self.plans
+        return [
+            {self.keys[ci]: self._value(ci, i) for ci in plans[rp[i]]}
+            for i in range(self.n)]
+
+    @property
+    def samples(self) -> List[Sample]:
+        """Row-dict shim for ops that haven't opted into columns. Decodes
+        ONCE and caches — after this the dicts are authoritative (callers
+        mutate them in place), so every later access sees the same list."""
+        if self._samples is None:
+            self._samples = self.decode_rows()
+        return self._samples
+
+    def column_values(self, key: str) -> List[Any]:
+        """Per-row values of one column (``None`` where the row lacks the
+        key) without materializing row dicts."""
+        ci = self.keys.index(key)
+        present = self._presence(ci)
+        return [self._value(ci, i) if present[i] else None
+                for i in range(self.n)]
+
+    def string_values(self, key: str) -> List[str]:
+        """Decoded strings of a ``str`` column, ``""`` for absent rows —
+        matching the ``sample.get(key, "")`` row-path contract. Raises
+        ``TypeError`` on a non-string column (caller falls back to rows)."""
+        if key not in self.keys:
+            return [""] * self.n
+        ci = self.keys.index(key)
+        if self.kinds[ci] != "str":
+            raise TypeError(f"column {key!r} is {self.kinds[ci]}, not str")
+        offs, buf = self.data[ci]
+        bounds = offs.tolist()  # plain ints: numpy scalar slicing is slow
+        return [buf[bounds[i]:bounds[i + 1]].decode("utf-8")
+                for i in range(self.n)]
+
+    def str_column(self, key: str) -> Optional[Tuple[np.ndarray, bytes]]:
+        """Raw ``(offsets, utf8 buffer)`` of a string column for fully
+        vectorized consumers; ``None`` if absent, ``TypeError`` if the
+        column isn't ``str``-kind."""
+        if key not in self.keys:
+            return None
+        ci = self.keys.index(key)
+        if self.kinds[ci] != "str":
+            raise TypeError(f"column {key!r} is {self.kinds[ci]}, not str")
+        return self.data[ci]
+
+    def _presence(self, ci: int) -> np.ndarray:
+        m = np.zeros(len(self.plans), bool)
+        for pi, plan in enumerate(self.plans):
+            m[pi] = ci in plan
+        return m[self.row_plan]
+
+    # -- export codec ------------------------------------------------------
+
+    def iter_json_lines(self, exclude: Tuple[str, ...] = ()) -> Iterator[bytes]:
+        """Serialize rows to canonical JSONL bytes. On a non-materialized
+        block this never builds dicts: key fragments are precomputed per
+        column and ``obj`` fragments are spliced verbatim, so the line is
+        byte-identical to ``json_dumps(row)`` by construction."""
+        if self._samples is not None:
+            for s in self._samples:
+                if exclude:
+                    s = {k: v for k, v in s.items() if k not in exclude}
+                yield json_dumps(s)
+            return
+        skip = {self.keys.index(k) for k in exclude if k in self.keys}
+        kf = [json_dumps(k) + b":" for k in self.keys]
+        kinds, data = self.kinds, self.data
+        rp = self.row_plan.tolist()
+        for i in range(self.n):
+            parts: List[bytes] = []
+            for ci in self.plans[rp[i]]:
+                if ci in skip:
+                    continue
+                kind = kinds[ci]
+                d = data[ci]
+                if kind == "str":
+                    offs, buf = d
+                    frag = json_dumps(buf[offs[i]:offs[i + 1]].decode("utf-8"))
+                elif kind == "f64":
+                    frag = json_dumps(float(d[i]))
+                elif kind == "i64":
+                    frag = json_dumps(int(d[i]))
+                elif kind == "obj":
+                    offs, buf = d
+                    frag = buf[offs[i]:offs[i + 1]]
+                else:
+                    frag = json_dumps(d[i])  # py: raises like the row path
+                parts.append(kf[ci] + frag)
+            yield b"{" + b",".join(parts) + b"}"
+
+    # -- columnar transforms (non-materialized blocks only) ----------------
+
+    def _check_transform(self) -> None:
+        if self._samples is not None:
+            raise RuntimeError("columnar transform on a materialized block")
+
+    def take(self, mask: np.ndarray) -> "ColumnBlock":
+        """Select rows by boolean mask -> new block (filter output)."""
+        self._check_transform()
+        idx = np.flatnonzero(mask)
+        data: List[Any] = []
+        for kind, d in zip(self.kinds, self.data):
+            if kind in ("str", "obj"):
+                offs, buf = d
+                starts = offs[idx]
+                lens = offs[idx + 1] - starts
+                new_offs = np.zeros(idx.size + 1, np.int64)
+                np.cumsum(lens, out=new_offs[1:])
+                total = int(new_offs[-1])
+                if total == len(buf):
+                    # every dropped row was zero-length: bytes are unchanged
+                    new_buf = buf
+                else:
+                    # vectorized ragged gather: output byte p of row j reads
+                    # source byte starts[j] + (p - new_offs[j])
+                    src = np.frombuffer(buf, np.uint8)
+                    gather = np.repeat(starts - new_offs[:-1], lens) \
+                        + np.arange(total, dtype=np.int64)
+                    new_buf = src[gather].tobytes()
+                data.append((new_offs, new_buf))
+            elif kind == "py":
+                data.append([d[i] for i in idx])
+            else:
+                data.append(d[idx])
+        blk = ColumnBlock(self.keys, self.kinds, data, self.plans,
+                          self.row_plan[idx], int(idx.size), 0,
+                          may_have_empty=self.may_have_empty)
+        blk.nbytes = blk.buffer_bytes()
+        return blk
+
+    def with_stat(self, key: str, values: np.ndarray) -> "ColumnBlock":
+        """Splice ``stats[key] = float(v)`` into every row, reproducing the
+        row path's ``sample.setdefault("stats", {})[key] = v`` byte-exactly:
+        existing ``stats`` dicts get the key appended (or updated in place
+        if present), rows without ``stats`` grow it at the end of the row.
+        Raises on any shape the fast path can't prove equivalent (non-dict
+        stats, py-kind column) — the caller falls back to the row shim."""
+        self._check_transform()
+        qkey = json_dumps(key)
+        ci = self.keys.index("stats") if "stats" in self.keys else None
+        keys, kinds, data = list(self.keys), list(self.kinds), list(self.data)
+        # one dumps call covers every value: a float fragment never contains
+        # a comma, so the canonical list encoding splits back into exactly
+        # the per-value fragments json_dumps(float(v)) would produce
+        vfrags = (json_dumps([float(v) for v in values])[1:-1].split(b",")
+                  if len(values) else [])
+        if ci is None:
+            ci = len(keys)
+            keys.append("stats")
+            kinds.append("obj")
+            frags = [b"{" + qkey + b":" + vf + b"}" for vf in vfrags]
+            data.append(_ragged_from_frags(frags))
+        elif kinds[ci] == "obj":
+            offs, buf = data[ci]
+            # plain Python ints/bools: numpy scalar indexing is an order of
+            # magnitude slower inside this per-row loop
+            offs = offs.tolist()
+            present = self._presence(ci).tolist()
+            mv = memoryview(buf)
+            # whole-buffer scan decides once whether any row might already
+            # carry the key — the common append-only case skips the per-row
+            # substring test and the exact-update decode entirely
+            may_update = qkey in buf
+            frags = []
+            for i in range(self.n):
+                vfrag = vfrags[i]
+                if not present[i]:
+                    frags.append(b"{" + qkey + b":" + vfrag + b"}")
+                    continue
+                f = bytes(mv[offs[i]:offs[i + 1]])
+                if not f.startswith(b"{"):
+                    raise ValueError("stats is not a JSON object")
+                if may_update and qkey in f:  # key may already exist: exact update
+                    dec = json_loads(f)
+                    dec[key] = float(values[i])
+                    frags.append(json_dumps(dec))
+                elif f == b"{}":
+                    frags.append(b"{" + qkey + b":" + vfrag + b"}")
+                else:
+                    frags.append(f[:-1] + b"," + qkey + b":" + vfrag + b"}")
+            data[ci] = _ragged_from_frags(frags)
+        else:
+            raise TypeError(f"stats column is {kinds[ci]}, not obj")
+        plans = [p if ci in p else p + (ci,) for p in self.plans]
+        blk = ColumnBlock(tuple(keys), tuple(kinds), data, plans,
+                          self.row_plan, self.n, 0,
+                          may_have_empty=self.may_have_empty)
+        blk.nbytes = blk.buffer_bytes()
+        return blk
+
+    def with_py_column(self, key: str, values: List[Any]) -> "ColumnBlock":
+        """Append a raw-Python column present on every row (the presign
+        mapper's signature carriers) — matches ``sample[key] = v`` appended
+        at the end of each row dict."""
+        self._check_transform()
+        if key in self.keys:
+            raise ValueError(f"column {key!r} already exists")
+        ci = len(self.keys)
+        plans = [p + (ci,) for p in self.plans]
+        blk = ColumnBlock(self.keys + (key,), self.kinds + ("py",),
+                          self.data + [list(values)], plans, self.row_plan,
+                          self.n, self.nbytes,
+                          may_have_empty=self.may_have_empty)
+        return blk
+
+    # -- IPC ---------------------------------------------------------------
+
+    def __getstate__(self):
+        return (self.keys, self.kinds, self.data, self.plans, self.row_plan,
+                self.n, self.nbytes, self.may_have_empty)
+
+    def __setstate__(self, state):
+        (self.keys, self.kinds, self.data, self.plans, self.row_plan,
+         self.n, self.nbytes, self.may_have_empty) = state
+        self._samples = None
+
+
+def _ragged(n: int, rows: List[int], frags: List[bytes]
+            ) -> Tuple[np.ndarray, bytes]:
+    """(offsets, buffer) with zero-length slices for absent rows."""
+    lens = np.zeros(n, np.int64)
+    lens[rows] = [len(f) for f in frags]
+    offs = np.zeros(n + 1, np.int64)
+    np.cumsum(lens, out=offs[1:])
+    return offs, b"".join(frags)
+
+
+def _ragged_from_frags(frags: List[bytes]) -> Tuple[np.ndarray, bytes]:
+    offs = np.zeros(len(frags) + 1, np.int64)
+    np.cumsum([len(f) for f in frags], out=offs[1:])
+    return offs, b"".join(frags)
+
+
+# ---------------------------------------------------------------------------
+# vectorized helpers for columnar filters
+# ---------------------------------------------------------------------------
+
+
+def utf8_char_counts(offsets: np.ndarray, buf: bytes) -> np.ndarray:
+    """Per-row Unicode code-point counts straight off a string column's
+    UTF-8 buffer: a byte starts a code point iff it is not a continuation
+    byte (``(b & 0xC0) != 0x80``), so the count equals ``len(str)`` exactly
+    for any valid UTF-8 — one vectorized pass, no per-row decode."""
+    if len(buf) == 0:
+        return np.zeros(len(offsets) - 1, np.int64)
+    arr = np.frombuffer(buf, np.uint8)
+    # int32 running count halves the memory traffic; a block buffer is far
+    # below the 2^31-char overflow point
+    starts = np.zeros(len(arr) + 1, np.int32)
+    np.cumsum((arr & 0xC0) != 0x80, out=starts[1:])
+    return (starts[offsets[1:]] - starts[offsets[:-1]]).astype(np.int64)
+
+
+# byte-class lookup tables (ASCII range; bytes >= 0x80 are continuation or
+# lead bytes of multi-byte code points — rows containing any are recomputed
+# per row by the caller, so the tables' False there is never load-bearing)
+_WS_BYTE = np.zeros(256, bool)
+_ALNUM_SP_BYTE = np.zeros(256, bool)
+for _b in range(128):
+    _WS_BYTE[_b] = chr(_b).isspace()
+    _ALNUM_SP_BYTE[_b] = chr(_b).isalnum() or chr(_b).isspace()
+del _b
+
+
+def ascii_rows_mask(offsets: np.ndarray, buf: bytes) -> np.ndarray:
+    """True for rows whose slice is pure ASCII — the rows where byte-level
+    char classes match Python's per-character semantics exactly."""
+    n = len(offsets) - 1
+    if len(buf) == 0:
+        return np.ones(n, bool)
+    arr = np.frombuffer(buf, np.uint8)
+    hi = np.zeros(len(arr) + 1, np.int32)
+    np.cumsum(arr >= 0x80, out=hi[1:])
+    return (hi[offsets[1:]] - hi[offsets[:-1]]) == 0
+
+
+def ascii_word_counts(offsets: np.ndarray, buf: bytes) -> np.ndarray:
+    """Per-row whitespace-delimited token counts — equals ``len(t.split())``
+    exactly for pure-ASCII rows (``str.split`` and ``str.isspace`` share the
+    same character class). Callers must recompute rows flagged non-ASCII by
+    :func:`ascii_rows_mask`."""
+    n = len(offsets) - 1
+    if len(buf) == 0:
+        return np.zeros(n, np.int64)
+    arr = np.frombuffer(buf, np.uint8)
+    nonws = ~_WS_BYTE[arr]
+    # a word starts at a non-ws byte whose predecessor is ws (or buffer
+    # start); count per row via running sum, then patch rows whose first
+    # byte continues a "word" spilling over from the previous row's slice
+    prev = np.empty_like(nonws)
+    prev[0] = False
+    prev[1:] = nonws[:-1]
+    cum = np.zeros(len(arr) + 1, np.int32)
+    np.cumsum(nonws & ~prev, out=cum[1:])
+    counts = (cum[offsets[1:]] - cum[offsets[:-1]]).astype(np.int64)
+    so = offsets[:-1]
+    ie = np.flatnonzero(offsets[1:] > so)  # nonempty rows
+    first_nonws = np.zeros(n, bool)
+    first_nonws[ie] = nonws[so[ie]]
+    prev_nonws = np.zeros(n, bool)
+    ip = ie[so[ie] > 0]
+    prev_nonws[ip] = nonws[so[ip] - 1]
+    return counts + (first_nonws & prev_nonws)
+
+
+def ascii_alnum_space_counts(offsets: np.ndarray, buf: bytes) -> np.ndarray:
+    """Per-row counts of alphanumeric-or-whitespace bytes — equals the
+    per-character count exactly for pure-ASCII rows."""
+    n = len(offsets) - 1
+    if len(buf) == 0:
+        return np.zeros(n, np.int64)
+    arr = np.frombuffer(buf, np.uint8)
+    cum = np.zeros(len(arr) + 1, np.int32)
+    np.cumsum(_ALNUM_SP_BYTE[arr], out=cum[1:])
+    return (cum[offsets[1:]] - cum[offsets[:-1]]).astype(np.int64)
+
+
+# ---------------------------------------------------------------------------
+# optional zstd codec for spill / checkpoint payloads
+# ---------------------------------------------------------------------------
+
+
+def maybe_compress(raw: bytes, level: int = 3) -> Tuple[str, bytes]:
+    """Codec negotiation for spill/checkpoint payloads: ``("zstd", ...)``
+    when zstandard is importable, ``("raw", ...)`` passthrough otherwise."""
+    if _zstd is None:
+        return "raw", raw
+    return "zstd", _zstd.ZstdCompressor(level=level).compress(raw)
+
+
+def maybe_decompress(codec: str, payload: bytes) -> bytes:
+    if codec == "raw":
+        return payload
+    if codec == "zstd":
+        if _zstd is None:
+            raise RuntimeError("zstd payload but zstandard is not installed")
+        return _zstd.ZstdDecompressor().decompress(payload)
+    raise ValueError(f"unknown block codec {codec!r}")

@@ -209,10 +209,39 @@ def iter_stream_blocks(
                                        total_hint_bytes=max(1, len(out)) * 256))
         else:
             sig_ops, sig_owner = attached.get(idx, (None, None))
+            n_push = getattr(seg, "n_pushdown", 0)
+            if n_push:
+                # predicate pushdown: the segment's leading vectorized
+                # column-only filters run HERE, on the driver, right after
+                # block decode — rows they drop are never pickled to a
+                # worker. Blocks that can't take the columnar path (row
+                # format, materialized, empties) fall back to run_chain
+                # per block; stats land on the same per-op entries either way.
+                def pushed(upstream=stream, push_ops=list(seg.ops[:n_push]),
+                           offset=offset):
+                    from repro.core.engine import _columnar_prefix, run_chain
+                    for blk in upstream:
+                        cur, cstats, k = _columnar_prefix(push_ops, blk)
+                        for j, st in enumerate(cstats):
+                            record(offset + j, st)
+                        if k < len(push_ops):
+                            rows, sub = run_chain(push_ops[k:], list(cur.samples))
+                            for j, st in enumerate(sub):
+                                record(offset + k + j, st)
+                            cur = SampleBlock(rows, nbytes=0)
+                        yield cur
+                stream = pushed()
             def run(seg=seg, upstream=stream, offset=offset,
-                    sig_ops=sig_ops, sig_owner=sig_owner):
-                chain = seg.ops + (sig_ops or [])
-                n_own = len(seg.ops)
+                    sig_ops=sig_ops, sig_owner=sig_owner, n_push=n_push):
+                chain = seg.ops[n_push:] + (sig_ops or [])
+                if not chain:  # whole segment pushed down, nothing to dispatch
+                    yield from upstream
+                    return
+                n_own = len(seg.ops) - n_push
+                # redispatch charges go to the first DISPATCHED op's row; a
+                # fully-pushed segment dispatches only presign mappers, whose
+                # summaries belong to the downstream dedup op
+                owner = offset + n_push if n_own > 0 else sig_owner
                 label = "+".join(o.name for o in chain)
                 n0 = len(getattr(engine, "dispatch_log", ()))
                 try:
@@ -222,12 +251,12 @@ def iter_stream_blocks(
                         # downstream dedup op they belong to
                         for k, st in enumerate(stats):
                             if k < n_own:
-                                record(offset + k, st)
+                                record(offset + n_push + k, st)
                             else:
                                 charge(sig_owner, st)
                         yield blk
                 finally:
-                    charge_dispatch(offset, label, n0)
+                    charge_dispatch(owner, label, n0)
             stream = run()
         if observer is not None:
             stream = observer.tap("+".join(o.name for o in seg.ops), stream)

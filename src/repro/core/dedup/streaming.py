@@ -115,11 +115,16 @@ class SignatureBatcher:
             return [], [], np.zeros((0, self.n_perm), dtype=np.uint32)
         self.dispatches += 1
         if self.use_kernel:
-            from repro.core.dedup.minhash import pad_docs
-            from repro.kernels.minhash.ops import minhash_signatures
+            from repro.kernels.minhash.ops import minhash_signatures_packed
 
-            padded, mask = pad_docs(docs)
-            sigs = np.asarray(minhash_signatures(padded, mask, self._a, self._b))
+            # packed-ragged dispatch: one vectorized scatter builds the
+            # dense layout instead of a per-doc pad loop (bit-exact)
+            lens = np.fromiter((d.size for d in docs), np.int64, len(docs))
+            offsets = np.zeros(len(docs) + 1, np.int64)
+            np.cumsum(lens, out=offsets[1:])
+            values = np.concatenate(docs) if len(docs) else np.zeros(0, np.uint64)
+            sigs = np.asarray(minhash_signatures_packed(
+                values, offsets, self._a, self._b))
         else:
             from repro.core.dedup.minhash import signature_ref
 
@@ -371,17 +376,28 @@ class StreamingMinHashState:
         self._spill_fh = None
 
     # -- exact-mode sample spill ------------------------------------------
-    def _spill_samples(self, samples: List[Sample]) -> None:
-        from repro.core.storage import json_dumps
-
+    def _ensure_spill(self) -> None:
         if self._spill_fh is None:
             if self._spill_dir:
                 os.makedirs(self._spill_dir, exist_ok=True)
             fd, self._spill_path = tempfile.mkstemp(
                 prefix="dj-dedup-spill-", suffix=".jsonl", dir=self._spill_dir)
             self._spill_fh = os.fdopen(fd, "wb")
+
+    def _spill_samples(self, samples: List[Sample]) -> None:
+        from repro.core.storage import json_dumps
+
+        self._ensure_spill()
         for s in samples:
             self._spill_fh.write(json_dumps(s) + b"\n")
+
+    def _spill_lines(self, lines: Iterable[bytes]) -> None:
+        """Spill pre-serialized JSONL lines (a ColumnBlock's export codec) —
+        byte-identical to ``_spill_samples`` on the decoded rows, without
+        ever building the row dicts."""
+        self._ensure_spill()
+        for raw in lines:
+            self._spill_fh.write(raw + b"\n")
 
     def _replay_spill(self) -> Iterator[Sample]:
         from repro.core.storage import read_jsonl
@@ -433,6 +449,34 @@ class StreamingMinHashState:
             np.zeros((0, self.n_perm), dtype=np.uint32)
         return payloads, docs, sig_arr
 
+    def _take_presigned_columns(self, block
+                                ) -> Tuple[List[Sample], List[np.ndarray], np.ndarray]:
+        """Columnar counterpart of :meth:`_take_presigned`: read the
+        signature carriers straight off a ColumnBlock's py columns — no row
+        dicts. Exact mode only (payloads are all ``None``; emission happens
+        from the spill replay, never from these samples)."""
+        from repro.ops.dedup_ops import MH_DOC_KEY, MH_SIG_KEY
+
+        docs_c = block.column_values(MH_DOC_KEY)
+        sigs_c = block.column_values(MH_SIG_KEY)
+        texts = None
+        docs: List[np.ndarray] = []
+        sigs: List[np.ndarray] = []
+        for i in range(len(block)):
+            d, g = docs_c[i], sigs_c[i]
+            if d is None or g is None:
+                # straggler (e.g. fault-tolerance replacement row): recompute
+                if texts is None:
+                    texts = block.string_values("text")
+                d = shingle_hashes(texts[i], n=self.ngram)
+                g = signatures_batch_vectorized([d], self.batcher._a,
+                                                self.batcher._b)[0]
+            docs.append(d)
+            sigs.append(g)
+        sig_arr = np.stack(sigs) if sigs else \
+            np.zeros((0, self.n_perm), dtype=np.uint32)
+        return [None] * len(block), docs, sig_arr
+
     # -- per-doc ingestion -------------------------------------------------
     def _ingest(self, payloads: List[Sample], docs: List[np.ndarray],
                 sigs: np.ndarray) -> List[Sample]:
@@ -479,31 +523,59 @@ class StreamingMinHashState:
         :meth:`_finalize_exact` once upstream is exhausted."""
         from repro.core.storage import SampleBlock
 
-        from repro.ops.dedup_ops import MH_DOC_KEY
+        from repro.ops.dedup_ops import MH_DOC_KEY, MH_SIG_KEY
 
         try:
             for blk in blocks:
                 if check_cancel is not None:
                     check_cancel()
                 t0 = time.perf_counter()
-                n_in = len(blk.samples)
+                n_in = len(blk)
                 out: List[Sample] = []
-                if blk.samples and MH_DOC_KEY in blk.samples[0]:
+                # non-materialized ColumnBlocks expose schema + columns
+                # without decoding row dicts; anything else uses .samples
+                cb = blk if (hasattr(blk, "has_column")
+                             and not blk.materialized) else None
+                presigned = (cb.has_column(MH_DOC_KEY) if cb is not None
+                             else bool(blk.samples and MH_DOC_KEY in blk.samples[0]))
+                if presigned:
                     # worker-pre-signed block: flush any batcher backlog
                     # first (doc ids must follow arrival order), then ingest
                     # directly — nothing left to super-batch
                     if self.batcher.pending:
                         out.extend(self._ingest(*self.batcher.flush()))
-                    payloads, docs, sigs = self._take_presigned(blk.samples)
-                    if self.exact:
-                        self._spill_samples(blk.samples)
-                    out.extend(self._ingest(payloads, docs, sigs))
+                    if cb is not None and self.exact:
+                        # zero-materialization path: spill the export codec's
+                        # lines minus the carrier keys, read the carriers
+                        # straight off the py columns
+                        self._spill_lines(cb.iter_json_lines(
+                            exclude=(MH_DOC_KEY, MH_SIG_KEY)))
+                        out.extend(self._ingest(*self._take_presigned_columns(cb)))
+                    else:
+                        # keep-first emission needs the row dicts as payloads
+                        payloads, docs, sigs = self._take_presigned(blk.samples)
+                        if self.exact:
+                            self._spill_samples(blk.samples)
+                        out.extend(self._ingest(payloads, docs, sigs))
                 else:
-                    if self.exact:
-                        self._spill_samples(blk.samples)
-                    for s in blk.samples:
-                        self.batcher.add(s.get("text", ""),
-                                         None if self.exact else s)
+                    texts = None
+                    if cb is not None and self.exact and "py" not in cb.kinds:
+                        # validate the text column BEFORE spilling so a
+                        # fallback can never double-spill the block
+                        try:
+                            texts = cb.string_values("text")
+                        except (TypeError, ValueError):
+                            texts = None
+                    if texts is not None:
+                        self._spill_lines(cb.iter_json_lines())
+                        for t in texts:
+                            self.batcher.add(t, None)
+                    else:
+                        if self.exact:
+                            self._spill_samples(blk.samples)
+                        for s in blk.samples:
+                            self.batcher.add(s.get("text", ""),
+                                             None if self.exact else s)
                     while self.batcher.ready:
                         out.extend(self._ingest(*self.batcher.flush()))
                 dt = time.perf_counter() - t0

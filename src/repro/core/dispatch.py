@@ -224,11 +224,12 @@ class _Flight:
     """One block's dispatch state: all in-flight submissions + outcome."""
 
     __slots__ = ("idx", "item", "futures", "backups", "failures", "bounces",
-                 "done", "payload", "error", "t_submit")
+                 "done", "payload", "error", "t_submit", "nbytes")
 
     def __init__(self, idx: int, item: Any):
         self.idx = idx
         self.item = item
+        self.nbytes = 0
         self.futures: set = set()
         self.backups: set = set()
         self.failures = 0
@@ -277,7 +278,8 @@ class WindowedDispatcher:
                  label: str = "", log: Optional[List[dict]] = None,
                  meta: Optional[Dict[str, Any]] = None,
                  preempt_board: Optional[Any] = None,
-                 health: Optional[HealthRegistry] = None):
+                 health: Optional[HealthRegistry] = None,
+                 mem_budget: Optional[int] = None):
         self.pool = pool
         self.n_workers = max(1, n_workers)
         self.straggler_factor = straggler_factor
@@ -303,6 +305,16 @@ class WindowedDispatcher:
 
         self.window, self.min_window, self.max_window = window_bounds(self.n_workers)
         self._window_start = self.window
+
+        # memory-pressure signal: cap on RESIDENT in-flight block bytes
+        # (submitted but not yet yielded, measured via each item's ``nbytes``).
+        # When exceeded, the fill loop stops admitting blocks (always keeping
+        # one in flight) and the window shrinks toward its floor — memory
+        # co-drives the window alongside the queue-wait/compute ratio.
+        self.mem_budget = mem_budget if mem_budget and mem_budget > 0 else None
+        self.resident_bytes = 0
+        self.resident_peak = 0
+        self.mem_shrinks = 0
 
         # health / outcome accounting
         self.quarantined: set = set()
@@ -513,11 +525,23 @@ class WindowedDispatcher:
             while True:
                 # fill the window (submitted-but-not-yielded bounds buffering)
                 while not exhausted and next_idx - next_yield < self.window:
+                    if (self.mem_budget is not None and next_idx > next_yield
+                            and self.resident_bytes >= self.mem_budget):
+                        # over the resident-bytes budget: stop admitting and
+                        # pull the window toward its floor so pressure also
+                        # persists into the steady-state window size
+                        if self.window > self.min_window:
+                            self.window -= 1
+                            self.mem_shrinks += 1
+                        break
                     item = next(it, _END)
                     if item is _END:
                         exhausted = True
                         break
                     fl = _Flight(next_idx, item)
+                    fl.nbytes = int(getattr(item, "nbytes", 0) or 0)
+                    self.resident_bytes += fl.nbytes
+                    self.resident_peak = max(self.resident_peak, self.resident_bytes)
                     flights[next_idx] = fl
                     next_idx += 1
                     self._submit(fl, fn, args_of(item))
@@ -526,6 +550,7 @@ class WindowedDispatcher:
                     fl = flights.pop(next_yield)
                     next_yield += 1
                     self.blocks += 1
+                    self.resident_bytes -= fl.nbytes
                     yield fl.item, fl.payload, fl.error
                 if exhausted and not flights:
                     break
@@ -566,6 +591,8 @@ class WindowedDispatcher:
             "quarantined": sorted(self.quarantined),
             "window_start": self._window_start,
             "window_final": self.window,
+            "mem_shrinks": self.mem_shrinks,
+            "resident_peak": self.resident_peak,
             **self.meta,
         }
         if self.log is not None:

@@ -27,6 +27,7 @@ from typing import Any, Dict, Iterable, Iterator, List, Optional, Tuple
 import numpy as np
 
 from repro.core import schema as S
+from repro.core.columnar import ColumnBlock
 from repro.core.dispatch import (
     HealthRegistry, TaskPreempted, WindowedDispatcher, dispatch_policy,
 )
@@ -105,6 +106,51 @@ def run_chain(
     return samples, stats
 
 
+def _columnar_ok(block) -> bool:
+    """A block is eligible for the columnar fast path only while nobody has
+    materialized its row dicts (after that the dicts are authoritative) and
+    it carries no empty samples (columnar filters would keep rows that
+    ``run_chain``'s drop_empty discards)."""
+    return (isinstance(block, ColumnBlock) and not block.materialized
+            and not block.may_have_empty)
+
+
+def _columnar_prefix(
+    ops: List[Operator], block, should_stop=None,
+) -> Tuple[Any, List[dict], int]:
+    """Run the longest columnar prefix of ``ops`` directly on the
+    ColumnBlock — no row dicts. Returns (block, stats, k) where ``k`` is the
+    number of ops consumed; the caller runs ``ops[k:]`` through the row-dict
+    shim. Any exception inside an op's columnar path (exotic data shape,
+    wrong column kind) just ends the prefix — the op reruns on rows, so
+    opting in is always safe."""
+    stats: List[dict] = []
+    k = 0
+    while k < len(ops) and _columnar_ok(block):
+        op = ops[k]
+        try:
+            if not op.supports_columns():
+                break
+        except Exception:  # noqa: BLE001 — opt-in probe must never fail the chain
+            break
+        if should_stop is not None and should_stop():
+            raise TaskPreempted(f"chain preempted at op[{k}] {op.name}")
+        t0 = time.perf_counter()
+        n_in = len(block)
+        try:
+            op.setup()
+            nxt = op.process_columns(block)
+        except TaskPreempted:
+            raise
+        except Exception:  # noqa: BLE001 — fall back to the row path from op k
+            break
+        stats.append({"op": op.name, "in": n_in, "out": len(nxt),
+                      "seconds": time.perf_counter() - t0, "errors": 0})
+        block = nxt
+        k += 1
+    return block, stats, k
+
+
 def _chain_failure(ops: List[Operator], blk: SampleBlock, err: dict):
     """Pass-through outcome for a chain block whose every dispatch failed:
     synthesized per-op stats plus an OpError pinned to the op that actually
@@ -126,10 +172,12 @@ class LocalEngine:
     name = "local"
 
     def __init__(self, n_threads: int = 1, straggler_factor: float = 3.0,
-                 speculate: bool = True, health_path: Optional[str] = None):
+                 speculate: bool = True, health_path: Optional[str] = None,
+                 mem_budget: Optional[int] = None):
         self.n_threads = n_threads
         self.straggler_factor = straggler_factor
         self.speculate = speculate
+        self.mem_budget = mem_budget  # resident in-flight block bytes cap
         self.redispatches = 0  # cumulative; per-call counts live in dispatch_log
         self.dispatch_log: List[dict] = []
         # cross-run worker-slot health (docs/runtime.md): quarantines persist
@@ -202,23 +250,22 @@ class LocalEngine:
                 cfgs = None
         if threads <= 1 or cfgs is None:
             for blk in blocks:
-                out, stats = run_chain(ops, blk.samples, batch_size)
+                cur, cstats, k = _columnar_prefix(ops, blk)
+                if k == len(ops):
+                    # whole chain ran on columns: zero row dicts built
+                    yield cur, cstats
+                    continue
+                out, stats = run_chain(ops[k:], cur.samples, batch_size)
                 # nbytes left lazy (0): output blocks are consumed immediately
                 # by the next segment or sink, never re-split by size
-                yield SampleBlock(out, nbytes=0), stats
+                yield SampleBlock(out, nbytes=0), cstats + stats
             return
 
         from repro.core.registry import create_op
 
         tls = threading.local()  # one clone chain per worker thread, not per block
 
-        def work(samples, should_stop=None):
-            # thread pools share objects (the process pool's pickling copies
-            # per dispatch): process a private copy so a speculative backup
-            # or retry never mutates dicts a straggling original still
-            # writes. Copied here, on the pool thread, overlapped with
-            # compute — not serialized on the dispatch loop.
-            samples = copy.deepcopy(samples)
+        def work(blk, should_stop=None):
             local_ops = getattr(tls, "ops", None)
             if local_ops is None:
                 local_ops = [create_op(c) for c in cfgs]
@@ -230,10 +277,22 @@ class LocalEngine:
                 # entry (not after run_chain) so a hard chain failure can't
                 # leak this block's errors into the thread's next block
                 o.errors = []
-            out, stats = run_chain(local_ops, samples, batch_size,
+            # thread pools share objects (the process pool's pickling copies
+            # per dispatch): columnar transforms never mutate their input, so
+            # the prefix can run on the SHARED block even under speculation;
+            # the row remainder gets a private decode (or deep copy) so a
+            # backup attempt never mutates dicts the original still writes.
+            cur, cstats, k = _columnar_prefix(local_ops, blk, should_stop)
+            if k == len(local_ops):
+                return cur, cstats, []
+            if isinstance(cur, ColumnBlock):
+                samples = cur.decode_rows()  # private, uncached
+            else:
+                samples = copy.deepcopy(cur.samples)
+            out, stats = run_chain(local_ops[k:], samples, batch_size,
                                    should_stop=should_stop)
-            errs = [(k, e) for k, o in enumerate(local_ops) for e in o.errors]
-            return out, stats, errs
+            errs = [(j, e) for j, o in enumerate(local_ops) for e in o.errors]
+            return out, cstats + stats, errs
 
         with cf.ThreadPoolExecutor(threads) as pool:
             disp = WindowedDispatcher(
@@ -242,8 +301,9 @@ class LocalEngine:
                 label="+".join(op.name for op in ops),
                 log=self.dispatch_log, meta={"engine": self.name},
                 # plain dict: thread-pool workers share the driver's heap
-                preempt_board={}, health=self.health)
-            gen = disp.run(blocks, work, lambda blk: (blk.samples,))
+                preempt_board={}, health=self.health,
+                mem_budget=self.mem_budget)
+            gen = disp.run(blocks, work, lambda blk: (blk,))
             try:
                 for blk, payload, err in gen:
                     if err is None:
@@ -252,7 +312,10 @@ class LocalEngine:
                             ops[k].errors.append(e)
                     else:
                         out, stats = _chain_failure(ops, blk, err)
-                    yield SampleBlock(out, nbytes=0), stats
+                    if isinstance(out, ColumnBlock):
+                        yield out, stats
+                    else:
+                        yield SampleBlock(out, nbytes=0), stats
             finally:
                 gen.close()
                 if disp.summary is not None:
@@ -272,14 +335,18 @@ def _worker_apply(op_config: Dict[str, Any], samples: List[Sample], batch_size: 
 
 
 def _worker_apply_chain(
-    op_configs: List[Dict[str, Any]], samples: List[Sample],
+    op_configs: List[Dict[str, Any]], payload,
     batch_size: Optional[int] = None, should_stop=None,
 ):
     """Runs in a worker process: rebuild the whole segment chain from configs
-    and drive the block through it in one dispatch. ``should_stop`` is the
-    dispatcher's preemption poll (a Manager-proxy read), threaded into
-    ``run_chain`` so a losing speculative submission exits at the next batch
-    boundary instead of draining."""
+    and drive the block through it in one dispatch. ``payload`` is either a
+    raw sample list or a ColumnBlock (the parallel engine ships columns —
+    one pickled buffer per column instead of N row dicts); the row-dict shim
+    appears only past the chain's columnar prefix, and the output is
+    re-encoded to columns so the return trip ships buffers too.
+    ``should_stop`` is the dispatcher's preemption poll (a Manager-proxy
+    read), threaded into ``run_chain`` so a losing speculative submission
+    exits at the next batch boundary instead of draining."""
     from repro.core.registry import create_op
 
     ops = []
@@ -291,10 +358,29 @@ def _worker_apply_chain(
             raise ChainOpFailure(k, str(c.get("name", "?")),
                                  f"{type(e).__name__}: {e}") from e
         ops.append(op)
-    out, stats = run_chain(ops, samples, batch_size, should_stop=should_stop)
-    # errors carry the op's index in the chain — attribution by name would
-    # merge two instances of the same OP class
-    errors = [(k, e.__dict__) for k, op in enumerate(ops) for e in op.errors]
+    cstats: List[dict] = []
+    columnar_in = isinstance(payload, ColumnBlock)
+    if columnar_in:
+        payload, cstats, kp = _columnar_prefix(ops, payload, should_stop)
+        if kp == len(ops):
+            return payload, cstats, []
+        ops = ops[kp:]
+        if isinstance(payload, ColumnBlock):
+            payload = payload.samples
+    out, stats = run_chain(ops, payload, batch_size, should_stop=should_stop)
+    stats = cstats + stats
+    # errors carry the op's index in the FULL chain (prefix ops report none)
+    # — attribution by name would merge two instances of the same OP class
+    off = len(cstats)
+    errors = [(off + k, e.__dict__) for k, op in enumerate(ops) for e in op.errors]
+    if columnar_in and cstats:
+        # return trip ships column buffers too — but only when the columnar
+        # prefix actually ran: a chain that fell straight to rows gains
+        # nothing from re-encoding, it would just pay encode+decode
+        try:
+            out = ColumnBlock.from_samples(out)
+        except Exception:  # noqa: BLE001 — exotic rows ship as row dicts
+            pass
     return out, stats, errors
 
 
@@ -313,10 +399,12 @@ class ParallelEngine:
 
     def __init__(self, n_workers: Optional[int] = None, straggler_factor: float = 3.0,
                  speculate: bool = True, min_completions: Optional[int] = None,
-                 worker_failure_limit: int = 3, health_path: Optional[str] = None):
+                 worker_failure_limit: int = 3, health_path: Optional[str] = None,
+                 mem_budget: Optional[int] = None):
         self.n_workers = n_workers or max(1, (os.cpu_count() or 2) - 1)
         self.straggler_factor = straggler_factor
         self.speculate = speculate
+        self.mem_budget = mem_budget  # resident in-flight block bytes cap
         self.min_completions = min_completions
         self.worker_failure_limit = worker_failure_limit
         self.redispatches = 0  # cumulative; per-call counts in EngineStats/dispatch_log
@@ -331,7 +419,8 @@ class ParallelEngine:
             speculate=self.speculate, min_completions=self.min_completions,
             worker_failure_limit=self.worker_failure_limit,
             label=label, log=self.dispatch_log, meta={"engine": self.name},
-            preempt_board=preempt_board, health=self.health)
+            preempt_board=preempt_board, health=self.health,
+            mem_budget=self.mem_budget)
 
     def _preempt_board(self):
         """Manager-backed shared dict readable from worker processes: the
@@ -432,8 +521,13 @@ class ParallelEngine:
         with cf.ProcessPoolExecutor(self.n_workers) as pool:
             disp = self._dispatcher(pool, label="+".join(op.name for op in ops),
                                     preempt_board=board)
-            gen = disp.run(blocks, _worker_apply_chain,
-                           lambda b: (cfgs, b.samples, batch_size))
+            # columnar blocks ship whole: one pickled buffer per column, not
+            # N row dicts (materialized blocks fall back to their row lists)
+            gen = disp.run(
+                blocks, _worker_apply_chain,
+                lambda b: (cfgs,
+                           b if _columnar_ok(b) else b.samples,
+                           batch_size))
             try:
                 for blk, payload, err in gen:
                     if err is None:
@@ -442,7 +536,10 @@ class ParallelEngine:
                             ops[k].errors.append(OpError(**e))
                     else:
                         out, stats = _chain_failure(ops, blk, err)
-                    yield SampleBlock(out, nbytes=0), stats
+                    if isinstance(out, ColumnBlock):
+                        yield out, stats
+                    else:
+                        yield SampleBlock(out, nbytes=0), stats
             finally:
                 gen.close()
                 if disp.summary is not None:

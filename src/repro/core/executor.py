@@ -28,6 +28,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import os
 import time
 from typing import Any, Dict, Iterable, Iterator, List, Optional, Tuple
 
@@ -88,6 +89,36 @@ class Executor:
     def _build_ops(self) -> List[Operator]:
         return [create_op(cfg) for cfg in self.recipe.process]
 
+    def _plan_ops(self) -> Tuple[List[Operator], bool]:
+        """(ops, fixed): a persisted ``fixed_plan`` (cluster failover replay)
+        is rebuilt verbatim — the caller must then skip probe + optimize."""
+        r = self.recipe
+        if r.fixed_plan is not None:
+            return [create_op(dict(c)) for c in r.fixed_plan], True
+        return self._build_ops(), False
+
+    def resolve_plan(self) -> List[Dict[str, Any]]:
+        """Derive the optimized op plan WITHOUT running the recipe: the same
+        probe + optimize a streaming run would perform, returned as op
+        configs. Cluster runners persist this at first claim so a failover
+        retry re-runs the identical plan (``Recipe.fixed_plan``)."""
+        r = self.recipe
+        if r.fixed_plan is not None:
+            return [dict(c) for c in r.fixed_plan]
+        ops = self._build_ops()
+        if (r.use_fusion or r.use_reordering) and r.dataset_path:
+            bb = {"block_bytes": r.block_bytes} if r.block_bytes else {}
+            raw = iter_sample_blocks(r.dataset_path, n_workers=1, **bb)
+            try:
+                probe, _ = self._probe_blocks(raw)
+            finally:
+                raw.close()
+            ops = self._optimize_ops(ops, probe)
+        return [op.config() for op in ops]
+
+    def _columnar_source(self) -> bool:
+        return self.recipe.block_format != "row"
+
     def _make_engine(self):
         r = self.recipe
         kw: Dict[str, Any] = {}
@@ -95,6 +126,15 @@ class Executor:
             kw["n_workers"] = r.np
         if r.health_path and r.engine in ("local", "parallel"):
             kw["health_path"] = r.health_path
+        if r.engine in ("local", "parallel"):
+            mb = r.mem_budget
+            if mb is None:
+                try:
+                    mb = int(os.environ.get("DJ_BLOCK_MEM_BUDGET", "") or 0) or None
+                except ValueError:
+                    mb = None
+            if mb:
+                kw["mem_budget"] = mb
         return make_engine(r.engine, **kw)
 
     def streaming_eligible(self) -> bool:
@@ -156,8 +196,12 @@ class Executor:
             seen += len(blk)
             if seen >= PROBE_LIMIT * PROBE_SCAN_FACTOR:
                 break
+        # private decode for ColumnBlocks: .samples would cache row dicts and
+        # mark the whole scan window materialized (losing its columnar path)
         probe = reservoir_sample(
-            (s for b in scanned for s in b.samples), PROBE_LIMIT)
+            (s for b in scanned
+             for s in (b.decode_rows() if hasattr(b, "decode_rows") else b.samples)),
+            PROBE_LIMIT)
         return probe, itertools.chain(scanned, src)
 
     def explain(self, dataset: Optional[DJDataset] = None) -> Dict[str, Any]:
@@ -176,7 +220,7 @@ class Executor:
             "plan": [op.name for op in ops],
             "segments": [
                 {"ops": [o.name for o in seg.ops], "barrier": seg.barrier,
-                 "stateful": seg.stateful}
+                 "stateful": seg.stateful, "pushdown": seg.n_pushdown}
                 for seg in segments
             ],
             "streaming": self.streaming_eligible(),
@@ -198,15 +242,17 @@ class Executor:
         if dataset is None and not r.dataset_path:
             raise ValueError("recipe has no dataset_path and no dataset given")
         engine = self._make_engine()
-        ops = self._build_ops()
+        ops, fixed = self._plan_ops()
         n_workers = getattr(engine, "n_workers", 1) or 1
         if dataset is not None:
             src: Iterable[SampleBlock] = iter(dataset.blocks)
-            ops = self._optimize_ops(ops, self._probe_samples(dataset))
+            if not fixed:
+                ops = self._optimize_ops(ops, self._probe_samples(dataset))
         else:
             bb = {"block_bytes": r.block_bytes} if r.block_bytes else {}
-            src = iter_sample_blocks(r.dataset_path, n_workers=n_workers, **bb)
-            if r.use_fusion or r.use_reordering:
+            src = iter_sample_blocks(r.dataset_path, n_workers=n_workers,
+                                     columnar=self._columnar_source(), **bb)
+            if (r.use_fusion or r.use_reordering) and not fixed:
                 probe, src = self._probe_blocks(src)
                 ops = self._optimize_ops(ops, probe)
         segments = plan_segments(ops)
@@ -239,7 +285,7 @@ class Executor:
         if dataset is None and not r.dataset_path:
             raise ValueError("recipe has no dataset_path and no dataset given")
 
-        ops = self._build_ops()
+        ops, fixed = self._plan_ops()
         n_workers = getattr(engine, "n_workers", 1) or 1
 
         # source FIRST: with a file source the probe rides the live block
@@ -251,17 +297,20 @@ class Executor:
         if dataset is not None:
             counter["n"] = len(dataset)
             src: Iterable[SampleBlock] = iter(dataset.blocks)
-            ops = self._optimize_ops(ops, self._probe_samples(dataset))
+            if not fixed:
+                ops = self._optimize_ops(ops, self._probe_samples(dataset))
         else:
             bb = {"block_bytes": r.block_bytes} if r.block_bytes else {}
             counted = _count_blocks(
-                iter_sample_blocks(r.dataset_path, n_workers=n_workers, **bb), counter)
+                iter_sample_blocks(r.dataset_path, n_workers=n_workers,
+                                   columnar=self._columnar_source(), **bb), counter)
             src = counted
-            if r.use_fusion or r.use_reordering:
+            if (r.use_fusion or r.use_reordering) and not fixed:
                 # NOTE: on a checkpoint resume this scan is still required —
                 # the resume point is keyed by the OPTIMIZED plan's prefix
                 # sigs, and only the identical (deterministic) probe
-                # re-derives the identical plan
+                # re-derives the identical plan (a persisted fixed_plan
+                # makes both the scan and the re-derivation unnecessary)
                 probe, src = self._probe_blocks(src)
                 ops = self._optimize_ops(ops, probe)
         plan = [op.name for op in ops]
@@ -373,9 +422,9 @@ class Executor:
             dataset = DJDataset(dataset.blocks, engine, dataset.lineage)
         n_in = len(dataset)
 
-        ops = self._build_ops()
+        ops, fixed = self._plan_ops()
         # probe + optimize (fusion & workload-aware reordering)
-        if (r.use_fusion or r.use_reordering) and len(dataset):
+        if (r.use_fusion or r.use_reordering) and len(dataset) and not fixed:
             self.adapter.probe_small_batch(dataset.samples(), ops)
             ops = optimize(
                 ops, self.adapter.probes,

@@ -40,6 +40,11 @@ class Segment:
     ops: List[Operator]
     barrier: bool = False
     stateful: bool = False
+    # predicate pushdown (columnar): the first ``n_pushdown`` ops are
+    # vectorized column-only filters (supports_columns + pushdown_safe) that
+    # the executor applies driver-side at block decode, so dropped rows are
+    # never shipped to workers; the dispatched chain is ``ops[n_pushdown:]``
+    n_pushdown: int = 0
 
     def __len__(self):
         return len(self.ops)
@@ -53,10 +58,21 @@ def plan_segments(ops: Sequence[Operator]) -> List[Segment]:
     segs: List[Segment] = []
     cur: List[Operator] = []
 
+    def pushdown_depth(chain: List[Operator]) -> int:
+        n = 0
+        for op in chain:
+            try:
+                if not (op.pushdown_safe and op.supports_columns()):
+                    break
+            except Exception:  # noqa: BLE001 — opt-in probe must not fail planning
+                break
+            n += 1
+        return n
+
     def cut():
         nonlocal cur
         if cur:
-            segs.append(Segment(cur))
+            segs.append(Segment(cur, n_pushdown=pushdown_depth(cur)))
             cur = []
 
     for op in ops:

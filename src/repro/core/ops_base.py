@@ -48,6 +48,12 @@ class Operator:
     fusible: bool = False
     commutative: bool = True
 
+    # columnar protocol: ops that opt in process whole ColumnBlocks without
+    # the row-dict shim; ``pushdown_safe`` additionally marks ops cheap
+    # enough (fully vectorized) to run driver-side at block decode
+    # (fusion.plan_segments predicate pushdown)
+    pushdown_safe: bool = False
+
     def __init__(self, **params):
         self.params = params
         # probed at runtime by the Adapter
@@ -74,6 +80,23 @@ class Operator:
 
     def setup(self) -> None:
         """Lazy init (model loading etc.) — called once before processing."""
+
+    # ------------------------------------------------------------------
+    # columnar protocol (struct-of-arrays blocks, repro.core.columnar)
+    # ------------------------------------------------------------------
+    def supports_columns(self) -> bool:
+        """True when this op (as configured) can consume a ColumnBlock via
+        :meth:`process_columns` with output equivalent to the row path.
+        Engines run the longest columnar prefix of a chain before falling
+        back to the row-dict shim; any exception inside the columnar path
+        re-routes the block through the row path, so opting in never has to
+        handle exotic data shapes — only raise."""
+        return False
+
+    def process_columns(self, block):
+        """ColumnBlock -> ColumnBlock. Only called when
+        :meth:`supports_columns` is True; must not mutate ``block``."""
+        raise NotImplementedError(f"{self.name} has no columnar path")
 
     # ------------------------------------------------------------------
     # unified template method
@@ -261,6 +284,20 @@ class FusedOP(Operator):
     def setup(self):
         for o in self.ops:
             o.setup()
+
+    def supports_columns(self):
+        return all(o.supports_columns() for o in self.ops)
+
+    @property
+    def pushdown_safe(self):  # type: ignore[override]
+        return all(o.pushdown_safe for o in self.ops)
+
+    def process_columns(self, block):
+        # cascaded columnar filtering: each op sees only the survivors of
+        # the previous ones — the same work-saving shape as process_batch
+        for op in self.ops:
+            block = op.process_columns(block)
+        return block
 
     def process_batch(self, batch):
         # one batch traversal with CASCADED filtering: the ops arrive in

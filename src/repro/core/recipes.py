@@ -29,6 +29,18 @@ class Recipe:
     # cross-run worker-health file (dispatch.HealthRegistry): quarantines
     # persist here and previously-quarantined slots start on probation
     health_path: Optional[str] = None
+    # block representation for streamed file sources: "columnar" decodes
+    # JSONL straight into struct-of-arrays ColumnBlocks (repro.core.columnar)
+    # — workers receive column buffers, vectorized filters skip row dicts,
+    # pushdown-safe filters run at decode; "row" keeps list-of-dict blocks
+    block_format: str = "columnar"
+    # pre-optimized op plan (list of op configs). When set, the executor
+    # skips probe + optimize and runs EXACTLY this plan — how cluster
+    # failover replays a plan persisted at first claim (api.cluster)
+    fixed_plan: Optional[List[Dict[str, Any]]] = None
+    # resident in-flight block bytes budget for the engine dispatcher
+    # (memory-pressure window shrink); None -> DJ_BLOCK_MEM_BUDGET env or off
+    mem_budget: Optional[int] = None
 
     @classmethod
     def from_dict(cls, d: Dict[str, Any]) -> "Recipe":
@@ -102,7 +114,9 @@ def dump_simple_yaml(d: Dict[str, Any]) -> str:
     plus a ``process:`` list of ``- op_name:`` blocks with scalar args."""
     lines: List[str] = []
     for k, v in d.items():
-        if k == "process" or v is None:
+        # fixed_plan is a nested op-config list like process — not
+        # expressible in the scalar subset; JSON recipes round-trip it
+        if k in ("process", "fixed_plan") or v is None:
             continue
         lines.append(f"{k}: {_yaml_scalar(v)}")
     lines.append("process:")

@@ -37,13 +37,16 @@ if _orjson is not None:
 
     json_loads = _orjson.loads
 else:
+    # one encoder per flavor, reused across calls — json.dumps() builds a
+    # fresh JSONEncoder every call, measurable at columnar-ingest call rates
+    _enc = _stdlib_json.JSONEncoder(separators=(",", ":"), ensure_ascii=False).encode
+    _enc_sorted = _stdlib_json.JSONEncoder(
+        separators=(",", ":"), ensure_ascii=False, sort_keys=True).encode
 
     def json_dumps(obj: Any, sort_keys: bool = False) -> bytes:
         """Compact JSON bytes via orjson when available, stdlib otherwise —
         the shared serializer for storage, checkpointing, recipes, server."""
-        return _stdlib_json.dumps(
-            obj, sort_keys=sort_keys, separators=(",", ":"), ensure_ascii=False
-        ).encode("utf-8")
+        return (_enc_sorted(obj) if sort_keys else _enc(obj)).encode("utf-8")
 
     json_loads = _stdlib_json.loads
 
@@ -165,10 +168,16 @@ def iter_sample_blocks(
     n_workers: int = 1,
     total_hint_bytes: Optional[int] = None,
     limit: Optional[int] = None,
+    columnar: bool = False,
 ) -> Iterator[SampleBlock]:
     """Lazy block source: stream samples (from a JSONL path or any sample
-    iterable) into ~``block_bytes`` SampleBlocks, yielding each block as soon
-    as it fills — O(one block) memory, never the whole dataset."""
+    iterable) into ~``block_bytes`` blocks, yielding each block as soon
+    as it fills — O(one block) memory, never the whole dataset.
+
+    With ``columnar`` each block is encoded into a struct-of-arrays
+    ``ColumnBlock`` (``repro.core.columnar``) at ingest — JSONL becomes a
+    pure import codec; rows that the encoder rejects fall back to a plain
+    SampleBlock for that block only."""
     if isinstance(source, str):
         # .zst: getsize is the COMPRESSED size while per-line sizes are
         # uncompressed. Still use it as a conservative hint — it UNDERSTATES
@@ -185,6 +194,26 @@ def iter_sample_blocks(
         sized = ((s, sample_nbytes(s)) for s in source)
     if total_hint_bytes and n_workers > 1:
         block_bytes = max(1, min(block_bytes, total_hint_bytes // n_workers))
+    if columnar:
+        from repro.core.columnar import ColumnBlock
+
+        def encode(rows: List[Dict[str, Any]], nb: int):
+            try:
+                return ColumnBlock.from_samples(rows, nbytes=nb)
+            except Exception:  # exotic rows: keep them, just not columnar
+                return SampleBlock(rows, nbytes=nb)
+
+        rows: List[Dict[str, Any]] = []
+        acc = 0
+        for s, nb in sized:
+            if acc + nb > block_bytes and rows:
+                yield encode(rows, acc)
+                rows, acc = [], 0
+            rows.append(s)
+            acc += nb
+        if rows:
+            yield encode(rows, acc)
+        return
     blk = SampleBlock()
     for s, nb in sized:
         if blk.nbytes + nb > block_bytes and len(blk):
@@ -246,6 +275,15 @@ class BlockWriter:
             self._w = self._fh
 
     def write_block(self, block: SampleBlock) -> int:
+        lines = getattr(block, "iter_json_lines", None)
+        if lines is not None:
+            # ColumnBlock export codec: canonical lines assembled straight
+            # from the column buffers — no row dicts, byte-identical to the
+            # json_dumps path below by the format's round-trip invariant
+            for raw in lines():
+                self._w.write(raw + b"\n")
+                self.n += 1
+            return len(block)
         for s in block.samples:
             self._w.write(json_dumps(s) + b"\n")
             self.n += 1

@@ -57,3 +57,32 @@ def minhash_signatures(
         interpret=interpret,
     )
     return out[:d, :p]
+
+
+def minhash_signatures_packed(
+    values: np.ndarray, offsets: np.ndarray, a: np.ndarray, b: np.ndarray,
+    interpret: bool = True, bucket: bool = True,
+) -> jnp.ndarray:
+    """Packed-ragged entry point: ``values`` is the concatenation of every
+    doc's shingle hashes in doc order, ``offsets`` (n_docs + 1,) delimits
+    docs — the same offsets-plus-buffer layout ``repro.core.columnar`` uses
+    for string columns. The dense (D, S_max) matrix + mask are built with a
+    single vectorized scatter instead of a per-doc Python loop, then
+    dispatched through :func:`minhash_signatures` — identical values."""
+    offsets = np.asarray(offsets, np.int64)
+    values = np.asarray(values, np.uint64)
+    n = offsets.size - 1
+    if n <= 0:
+        return minhash_signatures(np.zeros((0, 1), np.uint64),
+                                  np.zeros((0, 1), bool), a, b,
+                                  interpret=interpret, bucket=bucket)
+    if offsets[0] != 0 or offsets[-1] != values.size or np.any(np.diff(offsets) < 0):
+        raise ValueError("offsets must be monotonic, start at 0 and span values")
+    lens = np.diff(offsets)
+    s_max = max(int(lens.max()), 1)
+    mask = np.arange(s_max, dtype=np.int64)[None, :] < lens[:, None]
+    padded = np.zeros((n, s_max), dtype=np.uint64)
+    # row-major True positions of mask enumerate docs in order == values order
+    padded[mask] = values
+    return minhash_signatures(padded, mask, a, b,
+                              interpret=interpret, bucket=bucket)

@@ -55,6 +55,24 @@ class MinHashSignatureMapper(Mapper):
             s[MH_DOC_KEY] = np.unique(d)
         return batch
 
+    # -- columnar path -----------------------------------------------------
+    def supports_columns(self):
+        return True
+
+    def process_columns(self, block):
+        from repro.core.dedup.minhash import shingle_hashes, signature_ref
+
+        a, b = self._perm
+        n = self.params["ngram"]
+        sigs, docs = [], []
+        for t in block.string_values("text"):
+            d = shingle_hashes(t, n=n)
+            sigs.append(signature_ref(d, a, b))
+            docs.append(np.unique(d))
+        # same key order the row path produces: sig first, doc second
+        return (block.with_py_column(MH_SIG_KEY, sigs)
+                     .with_py_column(MH_DOC_KEY, docs))
+
 
 @register("exact_text_deduplicator")
 class ExactTextDeduplicator(Deduplicator):

@@ -190,6 +190,7 @@ class QualityScoreFilter(_RangeFilter):
     rule-based counterpart of llm_quality_score_filter."""
 
     stat_key = "quality_score"
+    text_only_stat = True  # _stat reads only sample["text"] -> columnar-safe
 
     def _stat(self, s):
         t = s.get("text", "")
@@ -208,6 +209,47 @@ class QualityScoreFilter(_RangeFilter):
             - 2.0 * rep + 0.3 * math.tanh((avg_wl - 2.0) / 4.0)
         )
         return float(1.0 / (1.0 + math.exp(-3.0 * z)))
+
+    def _stat_values(self, block) -> np.ndarray:
+        """Columnar path: the alnum term — the bulk of ``_stat``'s per-char
+        work — comes off the buffer via the byte-class tables (exact on
+        ASCII rows, per-char recompute otherwise); word splitting and the
+        trigram-repetition term stay per row. Every term reproduces the row
+        path bit-for-bit: integer counts divide identically, and the mean
+        word length is an exact small-integer sum either way."""
+        from repro.core.columnar import ascii_alnum_space_counts, ascii_rows_mask
+
+        col = block.str_column("text")  # TypeError on non-str -> row fallback
+        if col is None:
+            return np.zeros(len(block), np.float64)
+        offs, buf = col
+        texts = block.string_values("text")
+        ok = ascii_rows_mask(offs, buf).tolist()
+        lens_b = (offs[1:] - offs[:-1]).tolist()
+        acnt = ascii_alnum_space_counts(offs, buf).tolist()
+        out = np.empty(len(texts), np.float64)
+        for i, t in enumerate(texts):
+            if not t:
+                out[i] = 0.0
+                continue
+            words = t.split()
+            n_words = len(words)
+            alnum = (acnt[i] / lens_b[i] if ok[i]
+                     else sum(c.isalnum() or c.isspace() for c in t) / len(t))
+            # exact np.mean([len(w)...]) equivalent: an integer sum below
+            # 2**53 divides identically
+            avg_wl = float(sum(map(len, words))) / n_words if words else 0.0
+            rep = 0.0
+            if n_words >= 3:
+                # same trigram tuples as the row path's slice loop
+                rep = 1.0 - len(set(zip(words, words[1:], words[2:]))) \
+                    / (n_words - 2)
+            z = (
+                1.5 * (alnum - 0.7) + 0.8 * math.tanh(n_words / 100.0)
+                - 2.0 * rep + 0.3 * math.tanh((avg_wl - 2.0) / 4.0)
+            )
+            out[i] = 1.0 / (1.0 + math.exp(-3.0 * z))
+        return out
 
 
 @register("image_captioning_mapper")

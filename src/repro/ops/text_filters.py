@@ -22,6 +22,10 @@ class _RangeFilter(Filter):
     """Common stat-in-[min,max] retention."""
 
     stat_key = "stat"
+    # columnar opt-in: True iff _stat reads ONLY sample["text"], so the
+    # stat can be computed off the text column without row dicts. Subclasses
+    # whose _stat touches other fields must leave this False.
+    text_only_stat = False
 
     def __init__(self, min_val: float = -math.inf, max_val: float = math.inf, **kw):
         super().__init__(min_val=min_val, max_val=max_val, **kw)
@@ -38,12 +42,38 @@ class _RangeFilter(Filter):
         v = sample["stats"][self.stat_key]
         return self.min_val <= v <= self.max_val
 
+    # -- columnar path -----------------------------------------------------
+    def supports_columns(self):
+        # only with the generic range keep(): a subclass overriding keep()
+        # can't be reproduced by the min/max mask below
+        return self.text_only_stat and type(self).keep is _RangeFilter.keep
+
+    def _stat_values(self, block) -> np.ndarray:
+        """Per-row stat values off the text column. Default: extract the
+        strings (no row dicts) and reuse _stat; fully vectorized filters
+        override this to stay on the buffers."""
+        texts = block.string_values("text")
+        out = np.empty(len(texts), np.float64)
+        st = self._stat
+        for i, t in enumerate(texts):
+            out[i] = st({"text": t})
+        return out
+
+    def process_columns(self, block):
+        vals = self._stat_values(block)
+        mask = (vals >= self.min_val) & (vals <= self.max_val)
+        # drop first, splice stats only into survivors — same bytes (the
+        # row path's stat writes on dropped rows never reach an export)
+        return block.take(mask).with_stat(self.stat_key, vals[mask])
+
 
 @register("text_length_filter")
 class TextLengthFilter(_RangeFilter):
     """Keeps samples whose text length (chars) is within range."""
 
     stat_key = "text_len"
+    text_only_stat = True
+    pushdown_safe = True  # fully vectorized: cheap enough for driver-side decode
 
     def _stat(self, s):
         return float(len(s.get("text", "")))
@@ -52,15 +82,44 @@ class TextLengthFilter(_RangeFilter):
         # vectorized path for the ShardedEngine
         return self.stat_key, np.asarray([len(s.get("text", "")) for s in samples], np.float32)
 
+    def _stat_values(self, block) -> np.ndarray:
+        # char counts straight off the UTF-8 buffer: a code point per
+        # non-continuation byte — exact len(str), zero per-row work
+        from repro.core.columnar import utf8_char_counts
+
+        col = block.str_column("text")  # TypeError on non-str -> row fallback
+        if col is None:
+            return np.zeros(len(block), np.float64)
+        return utf8_char_counts(*col).astype(np.float64)
+
 
 @register("words_num_filter")
 class WordsNumFilter(_RangeFilter):
     """Keeps samples with a word count within range."""
 
     stat_key = "num_words"
+    text_only_stat = True
 
     def _stat(self, s):
         return float(len(shared_words(s)))
+
+    def _stat_values(self, block) -> np.ndarray:
+        # vectorized token count off the buffer; rows with non-ASCII bytes
+        # (where byte != char classes) are recomputed exactly per row
+        from repro.core.columnar import ascii_rows_mask, ascii_word_counts
+
+        col = block.str_column("text")  # TypeError on non-str -> row fallback
+        if col is None:
+            return np.zeros(len(block), np.float64)
+        offs, buf = col
+        out = ascii_word_counts(offs, buf).astype(np.float64)
+        bad = np.flatnonzero(~ascii_rows_mask(offs, buf))
+        if bad.size:
+            bounds = offs.tolist()
+            for i in bad.tolist():
+                out[i] = float(len(
+                    buf[bounds[i]:bounds[i + 1]].decode("utf-8").split()))
+        return out
 
 
 @register("avg_word_length_filter")
@@ -68,6 +127,7 @@ class AvgWordLengthFilter(_RangeFilter):
     """Keeps samples whose mean word length is within range."""
 
     stat_key = "avg_word_len"
+    text_only_stat = True
 
     def _stat(self, s):
         words = shared_words(s)
@@ -79,10 +139,32 @@ class AlnumRatioFilter(_RangeFilter):
     """Keeps samples with alphanumeric-character ratio within range."""
 
     stat_key = "alnum_ratio"
+    text_only_stat = True
 
     def _stat(self, s):
         t = s.get("text", "")
         return sum(c.isalnum() or c.isspace() for c in t) / len(t) if t else 0.0
+
+    def _stat_values(self, block) -> np.ndarray:
+        # char-class counts off the buffer (chars == bytes on ASCII rows);
+        # non-ASCII rows are recomputed exactly per row
+        from repro.core.columnar import ascii_alnum_space_counts, ascii_rows_mask
+
+        col = block.str_column("text")  # TypeError on non-str -> row fallback
+        if col is None:
+            return np.zeros(len(block), np.float64)
+        offs, buf = col
+        lens = (offs[1:] - offs[:-1]).astype(np.float64)
+        cnt = ascii_alnum_space_counts(offs, buf).astype(np.float64)
+        out = np.divide(cnt, lens, out=np.zeros_like(cnt), where=lens > 0)
+        bad = np.flatnonzero(~ascii_rows_mask(offs, buf))
+        if bad.size:
+            bounds = offs.tolist()
+            for i in bad.tolist():
+                t = buf[bounds[i]:bounds[i + 1]].decode("utf-8")
+                out[i] = (sum(c.isalnum() or c.isspace() for c in t) / len(t)
+                          if t else 0.0)
+        return out
 
 
 @register("special_char_ratio_filter")
@@ -90,6 +172,7 @@ class SpecialCharRatioFilter(_RangeFilter):
     """Keeps samples whose special-character ratio is within range."""
 
     stat_key = "special_char_ratio"
+    text_only_stat = True
 
     def _stat(self, s):
         t = s.get("text", "")
@@ -106,6 +189,7 @@ class StopwordRatioFilter(_RangeFilter):
     indicates non-natural-language content)."""
 
     stat_key = "stopword_ratio"
+    text_only_stat = True
 
     def _stat(self, s):
         words = [w.strip(string.punctuation).lower() for w in shared_words(s)]
@@ -117,6 +201,7 @@ class WordRepetitionFilter(_RangeFilter):
     """Keeps samples whose top-ngram repetition fraction is within range."""
 
     stat_key = "word_rep_ratio"
+    text_only_stat = True
 
     def __init__(self, n: int = 5, **kw):
         super().__init__(**kw)
@@ -137,6 +222,7 @@ class CharRepetitionFilter(_RangeFilter):
     """Keeps samples whose repeated-character-run fraction is within range."""
 
     stat_key = "char_rep_ratio"
+    text_only_stat = True
 
     def _stat(self, s):
         t = s.get("text", "")
@@ -179,6 +265,7 @@ class TokenCountFilter(_RangeFilter):
     """Keeps samples whose tokenized length is within range."""
 
     stat_key = "num_tokens"
+    text_only_stat = True
 
     def __init__(self, min_val=0, max_val=math.inf, vocab_size: int = 32000, **kw):
         super().__init__(min_val=min_val, max_val=max_val, **kw)
@@ -202,6 +289,7 @@ class MaximumLineLengthFilter(_RangeFilter):
     """Keeps samples whose longest line is within range (code-ish heuristic)."""
 
     stat_key = "max_line_len"
+    text_only_stat = True
 
     def _stat(self, s):
         lines = s.get("text", "").splitlines() or [""]

@@ -1,0 +1,26 @@
+"""Shared pytest config: the ``slow`` marker + per-test timeouts.
+
+Timeouts are applied only when the ``pytest-timeout`` plugin is installed
+(it is in requirements-dev.txt / CI; the marker degrades to a no-op in a
+bare checkout) — hung cluster/subprocess tests fail in minutes instead of
+wedging the whole tier-1 run.
+"""
+import pytest
+
+FAST_TIMEOUT = 120   # seconds, per ordinary test
+SLOW_TIMEOUT = 300   # seconds, per @pytest.mark.slow test
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: long multi-process/cluster tests (bigger timeout)")
+
+
+def pytest_collection_modifyitems(config, items):
+    if not config.pluginmanager.hasplugin("timeout"):
+        return
+    for item in items:
+        if item.get_closest_marker("timeout") is not None:
+            continue  # explicit per-test timeout wins
+        limit = SLOW_TIMEOUT if item.get_closest_marker("slow") else FAST_TIMEOUT
+        item.add_marker(pytest.mark.timeout(limit))

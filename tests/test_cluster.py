@@ -17,6 +17,10 @@ from cluster_harness import (
     sigkill_runner, start_runner, stop_runner, wait_for, write_corpus,
 )
 
+# multi-process lease/failover suites run real subprocess runners with
+# real TTL waits — marked slow so conftest grants them the bigger timeout
+pytestmark = pytest.mark.slow
+
 
 # ---------------------------------------------------------------------------
 # queue + lease protocol units (no subprocesses — fast)

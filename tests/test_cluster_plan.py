@@ -1,0 +1,116 @@
+"""Cluster plan persistence: the first claimer pins the optimized plan
+under the job's checkpoint dir, and a failover attempt replays EXACTLY the
+persisted plan — closing the resume hazard that forced the fault-injection
+harness to pin ``use_fusion/use_reordering`` off (the reordering probe
+samples the stream, so a re-derived plan could disagree with the dead
+attempt's checkpoints)."""
+import json
+import os
+import time
+
+import pytest
+
+from repro.api.cluster import ClusterQueue, ClusterRunner
+from repro.core.dataset import ExecutionCancelled
+from repro.core.executor import Executor
+from repro.core.recipes import Recipe
+from repro.core.storage import write_jsonl
+from repro.data.synthetic import make_corpus
+
+pytestmark = pytest.mark.slow
+
+PROCESS = [
+    {"name": "whitespace_normalization_mapper"},
+    {"name": "text_length_filter", "min_len": 5, "max_len": 10000},
+    {"name": "document_minhash_deduplicator", "jaccard_threshold": 0.7},
+    {"name": "alnum_ratio_filter", "min_ratio": 0.1},
+]
+
+
+def _submit(tmp_path, queue):
+    src = str(tmp_path / "in.jsonl")
+    write_jsonl(src, make_corpus(300, seed=9))
+    return queue.submit({
+        "name": "plan-pin-job",
+        "dataset_path": src,
+        "export_path": str(tmp_path / "out.jsonl"),
+        "process": PROCESS,
+        "use_fusion": True,
+        "use_reordering": True,
+    })
+
+
+def _plan_path(queue, job_id):
+    return os.path.join(queue.checkpoint_dir(job_id), "plan.json")
+
+
+def test_plan_pinned_at_first_claim_and_reused(tmp_path):
+    queue = ClusterQueue(str(tmp_path / "cluster"), lease_ttl=0.5)
+    jid = _submit(tmp_path, queue)
+    r1 = ClusterRunner(queue, runner_id="r1", lease_ttl=0.5)
+    spec = queue.read_spec(jid)
+
+    ex1 = r1._build_executor(jid, spec)
+    assert os.path.exists(_plan_path(queue, jid)), "plan not pinned at claim"
+    with open(_plan_path(queue, jid), "rb") as f:
+        pinned_raw = f.read()
+    pinned = json.loads(pinned_raw)["plan"]
+    assert ex1.recipe.fixed_plan == pinned
+    assert [c["name"] for c in pinned]  # non-empty op-config list
+
+    # a later attempt re-reads the SAME plan instead of re-deriving one
+    r2 = ClusterRunner(queue, runner_id="r2", lease_ttl=0.5)
+    ex2 = r2._build_executor(jid, spec)
+    assert ex2.recipe.fixed_plan == pinned
+    with open(_plan_path(queue, jid), "rb") as f:
+        assert f.read() == pinned_raw, "second claim rewrote the pinned plan"
+
+
+def test_failover_replays_pinned_plan_byte_identical(tmp_path):
+    queue = ClusterQueue(str(tmp_path / "cluster"), lease_ttl=0.4)
+    jid = _submit(tmp_path, queue)
+    spec = queue.read_spec(jid)
+
+    # attempt 1: claim, pin the plan, die mid-run (cancel after a few
+    # cooperative polls — the lease is left to expire, result unpublished)
+    lease1 = queue.try_claim(jid, "r1", ttl=0.4)
+    assert lease1 is not None and lease1.attempt == 1
+    r1 = ClusterRunner(queue, runner_id="r1", lease_ttl=0.4)
+    ex1 = r1._build_executor(jid, spec)
+    pinned = ex1.recipe.fixed_plan
+    assert pinned is not None and os.path.exists(_plan_path(queue, jid))
+    polls = [0]
+
+    def die_midway():
+        polls[0] += 1
+        return polls[0] > 3
+
+    with pytest.raises(ExecutionCancelled):
+        ex1.run_streaming(materialize=False, cancel=die_midway)
+    assert queue.state_of(jid) != "succeeded"
+
+    # lease expires -> attempt 2 claims and completes on another runner
+    deadline = time.time() + 5.0
+    while time.time() < deadline and not queue.current_lease(jid).expired():
+        time.sleep(0.05)
+    assert queue.current_lease(jid).expired(), "attempt-1 lease never expired"
+    r2 = ClusterRunner(queue, runner_id="r2", lease_ttl=5.0)
+    assert r2.run_once(), "failover runner claimed nothing"
+    status = queue.status(jid)
+    assert status["state"] == "succeeded", status
+    assert status["attempt"] == 2
+
+    # the completed attempt ran the pinned plan, not a re-derived one
+    assert status["report"]["plan"] == [c["name"] for c in pinned]
+
+    # and its export is byte-identical to an uninterrupted run of the
+    # pinned plan (fresh single-process executor, no checkpoints)
+    ref_out = str(tmp_path / "ref.jsonl")
+    ref_recipe = Recipe.from_dict({**spec["recipe"], "export_path": ref_out,
+                                   "fixed_plan": pinned})
+    Executor(ref_recipe).run_streaming(materialize=False)
+    with open(ref_out, "rb") as f:
+        ref = f.read()
+    with open(spec["recipe"]["export_path"], "rb") as f:
+        got = f.read()
+    assert ref and got == ref

@@ -1,0 +1,288 @@
+"""ColumnBlock struct-of-arrays format: round-trip byte identity (the
+invariant every export/spill/checkpoint path rests on), columnar transform
+semantics, filter equivalence with the row path, predicate pushdown, the
+memory-pressure dispatch window, and end-to-end row-vs-columnar exports."""
+import os
+import pickle
+
+import numpy as np
+import pytest
+
+from repro.core.columnar import (
+    ColumnBlock, maybe_compress, maybe_decompress, utf8_char_counts,
+)
+from repro.core.executor import Executor
+from repro.core.recipes import Recipe
+from repro.core.registry import create_op
+from repro.core.storage import json_dumps, write_jsonl
+from repro.data.synthetic import make_corpus
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+def lines_of(rows):
+    return [json_dumps(r) for r in rows]
+
+
+# ---------------------------------------------------------------------------
+# round-trip byte identity
+# ---------------------------------------------------------------------------
+
+# one list per schema "field group" the paper pipelines actually ship:
+# text-only, text+stats, multimodal path lists, nested meta, plus the nasty
+# encodings (astral plane, CJK, escapes) and numeric edge cases
+ROUND_TRIP_CASES = [
+    [{"text": "plain ascii"}, {"text": ""}],
+    [{"text": "quote \" backslash \\ newline \n tab \t"},
+     {"text": "café — \U0001f600 中文"}],
+    [{"text": "t", "stats": {"len": 1.5, "alnum": 0.25}},
+     {"text": "u", "stats": {}}],
+    [{"text": "a", "images": ["i/1.png", "i/2.png"], "audios": []},
+     {"text": "b", "images": []}],
+    [{"text": "a", "meta": {"source": "web", "nested": {"deep": [1, 2]}}},
+     {"text": "b", "meta": None}],
+    # mixed / ragged schema across rows of ONE block
+    [{"text": "a", "score": 1}, {"score": 2.5, "text": "b"},
+     {"text": "c"}, {"extra": True, "text": "d"}],
+    # bool must not collapse into i64, None and huge ints stay exact
+    [{"flag": True, "n": 3}, {"flag": False, "n": -(1 << 70)},
+     {"flag": None, "n": (1 << 63) - 1}, {"flag": True, "n": -(1 << 63)}],
+    [{"f": 0.1}, {"f": -0.0}, {"f": 1e300}, {"f": 3}],  # f64 -> obj promotion
+    [],
+    [{}, {"text": "after empty dict row"}],
+]
+
+
+@pytest.mark.parametrize("rows", ROUND_TRIP_CASES,
+                         ids=[f"case{i}" for i in range(len(ROUND_TRIP_CASES))])
+def test_round_trip_byte_identity(rows):
+    blk = ColumnBlock.from_samples(rows)
+    assert list(blk.iter_json_lines()) == lines_of(rows)
+    assert blk.decode_rows() == rows
+    # decoded rows re-encode to the same bytes as the originals
+    assert [json_dumps(r) for r in blk.decode_rows()] == lines_of(rows)
+
+
+def test_samples_cache_and_private_decode_are_independent():
+    rows = [{"text": "x", "stats": {"a": 1.0}}]
+    blk = ColumnBlock.from_samples(rows)
+    private = blk.decode_rows()
+    private[0]["text"] = "mutated"
+    assert not blk.materialized
+    assert blk.samples[0]["text"] == "x"  # cache decodes fresh
+    blk.samples[0]["text"] = "owned"
+    assert blk.samples[0]["text"] == "owned"  # cached dicts authoritative
+    assert blk.materialized
+
+
+def test_transforms_reject_materialized_blocks():
+    blk = ColumnBlock.from_samples([{"text": "a"}])
+    _ = blk.samples
+    with pytest.raises(RuntimeError):
+        blk.take(np.array([True]))
+    with pytest.raises(RuntimeError):
+        blk.with_stat("s", np.array([1.0]))
+
+
+def test_take_with_stat_with_py_column_match_row_path():
+    rows = [{"text": "aa", "stats": {"old": 2.0}}, {"text": "bbb"},
+            {"text": "c", "stats": {}}]
+    blk = ColumnBlock.from_samples(rows)
+    vals = np.array([1.0, 2.0, 3.0])
+    ref = [dict(r, stats=dict(r.get("stats") or {})) for r in rows]
+    for r, v in zip(ref, vals):
+        r.setdefault("stats", {})["len"] = float(v)
+    got = blk.with_stat("len", vals)
+    assert list(got.iter_json_lines()) == lines_of(ref)
+
+    mask = np.array([True, False, True])
+    assert list(blk.take(mask).iter_json_lines()) == [
+        lines_of(rows)[0], lines_of(rows)[2]]
+
+    carriers = [np.arange(3), np.arange(1), np.arange(2)]
+    pyb = blk.with_py_column("__sig__", carriers)
+    assert pyb.column_values("__sig__")[1] is carriers[1]
+    # py columns are excluded from exports, never silently dumped
+    with pytest.raises(TypeError):
+        list(pyb.iter_json_lines())
+    assert list(pyb.iter_json_lines(exclude=("__sig__",))) == lines_of(rows)
+
+
+def test_pickle_round_trip_drops_cache():
+    rows = [{"text": "abc", "stats": {"x": 1.0}}, {"text": "d"}]
+    blk = ColumnBlock.from_samples(rows)
+    _ = blk.samples
+    clone = pickle.loads(pickle.dumps(blk))
+    assert not clone.materialized
+    assert list(clone.iter_json_lines()) == lines_of(rows)
+
+
+def test_utf8_char_counts_exact():
+    texts = ["", "ascii", "café", "中文 mixed",
+             "\U0001f600\U0001f601", "aé中\U0001f600"]
+    blk = ColumnBlock.from_samples([{"text": t} for t in texts])
+    offs, buf = blk.str_column("text")
+    assert utf8_char_counts(offs, buf).tolist() == [len(t) for t in texts]
+
+
+def test_maybe_compress_round_trip():
+    raw = b"x" * 4096 + json_dumps({"text": "payload"})
+    codec, payload = maybe_compress(raw)
+    assert codec in ("raw", "zstd")
+    assert maybe_decompress(codec, payload) == raw
+    if codec == "zstd":
+        assert len(payload) < len(raw)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis: arbitrary rows survive JSONL -> ColumnBlock -> JSONL
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    _text = st.text(
+        alphabet=st.characters(codec="utf-8",
+                               categories=("L", "N", "P", "Zs", "S")),
+        max_size=60)
+    _scalar = st.one_of(
+        _text, st.booleans(), st.none(),
+        st.integers(min_value=-(1 << 66), max_value=1 << 66),
+        st.floats(allow_nan=False, allow_infinity=False))
+    _value = st.recursive(
+        _scalar,
+        lambda leaf: st.one_of(
+            st.lists(leaf, max_size=4),
+            st.dictionaries(_text, leaf, max_size=4)),
+        max_leaves=8)
+    _row = st.dictionaries(_text, _value, max_size=6)
+
+    @given(st.lists(_row, max_size=12))
+    @settings(max_examples=120, deadline=None)
+    def test_round_trip_property(rows):
+        blk = ColumnBlock.from_samples(rows)
+        assert list(blk.iter_json_lines()) == lines_of(rows)
+        assert blk.decode_rows() == rows
+
+
+# ---------------------------------------------------------------------------
+# columnar filters == row filters
+# ---------------------------------------------------------------------------
+
+
+def _apply_rows(op, rows):
+    import copy
+
+    op.setup()
+    return op.process_batch([copy.deepcopy(r) for r in rows])
+
+
+@pytest.mark.parametrize("cfg", [
+    {"name": "text_length_filter", "min_len": 8, "max_len": 60},
+    {"name": "alnum_ratio_filter", "min_ratio": 0.5},
+    {"name": "minhash_signature_mapper", "num_permutations": 16},
+])
+def test_columnar_op_matches_row_path(cfg):
+    rows = [{"text": s["text"]} for s in make_corpus(80, seed=11)]
+    op = create_op(dict(cfg))
+    assert op.supports_columns()
+    blk = ColumnBlock.from_samples(rows)
+    op.setup()
+    got = op.process_columns(blk)
+    ref = _apply_rows(create_op(dict(cfg)), rows)
+    if cfg["name"] == "minhash_signature_mapper":
+        dec = got.decode_rows()
+        assert [list(r.keys()) for r in dec] == [list(r.keys()) for r in ref]
+        for g, r in zip(dec, ref):
+            assert (g["__mh_sig__"] == r["__mh_sig__"]).all()
+            assert (g["__mh_doc__"] == r["__mh_doc__"]).all()
+    else:
+        assert list(got.iter_json_lines()) == lines_of(ref)
+
+
+# ---------------------------------------------------------------------------
+# memory-pressure dispatch window
+# ---------------------------------------------------------------------------
+
+
+def test_dispatcher_mem_budget_shrinks_window():
+    import concurrent.futures as cf
+
+    from repro.core.dispatch import WindowedDispatcher
+    from repro.core.storage import SampleBlock
+
+    items = [SampleBlock([{"text": "x"}], nbytes=1000) for _ in range(40)]
+    log = []
+    with cf.ThreadPoolExecutor(4) as pool:
+        d = WindowedDispatcher(pool, 4, mem_budget=2500, speculate=False,
+                               log=log, label="membudget")
+        results = list(d.run(items, lambda b: len(b.samples), lambda b: (b,)))
+    assert len(results) == 40
+    assert all(err is None and payload == 1 for _, payload, err in results)
+    summary = log[-1]
+    assert summary["mem_shrinks"] >= 1, summary
+    assert summary["resident_peak"] >= 1000
+    # budget bounds admission: never more than budget + one block in flight
+    assert summary["resident_peak"] <= 2500 + 1000, summary
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: pushdown + row-vs-columnar export byte identity
+# ---------------------------------------------------------------------------
+
+E2E_PROCESS = [
+    {"name": "whitespace_normalization_mapper"},
+    {"name": "text_length_filter", "min_len": 5, "max_len": 10000},
+    {"name": "alnum_ratio_filter", "min_ratio": 0.1},
+]
+
+
+def _export(tmp_path, tag, fmt, engine, np_, process, fuse=True):
+    out = str(tmp_path / f"out-{tag}.jsonl")
+    r = Recipe(name=tag, dataset_path=str(tmp_path / "in.jsonl"),
+               export_path=out, process=process, engine=engine, np=np_,
+               use_fusion=fuse, use_reordering=fuse, block_format=fmt,
+               block_bytes=16 * 1024)
+    Executor(r).run_streaming(materialize=False)
+    with open(out, "rb") as f:
+        return f.read()
+
+
+@pytest.fixture()
+def corpus(tmp_path):
+    write_jsonl(str(tmp_path / "in.jsonl"), make_corpus(400, seed=5))
+    return tmp_path
+
+
+def test_explain_reports_pushdown(corpus):
+    r = Recipe(name="push", dataset_path=str(corpus / "in.jsonl"),
+               process=[{"name": "text_length_filter", "min_len": 5},
+                        {"name": "lowercase_mapper"}],
+               use_fusion=False, use_reordering=False)
+    segs = Executor(r).explain()["segments"]
+    assert segs[0]["pushdown"] >= 1  # leading text_length_filter pushes down
+
+
+def test_streaming_export_columnar_matches_row(corpus):
+    ref = _export(corpus, "row-ref", "row", "local", 1, E2E_PROCESS)
+    assert ref
+    for engine, np_ in (("local", 1), ("parallel", 2)):
+        got = _export(corpus, f"col-{engine}{np_}", "columnar", engine, np_,
+                      E2E_PROCESS)
+        assert got == ref, (engine, np_)
+
+
+@pytest.mark.slow
+def test_streaming_dedup_export_columnar_matches_row(corpus):
+    proc = E2E_PROCESS[:2] + [
+        {"name": "document_minhash_deduplicator", "streaming": "exact",
+         "super_batch": 128},
+    ] + E2E_PROCESS[2:]
+    ref = _export(corpus, "dd-row", "row", "local", 1, proc)
+    assert ref
+    for fmt, engine, np_ in (("columnar", "local", 1),
+                             ("columnar", "parallel", 2)):
+        got = _export(corpus, f"dd-{fmt}-{engine}{np_}", fmt, engine, np_, proc)
+        assert got == ref, (fmt, engine, np_)

@@ -100,7 +100,7 @@ def test_explain_reports_segments_without_running(tmp_path):
     assert any(op.startswith("fused<") for op in info["plan"])
     assert info["segments"][-1] == {
         "ops": ["document_minhash_deduplicator"], "barrier": True,
-        "stateful": False}
+        "stateful": False, "pushdown": 0}
     assert not (tmp_path / "never_written.jsonl").exists()
 
 
