@@ -14,7 +14,14 @@ Hard asserts (correctness, never flake-prone wall-clock alone):
     workload (jobs are sleep-paced, so the ratio measures scheduling, not
     the host's core count).
 
-Usage: python benchmarks/bench_cluster.py [--quick] [--json PATH]
+With ``--sharded``, adds the intra-job scale-out phase: ONE sharded
+streaming-dedup job (repro.api.shards) at 1 / 2 / 4 runners, asserting
+  * the merged export is byte-identical to the unsharded single-runner
+    run at every runner count;
+  * 2 runners finish the single job >= 1.6x faster than 1 (the shard
+    maps are sleep-paced, so the ratio measures shard placement).
+
+Usage: python benchmarks/bench_cluster.py [--quick] [--sharded] [--json PATH]
 """
 from __future__ import annotations
 
@@ -31,8 +38,9 @@ sys.path.insert(0, os.path.join(_ROOT, "src"))
 
 from common import dump_json, emit, parse_bench_args  # noqa: E402
 from cluster_harness import (  # noqa: E402
-    checkpoint_stages, lease_owner, make_recipe, reference_output,
-    sigkill_runner, start_runner, stop_runner, wait_for, write_corpus,
+    checkpoint_stages, lease_owner, make_recipe, make_sharded_recipe,
+    reference_output, sigkill_runner, start_runner, stop_runner, wait_for,
+    write_corpus,
 )
 from repro.api.cluster import ClusterQueue  # noqa: E402
 
@@ -139,8 +147,45 @@ def run_kill_recovery(delay: float, n_samples: int) -> dict:
         shutil.rmtree(base, ignore_errors=True)
 
 
+def run_sharded_scaling(n_runners: int, shards: int, delay: float,
+                        n_samples: int, ref: bytes) -> float:
+    """Wall seconds for ONE sharded streaming-dedup job at ``n_runners``
+    subprocesses. The sleep-paced prefix dominates each shard map, so the
+    runtime ratio across runner counts measures intra-job scale-out, not
+    the host's core count. Asserts the merged export matches ``ref``."""
+    base = tempfile.mkdtemp(prefix=f"djs{n_runners}_")
+    try:
+        src = write_corpus(os.path.join(base, "corpus.jsonl"), n=n_samples)
+        out = os.path.join(base, "out.jsonl")
+        recipe = make_sharded_recipe(src, out, shards=shards)
+        recipe["process"].insert(1, {"name": "sleep_mapper", "delay": delay})
+        cdir = os.path.join(base, "cluster")
+        q = ClusterQueue(cdir, lease_ttl=10.0)
+        runners = _start_runners(cdir, n_runners)
+        try:
+            t0 = time.time()
+            jid = q.submit(recipe)
+            wait_for(lambda: q.state_of(jid) == "succeeded", 600,
+                     interval=0.05, message="sharded job")
+            dt = time.time() - t0
+        finally:
+            for p in runners:
+                stop_runner(p)
+        st = q.status(jid, verbose=True)
+        srows = st.get("shards") or []
+        assert sum(1 for r in srows if r["kind"] == "map") == shards, \
+            f"expected {shards} shard maps, got {srows}"
+        with open(out, "rb") as f:
+            assert f.read() == ref, \
+                f"sharded export at {n_runners} runners must be byte-identical"
+        return dt
+    finally:
+        shutil.rmtree(base, ignore_errors=True)
+
+
 def main(argv) -> int:
     quick, json_path = parse_bench_args(argv)
+    sharded = "--sharded" in argv
     if quick:
         n_jobs, delay, n_samples, runner_counts = 6, 0.025, 40, (1, 2, 4)
     else:
@@ -167,6 +212,38 @@ def main(argv) -> int:
         f"2-runner throughput only {speedup2:.2f}x of 1-runner (need >=1.7x)"
     print(f"[bench_cluster] OK: 2-runner speedup {speedup2:.2f}x, "
           f"kill recovery {rec['recovery_seconds']:.1f}s")
+
+    if sharded:
+        s_shards = 4
+        s_delay, s_samples = (0.03, 320) if quick else (0.03, 480)
+        base = tempfile.mkdtemp(prefix="djsref_")
+        try:
+            s_src = write_corpus(os.path.join(base, "corpus.jsonl"),
+                                 n=s_samples)
+            s_recipe = make_sharded_recipe(s_src, os.path.join(base, "o.jsonl"),
+                                           shards=s_shards)
+            s_recipe["process"].insert(
+                1, {"name": "sleep_mapper", "delay": s_delay})
+            ref = reference_output(s_recipe, os.path.join(base, "ref.jsonl"))
+        finally:
+            shutil.rmtree(base, ignore_errors=True)
+
+        seconds = {}
+        for n in runner_counts:
+            dt = run_sharded_scaling(n, s_shards, s_delay, s_samples, ref)
+            seconds[n] = dt
+            emit(f"cluster_sharded_{n}runners", dt,
+                 derived=f"{s_shards} shards, 1 job, byte-identical")
+        speedup2s = seconds[1] / seconds[2]
+        emit("cluster_sharded_speedup_2runners", 0.0,
+             derived=f"{speedup2s:.2f}x vs 1")
+        if 4 in seconds:
+            emit("cluster_sharded_speedup_4runners", 0.0,
+                 derived=f"{seconds[1] / seconds[4]:.2f}x vs 1")
+        assert speedup2s >= 1.6, \
+            f"sharded 2-runner speedup only {speedup2s:.2f}x (need >=1.6x)"
+        print(f"[bench_cluster] sharded OK: 2-runner speedup {speedup2s:.2f}x "
+              f"on one {s_shards}-shard job")
 
     if json_path:
         dump_json(json_path)

@@ -273,10 +273,13 @@ class ClusterQueue:
     # submission / inspection
     # ------------------------------------------------------------------
     def submit(self, recipe: Dict[str, Any],
-               job_id: Optional[str] = None) -> str:
+               job_id: Optional[str] = None,
+               extra: Optional[Dict[str, Any]] = None) -> str:
         """Enqueue a job spec (a Recipe dict). Returns the job id. The spec
         is the unit of durability: any runner that can read the shared dir
-        can execute it."""
+        can execute it. ``extra`` merges additional spec fields — how
+        api.shards attaches shard descriptors and ``after`` dependency
+        lists to the shard tasks it publishes."""
         job_id = job_id or uuid.uuid4().hex[:12]
         if os.path.exists(self.spec_path(job_id)):
             raise ValueError(f"job id {job_id!r} already exists")
@@ -284,14 +287,17 @@ class ClusterQueue:
             "job_id": job_id,
             "recipe": dict(recipe),
             "submitted_at": time.time(),
+            **(extra or {}),
         })
         self.log_event("submitted", job_id=job_id)
         return job_id
 
-    def job_ids(self) -> List[str]:
+    def job_ids(self, include_shards: bool = False) -> List[str]:
         """All job ids, oldest-first. Sorted by spec-file mtime (one scandir,
         no JSON decodes — this runs on every runner poll) with the id as the
-        tie-break; the atomic-replace publish makes mtime ≈ submit time."""
+        tie-break; the atomic-replace publish makes mtime ≈ submit time.
+        Shard tasks (``<job>~s0`` etc., api.shards) are internal and hidden
+        unless ``include_shards`` — job listings/counts stay parent-level."""
         try:
             entries = list(os.scandir(self._p("queue")))
         except FileNotFoundError:
@@ -299,6 +305,8 @@ class ClusterQueue:
         keyed = []
         for e in entries:
             if not e.name.endswith(".json"):
+                continue
+            if not include_shards and "~" in e.name:
                 continue
             try:
                 mtime = e.stat().st_mtime
@@ -425,7 +433,60 @@ class ClusterQueue:
             }
             if result.get("report") is not None:
                 out["report"] = result["report"]
+            srows = self.shard_rows(job_id)
+            if srows:
+                out["shards"] = srows
         return out
+
+    # ------------------------------------------------------------------
+    # shard-task observability (api.shards)
+    # ------------------------------------------------------------------
+    def shard_tasks(self, parent_id: str) -> List[str]:
+        """Shard-task ids for one parent, maps -> reduces -> finalize."""
+        from repro.api.shards import task_sort_key
+
+        prefix = f"{parent_id}~"
+        ids = [jid for jid in self.job_ids(include_shards=True)
+               if jid.startswith(prefix)]
+        return sorted(ids, key=task_sort_key)
+
+    def shard_rows(self, parent_id: str,
+                   claims: Optional[Dict[str, Lease]] = None
+                   ) -> List[Dict[str, Any]]:
+        """Per-shard progress + lease-attempt rows for GET /cluster and the
+        cluster-status CLI — the shard-level view job-level state hides."""
+        tasks = self.shard_tasks(parent_id)
+        if not tasks:
+            return []
+        if claims is None:
+            claims = self._claims_by_job()
+        rows: List[Dict[str, Any]] = []
+        for tid in tasks:
+            spec = _read_json(self.spec_path(tid)) or {}
+            sh = spec.get("shard") or {}
+            row: Dict[str, Any] = {
+                "task_id": tid, "kind": sh.get("kind"),
+                "index": sh.get("index"), "state": self.state_of(tid),
+            }
+            result = _read_json(self.result_path(tid))
+            lease = claims.get(tid)
+            if result is not None:
+                row["attempt"] = result.get("attempt")
+                row["runner_id"] = result.get("runner_id")
+                rep = result.get("report") or {}
+                row["resumed_at"] = rep.get("resumed_at", 0)
+                if rep.get("n_out") is not None:
+                    row["n_out"] = rep.get("n_out")
+            elif lease is not None:
+                row["attempt"] = lease.attempt
+                row["runner_id"] = lease.runner_id
+                row["lease_expired"] = lease.expired()
+                prog = _read_json(self.progress_path(tid)) or {}
+                per_op = prog.get("per_op") or []
+                row["ops_started"] = sum(
+                    1 for r in per_op if r.get("in", 0) > 0)
+            rows.append(row)
+        return rows
 
     def jobs(self) -> List[Dict[str, Any]]:
         return [self.status(jid, verbose=False) for jid in self.job_ids()]
@@ -528,13 +589,20 @@ class ClusterQueue:
         results = self._result_ids()
         cancelled = self._cancel_ids()
         claims = self._claims_by_job()
-        for jid in self.job_ids():
+        for jid in self.job_ids(include_shards=True):
             if jid in results or jid in cancelled:
                 continue
             held = claims.get(jid)
             if held is not None and not held.expired(now):
                 continue
             spec = _read_json(self.spec_path(jid)) or {}
+            # shard-task dependency gate (api.shards): claimable only once
+            # every upstream task has a SUCCEEDED result
+            deps = spec.get("after") or ()
+            if deps and any(
+                    (_read_json(self.result_path(d)) or {}).get("state")
+                    != SUCCEEDED for d in deps):
+                continue
             waited = now - spec.get("submitted_at", now)
             if not policy.should_claim(runner_id, cards, waited):
                 continue
@@ -565,7 +633,7 @@ class ClusterQueue:
         failover backlog surfaced by /cluster (claiming them is implicit in
         ``next_job``; this is observability, not a state change)."""
         out: List[Lease] = []
-        for jid in self.job_ids():
+        for jid in self.job_ids(include_shards=True):
             if os.path.exists(self.result_path(jid)):
                 continue
             lease = self.current_lease(jid)
@@ -620,7 +688,17 @@ class ClusterQueue:
         cards = self.runner_cards(live_only=False)
         for c in cards:
             c["score"] = PlacementPolicy.score(c)
-        return {
+        # per-shard progress for sharded jobs (api.shards): group the shard
+        # tasks under their parents, one claims listdir for all of them
+        parents = sorted({jid.split("~", 1)[0]
+                          for jid in self.job_ids(include_shards=True)
+                          if "~" in jid})
+        sharded: Dict[str, List[Dict[str, Any]]] = {}
+        if parents:
+            claims = self._claims_by_job()
+            for pid in parents:
+                sharded[pid] = self.shard_rows(pid, claims=claims)
+        out = {
             "enabled": True,
             "cluster_dir": self.dir,
             "queue_depth": states.get(QUEUED, 0),
@@ -628,6 +706,9 @@ class ClusterQueue:
             "runners": cards,
             "leases": leases,
         }
+        if sharded:
+            out["sharded"] = sharded
+        return out
 
 
 class ClusterRunner:
@@ -768,23 +849,53 @@ class ClusterRunner:
         state, report, error = FAILED, None, None
         try:
             spec = queue.read_spec(job_id)
-            executor = self._build_executor(job_id, spec)
-            # run_streaming (not run): segment-boundary checkpoints are the
-            # failover-resume unit; materialize=False keeps the runner's
-            # memory bounded — output streams to the spec's export_path
-            _, rep = executor.run_streaming(
-                materialize=False, monitor=monitor,
-                cancel=cancel_event.is_set)
-            report = {
-                "recipe": rep.recipe, "n_in": rep.n_in, "n_out": rep.n_out,
-                "seconds": rep.seconds, "plan": rep.plan,
-                "errors": rep.errors, "streaming": rep.streaming,
-                "resumed_at": rep.resumed_at,
-                "dispatch": list(rep.dispatch or ()),
-            }
+            shard = spec.get("shard") or {}
+            kind = shard.get("kind")
+            if kind == "reduce":
+                from repro.api import shards as shards_mod
+
+                report = shards_mod.run_reduce_task(self, spec)
+            elif kind == "finalize":
+                from repro.api import shards as shards_mod
+
+                report = shards_mod.run_finalize_task(
+                    self, spec, monitor=monitor, cancel=cancel_event.is_set)
+            else:
+                recipe_shards = int(
+                    (spec.get("recipe") or {}).get("shards") or 0)
+                if not kind and recipe_shards > 1:
+                    # sharded parent job: this lease supervises the shard
+                    # DAG (api.shards); None means sharding degenerated —
+                    # fall through to the ordinary single-runner path
+                    from repro.api import shards as shards_mod
+                    from repro.core.recipes import Recipe
+
+                    report = shards_mod.run_sharded(
+                        self, lease, spec,
+                        Recipe.from_dict(spec.get("recipe") or {}),
+                        monitor, cancel_event, lease_lost)
+                if report is None:
+                    executor = self._build_executor(job_id, spec)
+                    # run_streaming (not run): segment-boundary checkpoints
+                    # are the failover-resume unit; materialize=False keeps
+                    # the runner's memory bounded — output streams to the
+                    # spec's export_path
+                    _, rep = executor.run_streaming(
+                        materialize=False, monitor=monitor,
+                        cancel=cancel_event.is_set)
+                    report = {
+                        "recipe": rep.recipe, "n_in": rep.n_in,
+                        "n_out": rep.n_out,
+                        "seconds": rep.seconds, "plan": rep.plan,
+                        "errors": rep.errors, "streaming": rep.streaming,
+                        "resumed_at": rep.resumed_at,
+                        "dispatch": list(rep.dispatch or ()),
+                    }
             state = SUCCEEDED
-            if rep.seconds > 0 and rep.n_in:
-                inst = rep.n_in / rep.seconds
+            secs = float(report.get("seconds") or 0.0)
+            n_in = int(report.get("n_in") or 0)
+            if secs > 0 and n_in:
+                inst = n_in / secs
                 self.throughput = inst if self.throughput == 0.0 \
                     else 0.7 * self.throughput + 0.3 * inst
         except ExecutionCancelled:

@@ -122,7 +122,10 @@ class Pipeline:
         """Deduplicate. ``streaming`` picks the execution protocol under the
         streaming executor: ``"off"`` (dataset barrier, exact),
         ``"keep_first"`` (incremental stage, bounded memory, keeps a
-        documented superset of the exact result) or ``"exact"`` (two-pass
+        documented superset of the exact result), ``"windowed"``
+        (keep_first with a bounded retroactive-merge horizon — pass
+        ``window=`` rows; sits between keep_first and exact:
+        exact ⊆ windowed ⊆ keep_first) or ``"exact"`` (two-pass
         incremental stage, byte-identical to the barrier). ``None`` defers
         to the op's own default."""
         _check_kind("dedup", name)
@@ -165,6 +168,13 @@ class Pipeline:
 
     def checkpoint(self, checkpoint_dir: str) -> "Pipeline":
         return self.options(checkpoint_dir=checkpoint_dir)
+
+    def shards(self, n: int) -> "Pipeline":
+        """Intra-job scale-out: when this pipeline is submitted to a
+        ``ClusterQueue``, split the input into ``n`` row-range shards that
+        many runners execute cooperatively (``repro.api.shards``). Local
+        ``.execute()`` ignores it — sharding is a cluster-level protocol."""
+        return self.options(shards=int(n))
 
     def insight(self, on: bool = True) -> "Pipeline":
         return self.options(insight=on)

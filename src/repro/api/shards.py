@@ -1,0 +1,527 @@
+"""Intra-job scale-out: shard one streaming job across many runners.
+
+``Recipe.shards > 1`` turns a cluster job into a small task DAG published
+into the SAME queue the job came from (``repro.api.cluster``): at first
+claim the lead runner pins the plan, splits the input into contiguous row
+ranges, and submits one **map** task per range plus (for dedup plans)
+**reduce** tasks per band owner and one **finalize** task that splices the
+partial results back in input order. Shard tasks are first-class queue jobs
+— O_EXCL attempt-numbered claims, heartbeat TTLs, per-task checkpoints —
+so a SIGKILL'd shard runner fails over exactly like a whole job does
+today, with ``resumed_at > 0`` on the re-claimed attempt.
+
+Task naming: ``<job>~s<k>`` (map shard k), ``<job>~r<o>`` (reduce owner o),
+``<job>~fin`` (finalize). ``~`` never appears in user job ids (uuid hex /
+caller-chosen names), and shard tasks are hidden from job listings; they
+surface through ``status(parent)["shards"]`` and the cluster overview.
+
+Plan split (``split_plan``): the pinned plan's longest pipelineable chain
+prefix runs inside every map task (over that shard's row range). What
+follows decides the mode:
+
+* ``dedup`` — the first stateful op is a streaming MinHash dedup: maps run
+  prefix + ``shard_minhash_map`` (local presign, spill, band-key routing);
+  reduces rebuild each owned band's bucket heads over the global doc order
+  and verify candidate pairs; finalize merges components (the
+  StreamingUnionFind reconciliation barrier), replays the spills keep-first
+  per component, and streams the post-dedup suffix into the parent export —
+  byte-identical to the single-runner run in ``exact`` mode.
+* ``chain`` — no barrier at all: maps run the whole plan over their range
+  and finalize concatenates the partial exports in shard order.
+* ``barrier`` — a non-dedup barrier/stateful op: maps run the chain prefix,
+  finalize concatenates the parts and runs the remaining plan single-runner
+  (graceful degradation — prefix compute still scales out).
+
+The lead runner supervises: it claims ready shard tasks INLINE when no
+other runner takes them (single-runner liveness), while any other
+ClusterRunner picks them up through the normal ``next_job`` path (shard
+specs carry ``after`` dependency lists the queue enforces). If the lead
+dies, the parent job fails over and the new lead re-enters supervision —
+completed shard tasks are terminal results it simply observes.
+"""
+from __future__ import annotations
+
+import os
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.api.cluster import (
+    CANCELLED, FAILED, QUEUED, SUCCEEDED, TERMINAL, ClusterQueue, Lease,
+    _read_json, _write_json_atomic,
+)
+from repro.core.recipes import Recipe
+
+# streaming MinHash ops whose stateful stage shards.py knows how to partition
+MINHASH_STREAMING_OPS = (
+    "document_minhash_deduplicator",
+    "streaming_minhash_deduplicator",
+    "distributed_minhash_deduplicator",
+)
+
+SHARD_SEP = "~"
+
+
+def is_shard_task(job_id: str) -> bool:
+    return SHARD_SEP in job_id
+
+
+def parent_of(task_id: str) -> str:
+    return task_id.split(SHARD_SEP, 1)[0]
+
+
+def map_task_id(job_id: str, k: int) -> str:
+    return f"{job_id}{SHARD_SEP}s{k}"
+
+
+def reduce_task_id(job_id: str, o: int) -> str:
+    return f"{job_id}{SHARD_SEP}r{o}"
+
+
+def finalize_task_id(job_id: str) -> str:
+    return f"{job_id}{SHARD_SEP}fin"
+
+
+def task_sort_key(task_id: str) -> Tuple[int, int]:
+    """maps -> reduces -> finalize, numerically within a kind (lexicographic
+    listing order would interleave: 'fin' < 'r1' < 's0')."""
+    suffix = task_id.rsplit(SHARD_SEP, 1)[-1]
+    if suffix.startswith("s"):
+        kind, idx = 0, suffix[1:]
+    elif suffix.startswith("r") and suffix != "r":
+        kind, idx = 1, suffix[1:]
+    else:
+        return (2, 0)
+    try:
+        return (kind, int(idx))
+    except ValueError:
+        return (2, 1)
+
+
+def shard_dir_for(queue: ClusterQueue, job_id: str) -> str:
+    return os.path.join(queue.checkpoint_dir(job_id), "shards")
+
+
+# ---------------------------------------------------------------------------
+# plan splitting
+# ---------------------------------------------------------------------------
+
+
+def split_plan(plan_cfgs: List[Dict[str, Any]]) -> Dict[str, Any]:
+    """Locate the first non-pipelineable segment in a pinned plan.
+
+    Returns ``{"mode": "dedup"|"barrier"|"chain", "n_prefix": N}`` where N
+    is the number of chain ops that precede it (the part every map task
+    runs). ``plan_segments`` keeps op order and makes each barrier/stateful
+    op its own single-op segment, so slicing the CONFIG list by op counts
+    is exact."""
+    from repro.core.fusion import plan_segments
+    from repro.core.registry import create_op
+
+    ops = [create_op(dict(c)) for c in plan_cfgs]
+    n = 0
+    for seg in plan_segments(ops):
+        if getattr(seg, "stateful", False):
+            cfg = plan_cfgs[n]
+            if cfg.get("name") in MINHASH_STREAMING_OPS:
+                return {"mode": "dedup", "n_prefix": n}
+            return {"mode": "barrier", "n_prefix": n}
+        if getattr(seg, "barrier", False):
+            return {"mode": "barrier", "n_prefix": n}
+        n += len(seg.ops)
+    return {"mode": "chain", "n_prefix": n}
+
+
+def count_rows(path: str) -> int:
+    """Non-empty input lines == the row indices ``row_range`` slices over."""
+    from repro.core.storage import _open_read_binary
+
+    n = 0
+    with _open_read_binary(path) as f:
+        for line in f:
+            if line.strip():
+                n += 1
+    return n
+
+
+def shard_ranges(n_rows: int, n_shards: int) -> List[List[int]]:
+    """Contiguous near-equal [lo, hi) ranges covering [0, n_rows) in order —
+    contiguity is what preserves the global doc order the dedup merge (and
+    the chain-mode concat) rely on."""
+    base, rem = divmod(n_rows, n_shards)
+    ranges: List[List[int]] = []
+    lo = 0
+    for k in range(n_shards):
+        size = base + (1 if k < rem else 0)
+        ranges.append([lo, lo + size])
+        lo += size
+    return ranges
+
+
+# ---------------------------------------------------------------------------
+# shard-set construction (lead runner, first claim)
+# ---------------------------------------------------------------------------
+
+
+def _ensure_meta(queue: ClusterQueue, job_id: str, recipe: Recipe,
+                 split: Dict[str, Any]) -> Optional[Dict[str, Any]]:
+    """Compute-once shard metadata under the shared store. A re-claimed lead
+    REUSES the persisted ranges (never recounts — the split must be stable
+    across failover); a zombie lead rewriting it writes identical content."""
+    sdir = shard_dir_for(queue, job_id)
+    os.makedirs(sdir, exist_ok=True)
+    path = os.path.join(sdir, "shardmeta.json")
+    meta = _read_json(path)
+    if meta is not None:
+        return meta
+    n_rows = count_rows(recipe.dataset_path)
+    n_shards = max(1, min(int(recipe.shards), n_rows or 1))
+    if n_shards < 2:
+        return None  # degenerate input: run unsharded
+    dedup_cfg = None
+    n_reducers = 0
+    if split["mode"] == "dedup":
+        dedup_cfg = dict(recipe.fixed_plan[split["n_prefix"]])
+        n_reducers = min(n_shards, int(dedup_cfg.get("num_bands", 16)))
+    meta = {
+        "job_id": job_id, "n_rows": n_rows, "n_shards": n_shards,
+        "ranges": shard_ranges(n_rows, n_shards), "mode": split["mode"],
+        "n_prefix": split["n_prefix"], "n_reducers": n_reducers,
+        "dedup": dedup_cfg,
+    }
+    _write_json_atomic(path, meta)
+    return meta
+
+
+def _map_recipe(recipe: Recipe, meta: Dict[str, Any], k: int) -> Dict[str, Any]:
+    sdir_name = meta["shard_dir"]
+    mode = meta["mode"]
+    n_prefix = meta["n_prefix"]
+    plan = [dict(c) for c in recipe.fixed_plan]
+    if mode == "dedup":
+        d = meta["dedup"]
+        shard_plan = plan[:n_prefix] + [{
+            "name": "shard_minhash_map", "shard_index": k,
+            "n_shards": meta["n_shards"], "n_reducers": meta["n_reducers"],
+            "shard_dir": sdir_name,
+            "num_permutations": d.get("num_permutations", 128),
+            "num_bands": d.get("num_bands", 16), "ngram": d.get("ngram", 5),
+            "use_kernel": bool(d.get("use_kernel", False)),
+            "super_batch": d.get("super_batch", 2048),
+        }]
+        export = os.path.join(sdir_name, f"out-{k}.jsonl")  # always empty
+    elif mode == "chain":
+        shard_plan = plan
+        export = os.path.join(sdir_name, f"part-{k}.jsonl")
+    else:  # barrier: maps run only the chain prefix
+        shard_plan = plan[:n_prefix]
+        export = os.path.join(sdir_name, f"part-{k}.jsonl")
+    rd = recipe.to_dict()
+    rd.update(
+        name=f"{recipe.name}{SHARD_SEP}s{k}", shards=0,
+        row_range=list(meta["ranges"][k]), export_path=export,
+        process=shard_plan, fixed_plan=shard_plan,
+        # per-task checkpoints (runner assigns queue.checkpoint_dir(task_id))
+        # make shard failover resume mid-plan, exactly like jobs do
+        checkpoint_dir=None, insight=False,
+    )
+    return rd
+
+
+def _submit_quiet(queue: ClusterQueue, spec: Dict[str, Any]) -> None:
+    """Idempotent shard-spec publication: the parent lease is exclusive, so
+    an existing spec means a previous (or zombie) lead already published
+    identical content."""
+    task_id = spec["job_id"]
+    if os.path.exists(queue.spec_path(task_id)):
+        return
+    try:
+        queue.submit(spec["recipe"], job_id=task_id, extra={
+            k: v for k, v in spec.items() if k not in ("job_id", "recipe")})
+    except ValueError:
+        pass
+
+
+def publish_shard_tasks(queue: ClusterQueue, job_id: str, recipe: Recipe,
+                        meta: Dict[str, Any]) -> List[str]:
+    """Submit the shard-task DAG; returns every task id in execution order."""
+    n_shards, n_reducers = meta["n_shards"], meta["n_reducers"]
+    mode = meta["mode"]
+    base = recipe.to_dict()
+    base.update(shards=0)
+    map_ids = [map_task_id(job_id, k) for k in range(n_shards)]
+    for k in range(n_shards):
+        _submit_quiet(queue, {
+            "job_id": map_ids[k], "recipe": _map_recipe(recipe, meta, k),
+            "shard": {"parent": job_id, "kind": "map", "index": k,
+                      "n_shards": n_shards, "mode": mode},
+        })
+    reduce_ids: List[str] = []
+    if mode == "dedup":
+        for o in range(n_reducers):
+            tid = reduce_task_id(job_id, o)
+            reduce_ids.append(tid)
+            _submit_quiet(queue, {
+                "job_id": tid, "recipe": dict(base),
+                "shard": {"parent": job_id, "kind": "reduce", "index": o,
+                          "n_shards": n_shards, "n_reducers": n_reducers,
+                          "dedup": meta["dedup"]},
+                "after": list(map_ids),
+            })
+    fin_id = finalize_task_id(job_id)
+    _submit_quiet(queue, {
+        "job_id": fin_id, "recipe": dict(base),
+        "shard": {"parent": job_id, "kind": "finalize", "index": 0,
+                  "mode": mode, "n_shards": n_shards,
+                  "n_reducers": n_reducers, "n_prefix": meta["n_prefix"],
+                  "n_rows": meta["n_rows"], "dedup": meta.get("dedup")},
+        "after": list(map_ids) + list(reduce_ids),
+    })
+    return map_ids + reduce_ids + [fin_id]
+
+
+# ---------------------------------------------------------------------------
+# lead-runner supervision
+# ---------------------------------------------------------------------------
+
+
+def run_sharded(runner, lease: Lease, spec: Dict[str, Any], recipe: Recipe,
+                monitor: List[dict], cancel_event, lease_lost
+                ) -> Optional[Dict[str, Any]]:
+    """Supervise one sharded job from its (parent) lease. Returns the parent
+    report, or None when sharding degenerates (caller runs unsharded).
+
+    Liveness: the supervisor claims + executes ready shard tasks INLINE, so
+    one lone runner still finishes the whole DAG; extra runners shorten the
+    critical path by claiming map tasks concurrently through ``next_job``.
+    On parent-lease loss it aborts WITHOUT touching shard tasks — the
+    failover lead resumes supervision over the surviving task states.
+    """
+    from repro.core.dataset import ExecutionCancelled
+
+    queue: ClusterQueue = runner.queue
+    job_id = lease.job_id
+    if not recipe.dataset_path or not recipe.export_path:
+        return None
+    t0 = time.time()
+    recipe.fixed_plan = runner._pin_plan(job_id, recipe)
+    split = split_plan(recipe.fixed_plan)
+    if split["mode"] == "barrier" and split["n_prefix"] == 0:
+        return None  # nothing parallelizable before the barrier
+    meta = _ensure_meta(queue, job_id, recipe, split)
+    if meta is None:
+        return None
+    meta = {**meta, "shard_dir": shard_dir_for(queue, job_id)}
+    tasks = publish_shard_tasks(queue, job_id, recipe, meta)
+    specs = {t: queue.read_spec(t) for t in tasks}
+    fin_id = tasks[-1]
+    queue.log_event("sharded", job_id=job_id, n_shards=meta["n_shards"],
+                    mode=meta["mode"], n_reducers=meta["n_reducers"])
+
+    poll = min(0.2, max(0.05, getattr(runner, "poll", 0.2)))
+    while True:
+        if lease_lost.is_set():
+            # failover: the next lead takes over the surviving shard tasks
+            raise ExecutionCancelled(f"parent lease lost: {job_id}")
+        if cancel_event.is_set() and queue.is_cancelled(job_id):
+            for t in tasks:
+                if queue.state_of(t) not in TERMINAL:
+                    try:
+                        queue.cancel(t)
+                    except KeyError:
+                        pass
+            raise ExecutionCancelled(f"sharded job cancelled: {job_id}")
+        states = {t: queue.state_of(t) for t in tasks}
+        if states[fin_id] == SUCCEEDED:
+            break
+        failed = [t for t in tasks if states[t] in (FAILED, CANCELLED)]
+        if failed:
+            rec = _read_json(queue.result_path(failed[0])) or {}
+            for t in tasks:
+                if states[t] not in TERMINAL:
+                    try:
+                        queue.cancel(t)
+                    except KeyError:
+                        pass
+            raise RuntimeError(
+                f"shard task {failed[0]} {states[failed[0]]}: "
+                f"{rec.get('error') or 'no error recorded'}")
+        claimed = False
+        for t in tasks:
+            if states[t] != QUEUED:
+                continue
+            deps = specs[t].get("after") or ()
+            if any(states.get(d) != SUCCEEDED for d in deps):
+                continue
+            shard_lease = queue.try_claim(t, runner.runner_id,
+                                          ttl=runner.lease_ttl)
+            if shard_lease is not None:
+                runner._execute(shard_lease)  # inline, synchronous
+                claimed = True
+                break
+        if not claimed:
+            time.sleep(poll)
+
+    fin_rec = _read_json(queue.result_path(fin_id)) or {}
+    fin_rep = fin_rec.get("report") or {}
+    task_summary: Dict[str, Any] = {}
+    for t in tasks:
+        rec = _read_json(queue.result_path(t)) or {}
+        rep = rec.get("report") or {}
+        task_summary[t] = {
+            "state": rec.get("state"), "attempt": rec.get("attempt"),
+            "runner_id": rec.get("runner_id"),
+            "resumed_at": rep.get("resumed_at", 0),
+        }
+    return {
+        "recipe": recipe.name, "n_in": meta["n_rows"],
+        "n_out": fin_rep.get("n_out", 0), "seconds": time.time() - t0,
+        "plan": [c.get("name") for c in recipe.fixed_plan],
+        "errors": 0, "streaming": True, "resumed_at": 0, "dispatch": [],
+        "sharded": {"n_shards": meta["n_shards"], "mode": meta["mode"],
+                    "n_reducers": meta["n_reducers"], "tasks": task_summary},
+    }
+
+
+# ---------------------------------------------------------------------------
+# reduce / finalize task bodies (dispatched by ClusterRunner._execute)
+# ---------------------------------------------------------------------------
+
+
+def run_reduce_task(runner, spec: Dict[str, Any]) -> Dict[str, Any]:
+    from repro.core.dedup.sharded import run_reduce
+
+    sh = spec["shard"]
+    d = sh["dedup"] or {}
+    thr = float(d.get("jaccard_threshold", 0.7))
+    rep = run_reduce(
+        shard_dir_for(runner.queue, sh["parent"]), sh["index"],
+        sh["n_shards"], sh["n_reducers"],
+        int(d.get("num_bands", 16)), thr, verify=thr > 0)
+    return {"n_in": rep["n_docs"], "n_out": rep["n_pairs"], "seconds": 0.0,
+            "reduce": rep}
+
+
+def _concat_parts(queue: ClusterQueue, parent: str, n_shards: int,
+                  export_path: str) -> int:
+    """Splice partial exports in shard (== input) order into the parent
+    export. Plain targets get a raw byte concat; encoded targets re-stream
+    rows through BlockWriter so the export codec stays in charge."""
+    from repro.core.storage import BlockWriter, SampleBlock, read_jsonl
+
+    sdir = shard_dir_for(queue, parent)
+    parts = [os.path.join(sdir, f"part-{k}.jsonl") for k in range(n_shards)]
+    n_out = 0
+    if not export_path.endswith(".zst"):
+        tmp = f"{export_path}.{os.getpid()}.tmp"
+        with open(tmp, "wb") as out:
+            for p in parts:
+                with open(p, "rb") as f:
+                    for line in f:
+                        if line.strip():
+                            out.write(line)
+                            n_out += 1
+        os.replace(tmp, export_path)
+        return n_out
+    writer = BlockWriter(export_path)
+    ok = False
+    try:
+        for p in parts:
+            rows = list(read_jsonl(p))
+            if rows:
+                n_out += writer.write_block(SampleBlock(rows, nbytes=0)) or len(rows)
+        ok = True
+    finally:
+        writer.close(success=ok)
+    return n_out
+
+
+def run_finalize_task(runner, spec: Dict[str, Any], monitor: List[dict],
+                      cancel) -> Dict[str, Any]:
+    """The merge/reconciliation step, running as its own fault-tolerant
+    queue task once every upstream shard task has succeeded."""
+    from repro.core.dataset import ExecutionCancelled, stream_segments
+    from repro.core.executor import Executor
+    from repro.core.fusion import plan_segments
+    from repro.core.registry import create_op
+    from repro.core.storage import BlockWriter
+
+    queue: ClusterQueue = runner.queue
+    sh = spec["shard"]
+    parent = sh["parent"]
+    mode = sh["mode"]
+    task_id = spec["job_id"]
+    recipe = Recipe.from_dict(spec.get("recipe") or {})
+    t0 = time.time()
+
+    if mode == "chain":
+        n_out = _concat_parts(queue, parent, sh["n_shards"], recipe.export_path)
+        return {"n_in": sh.get("n_rows", n_out), "n_out": n_out,
+                "seconds": time.time() - t0, "mode": mode, "resumed_at": 0}
+
+    plan_rec = _read_json(os.path.join(queue.checkpoint_dir(parent),
+                                       "plan.json")) or {}
+    plan_cfgs = plan_rec.get("plan") or list(recipe.process)
+    n_prefix = int(sh["n_prefix"])
+
+    if mode == "barrier":
+        # concat the prefix parts, then run the remaining plan single-runner
+        sdir = shard_dir_for(queue, parent)
+        merged = os.path.join(sdir, "merged.jsonl")
+        _concat_parts(queue, parent, sh["n_shards"], merged)
+        sub = Recipe.from_dict(recipe.to_dict())
+        sub.name = f"{recipe.name}{SHARD_SEP}fin"
+        sub.dataset_path = merged
+        sub.row_range = None
+        sub.shards = 0
+        sub.insight = False
+        sub.process = [dict(c) for c in plan_cfgs[n_prefix:]]
+        sub.fixed_plan = [dict(c) for c in plan_cfgs[n_prefix:]]
+        sub.checkpoint_dir = queue.checkpoint_dir(task_id)
+        _, rep = Executor(sub).run_streaming(
+            materialize=False, monitor=monitor, cancel=cancel)
+        return {"n_in": rep.n_in, "n_out": rep.n_out,
+                "seconds": time.time() - t0, "mode": mode,
+                "resumed_at": rep.resumed_at}
+
+    # dedup: reconciliation barrier + keep-first spill replay + suffix chain
+    from repro.core.dedup.sharded import iter_final_blocks
+
+    d = sh["dedup"] or {}
+    counters: Dict[str, int] = {}
+    blocks = iter_final_blocks(
+        shard_dir_for(queue, parent), n_shards=sh["n_shards"],
+        n_bands=int(d.get("num_bands", 16)), n_reducers=sh["n_reducers"],
+        mode=d.get("streaming", "exact"), backend=d.get("backend", "balanced"),
+        n_partitions=int(d.get("n_partitions", 8)),
+        super_batch=int(d.get("super_batch", 2048)), counters=counters)
+    suffix_ops = [create_op(dict(c)) for c in plan_cfgs[n_prefix + 1:]]
+    sub = Recipe.from_dict(recipe.to_dict())
+    sub.shards = 0
+    sub.row_range = None
+    engine = Executor(sub)._make_engine()
+    sink = BlockWriter(recipe.export_path)
+    ok = False
+    try:
+        if suffix_ops:
+            segments = plan_segments(suffix_ops)
+            _, _, n_out = stream_segments(
+                blocks, segments, engine, sink=sink, collect=False,
+                n_workers_hint=getattr(engine, "n_workers", 1) or 1,
+                monitor=monitor, cancel=cancel)
+        else:
+            n_out = 0
+            for blk in blocks:
+                if cancel is not None and cancel():
+                    raise ExecutionCancelled("finalize cancelled")
+                sink.write_block(blk)
+                n_out += len(blk)
+        ok = True
+    finally:
+        sink.close(success=ok)
+        close = getattr(engine, "close", None)
+        if close is not None:
+            close()
+    return {"n_in": counters.get("n_docs", 0), "n_out": n_out,
+            "n_kept": counters.get("n_kept", 0),
+            "n_pairs": counters.get("n_pairs", 0),
+            "seconds": time.time() - t0, "mode": mode, "resumed_at": 0}

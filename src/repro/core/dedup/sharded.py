@@ -1,0 +1,519 @@
+"""Band-partitioned sharded streaming MinHash dedup (ROADMAP item 1).
+
+One streaming dedup job split across many runners, in three phases that
+reproduce the single-runner :class:`~repro.core.dedup.streaming` result:
+
+* **map** (one task per input shard) — :class:`ShardMapState` is a stateful
+  stream stage (same protocol as ``StreamingMinHashState``) that runs over
+  one contiguous row range of the input: it presigns locally (worker-side
+  ``minhash_signature_mapper`` carriers or the driver-side SignatureBatcher),
+  spills the post-prefix rows byte-identically to the single-runner exact
+  spill, and **routes band keys to their owners** by writing one key file
+  per reducer into the shared store. No band index is built map-side.
+* **reduce** (one task per band owner, ``owner(band) = band % n_reducers``) —
+  :func:`run_reduce` replays every owned band over the *global* doc order
+  (shards in shard order, docs in local order == single-runner gid order),
+  reproducing ``LSHBandIndex``'s bucket-head rule exactly (first doc with a
+  key is the head), Jaccard-verifying each candidate edge against the
+  uniqued shingles, and publishing the per-band verified pair lists.
+* **finalize** (reconciliation barrier) — :func:`iter_final_blocks`
+  assembles the global pair list in the barriered band-major order,
+  recomputes components with the same union-find backend, and replays the
+  concatenated spills keep-first-per-component — byte-identical to
+  ``StreamingMinHashState._finalize_exact`` in ``exact`` mode. In
+  ``keep_first``/``windowed`` mode the reconciliation merges per-owner
+  components through a global :class:`StreamingUnionFind`, so the sharded
+  keep set equals the *exact* keep set (a subset of what a single
+  keep-first runner would emit — retroactive merges are visible here).
+
+All intermediate files live under one shared ``shard_dir`` and are
+published with pid-unique tmp files + ``os.replace``, so a zombie mapper
+(SIGKILL survivor past its lease) can only republish identical bytes.
+The per-shard ``meta-<k>.json`` is written LAST and acts as the publish
+marker a reducer waits on (task "after" deps enforce it upstream too).
+"""
+from __future__ import annotations
+
+import os
+import time
+from typing import Any, Dict, Iterable, Iterator, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.dedup.minhash import (
+    jaccard_unique, lsh_bands, shingle_hashes, signatures_batch_vectorized,
+)
+from repro.core.dedup.streaming import (
+    DEFAULT_SUPER_BATCH, SignatureBatcher, StreamingUnionFind,
+)
+
+Sample = Dict[str, Any]
+
+# fault-injection hook (tests/bench): seconds to sleep per ingested block in
+# the map stage — widens the SIGKILL window deterministically for the
+# mid-dedup failover test without touching any production path
+MAP_DELAY_ENV = "REPRO_SHARD_MAP_DELAY"
+
+
+# ---------------------------------------------------------------------------
+# shared-store file layout + atomic publishes
+# ---------------------------------------------------------------------------
+
+
+def spill_path(shard_dir: str, k: int) -> str:
+    return os.path.join(shard_dir, f"spill-{k}.jsonl")
+
+
+def shingle_path(shard_dir: str, k: int) -> str:
+    return os.path.join(shard_dir, f"shingles-{k}.npz")
+
+
+def route_path(shard_dir: str, k: int, owner: int) -> str:
+    return os.path.join(shard_dir, f"route-{k}-{owner}.npy")
+
+
+def meta_path(shard_dir: str, k: int) -> str:
+    return os.path.join(shard_dir, f"meta-{k}.json")
+
+
+def pairs_path(shard_dir: str, owner: int) -> str:
+    return os.path.join(shard_dir, f"pairs-{owner}.npz")
+
+
+def owned_bands(owner: int, n_bands: int, n_reducers: int) -> List[int]:
+    return [b for b in range(n_bands) if b % n_reducers == owner]
+
+
+def _np_save_atomic(path: str, arr: np.ndarray) -> None:
+    tmp = f"{path}.{os.getpid()}.tmp"
+    with open(tmp, "wb") as f:
+        np.save(f, arr)
+    os.replace(tmp, path)
+
+
+def _np_savez_atomic(path: str, **arrays: np.ndarray) -> None:
+    tmp = f"{path}.{os.getpid()}.tmp"
+    with open(tmp, "wb") as f:
+        np.savez(f, **arrays)
+    os.replace(tmp, path)
+
+
+def _json_write_atomic(path: str, payload: Dict[str, Any]) -> None:
+    from repro.core.storage import json_dumps
+
+    tmp = f"{path}.{os.getpid()}.tmp"
+    with open(tmp, "wb") as f:
+        f.write(json_dumps(payload))
+    os.replace(tmp, path)
+
+
+def read_shard_meta(shard_dir: str, k: int) -> Optional[Dict[str, Any]]:
+    from repro.core.storage import json_loads
+
+    try:
+        with open(meta_path(shard_dir, k), "rb") as f:
+            return json_loads(f.read())
+    except (OSError, ValueError):
+        return None
+
+
+# ---------------------------------------------------------------------------
+# map: local presign + spill + band-key routing
+# ---------------------------------------------------------------------------
+
+
+class ShardMapState:
+    """Stateful stream stage for one map shard of a sharded dedup job.
+
+    Mirrors ``StreamingMinHashState``'s ingestion paths (presigned rows,
+    presigned columns, raw columnar, raw rows) so the spill file it writes is
+    byte-identical to the slice of the single-runner exact spill covering
+    this shard's rows. Emits no samples — its outputs are the shared-store
+    files the reduce/finalize phases consume.
+    """
+
+    def __init__(self, *, shard_index: int, n_shards: int, n_reducers: int,
+                 shard_dir: str, n_perm: int = 128, n_bands: int = 16,
+                 ngram: int = 5, seed: int = 42, use_kernel: bool = False,
+                 super_batch: int = DEFAULT_SUPER_BATCH):
+        if n_perm % n_bands:
+            raise ValueError(f"n_perm ({n_perm}) must divide into n_bands ({n_bands})")
+        self.k = int(shard_index)
+        self.n_shards = int(n_shards)
+        self.n_reducers = max(1, int(n_reducers))
+        self.dir = shard_dir
+        self.n_perm = n_perm
+        self.n_bands = n_bands
+        self.ngram = ngram
+        self.seed = seed
+        self.use_kernel = use_kernel
+        self.batcher = SignatureBatcher(n_perm=n_perm, ngram=ngram, seed=seed,
+                                        use_kernel=use_kernel,
+                                        super_batch=super_batch)
+        os.makedirs(shard_dir, exist_ok=True)
+        self.n_docs = 0
+        self._keys: List[np.ndarray] = []      # (n, n_bands) uint64 per flush
+        self._shingles: List[np.ndarray] = []  # uniqued uint64 per doc
+        self._spill_fh = None
+        self._spill_tmp = f"{spill_path(shard_dir, self.k)}.{os.getpid()}.tmp"
+        self._published = False
+        try:
+            self._delay = float(os.environ.get(MAP_DELAY_ENV, "") or 0.0)
+        except ValueError:
+            self._delay = 0.0
+
+    # -- spill (same bytes as the single-runner exact spill) ---------------
+    def _ensure_spill(self) -> None:
+        if self._spill_fh is None:
+            self._spill_fh = open(self._spill_tmp, "wb")
+
+    def _spill_samples(self, samples: List[Sample]) -> None:
+        from repro.core.storage import json_dumps
+
+        self._ensure_spill()
+        for s in samples:
+            self._spill_fh.write(json_dumps(s) + b"\n")
+
+    def _spill_lines(self, lines: Iterable[bytes]) -> None:
+        self._ensure_spill()
+        for raw in lines:
+            self._spill_fh.write(raw + b"\n")
+
+    # -- presigned carriers ------------------------------------------------
+    def presign_ops(self) -> Optional[List[Any]]:
+        if self.use_kernel:
+            return None
+        from repro.core.registry import create_op
+
+        return [create_op({
+            "name": "minhash_signature_mapper", "num_permutations": self.n_perm,
+            "ngram": self.ngram, "seed": self.seed})]
+
+    def _take_presigned(self, samples: List[Sample]
+                        ) -> Tuple[List[np.ndarray], np.ndarray]:
+        from repro.ops.dedup_ops import MH_DOC_KEY, MH_SIG_KEY
+
+        docs: List[np.ndarray] = []
+        sigs: List[np.ndarray] = []
+        for s in samples:
+            d = s.pop(MH_DOC_KEY, None)
+            g = s.pop(MH_SIG_KEY, None)
+            if d is None or g is None:
+                d = shingle_hashes(s.get("text", ""), n=self.ngram)
+                g = signatures_batch_vectorized([d], self.batcher._a,
+                                                self.batcher._b)[0]
+            docs.append(d)
+            sigs.append(g)
+        sig_arr = np.stack(sigs) if sigs else \
+            np.zeros((0, self.n_perm), dtype=np.uint32)
+        return docs, sig_arr
+
+    def _take_presigned_columns(self, block
+                                ) -> Tuple[List[np.ndarray], np.ndarray]:
+        from repro.ops.dedup_ops import MH_DOC_KEY, MH_SIG_KEY
+
+        docs_c = block.column_values(MH_DOC_KEY)
+        sigs_c = block.column_values(MH_SIG_KEY)
+        texts = None
+        docs: List[np.ndarray] = []
+        sigs: List[np.ndarray] = []
+        for i in range(len(block)):
+            d, g = docs_c[i], sigs_c[i]
+            if d is None or g is None:
+                if texts is None:
+                    texts = block.string_values("text")
+                d = shingle_hashes(texts[i], n=self.ngram)
+                g = signatures_batch_vectorized([d], self.batcher._a,
+                                                self.batcher._b)[0]
+            docs.append(d)
+            sigs.append(g)
+        sig_arr = np.stack(sigs) if sigs else \
+            np.zeros((0, self.n_perm), dtype=np.uint32)
+        return docs, sig_arr
+
+    # -- ingestion ---------------------------------------------------------
+    def _ingest(self, docs: List[np.ndarray], sigs: np.ndarray) -> None:
+        if sigs.shape[0] == 0:
+            return
+        self._keys.append(lsh_bands(sigs, self.n_bands))
+        for d in docs:
+            # uniqued shingles: what the single-runner ShingleStore holds and
+            # what jaccard_unique's assume_unique contract needs
+            self._shingles.append(np.unique(d))
+        self.n_docs += sigs.shape[0]
+
+    def _ingest_flush(self) -> None:
+        _, docs, sigs = self.batcher.flush()
+        self._ingest(docs, sigs)
+
+    def stream_blocks(self, blocks: Iterable, check_cancel=None
+                      ) -> Iterator[Tuple[Any, dict]]:
+        """Drive the upstream block stream through the map phase. Yields one
+        empty accounting block per input block (the stage emits no samples);
+        the shard's outputs are published to the shared store at stream end,
+        never from :meth:`close` — a cancelled/zombie run publishes nothing
+        it didn't finish."""
+        from repro.core.storage import SampleBlock
+        from repro.ops.dedup_ops import MH_DOC_KEY, MH_SIG_KEY
+
+        try:
+            for blk in blocks:
+                if check_cancel is not None:
+                    check_cancel()
+                if self._delay:
+                    time.sleep(self._delay)
+                t0 = time.perf_counter()
+                n_in = len(blk)
+                cb = blk if (hasattr(blk, "has_column")
+                             and not blk.materialized) else None
+                presigned = (cb.has_column(MH_DOC_KEY) if cb is not None
+                             else bool(blk.samples and MH_DOC_KEY in blk.samples[0]))
+                if presigned:
+                    if self.batcher.pending:
+                        self._ingest_flush()
+                    if cb is not None:
+                        self._spill_lines(cb.iter_json_lines(
+                            exclude=(MH_DOC_KEY, MH_SIG_KEY)))
+                        self._ingest(*self._take_presigned_columns(cb))
+                    else:
+                        docs, sigs = self._take_presigned(blk.samples)
+                        self._spill_samples(blk.samples)
+                        self._ingest(docs, sigs)
+                else:
+                    texts = None
+                    if cb is not None and "py" not in cb.kinds:
+                        try:
+                            texts = cb.string_values("text")
+                        except (TypeError, ValueError):
+                            texts = None
+                    if texts is not None:
+                        self._spill_lines(cb.iter_json_lines())
+                        for t in texts:
+                            self.batcher.add(t, None)
+                    else:
+                        self._spill_samples(blk.samples)
+                        for s in blk.samples:
+                            self.batcher.add(s.get("text", ""), None)
+                    while self.batcher.ready:
+                        self._ingest_flush()
+                if n_in:
+                    yield SampleBlock([], nbytes=0), {
+                        "op": "", "seconds": time.perf_counter() - t0,
+                        "in": n_in, "out": 0, "errors": 0}
+            if check_cancel is not None:
+                check_cancel()
+            self._ingest_flush()
+            self._publish()
+        finally:
+            self.close()
+
+    # -- publication -------------------------------------------------------
+    def _publish(self) -> None:
+        if self._spill_fh is None:
+            self._ensure_spill()  # zero-doc shard still publishes its files
+        self._spill_fh.flush()
+        self._spill_fh.close()
+        self._spill_fh = None
+        os.replace(self._spill_tmp, spill_path(self.dir, self.k))
+
+        keys = (np.concatenate(self._keys) if self._keys
+                else np.zeros((0, self.n_bands), dtype=np.uint64))
+        lens = np.fromiter((a.size for a in self._shingles), np.int64,
+                           len(self._shingles))
+        offsets = np.zeros(len(self._shingles) + 1, np.int64)
+        np.cumsum(lens, out=offsets[1:])
+        values = (np.concatenate(self._shingles) if self._shingles
+                  else np.zeros(0, np.uint64))
+        _np_savez_atomic(shingle_path(self.dir, self.k),
+                         offsets=offsets, values=values.astype(np.uint64))
+        for o in range(self.n_reducers):
+            cols = owned_bands(o, self.n_bands, self.n_reducers)
+            _np_save_atomic(route_path(self.dir, self.k, o), keys[:, cols])
+        # meta last: its existence marks every file above as complete
+        _json_write_atomic(meta_path(self.dir, self.k),
+                           {"shard": self.k, "n_docs": int(self.n_docs)})
+        self._published = True
+
+    def summary(self) -> Dict[str, Any]:
+        return {"mode": "shard_map", "shard": self.k, "n_docs": self.n_docs,
+                "sig_dispatches": self.batcher.dispatches}
+
+    def close(self) -> None:
+        if self._spill_fh is not None:
+            try:
+                self._spill_fh.close()
+            except Exception:  # noqa: BLE001 — best-effort cleanup
+                pass
+            self._spill_fh = None
+        if not self._published:
+            try:
+                os.remove(self._spill_tmp)
+            except OSError:
+                pass
+
+
+# ---------------------------------------------------------------------------
+# reduce: per-owner bucket heads + verified pairs
+# ---------------------------------------------------------------------------
+
+
+class _GlobalShingles:
+    """gid -> uniqued shingle array across every shard's published file."""
+
+    def __init__(self, shard_dir: str, counts: List[int]):
+        self._base = np.zeros(len(counts) + 1, np.int64)
+        np.cumsum(np.asarray(counts, np.int64), out=self._base[1:])
+        self._data: List[Tuple[np.ndarray, np.ndarray]] = []
+        for k in range(len(counts)):
+            with np.load(shingle_path(shard_dir, k)) as z:
+                self._data.append((z["offsets"], z["values"]))
+
+    def get(self, gid: int) -> np.ndarray:
+        k = int(np.searchsorted(self._base, gid, side="right")) - 1
+        i = gid - int(self._base[k])
+        off, val = self._data[k]
+        return val[off[i]:off[i + 1]]
+
+
+def shard_counts(shard_dir: str, n_shards: int) -> List[int]:
+    counts: List[int] = []
+    for k in range(n_shards):
+        meta = read_shard_meta(shard_dir, k)
+        if meta is None:
+            raise FileNotFoundError(f"shard {k} meta missing in {shard_dir}")
+        counts.append(int(meta["n_docs"]))
+    return counts
+
+
+def run_reduce(shard_dir: str, owner: int, n_shards: int, n_reducers: int,
+               n_bands: int, jaccard_threshold: float,
+               verify: bool = True) -> Dict[str, Any]:
+    """Build the verified candidate-pair lists for every band this reducer
+    owns, replaying docs in global gid order so bucket heads and pair order
+    match the single-runner ``LSHBandIndex`` insertion exactly."""
+    counts = shard_counts(shard_dir, n_shards)
+    base = [0]
+    for c in counts:
+        base.append(base[-1] + c)
+    shingles = _GlobalShingles(shard_dir, counts) if verify else None
+    routes = [np.load(route_path(shard_dir, k, owner)) for k in range(n_shards)]
+    bands = owned_bands(owner, n_bands, n_reducers)
+    out: Dict[str, np.ndarray] = {}
+    n_pairs = 0
+    for j, band in enumerate(bands):
+        bucket: Dict[int, int] = {}
+        heads: List[int] = []
+        docs: List[int] = []
+        for k in range(n_shards):
+            col = routes[k][:, j] if routes[k].size else routes[k].reshape(-1)
+            for i in range(counts[k]):
+                gid = base[k] + i
+                key = int(col[i])
+                head = bucket.get(key)
+                if head is None:
+                    bucket[key] = gid
+                    continue
+                if verify and jaccard_unique(
+                        shingles.get(head), shingles.get(gid)) < jaccard_threshold:
+                    continue
+                heads.append(head)
+                docs.append(gid)
+        out[f"h{band}"] = np.asarray(heads, np.int64)
+        out[f"d{band}"] = np.asarray(docs, np.int64)
+        n_pairs += len(heads)
+    _np_savez_atomic(pairs_path(shard_dir, owner), **out)
+    return {"owner": owner, "bands": bands, "n_pairs": n_pairs,
+            "n_docs": base[-1]}
+
+
+# ---------------------------------------------------------------------------
+# finalize: reconciliation barrier + keep-first replay
+# ---------------------------------------------------------------------------
+
+
+def load_global_pairs(shard_dir: str, n_bands: int,
+                      n_reducers: int) -> List[Tuple[int, int]]:
+    """All verified pairs in the barriered band-major order — band 0's pairs
+    first, each band's pairs in gid order (exactly how the single-runner
+    ``_pairs_by_band`` registry flattens)."""
+    files: Dict[int, Any] = {}
+    pairs: List[Tuple[int, int]] = []
+    for band in range(n_bands):
+        o = band % n_reducers
+        if o not in files:
+            files[o] = np.load(pairs_path(shard_dir, o))
+        h = files[o][f"h{band}"]
+        d = files[o][f"d{band}"]
+        pairs.extend(zip(h.tolist(), d.tolist()))
+    return pairs
+
+
+def iter_spill_samples(shard_dir: str, n_shards: int) -> Iterator[Sample]:
+    from repro.core.storage import read_jsonl
+
+    for k in range(n_shards):
+        yield from read_jsonl(spill_path(shard_dir, k))
+
+
+def iter_final_blocks(shard_dir: str, *, n_shards: int, n_bands: int,
+                      n_reducers: int, mode: str, backend: str = "balanced",
+                      n_partitions: int = 8,
+                      super_batch: int = DEFAULT_SUPER_BATCH,
+                      counters: Optional[Dict[str, int]] = None
+                      ) -> Iterator[Any]:
+    """The reconciliation barrier: merge per-owner pairs into global
+    components, then replay the concatenated spills keeping the first doc
+    per component. ``exact`` reproduces ``_finalize_exact`` byte-for-byte
+    (same backend, same band-major pair order, same ``dup_component`` ids);
+    ``keep_first``/``windowed`` merge through a global StreamingUnionFind —
+    the kept SET equals exact's, with each survivor stamped with its own gid
+    (the id a streaming single-runner would have stamped)."""
+    from repro.core.storage import SampleBlock
+
+    counts = shard_counts(shard_dir, n_shards)
+    n = sum(counts)
+    pairs = load_global_pairs(shard_dir, n_bands, n_reducers)
+    if counters is not None:
+        counters["n_docs"] = n
+        counters["n_pairs"] = len(pairs)
+
+    emit_every = max(1, super_batch)
+    out: List[Sample] = []
+    n_kept = 0
+    if mode == "exact":
+        from repro.core.dedup.unionfind import naive_components, partitioned_union
+
+        if backend == "naive":
+            comp = naive_components(n, pairs)
+        else:
+            comp = partitioned_union(n, pairs,
+                                     n_partitions=n_partitions).components()
+        seen: Dict[int, bool] = {}
+        for i, s in enumerate(iter_spill_samples(shard_dir, n_shards)):
+            c = int(comp[i])
+            if c not in seen:
+                seen[c] = True
+                s.setdefault("stats", {})["dup_component"] = c
+                out.append(s)
+                n_kept += 1
+                if len(out) >= emit_every:
+                    yield SampleBlock(out, nbytes=0)
+                    out = []
+    else:
+        uf = StreamingUnionFind()
+        for g in range(n):
+            uf.add(g)
+        for a, b in pairs:
+            uf.union(a, b)
+        for i, s in enumerate(iter_spill_samples(shard_dir, n_shards)):
+            if uf.component_min(i) == i:
+                s.setdefault("stats", {})["dup_component"] = i
+                out.append(s)
+                n_kept += 1
+                if len(out) >= emit_every:
+                    yield SampleBlock(out, nbytes=0)
+                    out = []
+    if out:
+        yield SampleBlock(out, nbytes=0)
+    if counters is not None:
+        counters["n_kept"] = n_kept

@@ -37,6 +37,14 @@ Semantics vs. the exact barriered result (``minhash_dedup_indices``):
   additionally keep docs whose components merge only *retroactively*
   (a later doc bridging two already-emitted components). This containment
   relation is property-tested in ``tests/test_streaming_dedup.py``.
+* **windowed** (``windowed=True``): keep-first with a bounded
+  retroactive-merge horizon — each doc's keep/drop decision is deferred
+  until ``window`` newer docs have arrived, so merges bridged within the
+  horizon are honored. Component minima only decrease over time, so the
+  keep sets nest: ``exact ⊆ windowed ⊆ keep_first`` (``window=0``
+  degenerates to keep_first; ``window=∞`` would be exact), memory stays
+  O(index + window), and latency stays bounded. Property-tested against
+  both oracles.
 * **exact** (two passes, ``exact=True``): pass 1 streams blocks through,
   building the full verified candidate-pair registry in the barriered
   path's band-major order while spilling the samples to a disk file; the
@@ -50,7 +58,7 @@ from __future__ import annotations
 import os
 import tempfile
 import time
-from collections import OrderedDict
+from collections import OrderedDict, deque
 from typing import Any, Dict, Iterable, Iterator, List, Optional, Tuple
 
 import numpy as np
@@ -344,6 +352,7 @@ class StreamingMinHashState:
                  jaccard_threshold: float = 0.7, verify_jaccard: bool = True,
                  backend: str = "balanced", n_partitions: int = 8,
                  use_kernel: bool = False, seed: int = 42, exact: bool = False,
+                 windowed: bool = False, window: int = 4096,
                  super_batch: int = DEFAULT_SUPER_BATCH,
                  spill_dir: Optional[str] = None,
                  max_resident_shingles: int = DEFAULT_RESIDENT_SHINGLES):
@@ -359,6 +368,10 @@ class StreamingMinHashState:
         self.backend = backend
         self.n_partitions = n_partitions
         self.exact = exact
+        self.windowed = bool(windowed) and not exact
+        self.window = max(0, int(window))
+        # (gid, sample) pairs whose keep/drop decision is still deferred
+        self._window_q: "deque[Tuple[int, Sample]]" = deque()
         self.batcher = SignatureBatcher(n_perm=n_perm, ngram=ngram, seed=seed,
                                         use_kernel=use_kernel, super_batch=super_batch)
         self.index = LSHBandIndex(n_bands, spill_dir=spill_dir,
@@ -507,12 +520,32 @@ class StreamingMinHashState:
                 if self.exact:
                     self._pairs_by_band[band].append((head, gid))
                 self.uf.union(head, gid)
-            if not self.exact and self.uf.component_min(gid) == gid:
+            if self.exact:
+                continue
+            if self.windowed:
+                # defer the decision until `window` newer docs have arrived
+                self._window_q.append((gid, sample))
+            elif self.uf.component_min(gid) == gid:
                 # keep-first: gid is its component's first member right now
                 sample.setdefault("stats", {})["dup_component"] = gid
                 kept.append(sample)
                 self.n_kept += 1
+        if self.windowed:
+            kept.extend(self._drain_window(self.window))
         return kept
+
+    def _drain_window(self, target: int) -> List[Sample]:
+        """Emit every deferred doc beyond ``target`` pending entries that is
+        STILL its component's minimum — merges bridged while it waited in
+        the horizon demote it, which plain keep-first would have missed."""
+        out: List[Sample] = []
+        while len(self._window_q) > target:
+            gid, sample = self._window_q.popleft()
+            if self.uf.component_min(gid) == gid:
+                sample.setdefault("stats", {})["dup_component"] = gid
+                out.append(sample)
+                self.n_kept += 1
+        return out
 
     # -- the stage driver --------------------------------------------------
     def stream_blocks(self, blocks: Iterable, check_cancel=None
@@ -589,6 +622,8 @@ class StreamingMinHashState:
             # upstream exhausted: flush the tail, then finalize
             t0 = time.perf_counter()
             tail = self._ingest(*self.batcher.flush())
+            if self.windowed:
+                tail = tail + self._drain_window(0)
             if self.exact:
                 if check_cancel is not None:
                     check_cancel()
@@ -638,7 +673,8 @@ class StreamingMinHashState:
     # -- bookkeeping -------------------------------------------------------
     def summary(self) -> Dict[str, Any]:
         return {
-            "mode": "exact" if self.exact else "keep_first",
+            "mode": ("exact" if self.exact
+                     else "windowed" if self.windowed else "keep_first"),
             "n_seen": self.n_seen, "n_kept": self.n_kept,
             "n_pairs": self.n_pairs, "n_verified": self.n_verified,
             "n_buckets": self.index.n_buckets,

@@ -625,6 +625,28 @@ class ShardedEngine:
                 stats.extend(sub)
         return samples, stats
 
+    def _full_columnar(self, ops: List[Operator], blk
+                       ) -> Optional[Tuple[Any, List[dict]]]:
+        """Zero-copy hand-off (ROADMAP carry-over): a ColumnBlock whose
+        ENTIRE chain takes the columnar path skips the row-shim decode —
+        columns flow straight through ``process_columns``, never touching
+        the super-batch row buffer. All-or-nothing: if any op bails
+        mid-prefix, return None and rerun the whole chain on rows (columnar
+        transforms never mutate their input, so the rerun is safe) — a
+        partial prefix must NOT feed survivors into ``pending``, where the
+        remaining ops would be applied a second time."""
+        if not _columnar_ok(blk):
+            return None
+        try:
+            if not all(op.supports_columns() for op in ops):
+                return None
+        except Exception:  # noqa: BLE001 — opt-in probe must never fail the chain
+            return None
+        cur, cstats, k = _columnar_prefix(ops, blk)
+        if k == len(ops):
+            return cur, cstats
+        return None
+
     def map_block_chain(
         self, ops: List[Operator], blocks: Iterable[SampleBlock],
         batch_size: Optional[int] = None,
@@ -634,7 +656,9 @@ class ShardedEngine:
         super-batches (``super_batch_rows``) before dispatch, so the jit'd
         array program runs over one large sharded array instead of once per
         host-sized block — fewer dispatches, full mesh occupancy. Chains with
-        no vectorized OP keep per-block latency."""
+        no vectorized OP keep per-block latency. ColumnBlocks whose whole
+        chain is columnar bypass both paths zero-copy (``_full_columnar``);
+        any pending super-batch flushes first so row order is preserved."""
         for op in ops:
             op.setup()
         vectorized = any(
@@ -642,12 +666,24 @@ class ShardedEngine:
             and hasattr(op, "keep") for op in ops)
         if not vectorized:
             for blk in blocks:
+                res = self._full_columnar(ops, blk)
+                if res is not None:
+                    yield res
+                    continue
                 samples, stats = self._chain_samples(ops, blk.samples, batch_size)
                 yield SampleBlock(samples, nbytes=0), stats
             return
 
         pending: List[Sample] = []
         for blk in blocks:
+            res = self._full_columnar(ops, blk)
+            if res is not None:
+                if pending:  # flush BEFORE the direct yield: keep row order
+                    samples, stats = self._chain_samples(ops, pending, batch_size)
+                    pending = []
+                    yield SampleBlock(samples, nbytes=0), stats
+                yield res
+                continue
             pending.extend(blk.samples)
             if len(pending) >= self.super_batch_rows:
                 samples, stats = self._chain_samples(ops, pending, batch_size)

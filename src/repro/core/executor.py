@@ -250,6 +250,8 @@ class Executor:
                 ops = self._optimize_ops(ops, self._probe_samples(dataset))
         else:
             bb = {"block_bytes": r.block_bytes} if r.block_bytes else {}
+            if r.row_range:  # shard task: read only this slice of the input
+                bb["row_range"] = tuple(r.row_range)
             src = iter_sample_blocks(r.dataset_path, n_workers=n_workers,
                                      columnar=self._columnar_source(), **bb)
             if (r.use_fusion or r.use_reordering) and not fixed:
@@ -301,6 +303,8 @@ class Executor:
                 ops = self._optimize_ops(ops, self._probe_samples(dataset))
         else:
             bb = {"block_bytes": r.block_bytes} if r.block_bytes else {}
+            if r.row_range:  # shard task: read only this slice of the input
+                bb["row_range"] = tuple(r.row_range)
             counted = _count_blocks(
                 iter_sample_blocks(r.dataset_path, n_workers=n_workers,
                                    columnar=self._columnar_source(), **bb), counter)

@@ -41,6 +41,14 @@ class Recipe:
     # resident in-flight block bytes budget for the engine dispatcher
     # (memory-pressure window shrink); None -> DJ_BLOCK_MEM_BUDGET env or off
     mem_budget: Optional[int] = None
+    # intra-job scale-out (api.shards): >1 splits this job into that many
+    # row-range shard tasks at first claim, executed by however many
+    # ClusterRunners are around and spliced back in input order. Only
+    # meaningful for cluster-submitted jobs; 0/1 runs single-runner.
+    shards: int = 0
+    # [lo, hi) row window of dataset_path this run reads — how a shard task
+    # scopes itself to its range. Internal: set by api.shards, not by users.
+    row_range: Optional[List[int]] = None
 
     @classmethod
     def from_dict(cls, d: Dict[str, Any]) -> "Recipe":

@@ -146,16 +146,28 @@ def _open_read_binary(path: str):
     return open(path, "rb")
 
 
-def _read_jsonl_sized(path: str, limit: Optional[int] = None) -> Iterator[tuple]:
+def _read_jsonl_sized(path: str, limit: Optional[int] = None,
+                      row_range: Optional[tuple] = None) -> Iterator[tuple]:
     """Streaming (sample, nbytes) pairs — read in binary so the raw line
     length IS the (uncompressed) byte size; block sizing costs no
-    re-serialization and no re-encoding of non-ASCII text."""
+    re-serialization and no re-encoding of non-ASCII text.
+
+    ``row_range=(lo, hi)`` scopes the stream to that half-open row window
+    (how a shard task reads only its slice): rows before ``lo`` are skipped
+    WITHOUT json-decoding, the iterator stops at ``hi``."""
     n = 0
+    lo, hi = row_range if row_range else (0, None)
+    idx = 0
     with _open_read_binary(path) as f:
         for line in f:
             line = line.strip()
             if not line:
                 continue
+            i, idx = idx, idx + 1
+            if i < lo:
+                continue
+            if hi is not None and i >= hi:
+                return
             yield json_loads(line), len(line)
             n += 1
             if limit is not None and n >= limit:
@@ -169,6 +181,7 @@ def iter_sample_blocks(
     total_hint_bytes: Optional[int] = None,
     limit: Optional[int] = None,
     columnar: bool = False,
+    row_range: Optional[tuple] = None,
 ) -> Iterator[SampleBlock]:
     """Lazy block source: stream samples (from a JSONL path or any sample
     iterable) into ~``block_bytes`` blocks, yielding each block as soon
@@ -189,9 +202,14 @@ def iter_sample_blocks(
                 total_hint_bytes = os.path.getsize(source)
             except OSError:
                 total_hint_bytes = None
-        sized: Iterable[tuple] = _read_jsonl_sized(source, limit=limit)
+        sized: Iterable[tuple] = _read_jsonl_sized(source, limit=limit,
+                                                   row_range=row_range)
     else:
         sized = ((s, sample_nbytes(s)) for s in source)
+        if row_range:
+            import itertools
+
+            sized = itertools.islice(sized, row_range[0], row_range[1])
     if total_hint_bytes and n_workers > 1:
         block_bytes = max(1, min(block_bytes, total_hint_bytes // n_workers))
     if columnar:

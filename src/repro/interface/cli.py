@@ -150,6 +150,19 @@ def main(argv=None):
             mark = "EXPIRED" if l["expired"] else "live"
             print(f"  lease {l['job_id']} -> {l['runner_id']} "
                   f"attempt={l['attempt']} [{mark}]")
+        for parent, rows in sorted(ov.get("sharded", {}).items()):
+            print(f"  sharded {parent}: {len(rows)} tasks")
+            for r in rows:
+                extra = ""
+                if r.get("resumed_at"):
+                    extra += f" resumed_at={r['resumed_at']}"
+                if r.get("n_out") is not None:
+                    extra += f" n_out={r['n_out']}"
+                if r.get("lease_expired"):
+                    extra += " [EXPIRED]"
+                print(f"    {r['kind']:8s} {r['task_id']:24s} "
+                      f"{r['state']:10s} attempt={r.get('attempt', 0)} "
+                      f"runner={r.get('runner_id') or '-'}{extra}")
         return 0
 
     if args.cmd == "analyze":

@@ -102,6 +102,10 @@ class DocumentMinHashDeduplicator(Deduplicator):
     * ``"keep_first"`` — single-pass incremental stage: blocks flow through,
       O(index) resident memory; keeps a documented *superset* of the exact
       result (retroactive component merges can't retract emitted docs).
+    * ``"windowed"`` — keep_first with a bounded retroactive-merge horizon:
+      each doc's keep/drop decision waits until ``window`` newer docs have
+      arrived, honoring merges bridged inside the horizon. Keep sets nest
+      ``exact ⊆ windowed ⊆ keep_first``; memory O(index + window).
     * ``"exact"`` — two-pass incremental stage: pass 1 spills samples to
       disk while building the pair registry, finalize replays with final
       components — byte-identical to the barriered result, still bounded
@@ -114,19 +118,22 @@ class DocumentMinHashDeduplicator(Deduplicator):
     def __init__(self, jaccard_threshold: float = 0.7, num_permutations: int = 128,
                  num_bands: int = 16, ngram: int = 5, backend: str = "balanced",
                  n_partitions: int = 8, use_kernel: bool = False,
-                 streaming: str = "off", super_batch: int = 2048,
-                 spill_dir: str = None, **kw):
-        if streaming not in ("off", "keep_first", "exact"):
+                 streaming: str = "off", window: int = 4096,
+                 super_batch: int = 2048, spill_dir: str = None, **kw):
+        if streaming not in ("off", "keep_first", "windowed", "exact"):
             raise ValueError(
-                f"streaming must be 'off', 'keep_first' or 'exact', got {streaming!r}")
+                "streaming must be 'off', 'keep_first', 'windowed' or "
+                f"'exact', got {streaming!r}")
         super().__init__(
             jaccard_threshold=jaccard_threshold, num_permutations=num_permutations,
             num_bands=num_bands, ngram=ngram, backend=backend,
             n_partitions=n_partitions, use_kernel=use_kernel,
-            streaming=streaming, super_batch=super_batch, spill_dir=spill_dir, **kw)
+            streaming=streaming, window=window, super_batch=super_batch,
+            spill_dir=spill_dir, **kw)
 
     def supports_streaming(self) -> bool:
-        return self.params.get("streaming", "off") in ("keep_first", "exact")
+        return self.params.get("streaming", "off") in (
+            "keep_first", "windowed", "exact")
 
     def streaming_state(self):
         from repro.core.dedup.streaming import StreamingMinHashState
@@ -137,6 +144,7 @@ class DocumentMinHashDeduplicator(Deduplicator):
             ngram=p["ngram"], jaccard_threshold=p["jaccard_threshold"],
             backend=p["backend"], n_partitions=p["n_partitions"],
             use_kernel=p["use_kernel"], exact=p["streaming"] == "exact",
+            windowed=p["streaming"] == "windowed", window=p["window"],
             super_batch=p["super_batch"], spill_dir=p["spill_dir"])
 
     def dedup(self, samples):
@@ -166,13 +174,63 @@ class StreamingMinHashDeduplicator(DocumentMinHashDeduplicator):
     def __init__(self, jaccard_threshold: float = 0.7, num_permutations: int = 128,
                  num_bands: int = 16, ngram: int = 5, backend: str = "balanced",
                  n_partitions: int = 8, use_kernel: bool = False,
-                 streaming: str = "keep_first", super_batch: int = 2048,
-                 spill_dir: str = None, **kw):
+                 streaming: str = "keep_first", window: int = 4096,
+                 super_batch: int = 2048, spill_dir: str = None, **kw):
         super().__init__(
             jaccard_threshold=jaccard_threshold, num_permutations=num_permutations,
             num_bands=num_bands, ngram=ngram, backend=backend,
             n_partitions=n_partitions, use_kernel=use_kernel, streaming=streaming,
-            super_batch=super_batch, spill_dir=spill_dir, **kw)
+            window=window, super_batch=super_batch, spill_dir=spill_dir, **kw)
+
+
+@register("shard_minhash_map")
+class ShardMinHashMapper(Deduplicator):
+    """INTERNAL: the map phase of a sharded dedup job (``repro.api.shards``).
+
+    Planted by the lead runner as the stateful tail of each shard's pinned
+    plan: runs over one contiguous row range, presigns locally (same carrier
+    protocol as the single-runner stage), spills the post-prefix rows
+    byte-identically to the single-runner exact spill, and routes band keys
+    + uniqued shingles to their band owners via the shared store
+    (``shard_dir``). Emits NO samples — the reduce/finalize tasks consume
+    its published files. Never plant this op by hand."""
+
+    commutative = False
+
+    def __init__(self, shard_index: int = 0, n_shards: int = 1,
+                 n_reducers: int = 1, shard_dir: str = None,
+                 num_permutations: int = 128, num_bands: int = 16,
+                 ngram: int = 5, seed: int = 42, use_kernel: bool = False,
+                 super_batch: int = 2048, **kw):
+        super().__init__(
+            shard_index=shard_index, n_shards=n_shards, n_reducers=n_reducers,
+            shard_dir=shard_dir, num_permutations=num_permutations,
+            num_bands=num_bands, ngram=ngram, seed=seed, use_kernel=use_kernel,
+            super_batch=super_batch, **kw)
+
+    def supports_streaming(self) -> bool:
+        return True
+
+    def streaming_state(self):
+        from repro.core.dedup.sharded import ShardMapState
+
+        p = self.params
+        return ShardMapState(
+            shard_index=p["shard_index"], n_shards=p["n_shards"],
+            n_reducers=p["n_reducers"], shard_dir=p["shard_dir"],
+            n_perm=p["num_permutations"], n_bands=p["num_bands"],
+            ngram=p["ngram"], seed=p["seed"], use_kernel=p["use_kernel"],
+            super_batch=p["super_batch"])
+
+    def dedup(self, samples):
+        # barriered fallback (non-streaming executor): drive the map state
+        # over one block; side effects land in shard_dir, nothing is emitted
+        from repro.core.storage import SampleBlock
+
+        state = self.streaming_state()
+        for _ in state.stream_blocks(iter([SampleBlock(list(samples), nbytes=0)])):
+            pass
+        return []
 
 
 @register("distributed_minhash_deduplicator")

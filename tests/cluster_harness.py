@@ -28,8 +28,11 @@ def runner_env() -> Dict[str, str]:
 def start_runner(cluster_dir: str, runner_id: str, *, lease_ttl: float = 2.0,
                  poll: float = 0.1, capacity: int = 1,
                  defer: Optional[float] = None,
-                 once: bool = False) -> subprocess.Popen:
-    """Spawn a real runner subprocess leasing from ``cluster_dir``."""
+                 once: bool = False,
+                 extra_env: Optional[Dict[str, str]] = None) -> subprocess.Popen:
+    """Spawn a real runner subprocess leasing from ``cluster_dir``.
+    ``extra_env`` injects per-runner env vars (e.g. the shard-map delay
+    knob that widens the SIGKILL window in fault-injection tests)."""
     cmd = [sys.executable, "-m", "repro.interface.cli", "runner",
            "--cluster_dir", cluster_dir, "--runner_id", runner_id,
            "--lease_ttl", str(lease_ttl), "--poll", str(poll),
@@ -38,7 +41,10 @@ def start_runner(cluster_dir: str, runner_id: str, *, lease_ttl: float = 2.0,
         cmd += ["--defer", str(defer)]
     if once:
         cmd.append("--once")
-    return subprocess.Popen(cmd, env=runner_env(),
+    env = runner_env()
+    if extra_env:
+        env.update(extra_env)
+    return subprocess.Popen(cmd, env=env,
                             stdout=subprocess.PIPE, stderr=subprocess.STDOUT)
 
 
@@ -92,6 +98,28 @@ def make_recipe(src: str, out: str, *, slow_delay: float = 0.02,
         "dataset_path": src,
         "export_path": out,
         "process": process,
+        "use_fusion": False,
+        "use_reordering": False,
+    }
+
+
+def make_sharded_recipe(src: str, out: str, *, shards: int = 3,
+                        streaming: str = "exact", min_len: int = 20) -> Dict:
+    """Recipe for intra-job scale-out tests: a cheap mapper prefix, a
+    STREAMING minhash dedup (the band-partitioned shard core), then a
+    suffix filter that runs after the reconciliation barrier. Exact mode
+    must be byte-identical to the unsharded run."""
+    return {
+        "name": "cluster-sharded-job",
+        "dataset_path": src,
+        "export_path": out,
+        "shards": shards,
+        "process": [
+            {"name": "whitespace_normalization_mapper"},
+            {"name": "document_minhash_deduplicator",
+             "jaccard_threshold": 0.7, "streaming": streaming},
+            {"name": "text_length_filter", "min_val": min_len},
+        ],
         "use_fusion": False,
         "use_reordering": False,
     }

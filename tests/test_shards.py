@@ -1,0 +1,321 @@
+"""Intra-job scale-out (repro.api.shards + repro.core.dedup.sharded):
+shard-task protocol units, in-process sharded execution vs the unsharded
+oracle (dedup/chain/barrier modes, byte identity), band-partitioned reduce
+idempotence, the zero-copy columnar hand-off in ShardedEngine, the
+observability surfaces, and the N-shard SIGKILL failover suite."""
+import json
+import os
+import time
+
+import pytest
+
+from repro.api import shards as shards_mod
+from repro.api.cluster import ClusterQueue, ClusterRunner
+from repro.api.shards import (
+    finalize_task_id, is_shard_task, map_task_id, parent_of, reduce_task_id,
+    shard_ranges, split_plan, task_sort_key,
+)
+from cluster_harness import (
+    checkpoint_stages, make_sharded_recipe, reference_output, sigkill_runner,
+    start_runner, stop_runner, wait_for, write_corpus,
+)
+
+
+# ---------------------------------------------------------------------------
+# protocol units (no execution)
+# ---------------------------------------------------------------------------
+
+
+def test_task_id_helpers_and_sort_key():
+    assert map_task_id("j", 2) == "j~s2"
+    assert reduce_task_id("j", 0) == "j~r0"
+    assert finalize_task_id("j") == "j~fin"
+    assert is_shard_task("j~s0") and is_shard_task("j~fin")
+    assert not is_shard_task("plain-job")
+    assert parent_of("j~s0") == parent_of("j~r1") == parent_of("j~fin") == "j"
+    ids = ["j~fin", "j~r1", "j~s10", "j~s2", "j~r0", "j~s0"]
+    assert sorted(ids, key=task_sort_key) == \
+        ["j~s0", "j~s2", "j~s10", "j~r0", "j~r1", "j~fin"], \
+        "maps before reduces before finalize, numeric within kind"
+
+
+def test_shard_ranges_cover_contiguously():
+    for n_rows, n_shards in [(10, 3), (7, 7), (100, 4), (5, 2), (1, 1)]:
+        ranges = shard_ranges(n_rows, n_shards)
+        assert ranges[0][0] == 0 and ranges[-1][1] == n_rows
+        for (a, b), (c, d) in zip(ranges, ranges[1:]):
+            assert b == c and a < b and c < d, \
+                "ranges must be contiguous, ordered, non-empty"
+
+
+def test_split_plan_classifies_modes():
+    dd = split_plan([
+        {"name": "whitespace_normalization_mapper"},
+        {"name": "document_minhash_deduplicator", "streaming": "exact"},
+        {"name": "text_length_filter", "min_val": 1},
+    ])
+    assert dd == {"mode": "dedup", "n_prefix": 1}
+    ch = split_plan([
+        {"name": "whitespace_normalization_mapper"},
+        {"name": "text_length_filter", "min_val": 1},
+    ])
+    assert ch["mode"] == "chain"
+    ba = split_plan([
+        {"name": "whitespace_normalization_mapper"},
+        {"name": "exact_text_deduplicator"},
+    ])
+    assert ba == {"mode": "barrier", "n_prefix": 1}
+
+
+# ---------------------------------------------------------------------------
+# in-process sharded execution == unsharded oracle
+# ---------------------------------------------------------------------------
+
+
+def _drain(cluster_dir, runner_id="r0", max_steps=100):
+    """Single in-process runner drains the queue (parent supervises its own
+    shard tasks inline — the single-runner liveness guarantee)."""
+    runner = ClusterRunner(cluster_dir, runner_id=runner_id,
+                           lease_ttl=30.0, poll=0.05)
+    for _ in range(max_steps):
+        if not runner.run_once():
+            return
+    raise AssertionError("queue did not drain")
+
+
+def _run_sharded(tmp_path, recipe, tag="job"):
+    cdir = str(tmp_path / f"cluster-{tag}")
+    q = ClusterQueue(cdir)
+    jid = q.submit(recipe)
+    _drain(cdir)
+    st = q.status(jid, verbose=True)
+    assert st["state"] == "succeeded", st.get("error")
+    with open(recipe["export_path"], "rb") as f:
+        return f.read(), q, jid, st
+
+
+def test_sharded_dedup_exact_byte_identical(tmp_path):
+    src = write_corpus(str(tmp_path / "in.jsonl"), n=120)
+    recipe = make_sharded_recipe(src, str(tmp_path / "out.jsonl"), shards=3)
+    ref = reference_output(recipe, str(tmp_path / "ref.jsonl"))
+    out, q, jid, st = _run_sharded(tmp_path, recipe)
+    assert out == ref, "sharded exact dedup must be byte-identical"
+
+    # observability: per-shard rows on the verbose status + the overview
+    rows = st["shards"]
+    kinds = [r["kind"] for r in rows]
+    assert kinds.count("map") == 3 and kinds.count("reduce") >= 1
+    assert kinds[-1] == "finalize"
+    assert all(r["state"] == "succeeded" and r["attempt"] == 1 for r in rows)
+    assert jid in q.overview()["sharded"]
+    # the parent report records the shard fan-out
+    sharded = st["report"]["sharded"]
+    assert sharded["n_shards"] == 3 and sharded["mode"] == "dedup"
+
+    # shard tasks are plumbing: hidden from the user-facing job list
+    assert q.job_ids() == [jid]
+    assert len(q.job_ids(include_shards=True)) == len(rows) + 1
+
+
+@pytest.mark.parametrize("mode", ["chain", "barrier"])
+def test_sharded_chain_and_barrier_byte_identical(tmp_path, mode):
+    src = write_corpus(str(tmp_path / "in.jsonl"), n=140, seed=1)
+    process = [{"name": "whitespace_normalization_mapper"}]
+    if mode == "barrier":
+        process.append({"name": "exact_text_deduplicator"})
+    process.append({"name": "text_length_filter", "min_val": 20})
+    recipe = {
+        "name": f"{mode}-job", "dataset_path": src,
+        "export_path": str(tmp_path / "out.jsonl"), "shards": 4,
+        "process": process, "use_fusion": False, "use_reordering": False,
+    }
+    ref = reference_output(recipe, str(tmp_path / "ref.jsonl"))
+    out, _, _, st = _run_sharded(tmp_path, recipe, tag=mode)
+    assert out == ref, f"sharded {mode} must splice parts byte-identically"
+    assert st["report"]["sharded"]["mode"] == mode
+
+
+@pytest.mark.parametrize("streaming", ["keep_first", "windowed"])
+def test_sharded_relaxed_modes_match_exact_keep_set(tmp_path, streaming):
+    """Sharded keep_first/windowed run behind the reconciliation barrier, so
+    emit decisions see the COMPLETE pair set: the kept texts equal the exact
+    keep set (order preserved), a strictly stronger guarantee than the
+    single-runner keep_first superset contract."""
+    src = write_corpus(str(tmp_path / "in.jsonl"), n=120, seed=2)
+    recipe = make_sharded_recipe(src, str(tmp_path / "out.jsonl"),
+                                 shards=3, streaming=streaming)
+    exact = dict(recipe, streaming=None,
+                 process=[dict(c) for c in recipe["process"]])
+    exact["process"][1] = dict(exact["process"][1], streaming="exact")
+    ref = reference_output(exact, str(tmp_path / "ref.jsonl"))
+    out, _, _, _ = _run_sharded(tmp_path, recipe, tag=streaming)
+    texts = lambda b: [json.loads(l)["text"]
+                       for l in b.decode().splitlines() if l]
+    assert texts(out) == texts(ref)
+
+
+def test_shards_clamp_and_single_shard_fallback(tmp_path):
+    """shards > n_rows clamps; shards<=1 (or a non-file source) falls back
+    to the plain single-runner path with no shard tasks published."""
+    src = write_corpus(str(tmp_path / "tiny.jsonl"), n=3)
+    recipe = make_sharded_recipe(src, str(tmp_path / "out.jsonl"), shards=8)
+    ref = reference_output(recipe, str(tmp_path / "ref.jsonl"))
+    out, q, jid, _ = _run_sharded(tmp_path, recipe, tag="clamp")
+    assert out == ref
+    n_maps = sum(1 for t in q.job_ids(include_shards=True) if "~s" in t)
+    assert 0 < n_maps <= 3, "shards must clamp to the row count"
+
+    recipe1 = make_sharded_recipe(src, str(tmp_path / "out1.jsonl"), shards=1)
+    out1, q1, jid1, st1 = _run_sharded(tmp_path, recipe1, tag="one")
+    assert out1 == ref
+    assert q1.job_ids(include_shards=True) == [jid1], \
+        "shards=1 must not publish shard tasks"
+    assert "sharded" not in (st1["report"] or {})
+
+
+def test_reduce_task_is_idempotent(tmp_path):
+    """Zombie-replay safety: re-running a reduce over the published map
+    state must reproduce the identical pairs file (atomic replace of
+    deterministic content — a stale attempt can never corrupt a result)."""
+    src = write_corpus(str(tmp_path / "in.jsonl"), n=120)
+    recipe = make_sharded_recipe(src, str(tmp_path / "out.jsonl"), shards=3)
+    _, q, jid, st = _run_sharded(tmp_path, recipe, tag="idem")
+    from repro.core.dedup import sharded as core
+
+    sd = os.path.join(q.checkpoint_dir(jid), "shards")
+    with open(os.path.join(sd, "shardmeta.json")) as f:
+        meta = json.load(f)
+    with open(core.pairs_path(sd, 0), "rb") as f:
+        before = f.read()
+    rep = core.run_reduce(sd, 0, meta["n_shards"], meta["n_reducers"],
+                          meta["dedup"]["num_bands"],
+                          meta["dedup"]["jaccard_threshold"])
+    assert rep["owner"] == 0 and rep["n_docs"] == 120
+    with open(core.pairs_path(sd, 0), "rb") as f:
+        assert f.read() == before, "replayed reduce must be byte-identical"
+
+
+# ---------------------------------------------------------------------------
+# zero-copy columnar hand-off (ShardedEngine fast path)
+# ---------------------------------------------------------------------------
+
+
+def test_sharded_engine_zero_copy_columnar_byte_identical(tmp_path, monkeypatch):
+    """A fully column-capable chain must take the zero-copy path (ColumnBlock
+    columns flow into the vectorized ops without the row-shim decode) and
+    still export byte-identically to the row-path local run."""
+    from repro.core.engine import ShardedEngine
+    from repro.core.executor import Executor
+    from repro.core.recipes import Recipe
+
+    src = write_corpus(str(tmp_path / "in.jsonl"), n=200, seed=3)
+    # every op must be column-capable: the hand-off is all-or-nothing (a
+    # partial columnar prefix would strand rows between representations)
+    process = [
+        {"name": "text_length_filter", "min_len": 5, "max_len": 10000},
+        {"name": "alnum_ratio_filter", "min_ratio": 0.1},
+    ]
+
+    def run(tag, fmt, engine):
+        out = str(tmp_path / f"out-{tag}.jsonl")
+        r = Recipe(name=tag, dataset_path=src, export_path=out,
+                   process=[dict(c) for c in process], engine=engine,
+                   block_format=fmt, block_bytes=8 * 1024,
+                   use_fusion=False, use_reordering=False)
+        Executor(r).run_streaming(materialize=False)
+        with open(out, "rb") as f:
+            return f.read()
+
+    ref = run("row-ref", "row", "local")
+
+    hits = {"n": 0}
+    orig = ShardedEngine._full_columnar
+
+    def counting(self, ops, blk):
+        res = orig(self, ops, blk)
+        if res is not None:
+            hits["n"] += 1
+        return res
+
+    monkeypatch.setattr(ShardedEngine, "_full_columnar", counting)
+    got = run("col-sharded", "columnar", "sharded")
+    assert got == ref, "zero-copy hand-off must not change export bytes"
+    assert hits["n"] > 0, "column-capable chain must take the zero-copy path"
+
+
+# ---------------------------------------------------------------------------
+# fault injection: SIGKILL one of N shard runners mid-dedup
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_sigkill_shard_runner_failover_byte_identical(tmp_path):
+    """The sharded acceptance scenario: a lead runner supervises the shard
+    DAG while a second runner (slowed inside the dedup map by the injected
+    per-block delay) holds one map shard's lease. SIGKILL the victim
+    mid-dedup: its lease expires, the lead re-claims that shard at attempt
+    2 and resumes from the prefix segment checkpoint (resumed_at > 0 on
+    exactly that shard), and the merged export is byte-identical to an
+    uninterrupted unsharded run."""
+    src = write_corpus(str(tmp_path / "corpus.jsonl"), n=120)
+    out = str(tmp_path / "out.jsonl")
+    recipe = make_sharded_recipe(src, out, shards=3)
+    # a small per-row sleep in the prefix keeps maps claimable long enough
+    # for the late-starting victim to win one
+    recipe["process"].insert(1, {"name": "sleep_mapper", "delay": 0.05})
+    ref = reference_output(recipe, str(tmp_path / "ref.jsonl"))
+
+    q = ClusterQueue(str(tmp_path / "cluster"), lease_ttl=2.0)
+    jid = q.submit(recipe)
+    lead = start_runner(q.dir, "lead", lease_ttl=2.0)
+    victim = None
+    try:
+        wait_for(lambda: q.current_lease(jid) is not None, 60,
+                 message="parent claim")
+        wait_for(lambda: len(q.shard_tasks(jid)) >= 3, 60,
+                 message="shard tasks published")
+        from repro.core.dedup.sharded import MAP_DELAY_ENV
+
+        victim = start_runner(q.dir, "victim", lease_ttl=2.0,
+                              extra_env={MAP_DELAY_ENV: "30"})
+
+        def victim_map_task():
+            for t in q.shard_tasks(jid):
+                if "~s" in t:
+                    lease = q.current_lease(t)
+                    if lease is not None and lease.runner_id == "victim":
+                        return t
+            return None
+
+        wait_for(lambda: victim_map_task() is not None, 60,
+                 message="victim claims a map shard")
+        vt = victim_map_task()
+        # mid-dedup: the prefix segment checkpoint exists, the map state is
+        # sleeping inside the injected per-block delay
+        wait_for(lambda: len(checkpoint_stages(q, vt)) >= 1, 60,
+                 message="victim prefix checkpoint")
+        time.sleep(0.2)
+        sigkill_runner(victim)
+        victim = None
+
+        wait_for(lambda: q.state_of(jid) == "succeeded", 180,
+                 message="sharded failover completion")
+        with open(out, "rb") as f:
+            assert f.read() == ref, \
+                "merged export must be byte-identical after shard failover"
+
+        rows = {r["task_id"]: r for r in q.shard_rows(jid)}
+        assert rows[vt]["attempt"] == 2, "killed shard must be re-leased"
+        assert rows[vt]["resumed_at"] > 0, \
+            "re-claimed shard must resume from its checkpoint, not restart"
+        for tid, r in rows.items():
+            if tid != vt and r["kind"] == "map":
+                assert r["attempt"] == 1, "surviving shards must not re-run"
+        assert all(r["state"] == "succeeded" for r in rows.values())
+    finally:
+        for p in (lead, victim):
+            if p is not None:
+                try:
+                    stop_runner(p)
+                except Exception:
+                    pass

@@ -232,6 +232,39 @@ def test_keep_first_containment_property():
     check()
 
 
+def test_windowed_containment_property():
+    """Windowed keep-first sits between exact and keep_first: a bounded
+    retroactive-merge horizon can only IMPROVE on keep_first (later pair
+    evidence arrives before the emit decision) while never dropping a doc
+    exact keeps — and an unbounded window degenerates to the exact keep
+    set (emit decisions see the full union-find)."""
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    vocab = ["alpha", "beta", "gamma", "delta", "eps", "zeta", "eta", "theta"]
+    doc = st.lists(st.sampled_from(vocab), min_size=0, max_size=12).map(" ".join)
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.lists(doc, min_size=0, max_size=30),
+           st.integers(min_value=0, max_value=12))
+    def check(texts, window):
+        kw = dict(n_perm=16, n_bands=4, ngram=3, jaccard_threshold=0.4,
+                  super_batch=5)
+        keep_mask, _ = minhash_dedup_indices(
+            texts, n_perm=16, n_bands=4, ngram=3, jaccard_threshold=0.4)
+        exact = {i for i in range(len(texts)) if keep_mask[i]}
+        kf = set(run_state(texts, exact=False, **kw))
+        wi = run_state(texts, windowed=True, window=window, **kw)
+        assert wi == sorted(wi), "windowed must preserve arrival order"
+        assert exact <= set(wi) <= kf, \
+            f"containment violated at window={window}"
+        # unbounded horizon == exact keep set (decisions see all pairs)
+        full = run_state(texts, windowed=True, window=len(texts) + 1, **kw)
+        assert set(full) == exact
+
+    check()
+
+
 # ---------------------------------------------------------------------------
 # end-to-end through Executor.run
 # ---------------------------------------------------------------------------
