@@ -16,11 +16,13 @@ dispatch/IPC amortization, not multi-worker scaling.
 """
 from __future__ import annotations
 
+import json
 import os
 import tempfile
 import tracemalloc
 
 from benchmarks.common import emit, run_forked, timeit
+from repro.core import obs
 from repro.core.executor import Executor
 from repro.core.recipes import Recipe
 from repro.core.storage import iter_sample_blocks, write_jsonl
@@ -158,6 +160,35 @@ def run(n: int = 4000, quick: bool = False):
         f"streaming speedup {results['parallel']:.2f}x < {MIN_SPEEDUP}x")
     if not quick:  # quick-mode corpora are too small for a stable mem margin
         assert peak_s < peak_b, "streaming peak memory must be lower"
+
+    # tracing overhead: same streaming run with obs off vs. on. Spans are
+    # bounded dicts + one lock per block, so the budget is <=5% (paper-style
+    # always-on observability only earns its keep if it is ~free). The small
+    # absolute floor absorbs scheduler noise on sub-second quick runs.
+    obs.disable()
+    try:
+        t_off = timeit(
+            lambda: Executor(_recipe(src, out_s, block_bytes, "local")).run(),
+            repeat=REPEAT)
+    finally:
+        obs.enable()
+    t_on = timeit(
+        lambda: Executor(_recipe(src, out_s, block_bytes, "local")).run(),
+        repeat=REPEAT)
+    _, rep_tr = Executor(_recipe(src, out_s, block_bytes, "parallel")).run()
+    trace = rep_tr.trace or {}
+    spans = trace.get("spans") or []
+    assert spans, "traced run must surface spans on RunReport.trace"
+    trace_path = os.path.join(os.getcwd(), "TRACE_streaming.json")
+    with open(trace_path, "w", encoding="utf-8") as f:
+        json.dump(obs.chrome_trace(spans), f)
+    overhead = t_on / max(t_off, 1e-9)
+    emit("tracing_overhead", t_on - t_off,
+         f"off={t_off:.3f}s on={t_on:.3f}s {overhead:.3f}x "
+         f"(budget <=1.05x), {len(spans)} spans -> {trace_path}")
+    assert t_on <= t_off * 1.05 + 0.05, (
+        f"tracing overhead {overhead:.3f}x blows the 5% budget "
+        f"(on={t_on:.3f}s off={t_off:.3f}s)")
     return results
 
 

@@ -58,6 +58,8 @@ import time
 import uuid
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
+from repro.core import clock, obs
+from repro.core.dispatch import aggregate_dispatch
 from repro.core.storage import json_dumps, json_loads
 
 # job states mirrored from repro.api.jobs.JobState (no import cycle)
@@ -137,7 +139,7 @@ class Lease:
     ttl: float
 
     def expired(self, now: Optional[float] = None) -> bool:
-        return (now if now is not None else time.time()) > self.deadline
+        return (now if now is not None else clock.now()) > self.deadline
 
 
 class PlacementPolicy:
@@ -199,7 +201,7 @@ class ClusterQueue:
     """Durable shared-store job queue (see module docstring for protocol)."""
 
     SUBDIRS = ("queue", "claims", "results", "progress", "cancel",
-               "runners", "health", "checkpoints")
+               "runners", "health", "checkpoints", "obs")
 
     def __init__(self, cluster_dir: str, lease_ttl: float = DEFAULT_LEASE_TTL,
                  runner_ttl: float = DEFAULT_RUNNER_TTL):
@@ -236,6 +238,11 @@ class ClusterQueue:
     def health_path(self, runner_id: str) -> str:
         return self._p("health", f"{runner_id}.json")
 
+    def obs_dir(self) -> str:
+        """Per-process span/metrics spill files land here (core.obs);
+        ``merge_trace(obs_dir, trace_id)`` is the driver-side merge."""
+        return self._p("obs")
+
     # ------------------------------------------------------------------
     # event log
     # ------------------------------------------------------------------
@@ -244,7 +251,7 @@ class ClusterQueue:
         concurrent single-line appends from interleaving; fsync makes the
         record durable before the caller proceeds (a claim that is not on
         disk is a claim a failover reader never saw)."""
-        rec = json_dumps({"ts": time.time(), "event": event, **fields})
+        rec = json_dumps({"ts": clock.now(), "event": event, **fields})
         fd = os.open(self._p("log.jsonl"),
                      os.O_WRONLY | os.O_APPEND | os.O_CREAT, 0o644)
         try:
@@ -283,12 +290,18 @@ class ClusterQueue:
         job_id = job_id or uuid.uuid4().hex[:12]
         if os.path.exists(self.spec_path(job_id)):
             raise ValueError(f"job id {job_id!r} already exists")
-        _write_json_atomic(self.spec_path(job_id), {
+        spec = {
             "job_id": job_id,
             "recipe": dict(recipe),
-            "submitted_at": time.time(),
+            "submitted_at": clock.now(),
             **(extra or {}),
-        })
+        }
+        if "trace" not in spec:
+            # trace minted at submit: every runner/shard span of this job's
+            # lifetime roots at root_span (core.obs). Shard tasks pass their
+            # own trace via extra so the parent's trace_id is preserved.
+            spec["trace"] = {"trace_id": obs.new_id(), "root_span": obs.new_id()}
+        _write_json_atomic(self.spec_path(job_id), spec)
         self.log_event("submitted", job_id=job_id)
         return job_id
 
@@ -430,6 +443,13 @@ class ClusterQueue:
                 "per_op": rows,
                 "ops_started": sum(1 for r in rows if r.get("in", 0) > 0),
                 "ops_total": len(rows),
+                # dispatcher counters (parity with single-node Job.status):
+                # from the final report when terminal, else the live per-op
+                # redispatch column is all that has crossed the heartbeat
+                "dispatch": aggregate_dispatch(
+                    (result.get("report") or {}).get("dispatch")
+                    or [{"redispatches": sum(
+                        int(r.get("redispatches", 0) or 0) for r in rows)}]),
             }
             if result.get("report") is not None:
                 out["report"] = result["report"]
@@ -521,7 +541,7 @@ class ClusterQueue:
     def write_card(self, card: Dict[str, Any]) -> None:
         _write_json_atomic(
             self._p("runners", f"{card['runner_id']}.json"),
-            {**card, "alive_at": time.time()})
+            {**card, "alive_at": clock.now()})
 
     def runner_cards(self, live_only: bool = True) -> List[Dict[str, Any]]:
         cards: List[Dict[str, Any]] = []
@@ -529,7 +549,7 @@ class ClusterQueue:
             names = os.listdir(self._p("runners"))
         except FileNotFoundError:
             return cards
-        now = time.time()
+        now = clock.now()
         for n in names:
             if not n.endswith(".json"):
                 continue
@@ -556,7 +576,7 @@ class ClusterQueue:
         attempt = 1 if prev is None else prev.attempt + 1
         ttl = ttl or self.lease_ttl
         lease = Lease(job_id=job_id, runner_id=runner_id, attempt=attempt,
-                      deadline=time.time() + ttl, ttl=ttl)
+                      deadline=clock.now() + ttl, ttl=ttl)
         path = self.claim_path(job_id, attempt)
         try:
             # O_EXCL: the one coordination primitive a shared POSIX
@@ -585,7 +605,7 @@ class ClusterQueue:
         is only decoded for jobs that are actually claimable."""
         policy = policy or PlacementPolicy()
         cards = self.runner_cards()
-        now = time.time()
+        now = clock.now()
         results = self._result_ids()
         cancelled = self._cancel_ids()
         claims = self._claims_by_job()
@@ -623,7 +643,7 @@ class ClusterQueue:
         if os.path.exists(self.result_path(lease.job_id)):
             return False
         lease.ttl = ttl or lease.ttl
-        lease.deadline = time.time() + lease.ttl
+        lease.deadline = clock.now() + lease.ttl
         _write_json_atomic(self.claim_path(lease.job_id, lease.attempt),
                            dataclasses.asdict(lease))
         return True
@@ -661,15 +681,53 @@ class ClusterQueue:
         payload: Dict[str, Any] = {
             "job_id": lease.job_id, "state": state,
             "runner_id": lease.runner_id, "attempt": lease.attempt,
-            "started_at": started_at, "finished_at": time.time(),
+            "started_at": started_at, "finished_at": clock.now(),
             "error": error, "report": report,
         }
         if progress is not None:
             payload["progress"] = {"per_op": _sanitize_rows(progress)}
         _write_json_atomic(self.result_path(lease.job_id), payload)
+        # enrich the finished event with throughput + dispatch counters so
+        # the SLO view (api.slo) computes per-runner rows/s and preemption
+        # counts straight from log.jsonl, no result-file scans
+        rep = report or {}
+        disp = aggregate_dispatch(rep.get("dispatch") or ())
         self.log_event("finished", job_id=lease.job_id, state=state,
-                       runner_id=lease.runner_id, attempt=lease.attempt)
+                       runner_id=lease.runner_id, attempt=lease.attempt,
+                       n_out=rep.get("n_out"), seconds=rep.get("seconds"),
+                       redispatches=disp["redispatches"],
+                       preempted=disp["preempted"])
+        self._emit_root_span(lease, state, rep)
         return True
+
+    def _emit_root_span(self, lease: Lease, state: str,
+                        report: Dict[str, Any]) -> None:
+        """Write the job's root span to the cluster obs spill. Only the
+        ACCEPTED complete() emits it (stale attempts return before reaching
+        here), so failover yields exactly one root per job — every lease /
+        run / shard span parents into it by id."""
+        if not obs.enabled():
+            return
+        try:
+            spec = self.read_spec(lease.job_id)
+        except KeyError:
+            return
+        tr = spec.get("trace") or {}
+        if not tr.get("trace_id") or not tr.get("root_span"):
+            return
+        t0 = spec.get("submitted_at") or clock.now()
+        root = {
+            "trace_id": tr["trace_id"], "span_id": tr["root_span"],
+            "parent_id": tr.get("parent_span"), "name": f"job:{lease.job_id}",
+            "kind": "job", "t0": t0, "dur": max(0.0, clock.now() - t0),
+            "pid": os.getpid(), "tid": 0,
+            "attrs": {"state": state, "runner_id": lease.runner_id,
+                      "attempt": lease.attempt,
+                      "n_out": report.get("n_out")},
+        }
+        obs.configure(self.obs_dir())
+        obs.record_span_dict(root)
+        obs.flush()
 
     # ------------------------------------------------------------------
     # overview (GET /cluster, cli cluster-status)
@@ -677,7 +735,7 @@ class ClusterQueue:
     def overview(self) -> Dict[str, Any]:
         states: Dict[str, int] = {}
         leases: List[Dict[str, Any]] = []
-        now = time.time()
+        now = clock.now()
         for jid in self.job_ids():
             st = self.state_of(jid)
             states[st] = states.get(st, 0) + 1
@@ -768,11 +826,16 @@ class ClusterRunner:
         self.queue.write_card(self._card())
 
     # ------------------------------------------------------------------
-    def _build_executor(self, job_id: str, spec: Dict[str, Any]):
+    def _build_executor(self, job_id: str, spec: Dict[str, Any],
+                        trace: Optional[Dict[str, Any]] = None):
         from repro.core.executor import Executor
         from repro.core.recipes import Recipe
 
         recipe = Recipe.from_dict(spec.get("recipe") or {})
+        if trace is not None:
+            # run span parents under this lease's span — failover attempts
+            # re-parent under their own lease span, same trace id
+            recipe.trace = trace
         # failover resume: checkpoints live in the SHARED dir, keyed by job,
         # so a surviving runner resumes the dead runner's segments
         recipe.checkpoint_dir = recipe.checkpoint_dir or self.queue.checkpoint_dir(job_id)
@@ -802,7 +865,7 @@ class ClusterRunner:
             return rec["plan"]
         plan = Executor(recipe).resolve_plan()
         _write_json_atomic(path, {"job_id": job_id, "plan": plan,
-                                  "pinned_at": time.time()})
+                                  "pinned_at": clock.now()})
         self.queue.log_event("plan_pinned", job_id=job_id,
                              runner_id=self.runner_id, n_ops=len(plan))
         return plan
@@ -812,7 +875,7 @@ class ClusterRunner:
 
         queue = self.queue
         job_id = lease.job_id
-        started_at = time.time()
+        started_at = clock.now()
         monitor: List[dict] = []
         cancel_event = threading.Event()
         lease_lost = threading.Event()
@@ -847,8 +910,24 @@ class ClusterRunner:
                               name=f"dj-lease-hb-{job_id}")
         hb.start()
         state, report, error = FAILED, None, None
+        lease_span = None
         try:
             spec = queue.read_spec(job_id)
+            tr = spec.get("trace") or {}
+            if tr.get("trace_id"):
+                # lease span: one per (job, attempt). The spill dir is the
+                # shared cluster obs dir, so a SIGKILL'd attempt's flushed
+                # spans and the failover attempt's spans merge driver-side.
+                obs.configure(queue.obs_dir())
+                lease_span = obs.start_span(
+                    tr["trace_id"], f"lease:{job_id}", kind="lease",
+                    parent_id=tr.get("root_span"))
+                if lease_span is not None:
+                    lease_span.set(runner_id=self.runner_id,
+                                   attempt=lease.attempt)
+            run_trace = ({"trace_id": tr["trace_id"],
+                          "span_id": lease_span.span_id}
+                         if lease_span is not None else None)
             shard = spec.get("shard") or {}
             kind = shard.get("kind")
             if kind == "reduce":
@@ -861,13 +940,13 @@ class ClusterRunner:
                 report = shards_mod.run_finalize_task(
                     self, spec, monitor=monitor, cancel=cancel_event.is_set)
             else:
-                recipe_shards = int(
-                    (spec.get("recipe") or {}).get("shards") or 0)
-                if not kind and recipe_shards > 1:
+                from repro.api import shards as shards_mod
+
+                if not kind and shards_mod.wants_sharding(
+                        (spec.get("recipe") or {}).get("shards")):
                     # sharded parent job: this lease supervises the shard
                     # DAG (api.shards); None means sharding degenerated —
                     # fall through to the ordinary single-runner path
-                    from repro.api import shards as shards_mod
                     from repro.core.recipes import Recipe
 
                     report = shards_mod.run_sharded(
@@ -875,7 +954,8 @@ class ClusterRunner:
                         Recipe.from_dict(spec.get("recipe") or {}),
                         monitor, cancel_event, lease_lost)
                 if report is None:
-                    executor = self._build_executor(job_id, spec)
+                    executor = self._build_executor(job_id, spec,
+                                                    trace=run_trace)
                     # run_streaming (not run): segment-boundary checkpoints
                     # are the failover-resume unit; materialize=False keeps
                     # the runner's memory bounded — output streams to the
@@ -883,6 +963,11 @@ class ClusterRunner:
                     _, rep = executor.run_streaming(
                         materialize=False, monitor=monitor,
                         cancel=cancel_event.is_set)
+                    # the run's spans go to the shared spill; the report
+                    # keeps only the ids (result payloads stay small)
+                    run_tr = rep.trace or {}
+                    for s in run_tr.get("spans") or ():
+                        obs.record_span_dict(s)
                     report = {
                         "recipe": rep.recipe, "n_in": rep.n_in,
                         "n_out": rep.n_out,
@@ -890,6 +975,10 @@ class ClusterRunner:
                         "errors": rep.errors, "streaming": rep.streaming,
                         "resumed_at": rep.resumed_at,
                         "dispatch": list(rep.dispatch or ()),
+                        "trace": {"trace_id": run_tr.get("trace_id"),
+                                  "root_span": run_tr.get("root_span"),
+                                  "n_spans": len(run_tr.get("spans") or ())}
+                                 if run_tr else None,
                     }
             state = SUCCEEDED
             secs = float(report.get("seconds") or 0.0)
@@ -926,6 +1015,13 @@ class ClusterRunner:
                 self.jobs_done += 1
                 queue.complete(lease, state, report=report, error=error,
                                started_at=started_at, progress=monitor)
+            if lease_span is not None:
+                lease_span.set(state=state, owned=owned).end()
+                try:
+                    obs.flush()
+                    obs.flush_metrics(queue.obs_dir())
+                except OSError:
+                    pass  # telemetry must never fail a job
             with self._lock:
                 self._active.pop(job_id, None)
             self.publish_card()
@@ -950,7 +1046,7 @@ class ClusterRunner:
         slots are free."""
         last_card = 0.0
         while not (stop and stop()):
-            now = time.time()
+            now = clock.now()
             if now - last_card >= max(0.5, self.queue.runner_ttl / 3.0):
                 self.publish_card()
                 last_card = now
@@ -973,8 +1069,8 @@ class ClusterRunner:
 
     def drain(self, timeout: float = 30.0) -> None:
         """Wait for in-flight jobs (shutdown path for in-process runners)."""
-        deadline = time.time() + timeout
-        while time.time() < deadline:
+        deadline = clock.now() + timeout
+        while clock.now() < deadline:
             with self._lock:
                 threads = list(self._active.values())
             threads = [t for t in threads

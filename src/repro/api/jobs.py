@@ -36,7 +36,9 @@ import uuid
 from collections import OrderedDict
 from typing import Any, Dict, List, Optional
 
+from repro.core import clock, obs
 from repro.core.dataset import ExecutionCancelled
+from repro.core.dispatch import aggregate_dispatch
 from repro.core.storage import json_dumps, json_loads
 
 
@@ -97,21 +99,39 @@ class Job:
             rows = [dict(r) for r in list(self.monitor)]
             for r in rows:
                 r["speed"] = _json_num(r.get("speed", 0.0))
+            rep = self.report
+            disp = (rep.get("dispatch") if isinstance(rep, dict)
+                    else getattr(rep, "dispatch", None)) if rep is not None else None
             out["progress"] = {
                 "per_op": rows,
                 "ops_started": sum(1 for r in rows if r["in"] > 0),
                 "ops_total": len(rows),
+                # same shape as cluster-mode status(): final report counters
+                # when done, live per-op redispatches while running
+                "dispatch": aggregate_dispatch(
+                    disp or [{"redispatches": sum(
+                        int(r.get("redispatches", 0) or 0) for r in rows)}]),
             }
             if self.report is not None:
                 rep = self.report
-                out["report"] = rep if isinstance(rep, dict) else {
-                    "recipe": rep.recipe, "n_in": rep.n_in, "n_out": rep.n_out,
-                    "seconds": rep.seconds, "plan": rep.plan,
-                    "errors": rep.errors, "streaming": rep.streaming,
-                    # per-segment adaptive-dispatch summaries (redispatches,
-                    # quarantined workers, window) — docs/runtime.md
-                    "dispatch": list(getattr(rep, "dispatch", ()) or ()),
-                }
+                if isinstance(rep, dict):
+                    out["report"] = rep
+                else:
+                    tr = getattr(rep, "trace", None) or {}
+                    out["report"] = {
+                        "recipe": rep.recipe, "n_in": rep.n_in, "n_out": rep.n_out,
+                        "seconds": rep.seconds, "plan": rep.plan,
+                        "errors": rep.errors, "streaming": rep.streaming,
+                        # per-segment adaptive-dispatch summaries (redispatches,
+                        # quarantined workers, window) — docs/runtime.md
+                        "dispatch": list(getattr(rep, "dispatch", ()) or ()),
+                        # trace ids only — the spans themselves live in the
+                        # RunReport / obs spill, not the status payload
+                        "trace": {"trace_id": tr.get("trace_id"),
+                                  "root_span": tr.get("root_span"),
+                                  "n_spans": len(tr.get("spans") or ())}
+                                 if tr else None,
+                    }
         return out
 
 
@@ -240,7 +260,7 @@ class JobManager:
                 if job.state not in JobState.TERMINAL:
                     job.state = JobState.FAILED
                     job.error = "interrupted by server restart"
-                    job.finished_at = job.finished_at or time.time()
+                    job.finished_at = job.finished_at or clock.now()
                 self._jobs[job.id] = job
         # the restored store must honour the bound a smaller max_jobs imposes
         # (a restarted server may be configured tighter than the one that
@@ -309,7 +329,7 @@ class JobManager:
         with self._lock:
             if job.state == JobState.QUEUED:
                 job.state = JobState.CANCELLED
-                job.finished_at = time.time()
+                job.finished_at = clock.now()
         self._persist()
         return job
 
@@ -319,6 +339,24 @@ class JobManager:
         if self.cluster is None:
             return {"enabled": False}
         return self.cluster.overview()
+
+    def cluster_slo(self) -> Dict[str, Any]:
+        """GET /cluster/slo payload: queue-wait percentiles, per-runner
+        throughput, failover/preemption counts from the cluster event log.
+        ``enabled: False`` outside cluster mode."""
+        if self.cluster is None:
+            return {"enabled": False}
+        from repro.api.slo import cluster_slo
+
+        return cluster_slo(self.cluster.dir)
+
+    def metrics_snapshot(self) -> Dict[str, Any]:
+        """GET /metrics payload: this process's live registry, plus the
+        merged cross-process spills when running against a cluster dir."""
+        out: Dict[str, Any] = {"process": obs.metrics().snapshot()}
+        if self.cluster is not None:
+            out["cluster"] = obs.merged_metrics(self.cluster.obs_dir())
+        return out
 
     def shutdown(self, wait: bool = False) -> None:
         with self._lock:
@@ -361,10 +399,10 @@ class JobManager:
                     continue
                 if job.cancel_event.is_set():
                     job.state = JobState.CANCELLED
-                    job.finished_at = time.time()
+                    job.finished_at = clock.now()
                     continue
                 job.state = JobState.RUNNING
-                job.started_at = time.time()
+                job.started_at = clock.now()
             self._persist()
             try:
                 _, report = job.pipeline.execute(
@@ -377,5 +415,5 @@ class JobManager:
                 job.error = f"{type(e).__name__}: {e}"
                 job.state = JobState.FAILED
             finally:
-                job.finished_at = time.time()
+                job.finished_at = clock.now()
                 self._persist()

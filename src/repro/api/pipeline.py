@@ -169,11 +169,18 @@ class Pipeline:
     def checkpoint(self, checkpoint_dir: str) -> "Pipeline":
         return self.options(checkpoint_dir=checkpoint_dir)
 
-    def shards(self, n: int) -> "Pipeline":
+    def shards(self, n) -> "Pipeline":
         """Intra-job scale-out: when this pipeline is submitted to a
         ``ClusterQueue``, split the input into ``n`` row-range shards that
-        many runners execute cooperatively (``repro.api.shards``). Local
-        ``.execute()`` ignores it — sharding is a cluster-level protocol."""
+        many runners execute cooperatively (``repro.api.shards``). Pass
+        ``"auto"`` to let the lead runner pick the count from input size
+        and the live runner fleet at claim time (the decision is recorded
+        in the job trace). Local ``.execute()`` ignores it — sharding is a
+        cluster-level protocol."""
+        if isinstance(n, str):
+            if n.strip().lower() != "auto":
+                raise ValueError(f"shards must be an int or 'auto', got {n!r}")
+            return self.options(shards="auto")
         return self.options(shards=int(n))
 
     def insight(self, on: bool = True) -> "Pipeline":

@@ -45,11 +45,19 @@ import os
 import time
 from typing import Any, Dict, List, Optional, Tuple
 
+from repro.core import clock, obs
 from repro.api.cluster import (
     CANCELLED, FAILED, QUEUED, SUCCEEDED, TERMINAL, ClusterQueue, Lease,
     _read_json, _write_json_atomic,
 )
 from repro.core.recipes import Recipe
+
+# shards="auto" sizing targets (env-tunable): aim for shards of roughly
+# this many rows / bytes, capped by 2x the live runner fleet's capacity
+AUTO_TARGET_ROWS_ENV = "REPRO_SHARD_TARGET_ROWS"
+AUTO_TARGET_BYTES_ENV = "REPRO_SHARD_TARGET_BYTES"
+DEFAULT_AUTO_TARGET_ROWS = 50_000
+DEFAULT_AUTO_TARGET_BYTES = 64 << 20
 
 # streaming MinHash ops whose stateful stage shards.py knows how to partition
 MINHASH_STREAMING_OPS = (
@@ -131,6 +139,76 @@ def split_plan(plan_cfgs: List[Dict[str, Any]]) -> Dict[str, Any]:
     return {"mode": "chain", "n_prefix": n}
 
 
+def wants_sharding(shards: Any) -> bool:
+    """Whether a recipe's ``shards`` value requests the sharded path —
+    accepts ints, numeric strings, and ``"auto"``."""
+    if isinstance(shards, str):
+        s = shards.strip().lower()
+        if s == "auto":
+            return True
+        try:
+            return int(s) > 1
+        except ValueError:
+            return False
+    try:
+        return int(shards or 0) > 1
+    except (TypeError, ValueError):
+        return False
+
+
+def _env_int(name: str, default: int) -> int:
+    try:
+        return int(os.environ.get(name, "") or default)
+    except ValueError:
+        return default
+
+
+def resolve_shard_count(recipe: Recipe, n_rows: int,
+                        queue: Optional[ClusterQueue] = None
+                        ) -> Tuple[int, Optional[Dict[str, Any]]]:
+    """``(n_shards, decision)``. For explicit integer ``shards`` the decision
+    is None. For ``shards="auto"`` the count is picked from input row/byte
+    estimates and the live runner fleet, and the decision dict (inputs +
+    chosen value) is persisted in shardmeta and recorded as a span attribute
+    in the job trace (ISSUE 8 / ROADMAP carry-over). Accepts a Recipe or a
+    raw spec dict."""
+    if isinstance(recipe, dict):
+        shards, dataset_path = recipe.get("shards"), recipe.get("dataset_path")
+    else:
+        shards, dataset_path = recipe.shards, recipe.dataset_path
+    if not (isinstance(shards, str) and shards.strip().lower() == "auto"):
+        try:
+            return int(shards or 0), None
+        except (TypeError, ValueError):
+            return 0, None
+    target_rows = max(1, _env_int(AUTO_TARGET_ROWS_ENV,
+                                  DEFAULT_AUTO_TARGET_ROWS))
+    target_bytes = max(1, _env_int(AUTO_TARGET_BYTES_ENV,
+                                   DEFAULT_AUTO_TARGET_BYTES))
+    try:
+        est_bytes = os.path.getsize(dataset_path) if dataset_path else 0
+    except OSError:
+        est_bytes = 0
+    by_rows = -(-n_rows // target_rows) if n_rows else 1
+    by_bytes = -(-est_bytes // target_bytes) if est_bytes else 1
+    want = max(1, by_rows, by_bytes)
+    # cap by the fleet: ~2 shard tasks per live capacity slot keeps every
+    # runner busy through stragglers without flooding the queue
+    capacity = 0
+    if queue is not None:
+        for card in queue.runner_cards(live_only=True):
+            capacity += max(1, int(card.get("capacity", 1)))
+    cap = max(2, 2 * capacity) if capacity else want
+    chosen = max(1, min(want, cap))
+    decision = {
+        "requested": "auto", "n_rows": n_rows, "est_bytes": est_bytes,
+        "target_rows": target_rows, "target_bytes": target_bytes,
+        "by_rows": by_rows, "by_bytes": by_bytes,
+        "live_capacity": capacity, "cap": cap, "chosen": chosen,
+    }
+    return chosen, decision
+
+
 def count_rows(path: str) -> int:
     """Non-empty input lines == the row indices ``row_range`` slices over."""
     from repro.core.storage import _open_read_binary
@@ -174,7 +252,8 @@ def _ensure_meta(queue: ClusterQueue, job_id: str, recipe: Recipe,
     if meta is not None:
         return meta
     n_rows = count_rows(recipe.dataset_path)
-    n_shards = max(1, min(int(recipe.shards), n_rows or 1))
+    resolved, auto_decision = resolve_shard_count(recipe, n_rows, queue)
+    n_shards = max(1, min(resolved, n_rows or 1))
     if n_shards < 2:
         return None  # degenerate input: run unsharded
     dedup_cfg = None
@@ -188,6 +267,11 @@ def _ensure_meta(queue: ClusterQueue, job_id: str, recipe: Recipe,
         "n_prefix": split["n_prefix"], "n_reducers": n_reducers,
         "dedup": dedup_cfg,
     }
+    if auto_decision is not None:
+        # the auto-tuning decision is part of the stable shard metadata:
+        # a failover lead reuses it rather than re-deriving a different
+        # count from a changed fleet
+        meta["auto"] = auto_decision
     _write_json_atomic(path, meta)
     return meta
 
@@ -223,6 +307,9 @@ def _map_recipe(recipe: Recipe, meta: Dict[str, Any], k: int) -> Dict[str, Any]:
         # per-task checkpoints (runner assigns queue.checkpoint_dir(task_id))
         # make shard failover resume mid-plan, exactly like jobs do
         checkpoint_dir=None, insight=False,
+        # the task's own spec-level trace (not the parent recipe's) is what
+        # the executing runner threads into the run
+        trace=None,
     )
     return rd
 
@@ -242,18 +329,33 @@ def _submit_quiet(queue: ClusterQueue, spec: Dict[str, Any]) -> None:
 
 
 def publish_shard_tasks(queue: ClusterQueue, job_id: str, recipe: Recipe,
-                        meta: Dict[str, Any]) -> List[str]:
-    """Submit the shard-task DAG; returns every task id in execution order."""
+                        meta: Dict[str, Any],
+                        trace: Optional[Dict[str, Any]] = None) -> List[str]:
+    """Submit the shard-task DAG; returns every task id in execution order.
+
+    ``trace`` is the PARENT job's trace context: every shard task inherits
+    the parent's trace_id and roots its own span under the parent's root
+    span, so the whole DAG — including failed-over attempts — merges into
+    one trace (core.obs)."""
     n_shards, n_reducers = meta["n_shards"], meta["n_reducers"]
     mode = meta["mode"]
     base = recipe.to_dict()
-    base.update(shards=0)
+    base.update(shards=0, trace=None)
+
+    def task_trace() -> Dict[str, Any]:
+        if not trace or not trace.get("trace_id"):
+            return {}
+        return {"trace": {"trace_id": trace["trace_id"],
+                          "root_span": obs.new_id(),
+                          "parent_span": trace.get("root_span")}}
+
     map_ids = [map_task_id(job_id, k) for k in range(n_shards)]
     for k in range(n_shards):
         _submit_quiet(queue, {
             "job_id": map_ids[k], "recipe": _map_recipe(recipe, meta, k),
             "shard": {"parent": job_id, "kind": "map", "index": k,
                       "n_shards": n_shards, "mode": mode},
+            **task_trace(),
         })
     reduce_ids: List[str] = []
     if mode == "dedup":
@@ -266,6 +368,7 @@ def publish_shard_tasks(queue: ClusterQueue, job_id: str, recipe: Recipe,
                           "n_shards": n_shards, "n_reducers": n_reducers,
                           "dedup": meta["dedup"]},
                 "after": list(map_ids),
+                **task_trace(),
             })
     fin_id = finalize_task_id(job_id)
     _submit_quiet(queue, {
@@ -275,6 +378,7 @@ def publish_shard_tasks(queue: ClusterQueue, job_id: str, recipe: Recipe,
                   "n_reducers": n_reducers, "n_prefix": meta["n_prefix"],
                   "n_rows": meta["n_rows"], "dedup": meta.get("dedup")},
         "after": list(map_ids) + list(reduce_ids),
+        **task_trace(),
     })
     return map_ids + reduce_ids + [fin_id]
 
@@ -302,7 +406,7 @@ def run_sharded(runner, lease: Lease, spec: Dict[str, Any], recipe: Recipe,
     job_id = lease.job_id
     if not recipe.dataset_path or not recipe.export_path:
         return None
-    t0 = time.time()
+    t0 = clock.now()
     recipe.fixed_plan = runner._pin_plan(job_id, recipe)
     split = split_plan(recipe.fixed_plan)
     if split["mode"] == "barrier" and split["n_prefix"] == 0:
@@ -311,11 +415,25 @@ def run_sharded(runner, lease: Lease, spec: Dict[str, Any], recipe: Recipe,
     if meta is None:
         return None
     meta = {**meta, "shard_dir": shard_dir_for(queue, job_id)}
-    tasks = publish_shard_tasks(queue, job_id, recipe, meta)
+    parent_trace = spec.get("trace") or {}
+    tasks = publish_shard_tasks(queue, job_id, recipe, meta,
+                                trace=parent_trace)
     specs = {t: queue.read_spec(t) for t in tasks}
     fin_id = tasks[-1]
     queue.log_event("sharded", job_id=job_id, n_shards=meta["n_shards"],
-                    mode=meta["mode"], n_reducers=meta["n_reducers"])
+                    mode=meta["mode"], n_reducers=meta["n_reducers"],
+                    auto=meta.get("auto"))
+    # the shard-plan span records HOW the job was split — including the
+    # full shards="auto" decision (inputs + chosen count) when auto-tuned
+    plan_span = obs.start_span(parent_trace.get("trace_id"), "shards:plan",
+                               kind="shards",
+                               parent_id=parent_trace.get("root_span"), t0=t0)
+    if plan_span is not None:
+        plan_span.set(n_shards=meta["n_shards"], mode=meta["mode"],
+                      n_reducers=meta["n_reducers"], n_rows=meta["n_rows"])
+        if meta.get("auto"):
+            plan_span.set(auto=meta["auto"])
+        plan_span.end()
 
     poll = min(0.2, max(0.05, getattr(runner, "poll", 0.2)))
     while True:
@@ -374,7 +492,7 @@ def run_sharded(runner, lease: Lease, spec: Dict[str, Any], recipe: Recipe,
         }
     return {
         "recipe": recipe.name, "n_in": meta["n_rows"],
-        "n_out": fin_rep.get("n_out", 0), "seconds": time.time() - t0,
+        "n_out": fin_rep.get("n_out", 0), "seconds": clock.now() - t0,
         "plan": [c.get("name") for c in recipe.fixed_plan],
         "errors": 0, "streaming": True, "resumed_at": 0, "dispatch": [],
         "sharded": {"n_shards": meta["n_shards"], "mode": meta["mode"],
@@ -451,12 +569,12 @@ def run_finalize_task(runner, spec: Dict[str, Any], monitor: List[dict],
     mode = sh["mode"]
     task_id = spec["job_id"]
     recipe = Recipe.from_dict(spec.get("recipe") or {})
-    t0 = time.time()
+    t0 = clock.now()
 
     if mode == "chain":
         n_out = _concat_parts(queue, parent, sh["n_shards"], recipe.export_path)
         return {"n_in": sh.get("n_rows", n_out), "n_out": n_out,
-                "seconds": time.time() - t0, "mode": mode, "resumed_at": 0}
+                "seconds": clock.now() - t0, "mode": mode, "resumed_at": 0}
 
     plan_rec = _read_json(os.path.join(queue.checkpoint_dir(parent),
                                        "plan.json")) or {}
@@ -480,7 +598,7 @@ def run_finalize_task(runner, spec: Dict[str, Any], monitor: List[dict],
         _, rep = Executor(sub).run_streaming(
             materialize=False, monitor=monitor, cancel=cancel)
         return {"n_in": rep.n_in, "n_out": rep.n_out,
-                "seconds": time.time() - t0, "mode": mode,
+                "seconds": clock.now() - t0, "mode": mode,
                 "resumed_at": rep.resumed_at}
 
     # dedup: reconciliation barrier + keep-first spill replay + suffix chain
@@ -524,4 +642,4 @@ def run_finalize_task(runner, spec: Dict[str, Any], monitor: List[dict],
     return {"n_in": counters.get("n_docs", 0), "n_out": n_out,
             "n_kept": counters.get("n_kept", 0),
             "n_pairs": counters.get("n_pairs", 0),
-            "seconds": time.time() - t0, "mode": mode, "resumed_at": 0}
+            "seconds": clock.now() - t0, "mode": mode, "resumed_at": 0}

@@ -1,0 +1,115 @@
+"""Cluster SLO views computed from the fsync'd event log (ISSUE 8; the
+on-ramp to ROADMAP item 3's multi-tenant SLOs).
+
+``log.jsonl`` is the single source of truth the queue already fsyncs on
+every transition, so the SLO math needs no extra bookkeeping and works on
+any cluster dir, live or post-mortem:
+
+* **queue-wait** — first ``claimed.ts`` minus ``submitted.ts`` per job
+  (p50/p95/mean/max). The latency a submitter actually experiences before
+  any runner starts working.
+* **per-runner throughput** — rows/s and jobs finished per runner, from
+  the ``finished`` events' enriched ``n_out``/``seconds`` fields.
+* **failover / preemption counts** — ``requeued_after_expiry`` events
+  (lease failovers) and the dispatcher's preemption/redispatch counters
+  carried on ``finished`` events.
+
+Shard tasks (``~``-suffixed ids) are folded into their parent's runner
+stats but excluded from queue-wait percentiles — a shard task's "wait"
+is DAG scheduling, not submitter-visible latency.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Iterable, List, Optional
+
+from repro.core import obs
+
+
+def percentile(xs: List[float], q: float) -> float:
+    """Nearest-rank percentile (q in [0, 1]); 0.0 on empty input."""
+    if not xs:
+        return 0.0
+    s = sorted(xs)
+    k = max(0, min(len(s) - 1, int(round(q * (len(s) - 1)))))
+    return s[k]
+
+
+def _is_shard_task(job_id: Optional[str]) -> bool:
+    return bool(job_id) and "~" in job_id
+
+
+def compute_slo(events: Iterable[Dict[str, Any]]) -> Dict[str, Any]:
+    """Fold an event stream (``ClusterQueue.read_log()``) into the SLO
+    summary. Pure function of the events — hermetic under a fake clock."""
+    submitted: Dict[str, float] = {}
+    first_claim: Dict[str, float] = {}
+    failovers = 0
+    preempted = 0
+    redispatches = 0
+    finished_jobs = 0
+    failed_jobs = 0
+    runners: Dict[str, Dict[str, float]] = {}
+    for ev in events:
+        kind = ev.get("event")
+        jid = ev.get("job_id")
+        ts = float(ev.get("ts") or 0.0)
+        if kind == "submitted":
+            submitted.setdefault(jid, ts)
+        elif kind == "claimed":
+            first_claim.setdefault(jid, ts)
+        elif kind == "requeued_after_expiry":
+            failovers += 1
+        elif kind == "finished":
+            if not _is_shard_task(jid):
+                finished_jobs += 1
+                if ev.get("state") == "failed":
+                    failed_jobs += 1
+            preempted += int(ev.get("preempted") or 0)
+            redispatches += int(ev.get("redispatches") or 0)
+            rid = ev.get("runner_id")
+            if rid:
+                r = runners.setdefault(rid, {"jobs": 0, "rows": 0.0,
+                                             "busy_seconds": 0.0})
+                r["jobs"] += 1
+                r["rows"] += float(ev.get("n_out") or 0.0)
+                r["busy_seconds"] += float(ev.get("seconds") or 0.0)
+    waits = [first_claim[j] - submitted[j]
+             for j in first_claim
+             if j in submitted and not _is_shard_task(j)]
+    per_runner = {
+        rid: {
+            "jobs": int(r["jobs"]),
+            "rows": int(r["rows"]),
+            "busy_seconds": round(r["busy_seconds"], 6),
+            "rows_per_second": (r["rows"] / r["busy_seconds"]
+                                if r["busy_seconds"] > 0 else 0.0),
+        }
+        for rid, r in sorted(runners.items())
+    }
+    return {
+        "queue_wait": {
+            "n": len(waits),
+            "p50": percentile(waits, 0.50),
+            "p95": percentile(waits, 0.95),
+            "mean": (sum(waits) / len(waits)) if waits else 0.0,
+            "max": max(waits) if waits else 0.0,
+        },
+        "throughput": per_runner,
+        "failovers": failovers,
+        "preempted": preempted,
+        "redispatches": redispatches,
+        "jobs_finished": finished_jobs,
+        "jobs_failed": failed_jobs,
+    }
+
+
+def cluster_slo(cluster_dir: str) -> Dict[str, Any]:
+    """GET /cluster/slo payload: event-log SLOs + the merged per-process
+    metrics spills from the cluster obs dir."""
+    from repro.api.cluster import ClusterQueue
+
+    queue = ClusterQueue(cluster_dir)
+    out = compute_slo(queue.read_log())
+    out["enabled"] = True
+    out["metrics"] = obs.merged_metrics(queue.obs_dir())
+    return out

@@ -19,6 +19,7 @@ from typing import Any, Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro.core import clock
 from repro.core.ops_base import Filter, Operator
 
 PROBE_CAP = 1000
@@ -74,9 +75,9 @@ class Adapter:
             op.setup()
             probe_in = [dict(s) for s in subset]
             tracemalloc.start()
-            t0 = time.time()
+            t0 = clock.now()
             out = op.run_batch_safe(probe_in)
-            dt = max(time.time() - t0, 1e-9)
+            dt = max(clock.now() - t0, 1e-9)
             _, peak = tracemalloc.get_traced_memory()
             tracemalloc.stop()
             retention = len(out) / max(1, len(probe_in)) if isinstance(op, Filter) else 1.0
@@ -98,10 +99,10 @@ class Adapter:
         op.setup()
         speeds: Dict[int, float] = {}
         for bs in candidates:
-            t0 = time.time()
+            t0 = clock.now()
             for i in range(0, n, bs):
                 op.run_batch_safe([dict(s) for s in subset[i : i + bs]], i)
-            speeds[bs] = n / max(time.time() - t0, 1e-9)
+            speeds[bs] = n / max(clock.now() - t0, 1e-9)
         best = max(speeds.values())
         for bs in sorted(speeds):
             if speeds[bs] * plateau >= best:

@@ -1,0 +1,84 @@
+"""Injectable clock — the single source of wall/monotonic time for the
+runtime (ISSUE 8).
+
+Every timestamp the runtime records (lease expiry, queue-wait, span
+start/duration, SLO math) flows through :func:`now` / :func:`monotonic`
+instead of bare ``time.time()`` / ``time.monotonic()``. That buys two
+things:
+
+* **Hermetic tests** — :class:`FakeClock` + :func:`install` let tier-1
+  tests drive lease expiry or span timing deterministically without
+  sleeping.
+* **Deterministic span merging** — under failover two processes emit
+  spans for the same trace; a single clock abstraction is the one place
+  to reason about skew (same-host shared-filesystem clusters share a
+  clock, which merge ordering relies on).
+
+``time.perf_counter()`` (interval micro-timing inside a single process)
+and ``time.sleep()`` are deliberately NOT wrapped: they never cross a
+process boundary or land in persisted telemetry. ``tools/check_clock.py``
+enforces the split in CI: bare ``time.time``/``time.monotonic`` are
+forbidden in ``src/repro`` outside this module.
+"""
+from __future__ import annotations
+
+import time as _time
+
+
+class SystemClock:
+    """Real wall/monotonic time (the default)."""
+
+    def now(self) -> float:
+        return _time.time()
+
+    def monotonic(self) -> float:
+        return _time.monotonic()
+
+
+class FakeClock:
+    """Manually advanced clock for tests. ``tick(dt)`` moves both the
+    wall and monotonic readings forward together."""
+
+    def __init__(self, start: float = 1_000_000.0):
+        self._now = float(start)
+        self._mono = 0.0
+
+    def now(self) -> float:
+        return self._now
+
+    def monotonic(self) -> float:
+        return self._mono
+
+    def tick(self, dt: float) -> None:
+        self._now += dt
+        self._mono += dt
+
+
+_clock = SystemClock()
+
+
+def now() -> float:
+    """Wall-clock seconds since the epoch (``time.time`` semantics)."""
+    return _clock.now()
+
+
+def monotonic() -> float:
+    """Monotonic seconds (``time.monotonic`` semantics)."""
+    return _clock.monotonic()
+
+
+def install(clock) -> None:
+    """Replace the process-global clock (tests). Pair with :func:`reset`."""
+    global _clock
+    _clock = clock
+
+
+def reset() -> None:
+    """Restore the real :class:`SystemClock`."""
+    global _clock
+    _clock = SystemClock()
+
+
+def get() -> object:
+    """The currently installed clock object."""
+    return _clock

@@ -12,6 +12,7 @@ from typing import Any, Dict, Iterable, List, Optional, Sequence, Union
 
 import numpy as np
 
+from repro.core import clock
 from repro.core import schema as S
 from repro.core.engine import LocalEngine, make_engine
 from repro.core.ops_base import (
@@ -199,11 +200,11 @@ def iter_stream_blocks(
             for b in stream:
                 check_cancel()
                 samples.extend(b.samples)
-            t0 = time.time()
+            t0 = clock.now()
             n_in = len(samples)
             err0 = len(op.errors)
             out = [s for s in apply_dataset_op(op, samples) if not S.is_empty(s)]
-            record(offset, {"op": op.name, "seconds": time.time() - t0, "in": n_in,
+            record(offset, {"op": op.name, "seconds": clock.now() - t0, "in": n_in,
                             "out": len(out), "errors": len(op.errors) - err0})
             stream = iter(split_blocks(out, n_workers=max(1, n_workers_hint),
                                        total_hint_bytes=max(1, len(out)) * 256))
@@ -398,7 +399,7 @@ class DJDataset:
                          self.lineage + entries)
 
     def _process_one(self, op: Operator, batch_size, drop_empty, monitor) -> "DJDataset":
-        t0 = time.time()
+        t0 = clock.now()
         n_before = len(self)
         bs = batch_size or op.default_batch_size
 
@@ -416,7 +417,7 @@ class DJDataset:
             ]
             new_blocks = [b for b in new_blocks if len(b)] or [SampleBlock([])]
 
-        dt = time.time() - t0
+        dt = clock.now() - t0
         n_after = sum(len(b) for b in new_blocks)
         entry = {
             "op": op.name, "seconds": dt, "in": n_before, "out": n_after,

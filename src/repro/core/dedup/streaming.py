@@ -63,6 +63,7 @@ from typing import Any, Dict, Iterable, Iterator, List, Optional, Tuple
 
 import numpy as np
 
+from repro.core import obs
 from repro.core.dedup.minhash import (
     jaccard_unique, lsh_bands, make_permutations, shingle_hashes,
     signatures_batch_vectorized,
@@ -122,6 +123,16 @@ class SignatureBatcher:
         if not docs:
             return [], [], np.zeros((0, self.n_perm), dtype=np.uint32)
         self.dispatches += 1
+        # kernel-batch span: flush runs driver-side, so the ambient parent
+        # is the enclosing run/segment span and timing comes straight from
+        # the injectable clock (docs/observability.md)
+        cur = obs.current_span()
+        kb = obs.start_span(cur.trace_id if cur else None, "kernel:minhash",
+                            kind="kernel_batch",
+                            parent_id=cur.span_id if cur else None)
+        m = obs.metrics()
+        m.inc("dedup.signature_dispatches_total")
+        m.inc("dedup.signature_docs_total", len(docs))
         if self.use_kernel:
             from repro.kernels.minhash.ops import minhash_signatures_packed
 
@@ -144,6 +155,8 @@ class SignatureBatcher:
             sigs = np.empty((len(docs), self.n_perm), dtype=np.uint32)
             for i, d in enumerate(docs):
                 sigs[i] = signature_ref(d, self._a, self._b)
+        if kb is not None:
+            kb.set(docs=len(docs), kernel=self.use_kernel).end()
         return payloads, docs, sigs
 
 

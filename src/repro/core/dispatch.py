@@ -52,6 +52,8 @@ import threading
 import time
 from typing import Any, Callable, Dict, Iterable, Iterator, List, Optional, Tuple
 
+from repro.core import clock, obs
+
 # completion-time floor: sub-50ms medians would make speculation fire on
 # scheduler jitter alone
 MEDIAN_FLOOR = 0.05
@@ -180,12 +182,18 @@ def _worker_id() -> str:
 
 
 def _guarded(fn, args, quarantined, t_submit: float, bounce_pause: float,
-             board=None, key=None):
+             board=None, key=None, trace_ctx=None):
     """Worker-side wrapper: quarantine check + timing + failure attribution.
 
-    Returns ``(worker_id, queue_wait, compute_seconds, payload)``. The pause
-    before a quarantine bounce keeps an idle bad worker from starving the
+    Returns ``(worker_id, queue_wait, compute_seconds, payload, span)``. The
+    pause before a quarantine bounce keeps an idle bad worker from starving the
     queue by bouncing every task faster than healthy workers can pick one up.
+
+    ``trace_ctx`` is ``(trace_id, parent_span_id, label)`` or None. The block
+    span is born HERE, in the worker process — its pid/tid identify where the
+    block actually ran — and travels back to the driver in the result tuple
+    (worker pools are created per dispatch call, so workers never flush spill
+    files themselves; the driver records shipped spans into its own buffer).
 
     With a preempt ``board`` (any shared mapping — a plain dict for thread
     pools, a ``multiprocessing.Manager().dict()`` proxy for process pools),
@@ -198,7 +206,7 @@ def _guarded(fn, args, quarantined, t_submit: float, bounce_pause: float,
         if bounce_pause:
             time.sleep(bounce_pause)
         raise WorkerQuarantined(wid)
-    t_start = time.time()
+    t_start = clock.now()
 
     def _poll() -> bool:
         try:
@@ -217,7 +225,18 @@ def _guarded(fn, args, quarantined, t_submit: float, bounce_pause: float,
         raise WorkerTaskFailure(
             wid, f"{type(e).__name__}: {e}", getattr(e, "op_index", -1)
         ) from None
-    return wid, max(0.0, t_start - t_submit), time.time() - t_start, payload
+    t_end = clock.now()
+    wait = max(0.0, t_start - t_submit)
+    span = None
+    if trace_ctx is not None:
+        span = {
+            "trace_id": trace_ctx[0], "span_id": obs.new_id(),
+            "parent_id": trace_ctx[1], "name": f"block:{trace_ctx[2]}",
+            "kind": "block", "t0": t_start, "dur": t_end - t_start,
+            "pid": os.getpid(), "tid": wid,
+            "attrs": {"queue_wait": wait, "worker": wid},
+        }
+    return wid, wait, t_end - t_start, payload, span
 
 
 class _Flight:
@@ -237,7 +256,7 @@ class _Flight:
         self.done = False
         self.payload: Any = None
         self.error: Optional[Dict[str, Any]] = None
-        self.t_submit = time.time()
+        self.t_submit = clock.now()
 
 
 def window_bounds(n_workers: int) -> Tuple[int, int, int]:
@@ -246,6 +265,21 @@ def window_bounds(n_workers: int) -> Tuple[int, int, int]:
     The floor keeps one block buffered beyond the worker count so in-order
     head-of-line draining can't leave a worker idle."""
     return max(2, 2 * n_workers), max(2, n_workers + 1), max(4, 4 * n_workers)
+
+
+DISPATCH_COUNTERS = ("blocks", "redispatches", "retries", "speculation_wins",
+                     "bounces", "pass_throughs", "preempt_signals", "preempted")
+
+
+def aggregate_dispatch(summaries: Iterable[Dict[str, Any]]) -> Dict[str, int]:
+    """Fold per-segment dispatch summaries (``RunReport.dispatch``) into one
+    counter dict — the shape both single-node ``Job.status()`` and cluster
+    ``ClusterQueue.status()`` expose under ``progress["dispatch"]``."""
+    out = {k: 0 for k in DISPATCH_COUNTERS}
+    for s in summaries or ():
+        for k in DISPATCH_COUNTERS:
+            out[k] += int(s.get(k, 0) or 0)
+    return out
 
 
 def dispatch_policy(n_workers: int, straggler_factor: float, speculate: bool,
@@ -339,6 +373,18 @@ class WindowedDispatcher:
         self._fut2idx: Dict[cf.Future, int] = {}
         self.summary: Optional[Dict[str, Any]] = None
 
+        # tracing: the dispatch window is itself a span, parented to the
+        # ambient span of the constructing thread (the executor's segment/run
+        # span); workers receive (trace_id, window_span_id, label) and ship
+        # block spans back through the result tuple
+        cur = obs.current_span()
+        self._span = obs.start_span(
+            cur.trace_id if cur else None, f"dispatch:{label or 'chain'}",
+            kind="dispatch", parent_id=cur.span_id if cur else None)
+        self._trace_ctx = (
+            (self._span.trace_id, self._span.span_id, label or "chain")
+            if self._span is not None else None)
+
     # ------------------------------------------------------------------
     def _slot_key(self, wid: str) -> str:
         # stable per-run slot labels in arrival order; approximates "the Nth
@@ -356,15 +402,16 @@ class WindowedDispatcher:
                 backup: bool = False) -> cf.Future:
         q = frozenset(self.quarantined) if quarantine is None else quarantine
         try:
-            f = self.pool.submit(_guarded, fn, args, q, time.time(),
+            f = self.pool.submit(_guarded, fn, args, q, clock.now(),
                                  self.bounce_pause, self.preempt_board,
-                                 f"{self._board_ns}{fl.idx}")
+                                 f"{self._board_ns}{fl.idx}", self._trace_ctx)
         except Exception:
             # pool is broken (worker OOM-killed / segfaulted mid-run) or shut
             # down: keep the run alive by finishing this block in-process
             f = cf.Future()
             try:
-                f.set_result(_guarded(fn, args, frozenset(), time.time(), 0.0))
+                f.set_result(_guarded(fn, args, frozenset(), clock.now(), 0.0,
+                                      trace_ctx=self._trace_ctx))
             except Exception as e:  # noqa: BLE001 — surfaced as outcome
                 f.set_exception(e)
         fl.futures.add(f)
@@ -449,7 +496,7 @@ class WindowedDispatcher:
             self._note_preempted(f)
             return  # stale loser of a won race
         try:
-            wid, wait, compute, payload = f.result()
+            wid, wait, compute, payload, span = f.result()
         except WorkerQuarantined:
             self.bounces += 1
             fl.bounces += 1
@@ -489,6 +536,10 @@ class WindowedDispatcher:
         self._times.append(wait + compute)
         self._waits.append(wait)
         self._computes.append(compute)
+        obs.record_span_dict(span)  # block span shipped back over worker IPC
+        m = obs.metrics()
+        m.observe("dispatch.queue_wait_seconds", wait)
+        m.observe("dispatch.block_compute_seconds", compute)
         self._adapt_window()
         self._resolve(fl, payload=payload)
 
@@ -503,7 +554,7 @@ class WindowedDispatcher:
         times = sorted(self._times)
         med = times[len(times) // 2]
         threshold = self.straggler_factor * max(med, MEDIAN_FLOOR)
-        now = time.time()
+        now = clock.now()
         for fl in flights.values():
             if (not fl.done and not fl.backups and fl.failures == 0
                     and fl.futures and now - fl.t_submit > threshold):
@@ -595,5 +646,17 @@ class WindowedDispatcher:
             "resident_peak": self.resident_peak,
             **self.meta,
         }
+        if self._span is not None:
+            self._span.set(
+                blocks=self.blocks, redispatches=self.redispatches,
+                retries=self.retries, speculation_wins=self.speculation_wins,
+                preempted=self.preempted, window_final=self.window,
+                resident_peak=self.resident_peak).end()
+        m = obs.metrics()
+        m.inc("dispatch.blocks_total", self.blocks)
+        m.inc("dispatch.redispatches_total", self.redispatches)
+        m.inc("dispatch.retries_total", self.retries)
+        m.inc("dispatch.preempted_total", self.preempted)
+        m.gauge_max("dispatch.resident_peak_bytes", self.resident_peak)
         if self.log is not None:
             self.log.append(self.summary)

@@ -26,6 +26,7 @@ from typing import Any, Dict, Iterable, Iterator, List, Optional, Tuple
 
 import numpy as np
 
+from repro.core import clock
 from repro.core import schema as S
 from repro.core.columnar import ColumnBlock
 from repro.core.dispatch import (
@@ -193,7 +194,7 @@ class LocalEngine:
         self, op: Operator, blocks: List[SampleBlock], batch_size: int
     ) -> Tuple[List[SampleBlock], EngineStats]:
         op.setup()
-        t0 = time.time()
+        t0 = clock.now()
         out_blocks: List[SampleBlock] = []
         n_in = 0
         threads = self.n_threads if op.io_intensive else 1
@@ -219,7 +220,7 @@ class LocalEngine:
         finally:
             if pool is not None:
                 pool.shutdown()
-        dt = time.time() - t0
+        dt = clock.now() - t0
         return out_blocks, EngineStats(seconds=dt, samples=n_in, engine=self.name)
 
     def map_block_chain(
@@ -464,7 +465,7 @@ class ParallelEngine:
         except Exception:
             return self._fallback().map_batches(op, blocks, batch_size)
 
-        t0 = time.time()
+        t0 = clock.now()
         out_blocks: List[SampleBlock] = []
         with cf.ProcessPoolExecutor(self.n_workers) as pool:
             disp = self._dispatcher(pool, label=op.name)
@@ -489,7 +490,7 @@ class ParallelEngine:
         summary = disp.summary or {}
         self.redispatches += summary.get("redispatches", 0)
         return out_blocks, EngineStats(
-            seconds=time.time() - t0,
+            seconds=clock.now() - t0,
             samples=sum(len(b) for b in blocks),
             engine=self.name,
             # per-call delta (the cumulative count previously reported here
@@ -583,7 +584,7 @@ class ShardedEngine:
         if fn is None or not hasattr(op, "keep"):
             return self.fallback.map_batches(op, blocks, batch_size)
         op.setup()
-        t0 = time.time()
+        t0 = clock.now()
         out_blocks = []
         n = 0
         for blk in blocks:
@@ -595,7 +596,7 @@ class ShardedEngine:
                     kept.append(s)
             out_blocks.append(SampleBlock(kept))
             n += len(blk)
-        return out_blocks, EngineStats(seconds=time.time() - t0, samples=n, engine=self.name)
+        return out_blocks, EngineStats(seconds=clock.now() - t0, samples=n, engine=self.name)
 
     def _chain_samples(
         self, ops: List[Operator], samples: List[Sample],

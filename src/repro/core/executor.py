@@ -32,6 +32,7 @@ import os
 import time
 from typing import Any, Dict, Iterable, Iterator, List, Optional, Tuple
 
+from repro.core import clock, obs
 from repro.core.adapter import Adapter
 from repro.core.checkpoint import CheckpointManager, recipe_prefix_sigs
 from repro.core.dataset import (
@@ -73,6 +74,10 @@ class RunReport:
     # one summary per engine dispatch call (label = segment's op chain):
     # redispatches, speculation_wins, retries, quarantined workers, window
     dispatch: List[dict] = dataclasses.field(default_factory=list)
+    # merged trace for this run: {"trace_id", "root_span", "spans": [...]}
+    # (core.obs span dicts — run -> dispatch windows -> worker block spans
+    # -> synthesized per-op spans). None when tracing is disabled.
+    trace: Optional[Dict[str, Any]] = None
 
 
 def _count_blocks(blocks: Iterable[SampleBlock], counter: Dict[str, int]) -> Iterator[SampleBlock]:
@@ -157,6 +162,60 @@ class Executor:
         return self.run_barriered(dataset, monitor=monitor, cancel=cancel)
 
     # ------------------------------------------------------------------
+    # tracing (core.obs): every run executes under a "run" span. The trace
+    # id is inherited from recipe.trace (cluster submit / shard task) or
+    # minted here for local runs; the span is pushed as the thread's ambient
+    # parent so engine dispatch windows (and their worker block spans)
+    # attach to it without any signature changes down the stack.
+    # ------------------------------------------------------------------
+    def _begin_run_span(self, path: str):
+        tr = self.recipe.trace or {}
+        trace_id = tr.get("trace_id") or (obs.new_id() if obs.enabled() else None)
+        sp = obs.start_span(trace_id, f"run:{self.recipe.name}", kind="run",
+                            parent_id=tr.get("span_id"))
+        if sp is not None:
+            sp.set(path=path, engine=self.recipe.engine, np=self.recipe.np)
+            obs.tracer().stack().append(sp)
+        return sp
+
+    def _pop_run_span(self, sp) -> None:
+        if sp is None:
+            return
+        stack = obs.tracer().stack()
+        if sp in stack:
+            stack.remove(sp)
+
+    def _finish_run_span(self, sp, report: RunReport) -> None:
+        """End the run span, synthesize per-op spans from the monitor rows
+        (ops have no absolute timestamps — they are laid out sequentially
+        from the run start, which is exact for barriered runs and a faithful
+        plan-order approximation for pipelined segments), and attach the
+        drained trace to the report."""
+        if sp is None:
+            return
+        t_cursor = sp.t0
+        for i, row in enumerate(report.per_op):
+            secs = float(row.get("seconds", 0.0) or 0.0)
+            op_sp = obs.start_span(sp.trace_id, f"op:{row.get('op')}",
+                                   kind="op", parent_id=sp.span_id,
+                                   t0=t_cursor, tid=1000 + i)
+            if op_sp is not None:
+                op_sp.set(n_in=row.get("in", 0), n_out=row.get("out", 0),
+                          errors=row.get("errors", 0),
+                          redispatches=row.get("redispatches", 0))
+                op_sp.end(t_cursor + secs)
+            t_cursor += secs
+        sp.set(n_in=report.n_in, n_out=report.n_out, errors=report.errors,
+               streaming=report.streaming, resumed_at=report.resumed_at)
+        sp.end()
+        m = obs.metrics()
+        m.inc("run.rows_out_total", report.n_out)
+        if report.seconds > 0:
+            m.gauge("run.rows_per_second", report.n_out / report.seconds)
+        report.trace = {"trace_id": sp.trace_id, "root_span": sp.span_id,
+                        "spans": obs.drain(sp.trace_id)}
+
+    # ------------------------------------------------------------------
     # streaming block-pipelined path
     # ------------------------------------------------------------------
     def _optimize_ops(self, ops: List[Operator], probe_samples: List[dict]) -> List[Operator]:
@@ -229,6 +288,8 @@ class Executor:
             # adaptive-dispatch policy the run will use (window sizing,
             # speculation, quarantine — docs/runtime.md "Adaptive dispatch")
             "dispatch": self._make_engine().dispatch_policy(),
+            # whether the run will record a trace (docs/observability.md)
+            "obs": {"tracing": obs.enabled()},
         }
 
     def stream_blocks(
@@ -281,8 +342,23 @@ class Executor:
         the returned DJDataset is empty. A ``checkpoint_dir`` still forces
         per-segment materialization (stages are persisted whole), so peak
         memory is then one full dataset even with ``materialize=False``."""
+        sp = self._begin_run_span("streaming")
+        try:
+            ds, report = self._run_streaming_impl(
+                dataset, materialize=materialize, prefetch=prefetch,
+                monitor=monitor, cancel=cancel)
+        finally:
+            self._pop_run_span(sp)  # never leak a stale ambient parent
+        self._finish_run_span(sp, report)
+        return ds, report
+
+    def _run_streaming_impl(
+        self, dataset: Optional[DJDataset] = None,
+        materialize: bool = True, prefetch: int = 4,
+        monitor: Optional[List[dict]] = None, cancel=None,
+    ) -> tuple[DJDataset, RunReport]:
         r = self.recipe
-        t0 = time.time()
+        t0 = clock.now()
         engine = self._make_engine()
         if dataset is None and not r.dataset_path:
             raise ValueError("recipe has no dataset_path and no dataset given")
@@ -401,7 +477,7 @@ class Executor:
         errors = sum(len(op.errors) for op in ops)
         report = RunReport(
             recipe=r.name, n_in=counter["n"], n_out=n_out,
-            seconds=time.time() - t0, per_op=entries, plan=plan,
+            seconds=clock.now() - t0, per_op=entries, plan=plan,
             resumed_at=resumed_at, errors=errors, streaming=True,
             insight=recorder.report() if recorder is not None else "",
             dispatch=list(getattr(engine, "dispatch_log", ())),
@@ -414,8 +490,20 @@ class Executor:
     def run_barriered(self, dataset: Optional[DJDataset] = None,
                       monitor: Optional[List[dict]] = None,
                       cancel=None) -> tuple[DJDataset, RunReport]:
+        sp = self._begin_run_span("barriered")
+        try:
+            ds, report = self._run_barriered_impl(dataset, monitor=monitor,
+                                                  cancel=cancel)
+        finally:
+            self._pop_run_span(sp)
+        self._finish_run_span(sp, report)
+        return ds, report
+
+    def _run_barriered_impl(self, dataset: Optional[DJDataset] = None,
+                            monitor: Optional[List[dict]] = None,
+                            cancel=None) -> tuple[DJDataset, RunReport]:
         r = self.recipe
-        t0 = time.time()
+        t0 = clock.now()
         engine = self._make_engine()
         if dataset is None:
             if not r.dataset_path:
@@ -475,7 +563,7 @@ class Executor:
 
         report = RunReport(
             recipe=r.name, n_in=n_in, n_out=len(dataset),
-            seconds=time.time() - t0, per_op=monitor, plan=plan,
+            seconds=clock.now() - t0, per_op=monitor, plan=plan,
             resumed_at=resumed_at,
             insight=miner.report() if miner else "", errors=errors,
             dispatch=list(getattr(engine, "dispatch_log", ())),

@@ -20,6 +20,7 @@ import time
 import traceback
 from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence
 
+from repro.core import clock
 from repro.core import schema as S
 
 Sample = Dict[str, Any]
@@ -367,7 +368,7 @@ class HumanOP(Operator):
             ann = self.annotator(s)
             s = dict(s)
             s.setdefault("meta", {})
-            s["meta"] = dict(s["meta"], **{self.annotation_key: ann, "annotated_at": time.time()})
+            s["meta"] = dict(s["meta"], **{self.annotation_key: ann, "annotated_at": clock.now()})
             self.done.append(s)
             n += 1
         return n

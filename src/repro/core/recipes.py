@@ -45,10 +45,17 @@ class Recipe:
     # row-range shard tasks at first claim, executed by however many
     # ClusterRunners are around and spliced back in input order. Only
     # meaningful for cluster-submitted jobs; 0/1 runs single-runner.
-    shards: int = 0
+    # "auto" picks the count from input size + live runner cards at claim
+    # time (api.shards.resolve_shard_count) and records the decision in the
+    # job trace.
+    shards: Union[int, str] = 0
     # [lo, hi) row window of dataset_path this run reads — how a shard task
     # scopes itself to its range. Internal: set by api.shards, not by users.
     row_range: Optional[List[int]] = None
+    # trace context {"trace_id", "span_id"} linking this run's spans into an
+    # enclosing trace (core.obs). Internal: minted at cluster submit /
+    # Executor.run, threaded through shard tasks — not set by users.
+    trace: Optional[Dict[str, Any]] = None
 
     @classmethod
     def from_dict(cls, d: Dict[str, Any]) -> "Recipe":
@@ -123,8 +130,9 @@ def dump_simple_yaml(d: Dict[str, Any]) -> str:
     lines: List[str] = []
     for k, v in d.items():
         # fixed_plan is a nested op-config list like process — not
-        # expressible in the scalar subset; JSON recipes round-trip it
-        if k in ("process", "fixed_plan") or v is None:
+        # expressible in the scalar subset; JSON recipes round-trip it.
+        # trace is runtime-internal context, never part of a saved recipe
+        if k in ("process", "fixed_plan", "trace") or v is None:
             continue
         lines.append(f"{k}: {_yaml_scalar(v)}")
     lines.append("process:")

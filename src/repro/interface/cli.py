@@ -6,7 +6,8 @@ all thin shells over the shared Pipeline API (repro.api).
   python -m repro.interface.cli analyze --dataset_path x.jsonl [--auto]
   python -m repro.interface.cli list-ops
   python -m repro.interface.cli runner --cluster_dir DIR [--capacity N]
-  python -m repro.interface.cli cluster-status --cluster_dir DIR
+  python -m repro.interface.cli cluster-status --cluster_dir DIR [--slo]
+  python -m repro.interface.cli trace JOB_ID --cluster_dir DIR [--out F]
 """
 from __future__ import annotations
 
@@ -69,6 +70,18 @@ def main(argv=None):
                                                  "overview (runners, leases, "
                                                  "queue depth)")
     p_cs.add_argument("--cluster_dir", required=True)
+    p_cs.add_argument("--slo", action="store_true",
+                      help="also print SLO rollups from the event log "
+                           "(queue-wait percentiles, per-runner throughput, "
+                           "failover/preemption counts)")
+
+    p_tr = sub.add_parser("trace", help="merge a job's span spills into one "
+                                        "Chrome-trace JSON (open in "
+                                        "chrome://tracing or Perfetto)")
+    p_tr.add_argument("job_id")
+    p_tr.add_argument("--cluster_dir", required=True)
+    p_tr.add_argument("--out", default=None,
+                      help="output path (default TRACE_<job_id>.json)")
 
     args = ap.parse_args(argv)
 
@@ -163,6 +176,49 @@ def main(argv=None):
                 print(f"    {r['kind']:8s} {r['task_id']:24s} "
                       f"{r['state']:10s} attempt={r.get('attempt', 0)} "
                       f"runner={r.get('runner_id') or '-'}{extra}")
+        if args.slo:
+            from repro.api.slo import cluster_slo
+
+            slo = cluster_slo(args.cluster_dir)
+            qw = slo["queue_wait"]
+            print(f"slo queue_wait n={qw['n']} p50={qw['p50']:.3f}s "
+                  f"p95={qw['p95']:.3f}s max={qw['max']:.3f}s")
+            print(f"slo failovers={slo['failovers']} "
+                  f"preempted={slo['preempted']} "
+                  f"redispatches={slo['redispatches']} "
+                  f"jobs_finished={slo['jobs_finished']} "
+                  f"jobs_failed={slo['jobs_failed']}")
+            for rid, t in slo["throughput"].items():
+                print(f"  throughput {rid:28s} jobs={t['jobs']} "
+                      f"rows={t['rows']} "
+                      f"rows_per_second={t['rows_per_second']:.1f}")
+        return 0
+
+    if args.cmd == "trace":
+        import json
+
+        from repro.api.cluster import ClusterQueue
+        from repro.core import obs
+
+        queue = ClusterQueue(args.cluster_dir)
+        try:
+            spec = queue.read_spec(args.job_id)
+        except KeyError:
+            print(f"no job {args.job_id!r} in {queue.dir}", file=sys.stderr)
+            return 1
+        tr = spec.get("trace") or {}
+        if not tr.get("trace_id"):
+            print(f"job {args.job_id} has no trace (submitted with "
+                  f"tracing disabled?)", file=sys.stderr)
+            return 1
+        spans = obs.merge_trace(queue.obs_dir(), tr["trace_id"])
+        tree = obs.span_tree(spans)
+        out_path = args.out or f"TRACE_{args.job_id}.json"
+        with open(out_path, "w", encoding="utf-8") as f:
+            json.dump(obs.chrome_trace(spans), f)
+        print(f"trace {tr['trace_id']}: {len(spans)} spans "
+              f"({len(tree['roots'])} roots, {len(tree['orphans'])} orphans) "
+              f"-> {out_path}")
         return 0
 
     if args.cmd == "analyze":

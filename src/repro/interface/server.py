@@ -15,6 +15,12 @@ job subsystem, all routed through the shared Pipeline API.
   GET    /cluster          — cluster overview: runner cards + placement
                            scores, live/expired leases, queue depth
                            ({"enabled": false} outside cluster mode)
+  GET    /cluster/slo      — p50/p95 queue-wait, per-runner throughput,
+                           failover/preemption counts from log.jsonl
+                           ({"enabled": false} outside cluster mode)
+  GET    /metrics          — live in-process metrics registry snapshot,
+                           plus the merged cross-process spills in
+                           cluster mode
 
 With ``serve(cluster_dir=...)`` the job subsystem runs on the distributed
 cluster queue (repro.api.cluster): submissions are durably enqueued in the
@@ -103,6 +109,10 @@ class _Handler(BaseHTTPRequestHandler):
                 return self._err(404, "unknown_job", f"no job {parts[1]!r}")
         if parts == ["cluster"]:
             return self._send(200, self.server.jobs.cluster_status())
+        if parts == ["cluster", "slo"]:
+            return self._send(200, self.server.jobs.cluster_slo())
+        if parts == ["metrics"]:
+            return self._send(200, self.server.jobs.metrics_snapshot())
         return self._err(404, "not_found", "not found")
 
     # ------------------------------------------------------------------

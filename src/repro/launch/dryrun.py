@@ -14,6 +14,7 @@ import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
+from repro.core import clock
 from repro.configs import SHAPES, get_config, get_shape, list_archs, shape_applicable  # noqa: E402
 from repro.launch import sharding as sh  # noqa: E402
 from repro.launch.hlo_analysis import analyze_hlo, normalize_cost_analysis  # noqa: E402
@@ -138,7 +139,7 @@ def run_cell(
         model.moe_dispatch = moe_dispatch
     dp_size = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
     n_micro = microbatch if microbatch > 0 else auto_microbatches(cfg, shape, dp_size)
-    t0 = time.time()
+    t0 = clock.now()
     try:
         if shape.kind == "train":
             tc = TrainConfig(n_microbatches=n_micro, bf16_params=bf16_params)
@@ -193,12 +194,12 @@ def run_cell(
     except Exception as e:  # compile failures are bugs; surface them
         return CellResult(
             arch, shape_name, mesh_name, "error", f"{type(e).__name__}: {e}",
-            compile_s=time.time() - t0,
+            compile_s=clock.now() - t0,
         )
     finally:
         sh.set_sharding_context(None)
 
-    compile_s = time.time() - t0
+    compile_s = clock.now() - t0
     mem = compiled.memory_analysis()
     mem_d = {
         "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),

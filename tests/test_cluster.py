@@ -158,6 +158,30 @@ def test_job_manager_cluster_mode_lifecycle(tmp_path):
         mgr.shutdown(wait=True)
 
 
+def test_cluster_progress_dispatch_counter_parity(tmp_path):
+    """GET /jobs/<id> progress must expose the SAME dispatcher-counter
+    shape in cluster mode as in single-node mode (redispatches,
+    preemptions, ...) — the REST contract is mode-independent."""
+    from repro.core.dispatch import DISPATCH_COUNTERS
+
+    cl = dj.JobManager(max_workers=2, cluster_dir=str(tmp_path / "c"))
+    sn = dj.JobManager(max_workers=2)
+    try:
+        pipe_c, _ = _pipeline(tmp_path, name="par-cluster")
+        pipe_s, _ = _pipeline(tmp_path, name="par-single")
+        jc, js = cl.submit(pipe_c), sn.submit(pipe_s)
+        wait_for(jc.done, 60, message="cluster job finishes")
+        wait_for(js.done, 60, message="single-node job finishes")
+        dc = jc.status()["progress"]["dispatch"]
+        ds = js.status()["progress"]["dispatch"]
+        assert set(dc) == set(ds) == set(DISPATCH_COUNTERS)
+        for d in (dc, ds):
+            assert all(isinstance(v, int) and v >= 0 for v in d.values())
+    finally:
+        cl.shutdown(wait=True)
+        sn.shutdown(wait=True)
+
+
 def test_job_manager_cluster_mode_cancel(tmp_path):
     mgr = dj.JobManager(max_workers=1, cluster_dir=str(tmp_path / "c"))
     try:

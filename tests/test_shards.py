@@ -135,6 +135,32 @@ def test_sharded_chain_and_barrier_byte_identical(tmp_path, mode):
     assert st["report"]["sharded"]["mode"] == mode
 
 
+def test_shards_auto_resolves_records_decision_byte_identical(
+        tmp_path, monkeypatch):
+    """shards="auto" picks the count from row targets + live fleet, stays
+    byte-identical to the unsharded oracle, and persists the decision in
+    shardmeta / the "sharded" event so failover re-leases reuse it."""
+    monkeypatch.setenv("REPRO_SHARD_TARGET_ROWS", "40")
+    src = write_corpus(str(tmp_path / "in.jsonl"), n=120)
+    recipe = make_sharded_recipe(src, str(tmp_path / "out.jsonl"),
+                                 shards="auto")
+    ref = reference_output(recipe, str(tmp_path / "ref.jsonl"))
+    out, q, jid, st = _run_sharded(tmp_path, recipe, tag="auto")
+    assert out == ref, "auto-sharded run must stay byte-identical"
+
+    n_shards = st["report"]["sharded"]["n_shards"]
+    assert n_shards >= 2, "auto must actually shard a 3x-target corpus"
+    ev = next(e for e in q.read_log()
+              if e["event"] == "sharded" and e["job_id"] == jid)
+    auto = ev["auto"]
+    assert auto["requested"] == "auto" and auto["chosen"] == n_shards
+    assert auto["by_rows"] == 3, "120 rows / 40-row target"
+    # decision is persisted: a re-claimed lead reuses it, never re-tunes
+    with open(os.path.join(shards_mod.shard_dir_for(q, jid),
+                           "shardmeta.json")) as f:
+        assert json.load(f)["auto"]["chosen"] == n_shards
+
+
 @pytest.mark.parametrize("streaming", ["keep_first", "windowed"])
 def test_sharded_relaxed_modes_match_exact_keep_set(tmp_path, streaming):
     """Sharded keep_first/windowed run behind the reconciliation barrier, so

@@ -1,0 +1,74 @@
+#!/usr/bin/env python
+"""AST lint: every wall/monotonic timestamp in src/repro must go through
+``repro.core.clock`` (ISSUE 8 satellite 6).
+
+Bare ``time.time()`` / ``time.monotonic()`` calls bypass the injectable
+clock, which breaks FakeClock-hermetic tests and skews trace spans across
+processes. ``time.perf_counter()`` and ``time.sleep()`` stay allowed:
+perf_counter measures *intervals* (never serialized as a timestamp) and
+sleep is real waiting regardless of what the tests pretend the time is.
+
+Usage: python tools/check_clock.py [root ...]   (default: src/repro)
+Exit 1 with one ``path:line`` per violation on stdout.
+"""
+from __future__ import annotations
+
+import ast
+import os
+import sys
+
+FORBIDDEN = {"time", "monotonic", "monotonic_ns", "time_ns"}
+# clock.py is the one module allowed to touch time.* for timestamps
+EXEMPT_BASENAMES = {"clock.py"}
+
+
+def _violations(path: str) -> list:
+    with open(path, "r", encoding="utf-8") as f:
+        src = f.read()
+    try:
+        tree = ast.parse(src, filename=path)
+    except SyntaxError as e:
+        return [(e.lineno or 0, f"syntax error: {e.msg}")]
+    out = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        fn = node.func
+        # time.time(...) / time.monotonic(...) attribute form
+        if (isinstance(fn, ast.Attribute) and fn.attr in FORBIDDEN
+                and isinstance(fn.value, ast.Name) and fn.value.id == "time"):
+            out.append((node.lineno, f"time.{fn.attr}()"))
+    for node in ast.walk(tree):
+        # from time import time / monotonic — forbidden outright so the
+        # attribute check above can't be dodged by aliasing
+        if isinstance(node, ast.ImportFrom) and node.module == "time":
+            for alias in node.names:
+                if alias.name in FORBIDDEN:
+                    out.append((node.lineno,
+                                f"from time import {alias.name}"))
+    return sorted(out)
+
+
+def main(argv=None) -> int:
+    roots = (argv or sys.argv[1:]) or [os.path.join("src", "repro")]
+    bad = 0
+    for root in roots:
+        for dirpath, _dirnames, filenames in os.walk(root):
+            for name in sorted(filenames):
+                if not name.endswith(".py") or name in EXEMPT_BASENAMES:
+                    continue
+                path = os.path.join(dirpath, name)
+                for lineno, what in _violations(path):
+                    print(f"{path}:{lineno}: {what} — use repro.core.clock "
+                          f"(clock.now() / clock.monotonic())")
+                    bad += 1
+    if bad:
+        print(f"\n{bad} bare timestamp call(s); route them through "
+              f"repro.core.clock so FakeClock tests and cross-process "
+              f"trace spans stay consistent.", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
