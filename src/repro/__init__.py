@@ -1,0 +1,21 @@
+"""repro — cloud-scale adaptive data processing (paper reproduction).
+
+Top-level conveniences are lazy (PEP 562) so ``import repro`` stays free of
+the API layer until first use::
+
+    import repro
+    repro.sql("SELECT text FROM 'data.jsonl' WHERE words > 50").execute()
+"""
+from __future__ import annotations
+
+__all__ = ["sql", "SQLError"]
+
+
+def __getattr__(name):
+    if name in ("sql", "SQLError"):
+        # importlib (not attribute traversal): ``repro.api``'s from-import
+        # rebinds its ``sql`` attribute from the submodule to the function
+        import importlib
+
+        return getattr(importlib.import_module("repro.api.sql"), name)
+    raise AttributeError(f"module 'repro' has no attribute {name!r}")

@@ -14,6 +14,7 @@ from repro.api.jobs import (
 from repro.api.pipeline import (
     LazyDataset, Pipeline, from_dataset, from_recipe, from_samples, read_jsonl,
 )
+from repro.api.sql import SQLError, sql
 
 __all__ = [
     "DEFAULT_ANALYZE_OPS", "analyze", "discover_stat_ops",
@@ -21,4 +22,5 @@ __all__ = [
     "ClusterJobHandle", "Job", "JobManager", "JobState", "JobStoreFull",
     "LazyDataset", "Pipeline",
     "read_jsonl", "from_samples", "from_dataset", "from_recipe",
+    "sql", "SQLError",
 ]

@@ -863,8 +863,13 @@ class ClusterRunner:
         rec = _read_json(path)
         if rec is not None and isinstance(rec.get("plan"), list):
             return rec["plan"]
-        plan = Executor(recipe).resolve_plan()
+        ex = Executor(recipe)
+        plan = ex.resolve_plan()
+        # persist the per-rule rewrite diffs with the pinned plan so the
+        # shards:plan span (and post-mortems) can show how the plan was
+        # derived, even on a failover lead that never re-optimizes
         _write_json_atomic(path, {"job_id": job_id, "plan": plan,
+                                  "rewrites": ex.last_rewrites,
                                   "pinned_at": clock.now()})
         self.queue.log_event("plan_pinned", job_id=job_id,
                              runner_id=self.runner_id, n_ops=len(plan))

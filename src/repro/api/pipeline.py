@@ -1,14 +1,16 @@
 """Lazy, chainable Pipeline API — the one Python-first entry point every
-front-end (CLI / REST / NL agent) compiles down to (paper §4, Appendix C.2).
+front-end (CLI / REST / NL agent / SQL) compiles down to (paper §4,
+Appendix C.2).
 
 A ``Pipeline`` is an immutable, deferred plan (Ray-Data-style fluent
 chaining): each ``.map()/.filter()/.dedup()`` call validates the op name and
-kwargs against the registry's typed signatures and returns a NEW pipeline —
-nothing executes until ``.execute()`` / ``.iter_blocks()``. Execution lowers
-the chain into a ``Recipe`` + op plan and dispatches through the existing
-``Executor``, so fusion, workload-aware reordering, streaming-segment
-auto-selection, checkpoints and insight mining all apply for free, and a
-fluent pipeline is *byte-identical* to the equivalent recipe run.
+kwargs against the registry's typed signatures and returns a NEW pipeline.
+Internally a pipeline IS a logical plan (``repro.core.plan.LogicalPlan``):
+the fluent verbs append typed IR nodes, and ``to_recipe()`` — the single
+Recipe<->IR serialization boundary — lowers the plan for the ``Executor``,
+so fusion, workload-aware reordering, streaming-segment auto-selection,
+checkpoints and insight mining all apply for free, and a fluent pipeline is
+*byte-identical* to the equivalent recipe run.
 
     import repro.api as dj
     (dj.read_jsonl("in.jsonl")
@@ -20,17 +22,12 @@ fluent pipeline is *byte-identical* to the equivalent recipe run.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Dict, Iterable, Iterator, List, Optional, Tuple
 
+from repro.core.plan import OPTION_FIELDS as _OPTION_FIELDS
+from repro.core.plan import LogicalPlan
 from repro.core.recipes import Recipe
-from repro.core.registry import op_info, validate_op_config
-
-# Recipe fields settable through .options() — everything except the chain
-# itself (process) and the source (dataset_path), which the builder owns.
-_OPTION_FIELDS = {
-    f.name for f in dataclasses.fields(Recipe)
-} - {"process", "dataset_path"}
+from repro.core.registry import op_info
 
 # method -> op taxonomy types it accepts (op_info()["type"])
 _KIND_FOR_METHOD = {
@@ -56,14 +53,36 @@ def _check_kind(method: str, name: str) -> None:
 
 
 class Pipeline:
-    """Immutable lazy plan: (source, op chain, run options)."""
+    """Immutable lazy plan — a fluent view over a ``LogicalPlan``."""
 
     def __init__(self, source: Optional[Dict[str, Any]] = None,
                  steps: Tuple[Dict[str, Any], ...] = (),
-                 options: Optional[Dict[str, Any]] = None):
-        self._source = source
-        self._steps = tuple(dict(s) for s in steps)
-        self._options = dict(options or {})
+                 options: Optional[Dict[str, Any]] = None,
+                 plan: Optional[LogicalPlan] = None):
+        if plan is None:
+            plan = LogicalPlan.from_op_configs(steps, source=source,
+                                               options=options)
+        self._plan = plan
+
+    # ------------------------------------------------------------------
+    # the underlying IR (and compatibility views over it)
+    # ------------------------------------------------------------------
+    @property
+    def plan(self) -> LogicalPlan:
+        """The logical-plan IR this pipeline wraps."""
+        return self._plan
+
+    @property
+    def _source(self) -> Optional[Dict[str, Any]]:
+        return self._plan.source
+
+    @property
+    def _steps(self) -> Tuple[Dict[str, Any], ...]:
+        return tuple(self._plan.op_configs())
+
+    @property
+    def _options(self) -> Dict[str, Any]:
+        return dict(self._plan.options)
 
     # ------------------------------------------------------------------
     # sources
@@ -71,11 +90,12 @@ class Pipeline:
     @classmethod
     def read_jsonl(cls, path: str) -> "Pipeline":
         """Lazy JSONL/zst source — never decoded until execution."""
-        return cls({"kind": "jsonl", "path": path})
+        return cls(plan=LogicalPlan({"kind": "jsonl", "path": path}))
 
     @classmethod
     def from_samples(cls, samples: Iterable[Dict[str, Any]]) -> "Pipeline":
-        return cls({"kind": "samples", "samples": list(samples)})
+        return cls(plan=LogicalPlan({"kind": "samples",
+                                     "samples": list(samples)}))
 
     @classmethod
     def from_dataset(cls, dataset) -> "Pipeline":
@@ -89,25 +109,23 @@ class Pipeline:
                     "np": getattr(dataset.engine, "n_workers", 1) or 1}
         elif engine_cls == "ShardedEngine":
             opts = {"engine": "sharded"}
-        return cls({"kind": "dataset", "dataset": dataset}, options=opts)
+        return cls(plan=LogicalPlan({"kind": "dataset", "dataset": dataset},
+                                    options=opts))
 
     @classmethod
     def from_recipe(cls, recipe: Recipe) -> "Pipeline":
-        """Lift a declarative Recipe into the fluent representation."""
-        src = {"kind": "jsonl", "path": recipe.dataset_path} \
-            if recipe.dataset_path else None
-        opts = {k: v for k, v in recipe.to_dict().items()
-                if k in _OPTION_FIELDS}
-        return cls(src, tuple(recipe.process), opts)
+        """Lift a declarative Recipe into the fluent representation
+        (``LogicalPlan.from_recipe`` — the Recipe<->IR boundary)."""
+        return cls(plan=LogicalPlan.from_recipe(recipe))
 
     # ------------------------------------------------------------------
     # chainable ops (validated, deferred)
     # ------------------------------------------------------------------
     def op(self, name: str, **kwargs) -> "Pipeline":
-        """Generic chain step: any registered OP by name."""
-        cfg = {"name": name, **kwargs}
-        validate_op_config(cfg)  # unknown name / bad kwargs fail HERE
-        return Pipeline(self._source, self._steps + (cfg,), self._options)
+        """Generic chain step: any registered OP by name. Unknown names /
+        bad kwargs fail HERE (LogicalPlan.with_op validates against the
+        registry's typed signatures)."""
+        return Pipeline(plan=self._plan.with_op({"name": name, **kwargs}))
 
     def map(self, name: str, **kwargs) -> "Pipeline":
         _check_kind("map", name)
@@ -150,11 +168,7 @@ class Pipeline:
     # ------------------------------------------------------------------
     def options(self, **kwargs) -> "Pipeline":
         """Set Recipe-level run options (engine, np, use_fusion, ...)."""
-        unknown = sorted(k for k in kwargs if k not in _OPTION_FIELDS)
-        if unknown:
-            raise TypeError(f"unknown option(s) {unknown}; "
-                            f"accepted: {sorted(_OPTION_FIELDS)}")
-        return Pipeline(self._source, self._steps, {**self._options, **kwargs})
+        return Pipeline(plan=self._plan.with_options(**kwargs))
 
     def write_jsonl(self, path: str) -> "Pipeline":
         """Deferred export target (block-streamed, not materialized)."""
@@ -190,15 +204,10 @@ class Pipeline:
     # lowering + execution
     # ------------------------------------------------------------------
     def to_recipe(self, name: str = "pipeline") -> Recipe:
-        """Lower the chain into the declarative Recipe the Executor runs.
+        """Lower the plan into the declarative Recipe the Executor runs.
         This is the equivalence guarantee: executing the pipeline IS
         executing this recipe."""
-        d: Dict[str, Any] = {"name": self._options.get("name", name)}
-        if self._source and self._source["kind"] == "jsonl":
-            d["dataset_path"] = self._source["path"]
-        d.update({k: v for k, v in self._options.items() if k != "name"})
-        d["process"] = [dict(s) for s in self._steps]
-        return Recipe.from_dict(d)
+        return self._plan.to_recipe(name)
 
     def save_recipe(self, path: str, name: str = "pipeline") -> None:
         self.to_recipe(name).save(path)
@@ -206,18 +215,19 @@ class Pipeline:
     def _source_dataset(self):
         from repro.core.dataset import DJDataset
 
-        if self._source is None:
+        src = self._plan.source
+        if src is None:
             return None
-        if self._source["kind"] == "dataset":
-            return self._source["dataset"]
-        if self._source["kind"] == "samples":
+        if src["kind"] == "dataset":
+            return src["dataset"]
+        if src["kind"] == "samples":
             # protected copies: ops write into sample['stats']/['meta'], and
             # the caller's list must survive execute() unmutated (and be
             # reusable across runs of differently-configured pipelines)
             return DJDataset.from_samples(
                 [{**s, "stats": dict(s.get("stats") or {}),
                   "meta": dict(s.get("meta") or {})}
-                 for s in self._source["samples"]])
+                 for s in src["samples"]])
         return None  # jsonl: the Executor streams it from disk
 
     def _executor(self):
@@ -244,15 +254,17 @@ class Pipeline:
 
     def explain(self) -> Dict[str, Any]:
         """Optimized plan + streaming segments, without running: probes a
-        small head sample, applies fusion/reordering, partitions into
-        pipelineable/barrier segments."""
+        small head sample, applies the optimizer rules, partitions into
+        pipelineable/barrier segments. Includes the typed IR node list
+        (``"nodes"``) and the per-rule rewrite diffs (``"rewrites"``)."""
         return self._executor().explain(dataset=self._source_dataset())
 
     # ------------------------------------------------------------------
     def __repr__(self):
-        src = self._source["kind"] if self._source else "none"
-        chain = " -> ".join(s["name"] for s in self._steps) or "<empty>"
-        return f"Pipeline(source={src}, steps=[{chain}], options={self._options})"
+        src = self._plan.source["kind"] if self._plan.source else "none"
+        chain = " -> ".join(n.name for n in self._plan.nodes) or "<empty>"
+        return (f"Pipeline(source={src}, steps=[{chain}], "
+                f"options={self._plan.options})")
 
 
 # Ray-Data-style alias: a Pipeline IS a lazy dataset handle.

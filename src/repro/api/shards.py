@@ -119,15 +119,15 @@ def split_plan(plan_cfgs: List[Dict[str, Any]]) -> Dict[str, Any]:
 
     Returns ``{"mode": "dedup"|"barrier"|"chain", "n_prefix": N}`` where N
     is the number of chain ops that precede it (the part every map task
-    runs). ``plan_segments`` keeps op order and makes each barrier/stateful
-    op its own single-op segment, so slicing the CONFIG list by op counts
-    is exact."""
-    from repro.core.fusion import plan_segments
-    from repro.core.registry import create_op
+    runs). The pinned configs are lifted into the logical-plan IR and its
+    segment partition walked; ``plan_segments`` keeps op order and makes
+    each barrier/stateful op its own single-op segment, so slicing the
+    CONFIG list by op counts is exact."""
+    from repro.core.plan import LogicalPlan
 
-    ops = [create_op(dict(c)) for c in plan_cfgs]
+    plan = LogicalPlan.from_op_configs(plan_cfgs)
     n = 0
-    for seg in plan_segments(ops):
+    for seg in plan.segments():
         if getattr(seg, "stateful", False):
             cfg = plan_cfgs[n]
             if cfg.get("name") in MINHASH_STREAMING_OPS:
@@ -433,6 +433,13 @@ def run_sharded(runner, lease: Lease, spec: Dict[str, Any], recipe: Recipe,
                       n_reducers=meta["n_reducers"], n_rows=meta["n_rows"])
         if meta.get("auto"):
             plan_span.set(auto=meta["auto"])
+        # per-rule optimizer rewrite diffs, persisted by _pin_plan alongside
+        # the pinned plan — the shards:plan span shows WHAT the rules did to
+        # the plan this DAG was split from (docs/observability.md)
+        plan_rec = _read_json(os.path.join(
+            queue.checkpoint_dir(job_id), "plan.json")) or {}
+        if plan_rec.get("rewrites"):
+            plan_span.set(rewrites=plan_rec["rewrites"])
         plan_span.end()
 
     poll = min(0.2, max(0.05, getattr(runner, "poll", 0.2)))
@@ -559,8 +566,7 @@ def run_finalize_task(runner, spec: Dict[str, Any], monitor: List[dict],
     queue task once every upstream shard task has succeeded."""
     from repro.core.dataset import ExecutionCancelled, stream_segments
     from repro.core.executor import Executor
-    from repro.core.fusion import plan_segments
-    from repro.core.registry import create_op
+    from repro.core.plan import LogicalPlan
     from repro.core.storage import BlockWriter
 
     queue: ClusterQueue = runner.queue
@@ -612,7 +618,8 @@ def run_finalize_task(runner, spec: Dict[str, Any], monitor: List[dict],
         mode=d.get("streaming", "exact"), backend=d.get("backend", "balanced"),
         n_partitions=int(d.get("n_partitions", 8)),
         super_batch=int(d.get("super_batch", 2048)), counters=counters)
-    suffix_ops = [create_op(dict(c)) for c in plan_cfgs[n_prefix + 1:]]
+    suffix_plan = LogicalPlan.from_op_configs(plan_cfgs[n_prefix + 1:])
+    suffix_ops = suffix_plan.ops()
     sub = Recipe.from_dict(recipe.to_dict())
     sub.shards = 0
     sub.row_range = None
@@ -621,7 +628,7 @@ def run_finalize_task(runner, spec: Dict[str, Any], monitor: List[dict],
     ok = False
     try:
         if suffix_ops:
-            segments = plan_segments(suffix_ops)
+            segments = suffix_plan.segments()
             _, _, n_out = stream_segments(
                 blocks, segments, engine, sink=sink, collect=False,
                 n_workers_hint=getattr(engine, "n_workers", 1) or 1,

@@ -1,0 +1,577 @@
+"""SQL front-end: compile a small SELECT dialect onto the logical-plan IR.
+
+``repro.sql("SELECT text FROM ds WHERE lang = 'en' AND words > 50")`` returns
+a :class:`~repro.api.pipeline.Pipeline`, i.e. the query lowers through the
+exact same ``LogicalPlan`` + rule optimizer as the fluent API, recipes and the
+NL interface — SQL is *only* a parser; execution bytes are identical to the
+hand-built chain.
+
+Grammar subset (one statement, no joins/subqueries)::
+
+    SELECT <* | col[, col...] | AGG(text[, k])>
+    FROM   <name | 'path.jsonl'>
+    [WHERE  pred [AND pred]...]          -- conjunctions only
+    [GROUP BY col]                       -- with optional AGG in SELECT
+    [ORDER BY stat_col [ASC|DESC]]       -- lowers to topk_stat_selector
+    [LIMIT n]
+
+Predicates compare a known *stat column* (``words``, ``text_len``, ...) to a
+number with ``= < <= > >=``, or ``lang`` to a string with ``=`` / ``IN``.
+Each stat column maps to the registry Filter that computes it; strict bounds
+use ``math.nextafter`` so ``words > 50`` keeps exactly the rows the inclusive
+filter with ``min_val=nextafter(50, inf)`` keeps.
+"""
+from __future__ import annotations
+
+import inspect
+import math
+import re
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.api.pipeline import Pipeline
+from repro.core.registry import did_you_mean
+
+__all__ = ["sql", "SQLError", "parse_sql", "compile_query", "STAT_COLUMNS"]
+
+# SQL column -> (filter op computing it, stat key it writes)
+STAT_COLUMNS: Dict[str, Tuple[str, str]] = {
+    "words": ("words_num_filter", "num_words"),
+    "num_words": ("words_num_filter", "num_words"),
+    "text_len": ("text_length_filter", "text_len"),
+    "length": ("text_length_filter", "text_len"),
+    "avg_word_len": ("avg_word_length_filter", "avg_word_len"),
+    "alnum_ratio": ("alnum_ratio_filter", "alnum_ratio"),
+    "special_char_ratio": ("special_char_ratio_filter", "special_char_ratio"),
+    "stopword_ratio": ("stopword_ratio_filter", "stopword_ratio"),
+    "word_rep_ratio": ("word_repetition_filter", "word_rep_ratio"),
+    "char_rep_ratio": ("char_repetition_filter", "char_rep_ratio"),
+    "num_tokens": ("token_count_filter", "num_tokens"),
+    "tokens": ("token_count_filter", "num_tokens"),
+    "max_line_len": ("maximum_line_length_filter", "max_line_len"),
+    "quality_score": ("quality_score_filter", "quality_score"),
+}
+LANG_COLUMN = "lang"  # special: string-valued, language_heuristic_filter
+_KNOWN_LANGS = ("en", "zh", "other", "unknown")
+
+AGG_FUNCTIONS = {
+    "concat": "concat_text_aggregator",
+    "keywords": "keyword_summary_aggregator",
+}
+
+_KEYWORDS = frozenset(
+    "select from where and group order by asc desc limit in".split())
+
+
+class SQLError(ValueError):
+    """Query rejected. ``kind`` tags the failure class (``"syntax"``,
+    ``"unknown_column"``, ``"unsupported"``, ``"unknown_source"``) and
+    ``suggestions`` carries registry did-you-mean candidates — the same
+    contract the REST ``/jobs`` 404 uses for unknown OPs."""
+
+    def __init__(self, message: str, kind: str = "syntax",
+                 suggestions: Optional[List[str]] = None):
+        super().__init__(message)
+        self.kind = kind
+        self.suggestions = list(suggestions or [])
+
+
+# --------------------------------------------------------------------------
+# tokenizer
+
+
+@dataclass
+class Token:
+    kind: str  # "ident" | "number" | "string" | "punct" | "star"
+    value: Any
+    pos: int
+
+    @property
+    def word(self) -> str:
+        return str(self.value).lower() if self.kind == "ident" else ""
+
+
+_TOKEN_RE = re.compile(
+    r"""\s*(?:
+        (?P<string>'(?:[^'\\]|\\.)*'|"(?:[^"\\]|\\.)*")
+      | (?P<number>-?\d+(?:\.\d+)?(?:[eE][-+]?\d+)?)
+      | (?P<ident>[A-Za-z_][\w./-]*)
+      | (?P<punct><=|>=|!=|<>|[=<>(),])
+      | (?P<star>\*)
+    )""",
+    re.VERBOSE,
+)
+
+
+def tokenize(query: str) -> List[Token]:
+    toks: List[Token] = []
+    pos = 0
+    while pos < len(query):
+        m = _TOKEN_RE.match(query, pos)
+        if not m:
+            if query[pos:].strip() == "":
+                break
+            raise SQLError(
+                f"cannot tokenize {query[pos:pos + 20]!r} at offset {pos}")
+        pos = m.end()
+        if m.lastgroup == "string":
+            raw = m.group("string")
+            toks.append(Token("string", raw[1:-1].replace("\\'", "'")
+                              .replace('\\"', '"'), m.start()))
+        elif m.lastgroup == "number":
+            txt = m.group("number")
+            num = float(txt)
+            toks.append(Token("number", int(num) if num.is_integer()
+                              and "." not in txt and "e" not in txt.lower()
+                              else num, m.start()))
+        elif m.lastgroup == "ident":
+            toks.append(Token("ident", m.group("ident"), m.start()))
+        elif m.lastgroup == "star":
+            toks.append(Token("star", "*", m.start()))
+        else:
+            toks.append(Token("punct", m.group("punct"), m.start()))
+    return toks
+
+
+# --------------------------------------------------------------------------
+# parser -> Query AST
+
+
+@dataclass
+class Predicate:
+    column: str
+    op: str  # "=", "<", "<=", ">", ">=", "in"
+    value: Any  # number, string, or tuple of strings (IN)
+
+
+@dataclass
+class SelectItem:
+    column: str
+    func: Optional[str] = None  # lowercase agg fn name
+    arg: Optional[int] = None  # e.g. KEYWORDS(text, 5) -> 5
+
+
+@dataclass
+class Query:
+    select: List[SelectItem]
+    star: bool
+    source: str
+    source_is_path: bool
+    where: List[Predicate] = field(default_factory=list)
+    group_by: Optional[str] = None
+    order_by: Optional[str] = None
+    order_desc: bool = False
+    limit: Optional[int] = None
+
+
+class _Parser:
+    def __init__(self, toks: List[Token], query: str):
+        self.toks = toks
+        self.i = 0
+        self.query = query
+
+    def peek(self) -> Optional[Token]:
+        return self.toks[self.i] if self.i < len(self.toks) else None
+
+    def next(self) -> Token:
+        t = self.peek()
+        if t is None:
+            raise SQLError("unexpected end of query")
+        self.i += 1
+        return t
+
+    def expect_kw(self, word: str) -> None:
+        t = self.next()
+        if t.word != word:
+            raise SQLError(f"expected {word.upper()}, got {t.value!r}")
+
+    def at_kw(self, *words: str) -> bool:
+        t = self.peek()
+        return t is not None and t.word in words
+
+    # -- clauses -----------------------------------------------------------
+    def parse(self) -> Query:
+        self.expect_kw("select")
+        star, items = self._select_list()
+        self.expect_kw("from")
+        src = self.next()
+        if src.kind == "string":
+            source, is_path = src.value, True
+        elif src.kind == "ident":
+            source, is_path = src.value, False
+        else:
+            raise SQLError(f"FROM expects a name or quoted path, "
+                           f"got {src.value!r}")
+        q = Query(select=items, star=star, source=source,
+                  source_is_path=is_path)
+        if self.at_kw("where"):
+            self.next()
+            q.where = self._where()
+        if self.at_kw("group"):
+            self.next()
+            self.expect_kw("by")
+            col = self.next()
+            if col.kind != "ident":
+                raise SQLError(f"GROUP BY expects a column, got {col.value!r}")
+            q.group_by = col.value
+        if self.at_kw("order"):
+            self.next()
+            self.expect_kw("by")
+            col = self.next()
+            if col.kind != "ident":
+                raise SQLError(f"ORDER BY expects a column, got {col.value!r}")
+            q.order_by = col.value
+            if self.at_kw("asc", "desc"):
+                q.order_desc = self.next().word == "desc"
+        if self.at_kw("limit"):
+            self.next()
+            n = self.next()
+            if n.kind != "number" or not isinstance(n.value, int) \
+                    or n.value <= 0:
+                raise SQLError(f"LIMIT expects a positive integer, "
+                               f"got {n.value!r}")
+            q.limit = n.value
+        t = self.peek()
+        if t is not None:
+            raise SQLError(f"trailing input at {t.value!r}")
+        return q
+
+    def _select_list(self) -> Tuple[bool, List[SelectItem]]:
+        if self.peek() is not None and self.peek().kind == "star":
+            self.next()
+            return True, []
+        items: List[SelectItem] = []
+        while True:
+            t = self.next()
+            if t.kind != "ident":
+                raise SQLError(f"SELECT expects columns, got {t.value!r}")
+            nxt = self.peek()
+            if nxt is not None and nxt.kind == "punct" and nxt.value == "(":
+                fn = t.word
+                if fn not in AGG_FUNCTIONS:
+                    raise SQLError(
+                        f"unknown aggregate function {t.value!r}"
+                        + _hint(fn, AGG_FUNCTIONS),
+                        kind="unknown_column",
+                        suggestions=did_you_mean(fn, AGG_FUNCTIONS))
+                self.next()  # (
+                col = self.next()
+                if col.kind != "ident":
+                    raise SQLError(
+                        f"{t.value}() expects a column, got {col.value!r}")
+                arg = None
+                if self.peek() is not None and self.peek().value == ",":
+                    self.next()
+                    k = self.next()
+                    if k.kind != "number" or not isinstance(k.value, int):
+                        raise SQLError(f"{t.value}() expects an integer "
+                                       f"argument, got {k.value!r}")
+                    arg = k.value
+                close = self.next()
+                if close.value != ")":
+                    raise SQLError(f"expected ), got {close.value!r}")
+                items.append(SelectItem(column=col.value, func=fn, arg=arg))
+            else:
+                items.append(SelectItem(column=t.value))
+            if self.peek() is not None and self.peek().value == ",":
+                self.next()
+                continue
+            return False, items
+
+    def _where(self) -> List[Predicate]:
+        preds: List[Predicate] = []
+        while True:
+            col = self.next()
+            if col.kind != "ident":
+                raise SQLError(f"WHERE expects a column, got {col.value!r}")
+            op_t = self.next()
+            if op_t.word == "in":
+                self.expect_punct("(")
+                vals = []
+                while True:
+                    v = self.next()
+                    if v.kind != "string":
+                        raise SQLError(f"IN (...) expects quoted strings, "
+                                       f"got {v.value!r}")
+                    vals.append(v.value)
+                    sep = self.next()
+                    if sep.value == ")":
+                        break
+                    if sep.value != ",":
+                        raise SQLError(f"expected , or ), got {sep.value!r}")
+                preds.append(Predicate(col.value, "in", tuple(vals)))
+            elif op_t.kind == "punct" and op_t.value in (
+                    "=", "<", "<=", ">", ">="):
+                v = self.next()
+                if v.kind not in ("number", "string"):
+                    raise SQLError(f"comparison expects a literal, "
+                                   f"got {v.value!r}")
+                preds.append(Predicate(col.value, op_t.value, v.value))
+            elif op_t.kind == "punct" and op_t.value in ("!=", "<>"):
+                raise SQLError(
+                    f"{op_t.value} is not supported (only = < <= > >= IN)",
+                    kind="unsupported")
+            else:
+                raise SQLError(f"expected a comparison operator, "
+                               f"got {op_t.value!r}")
+            if self.at_kw("and"):
+                self.next()
+                continue
+            if self.at_kw("or"):
+                raise SQLError("OR is not supported (conjunctions only)",
+                               kind="unsupported")
+            return preds
+
+    def expect_punct(self, p: str) -> None:
+        t = self.next()
+        if t.value != p:
+            raise SQLError(f"expected {p}, got {t.value!r}")
+
+
+def parse_sql(query: str) -> Query:
+    toks = tokenize(query)
+    if not toks:
+        raise SQLError("empty query")
+    return _Parser(toks, query).parse()
+
+
+# --------------------------------------------------------------------------
+# compiler -> op configs
+
+
+def _hint(name: str, candidates) -> str:
+    close = did_you_mean(name, candidates)
+    return f" (did you mean {', '.join(close)}?)" if close else ""
+
+
+def _unknown_column(name: str) -> SQLError:
+    cols = sorted(set(STAT_COLUMNS) | {LANG_COLUMN, "text"})
+    return SQLError(
+        f"unknown column {name!r}{_hint(name, cols)}; known: {cols}",
+        kind="unknown_column", suggestions=did_you_mean(name, cols))
+
+
+def _strict_above(v: float) -> float:
+    return math.nextafter(float(v), math.inf)
+
+
+def _strict_below(v: float) -> float:
+    return math.nextafter(float(v), -math.inf)
+
+
+def compile_query(q: Query) -> Tuple[List[Dict[str, Any]], Dict[str, Any]]:
+    """Query AST -> (op config list, info). ``info`` carries side-channel
+    facts the caller needs: which stat columns got auto-injected compute
+    filters, the GROUP BY container, etc."""
+    ops: List[Dict[str, Any]] = []
+    info: Dict[str, Any] = {"injected": []}
+
+    # -- WHERE: merge numeric predicates per column into one range filter ---
+    ranges: Dict[str, Dict[str, float]] = {}
+    range_order: List[str] = []  # preserve first-mention order
+    lang_keep: Optional[Tuple[str, ...]] = None
+    for p in q.where:
+        col = p.column.lower()
+        if col == LANG_COLUMN:
+            if p.op == "=":
+                vals: Tuple[str, ...] = (str(p.value),)
+            elif p.op == "in":
+                vals = tuple(str(v) for v in p.value)
+            else:
+                raise SQLError(f"lang supports only = and IN, got {p.op!r}",
+                               kind="unsupported")
+            if lang_keep is not None:
+                # AND of two lang constraints -> intersection
+                vals = tuple(v for v in lang_keep if v in vals)
+            lang_keep = vals
+            continue
+        if col not in STAT_COLUMNS:
+            raise _unknown_column(p.column)
+        if not isinstance(p.value, (int, float)):
+            raise SQLError(f"column {p.column!r} compares to a number, "
+                           f"got {p.value!r}", kind="syntax")
+        if col not in ranges:
+            ranges[col] = {}
+            range_order.append(col)
+        r = ranges[col]
+        v = float(p.value)
+        if p.op == "=":
+            r["min_val"] = max(r.get("min_val", -math.inf), v)
+            r["max_val"] = min(r.get("max_val", math.inf), v)
+        elif p.op == ">=":
+            r["min_val"] = max(r.get("min_val", -math.inf), v)
+        elif p.op == ">":
+            r["min_val"] = max(r.get("min_val", -math.inf), _strict_above(v))
+        elif p.op == "<=":
+            r["max_val"] = min(r.get("max_val", math.inf), v)
+        elif p.op == "<":
+            r["max_val"] = min(r.get("max_val", math.inf), _strict_below(v))
+
+    filtered_stats = set()  # stat keys already computed by a WHERE filter
+    if lang_keep is not None:
+        ops.append({"name": "language_heuristic_filter",
+                    "keep_langs": list(lang_keep)})
+        filtered_stats.add(LANG_COLUMN)
+    for col in range_order:
+        op_name, stat_key = STAT_COLUMNS[col]
+        cfg: Dict[str, Any] = {"name": op_name}
+        cfg.update(ranges[col])
+        ops.append(cfg)
+        filtered_stats.add(stat_key)
+
+    def _ensure_stat(column: str) -> str:
+        """Make sure ``column``'s stat is computed; inject an unbounded
+        (keep-everything) filter when WHERE didn't already. Returns the
+        stat key."""
+        col = column.lower()
+        if col == LANG_COLUMN:
+            if LANG_COLUMN not in filtered_stats:
+                ops.append({"name": "language_heuristic_filter",
+                            "keep_langs": list(_KNOWN_LANGS)})
+                filtered_stats.add(LANG_COLUMN)
+                info["injected"].append(LANG_COLUMN)
+            return LANG_COLUMN
+        if col not in STAT_COLUMNS:
+            raise _unknown_column(column)
+        op_name, stat_key = STAT_COLUMNS[col]
+        if stat_key not in filtered_stats:
+            ops.append({"name": op_name})  # default bounds: (-inf, inf)
+            filtered_stats.add(stat_key)
+            info["injected"].append(stat_key)
+        return stat_key
+
+    # -- aggregates in SELECT ----------------------------------------------
+    aggs = [it for it in q.select if it.func]
+    if len(aggs) > 1:
+        raise SQLError("at most one aggregate function per query",
+                       kind="unsupported")
+    if aggs and q.group_by is None:
+        raise SQLError(f"{aggs[0].func.upper()}() requires GROUP BY",
+                       kind="syntax")
+    if aggs and aggs[0].column != "text":
+        raise SQLError(f"{aggs[0].func.upper()}() aggregates the text "
+                       f"column, got {aggs[0].column!r}", kind="unsupported")
+
+    # -- GROUP BY -> grouper + aggregator barrier --------------------------
+    if q.group_by is not None:
+        if q.order_by is not None:
+            raise SQLError("ORDER BY with GROUP BY is not supported",
+                           kind="unsupported")
+        col = q.group_by.lower()
+        if col == LANG_COLUMN or col in STAT_COLUMNS:
+            key = _ensure_stat(q.group_by)
+            source = "stats"
+        else:
+            key, source = q.group_by, "meta"  # free-form meta key
+        ops.append({"name": "key_value_grouper", "key": key,
+                    "source": source})
+        info["group_source"] = source
+        if aggs and aggs[0].func == "keywords":
+            agg_cfg: Dict[str, Any] = {"name": AGG_FUNCTIONS["keywords"]}
+            if aggs[0].arg is not None:
+                agg_cfg["top_k"] = aggs[0].arg
+            ops.append(agg_cfg)
+        else:
+            ops.append({"name": AGG_FUNCTIONS["concat"]})
+
+    # -- ORDER BY / LIMIT -> topk_stat_selector ----------------------------
+    if q.order_by is not None:
+        stat_key = _ensure_stat(q.order_by)
+        if stat_key == LANG_COLUMN:
+            raise SQLError("ORDER BY needs a numeric stat column",
+                           kind="unsupported")
+        sel: Dict[str, Any] = {"name": "topk_stat_selector",
+                               "stat_key": stat_key,
+                               "descending": bool(q.order_desc)}
+        if q.limit is not None:
+            sel["k"] = q.limit
+        else:
+            sel["fraction"] = 1.0  # full sort, keep everything
+        ops.append(sel)
+    elif q.limit is not None:
+        raise SQLError("LIMIT requires ORDER BY (results are otherwise "
+                       "unordered)", kind="unsupported")
+
+    # -- SELECT projection -------------------------------------------------
+    if not q.star and not aggs:
+        cols = [it.column for it in q.select]
+        for c in cols:
+            lc = c.lower()
+            if lc not in ("text", "meta", "stats", "id") \
+                    and lc != LANG_COLUMN and lc not in STAT_COLUMNS:
+                raise _unknown_column(c)
+        if cols != ["text"]:
+            fields = []
+            for c in cols:
+                lc = c.lower()
+                if lc == LANG_COLUMN or lc in STAT_COLUMNS:
+                    _ensure_stat(c)
+                    f = "stats"
+                else:
+                    f = lc
+                if f not in fields:
+                    fields.append(f)
+            ops.append({"name": "select_fields_mapper", "fields": fields})
+    return ops, info
+
+
+# --------------------------------------------------------------------------
+# FROM resolution + public entry point
+
+
+def _resolve_source(q: Query, source, dataset_path: Optional[str],
+                    caller_frame) -> Pipeline:
+    if source is not None:
+        if isinstance(source, Pipeline):
+            return source
+        if isinstance(source, str):
+            return Pipeline.read_jsonl(source)
+        if isinstance(source, (list, tuple)):
+            return Pipeline.from_samples(list(source))
+        return Pipeline.from_dataset(source)
+    if dataset_path is not None:
+        return Pipeline.read_jsonl(dataset_path)
+    if q.source_is_path:
+        return Pipeline.read_jsonl(q.source)
+    # FROM <name>: look the identifier up in the caller's scope
+    if caller_frame is not None:
+        ns = dict(caller_frame.f_globals)
+        ns.update(caller_frame.f_locals)
+        if q.source in ns:
+            v = ns[q.source]
+            if isinstance(v, Pipeline):
+                return v
+            if isinstance(v, str):
+                return Pipeline.read_jsonl(v)
+            if isinstance(v, (list, tuple)):
+                return Pipeline.from_samples(list(v))
+            return Pipeline.from_dataset(v)
+    raise SQLError(
+        f"cannot resolve FROM source {q.source!r}: pass source=/dataset_path="
+        f" or use a quoted path ('data.jsonl')", kind="unknown_source")
+
+
+def sql(query: str, source=None, *, dataset_path: Optional[str] = None,
+        export_path: Optional[str] = None, **options) -> Pipeline:
+    """Compile ``query`` to a :class:`Pipeline` over the shared logical-plan
+    IR. ``source`` may be a Pipeline, a dataset, a samples list or a jsonl
+    path; otherwise ``FROM`` resolves via ``dataset_path=``, a quoted path
+    literal, or a same-named variable in the caller's scope. Extra keyword
+    ``options`` pass through to :meth:`Pipeline.options`."""
+    q = parse_sql(query)
+    frame = inspect.currentframe()
+    caller = frame.f_back if frame is not None else None
+    try:
+        pipe = _resolve_source(q, source, dataset_path, caller)
+    finally:
+        del frame, caller
+    op_cfgs, _ = compile_query(q)
+    for cfg in op_cfgs:
+        cfg = dict(cfg)
+        name = cfg.pop("name")
+        pipe = pipe.op(name, **cfg)
+    if export_path is not None:
+        pipe = pipe.write_jsonl(export_path)
+    if options:
+        pipe = pipe.options(**options)
+    return pipe

@@ -40,10 +40,12 @@ from repro.core.dataset import (
     seed_plan_entries, stream_segments,
 )
 from repro.core.engine import make_engine
-from repro.core.fusion import optimize, plan_segments
+from repro.core.fusion import plan_segments
 from repro.core.insight import InsightMiner, SegmentInsightRecorder
 from repro.core.ops_base import Operator
+from repro.core.plan import LogicalPlan
 from repro.core.recipes import Recipe
+from repro.core.rules import annotate_plan, optimize_plan
 from repro.core.registry import create_op
 from repro.core.storage import (
     BlockPrefetcher, BlockWriter, SampleBlock, iter_sample_blocks,
@@ -90,6 +92,11 @@ class Executor:
     def __init__(self, recipe: Recipe, adapter: Optional[Adapter] = None):
         self.recipe = recipe
         self.adapter = adapter or Adapter()
+        # set by _optimize_ops: the optimized LogicalPlan and the per-rule
+        # rewrite diffs of the last optimization (explain / plan pinning /
+        # the plan:optimize trace span all read these)
+        self.last_plan: Optional[LogicalPlan] = None
+        self.last_rewrites: List[dict] = []
 
     def _build_ops(self) -> List[Operator]:
         return [create_op(cfg) for cfg in self.recipe.process]
@@ -219,12 +226,41 @@ class Executor:
     # streaming block-pipelined path
     # ------------------------------------------------------------------
     def _optimize_ops(self, ops: List[Operator], probe_samples: List[dict]) -> List[Operator]:
+        """Probe + rule-based optimization over the logical-plan IR. The
+        optimized plan and the per-rule rewrite diffs are kept on the
+        executor (``last_plan`` / ``last_rewrites``) and emitted as a
+        ``plan:optimize`` span under the ambient run span."""
         r = self.recipe
         if (r.use_fusion or r.use_reordering) and probe_samples:
+            t0 = clock.now()
             self.adapter.probe_small_batch(probe_samples, ops)
-            ops = optimize(ops, self.adapter.probes,
-                           do_fuse=r.use_fusion, do_reorder=r.use_reordering)
+            plan, rewrites = optimize_plan(
+                LogicalPlan.from_ops(ops), self.adapter.probes,
+                do_fuse=r.use_fusion, do_reorder=r.use_reordering)
+            self.last_plan = plan
+            self.last_rewrites = [rw.to_dict() for rw in rewrites]
+            self._emit_plan_span(t0, self.last_rewrites)
+            ops = plan.ops()
         return ops
+
+    def _emit_plan_span(self, t0: float, rewrites: List[dict]) -> None:
+        """Log the optimizer's per-rule before/after diffs onto the trace
+        (kind="plan"), parented under the ambient run span when one is
+        active, else under the recipe's submitted trace context."""
+        if not obs.enabled():
+            return
+        tr = self.recipe.trace or {}
+        stack = obs.tracer().stack()
+        parent = stack[-1] if stack else None
+        trace_id = parent.trace_id if parent is not None else tr.get("trace_id")
+        sp = obs.start_span(
+            trace_id, "plan:optimize", kind="plan",
+            parent_id=parent.span_id if parent is not None else tr.get("span_id"),
+            t0=t0)
+        if sp is not None:
+            sp.set(rules=rewrites,
+                   n_rules_changed=sum(1 for rw in rewrites if rw["changed"]))
+            sp.end()
 
     def _probe_samples(self, dataset: Optional[DJDataset]) -> List[dict]:
         if dataset is not None:
@@ -273,10 +309,18 @@ class Executor:
         ops = self._optimize_ops(
             self._build_ops(), self._probe_samples(dataset)[:EXPLAIN_PROBE_LIMIT])
         segments = plan_segments(ops)
+        src = {"kind": "jsonl", "path": r.dataset_path} if r.dataset_path else None
+        opts = {"export_path": r.export_path} if r.export_path else {}
+        plan_ir = self.last_plan or annotate_plan(LogicalPlan.from_ops(ops))
+        plan_ir = LogicalPlan(src, plan_ir.nodes, opts)
         return {
             "recipe": r.name,
             "requested": [cfg.get("name") for cfg in r.process],
             "plan": [op.name for op in ops],
+            # the optimized logical plan: typed Source/.../Sink nodes with
+            # column deps + rule annotations, and the per-rule rewrite diffs
+            "nodes": plan_ir.describe(),
+            "rewrites": list(self.last_rewrites),
             "segments": [
                 {"ops": [o.name for o in seg.ops], "barrier": seg.barrier,
                  "stateful": seg.stateful, "pushdown": seg.n_pushdown}
@@ -515,13 +559,9 @@ class Executor:
         n_in = len(dataset)
 
         ops, fixed = self._plan_ops()
-        # probe + optimize (fusion & workload-aware reordering)
-        if (r.use_fusion or r.use_reordering) and len(dataset) and not fixed:
-            self.adapter.probe_small_batch(dataset.samples(), ops)
-            ops = optimize(
-                ops, self.adapter.probes,
-                do_fuse=r.use_fusion, do_reorder=r.use_reordering,
-            )
+        # probe + rule-based optimize (fusion & workload-aware reordering)
+        if len(dataset) and not fixed:
+            ops = self._optimize_ops(ops, dataset.samples())
         plan = [op.name for op in ops]
 
         # operator-level checkpoint resume

@@ -6,6 +6,12 @@ commutativity group, faster OPs run first (so slower OPs see fewer samples),
 and the fused OP's speed is the harmonic composition
 
     v_fused = 1 / sum(1 / v_i)                     (paper Eq. 1)
+
+This module holds the list-level KERNELS (reorder / fuse_filters /
+plan_segments / op_speed) plus the streaming Segment type. The optimizer
+itself — which kernels run, in what order, with per-rule rewrite diffs —
+is the ordered rule pipeline in ``repro.core.rules`` operating on the
+logical-plan IR (``repro.core.plan``); ``optimize`` below delegates to it.
 """
 from __future__ import annotations
 
@@ -158,11 +164,13 @@ def optimize(
     do_fuse: bool = True,
     do_reorder: bool = True,
 ) -> List[Operator]:
-    ops = list(ops)
-    if do_reorder:
-        ops = reorder(ops, probes)
-    if do_fuse:
-        ops = fuse_filters(ops)
-    if do_reorder:
-        ops = reorder(ops, probes)
-    return ops
+    """Optimize an op list. Thin compatibility wrapper: the optimizer proper
+    is the ordered rule pipeline in ``repro.core.rules`` (reorder -> fuse ->
+    reorder + annotation rules) applied over the logical-plan IR; this keeps
+    the historical list-in/list-out entry point for benchmarks and tests."""
+    from repro.core.plan import LogicalPlan
+    from repro.core.rules import optimize_plan
+
+    plan, _ = optimize_plan(LogicalPlan.from_ops(ops), probes,
+                            do_fuse=do_fuse, do_reorder=do_reorder)
+    return plan.ops()

@@ -1,0 +1,307 @@
+"""Logical-plan IR: the single plan representation every front-end lowers to.
+
+A ``LogicalPlan`` is an immutable (source, op-node chain, run options)
+triple. Typed nodes — Source / Map / Filter / Dedup / Select / GroupAgg /
+Sink — wrap registry op configs and carry the registry's typed signature
+plus column-dependency metadata (which sample columns an op reads and which
+stat columns it writes). Every entry point builds one:
+
+  * ``api.pipeline.Pipeline`` holds a LogicalPlan and its fluent verbs are
+    thin wrappers over :meth:`LogicalPlan.with_op`;
+  * ``api.sql`` compiles SELECT/WHERE/GROUP BY queries into plan nodes;
+  * ``interface.nl`` emits a Pipeline, hence a plan;
+  * declarative recipes round-trip through :meth:`from_recipe` /
+    :meth:`to_recipe` — the Recipe is the single serialization boundary
+    (``fixed_plan`` pinning, shard planning and REST submission all speak
+    Recipe dicts produced here).
+
+The optimizer (``repro.core.rules``) rewrites a plan with ordered,
+inspectable rules; ``fusion.py`` keeps the list-level kernels the rules
+call. Plans bind to live ``Operator`` instances lazily (``bind()``): the
+executor probes and runs the SAME instances the rules reordered, which is
+what keeps optimized output byte-identical to the pre-IR code path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
+
+from repro.core.ops_base import (
+    Aggregator, Deduplicator, Filter, Formatter, FusedOP, Grouper, Mapper,
+    Operator, Selector,
+)
+from repro.core.recipes import Recipe
+
+# Recipe fields a plan may carry as run options — everything except the op
+# chain itself (process) and the source (dataset_path), which the IR owns.
+OPTION_FIELDS = {
+    f.name for f in dataclasses.fields(Recipe)
+} - {"process", "dataset_path"}
+
+# registry taxonomy type -> IR node kind
+_KIND_FOR_TYPE = {
+    "Formatter": "map",
+    "Mapper": "map",
+    "Filter": "filter",
+    "Deduplicator": "dedup",
+    "Selector": "select",
+    "Grouper": "group_agg",
+    "Aggregator": "group_agg",
+    "ScriptOP": "map",
+    "HumanOP": "map",
+}
+
+
+def kind_of_config(cfg: Dict[str, Any]) -> str:
+    from repro.core.registry import op_info
+
+    name = cfg.get("name")
+    if name == "fused_op":
+        return "filter"  # fused groups are filter chains
+    try:
+        return _KIND_FOR_TYPE.get(op_info(name)["type"], "map")
+    except KeyError:
+        return "map"
+
+
+def kind_of_op(op: Operator) -> str:
+    if isinstance(op, FusedOP):
+        return "filter"
+    if isinstance(op, Filter):
+        return "filter"
+    if isinstance(op, Deduplicator):
+        return "dedup"
+    if isinstance(op, Selector):
+        return "select"
+    if isinstance(op, (Grouper, Aggregator)):
+        return "group_agg"
+    if isinstance(op, (Mapper, Formatter)):
+        return "map"
+    return "map"
+
+
+def column_deps(op: Operator) -> Tuple[Tuple[str, ...], Tuple[str, ...]]:
+    """(reads, writes): the sample columns an op consumes and the stat
+    columns it produces — what the pushdown rule reasons over and what
+    ``explain`` surfaces per node. Stat columns are dotted (``stats.lang``)."""
+    if isinstance(op, FusedOP):
+        reads: List[str] = []
+        writes: List[str] = []
+        for o in op.ops:
+            r, w = column_deps(o)
+            reads.extend(x for x in r if x not in reads)
+            writes.extend(x for x in w if x not in writes)
+        return tuple(reads), tuple(writes)
+    if isinstance(op, Filter):
+        keys = [getattr(op, "stat_key", None)] if getattr(op, "stat_key", None) \
+            else list(getattr(op, "stats_keys", ()) or ())
+        return ("text",), tuple(f"stats.{k}" for k in keys if k)
+    if isinstance(op, Selector):
+        sk = op.params.get("stat_key")
+        return ((f"stats.{sk}",) if sk else ()), ()
+    if isinstance(op, Grouper):
+        key = op.params.get("key")
+        src = op.params.get("source", "meta")
+        return ((f"{src}.{key}",) if key else ()), ()
+    if isinstance(op, Aggregator):
+        return ("text",), ("text", "meta")
+    if isinstance(op, Deduplicator):
+        return ("text",), ()
+    return ("text",), ("text",)  # mappers/formatters rewrite the payload
+
+
+@dataclasses.dataclass
+class PlanNode:
+    """One typed IR node. ``config`` is the registry op config for op nodes,
+    the source descriptor for ``source`` nodes, and ``{"path": ...}`` for
+    ``sink`` nodes. Optimizer rules set the annotation flags (``pushdown``,
+    ``columnar``) and swap/merge nodes; the bound instance (``op``) is
+    created lazily and preserved across rule rewrites so probed speeds
+    survive reordering."""
+
+    kind: str
+    config: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    op: Optional[Operator] = None
+    pushdown: bool = False   # PredicatePushdownRule: runs driver-side at decode
+    columnar: bool = False   # ColumnarPrefixRule: eligible for the column path
+
+    @property
+    def name(self) -> str:
+        if self.op is not None:
+            return self.op.name
+        return self.config.get("name", self.kind)
+
+    def bind(self) -> Operator:
+        """The live Operator instance for this node (lazily constructed;
+        stable across calls so probe results stick)."""
+        if self.op is None:
+            from repro.core.registry import create_op
+
+            self.op = create_op(dict(self.config))
+        return self.op
+
+    def op_config(self) -> Dict[str, Any]:
+        """Serializable op config. A bound node serializes its instance
+        (covers optimizer-made FusedOPs, which never had a config)."""
+        if self.op is not None:
+            return self.op.config()
+        return dict(self.config)
+
+    def signature(self) -> Dict[str, Any]:
+        """Registry typed signature(s) carried by this node."""
+        from repro.core.registry import op_signature
+
+        name = self.op_config().get("name")
+        if name == "fused_op":
+            return {"name": "fused_op",
+                    "ops": [op_signature(c["name"])
+                            for c in self.op_config().get("ops", [])]}
+        try:
+            return op_signature(name)
+        except KeyError:
+            return {"name": name, "params": [], "accepts_extra": True}
+
+    def describe(self) -> Dict[str, Any]:
+        d: Dict[str, Any] = {"kind": self.kind, "name": self.name}
+        if self.kind in ("source", "sink"):
+            # source configs carry their own "kind" (jsonl/samples/...):
+            # surface it as "format" so it can't clobber the node kind
+            d.update({("format" if k == "kind" else k): v
+                      for k, v in self.config.items()
+                      if isinstance(v, (str, int, float, bool))})
+            return d
+        op = self.bind()
+        reads, writes = column_deps(op)
+        d["reads"] = list(reads)
+        d["writes"] = list(writes)
+        if self.pushdown:
+            d["pushdown"] = True
+        if self.columnar:
+            d["columnar"] = True
+        from repro.core.fusion import is_barrier_op, is_stream_stage_op
+
+        if is_barrier_op(op):
+            d["barrier"] = True
+        if is_stream_stage_op(op):
+            d["stateful"] = True
+        return d
+
+
+class LogicalPlan:
+    """Immutable logical plan. All ``with_*`` builders return a NEW plan."""
+
+    __slots__ = ("source", "nodes", "options")
+
+    def __init__(self, source: Optional[Dict[str, Any]] = None,
+                 nodes: Sequence[PlanNode] = (),
+                 options: Optional[Dict[str, Any]] = None):
+        self.source = source
+        self.nodes: Tuple[PlanNode, ...] = tuple(nodes)
+        self.options: Dict[str, Any] = dict(options or {})
+
+    # ------------------------------------------------------------------
+    # construction
+    # ------------------------------------------------------------------
+    @classmethod
+    def from_op_configs(cls, cfgs: Iterable[Dict[str, Any]],
+                        source: Optional[Dict[str, Any]] = None,
+                        options: Optional[Dict[str, Any]] = None
+                        ) -> "LogicalPlan":
+        nodes = [PlanNode(kind_of_config(c), dict(c)) for c in cfgs]
+        return cls(source, nodes, options)
+
+    @classmethod
+    def from_ops(cls, ops: Iterable[Operator],
+                 source: Optional[Dict[str, Any]] = None,
+                 options: Optional[Dict[str, Any]] = None) -> "LogicalPlan":
+        """Wrap already-bound Operator instances (identity-preserving: the
+        instances, including their probed speeds, ARE the plan)."""
+        nodes = [PlanNode(kind_of_op(op), op.config(), op=op) for op in ops]
+        return cls(source, nodes, options)
+
+    @classmethod
+    def from_recipe(cls, recipe: Recipe) -> "LogicalPlan":
+        src = {"kind": "jsonl", "path": recipe.dataset_path} \
+            if recipe.dataset_path else None
+        opts = {k: v for k, v in recipe.to_dict().items()
+                if k in OPTION_FIELDS}
+        return cls.from_op_configs(recipe.process, source=src, options=opts)
+
+    # ------------------------------------------------------------------
+    # builders (validated, immutable)
+    # ------------------------------------------------------------------
+    def with_op(self, cfg: Dict[str, Any]) -> "LogicalPlan":
+        from repro.core.registry import validate_op_config
+
+        validate_op_config(cfg)  # unknown name / bad kwargs fail HERE
+        node = PlanNode(kind_of_config(cfg), dict(cfg))
+        return LogicalPlan(self.source, self.nodes + (node,), self.options)
+
+    def with_options(self, **kwargs) -> "LogicalPlan":
+        unknown = sorted(k for k in kwargs if k not in OPTION_FIELDS)
+        if unknown:
+            raise TypeError(f"unknown option(s) {unknown}; "
+                            f"accepted: {sorted(OPTION_FIELDS)}")
+        return LogicalPlan(self.source, self.nodes,
+                           {**self.options, **kwargs})
+
+    def with_source(self, source: Optional[Dict[str, Any]]) -> "LogicalPlan":
+        return LogicalPlan(source, self.nodes, self.options)
+
+    # ------------------------------------------------------------------
+    # views
+    # ------------------------------------------------------------------
+    def ops(self) -> List[Operator]:
+        return [n.bind() for n in self.nodes]
+
+    def op_configs(self) -> List[Dict[str, Any]]:
+        return [n.op_config() for n in self.nodes]
+
+    def source_node(self) -> Optional[PlanNode]:
+        if self.source is None:
+            return None
+        return PlanNode("source", dict(self.source))
+
+    def sink_node(self) -> Optional[PlanNode]:
+        path = self.options.get("export_path")
+        if not path:
+            return None
+        return PlanNode("sink", {"path": path})
+
+    def segments(self):
+        """The streaming segment partition of this plan (fusion.Segment)."""
+        from repro.core.fusion import plan_segments
+
+        return plan_segments(self.ops())
+
+    # ------------------------------------------------------------------
+    # the single serialization boundary: Recipe <-> IR
+    # ------------------------------------------------------------------
+    def to_recipe(self, name: str = "plan") -> Recipe:
+        """Lower this plan into the declarative Recipe the Executor runs.
+        Executing the plan IS executing this recipe — the equivalence
+        guarantee every front-end inherits."""
+        d: Dict[str, Any] = {"name": self.options.get("name", name)}
+        if self.source and self.source.get("kind") == "jsonl":
+            d["dataset_path"] = self.source["path"]
+        d.update({k: v for k, v in self.options.items() if k != "name"})
+        d["process"] = self.op_configs()
+        return Recipe.from_dict(d)
+
+    def describe(self) -> List[Dict[str, Any]]:
+        """Typed node list for explain/trace surfaces — Source and Sink
+        included, column deps and rule annotations on every op node."""
+        out: List[Dict[str, Any]] = []
+        sn = self.source_node()
+        if sn is not None:
+            out.append(sn.describe())
+        out.extend(n.describe() for n in self.nodes)
+        kn = self.sink_node()
+        if kn is not None:
+            out.append(kn.describe())
+        return out
+
+    def __repr__(self):
+        chain = " -> ".join(n.name for n in self.nodes) or "<empty>"
+        src = (self.source or {}).get("kind", "none")
+        return f"LogicalPlan(source={src}, nodes=[{chain}])"

@@ -86,7 +86,14 @@ class Recipe:
 
 
 def _scalar(tok: str) -> Any:
-    t = tok.strip().strip('"').strip("'")
+    t = tok.strip()
+    if t.startswith("[") and t.endswith("]"):
+        # inline flow list of scalars: [a, b] (row_range, keep_langs, ...).
+        # naive comma split — the dumper's reparse check refuses values
+        # (embedded commas, nesting) this can't round-trip
+        inner = t[1:-1].strip()
+        return [] if not inner else [_scalar(p) for p in inner.split(",")]
+    t = t.strip('"').strip("'")
     if t.lower() in ("true", "false"):
         return t.lower() == "true"
     if t.lower() in ("null", "none", "~", ""):
@@ -118,6 +125,13 @@ def _yaml_scalar(v: Any) -> str:
                 f"string {v!r} does not survive the simple-YAML subset; "
                 f"save as .json")
         return v
+    if isinstance(v, (list, tuple)):
+        out = "[" + ", ".join(_yaml_scalar(x) for x in v) + "]"
+        if _scalar(out) != list(v):  # validate by reparse
+            raise ValueError(
+                f"list {v!r} does not survive the simple-YAML subset; "
+                f"save as .json")
+        return out
     if not isinstance(v, (int, float)):
         raise ValueError(
             f"cannot express {v!r} in the simple-YAML subset; save as .json")
@@ -129,14 +143,23 @@ def dump_simple_yaml(d: Dict[str, Any]) -> str:
     plus a ``process:`` list of ``- op_name:`` blocks with scalar args."""
     lines: List[str] = []
     for k, v in d.items():
-        # fixed_plan is a nested op-config list like process — not
-        # expressible in the scalar subset; JSON recipes round-trip it.
+        # process/fixed_plan are op-config lists, dumped as blocks below.
         # trace is runtime-internal context, never part of a saved recipe
         if k in ("process", "fixed_plan", "trace") or v is None:
             continue
         lines.append(f"{k}: {_yaml_scalar(v)}")
-    lines.append("process:")
-    for cfg in d.get("process", []):
+    _dump_op_list(lines, "process", d.get("process", []))
+    if d.get("fixed_plan") is not None:
+        # a pinned plan is load-bearing (failover replays it verbatim) —
+        # round-trip it like process; nested configs (fused_op) raise in
+        # _yaml_scalar rather than being dropped silently
+        _dump_op_list(lines, "fixed_plan", d["fixed_plan"])
+    return "\n".join(lines) + "\n"
+
+
+def _dump_op_list(lines: List[str], key: str, cfgs: List[Dict[str, Any]]) -> None:
+    lines.append(f"{key}:")
+    for cfg in cfgs:
         cfg = dict(cfg)
         name = cfg.pop("name")
         if not cfg:
@@ -145,7 +168,6 @@ def dump_simple_yaml(d: Dict[str, Any]) -> str:
         lines.append(f"  - {name}:")
         for ak, av in cfg.items():
             lines.append(f"      {ak}: {_yaml_scalar(av)}")
-    return "\n".join(lines) + "\n"
 
 
 def parse_simple_yaml(text: str) -> Dict[str, Any]:

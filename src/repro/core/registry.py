@@ -25,11 +25,23 @@ def _ensure_builtin_ops_loaded() -> None:
     import repro.ops  # noqa: F401 — registers the builtin library
 
 
+def did_you_mean(name: str, candidates) -> List[str]:
+    """Close-match suggestions for a name against a candidate pool — the
+    shared did-you-mean machinery behind unknown-op 404s, SQL unknown-column
+    errors and fluent-API KeyErrors."""
+    return difflib.get_close_matches(str(name), list(candidates), n=3,
+                                     cutoff=0.6)
+
+
+def suggestion_hint(name: str, candidates) -> str:
+    close = did_you_mean(name, candidates)
+    return f" (did you mean {', '.join(close)}?)" if close else ""
+
+
 def unknown_op_message(name: str) -> str:
     """Error text for a missing OP name, with close-match suggestions."""
-    close = difflib.get_close_matches(str(name), list(OPS), n=3, cutoff=0.6)
-    hint = f" (did you mean {', '.join(close)}?)" if close else ""
-    return f"unknown OP {name!r}{hint}; known: {sorted(OPS)}"
+    return (f"unknown OP {name!r}{suggestion_hint(name, OPS)}; "
+            f"known: {sorted(OPS)}")
 
 
 def create_op(config: Dict[str, Any]) -> Operator:

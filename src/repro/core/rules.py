@@ -1,0 +1,216 @@
+"""Rule-based plan optimizer: ordered, inspectable rewrites over the IR.
+
+The optimizer is a fixed, ordered list of rules applied to a
+``LogicalPlan`` (repro.core.plan). Each rule returns a ``RuleRewrite`` —
+the before/after op chain plus rule-specific detail — so every surface
+that shows a plan (``Executor.explain``, the ``plan:optimize`` /
+``shards:plan`` trace spans, ``dj explain``) can show exactly WHICH rule
+changed WHAT:
+
+  1. ``probe_cost_reorder``   — within each commutativity group, sort by
+                                probed speed, fastest first (paper Fig. 9).
+  2. ``filter_fusion``        — fuse adjacent fusible Filters into a
+                                cascading FusedOP (harmonic speed, Eq. 1).
+  3. ``probe_cost_reorder``   — second pass over the fused chain.
+  4. ``predicate_pushdown``   — annotate the column-only filter prefix of
+                                each chain segment (runs driver-side at
+                                block decode; ``Segment.n_pushdown``).
+  5. ``columnar_prefix``      — annotate the longest prefix of each chain
+                                segment that can traverse the columnar
+                                (struct-of-arrays) path.
+
+Rules 1–3 rewrite node order/grouping; 4–5 are annotation rules — the
+executor derives the same facts at runtime from the identical predicates
+(``fusion.plan_segments`` / ``Operator.supports_columns``), so annotations
+are documentation of what WILL happen, never a second source of truth.
+
+The list-level kernels (``reorder``, ``fuse_filters``, ``op_speed``) live
+in ``fusion.py``; ``fusion.optimize`` now delegates HERE, which makes this
+module the single definition of optimizer ordering and keeps the rewritten
+optimizer byte-identical to the historical reorder -> fuse -> reorder
+sequence.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.core.plan import LogicalPlan, PlanNode, kind_of_op
+
+__all__ = ["RuleRewrite", "optimize_plan", "annotate_plan", "RULE_NAMES"]
+
+RULE_NAMES = ("probe_cost_reorder", "filter_fusion", "predicate_pushdown",
+              "columnar_prefix")
+
+
+@dataclasses.dataclass
+class RuleRewrite:
+    """One rule application: inspectable before/after diff."""
+
+    rule: str
+    before: List[str]
+    after: List[str]
+    changed: bool
+    detail: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {"rule": self.rule, "before": self.before, "after": self.after,
+                "changed": self.changed, "detail": self.detail}
+
+
+def _names(nodes) -> List[str]:
+    return [n.name for n in nodes]
+
+
+def _rebuild_nodes(old_nodes, new_ops) -> List[PlanNode]:
+    """Map a kernel's output instance list back onto plan nodes, reusing the
+    node (and its annotations) wherever the instance survived, and minting
+    nodes for optimizer-made instances (FusedOPs)."""
+    by_id = {id(n.bind()): n for n in old_nodes}
+    out: List[PlanNode] = []
+    for op in new_ops:
+        node = by_id.get(id(op))
+        if node is None:
+            node = PlanNode(kind_of_op(op), op.config(), op=op)
+        out.append(node)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# rewrite rules
+# ---------------------------------------------------------------------------
+
+
+def _apply_reorder(plan: LogicalPlan, probes) -> Tuple[LogicalPlan, RuleRewrite]:
+    from repro.core.fusion import op_speed, reorder
+
+    ops = plan.ops()
+    new_ops = reorder(ops, probes)
+    nodes = _rebuild_nodes(plan.nodes, new_ops)
+    before, after = _names(plan.nodes), _names(nodes)
+    rw = RuleRewrite(
+        "probe_cost_reorder", before, after, changed=before != after,
+        detail={"speeds": {op.name: round(op_speed(op, probes), 1)
+                           for op in new_ops}})
+    return LogicalPlan(plan.source, nodes, plan.options), rw
+
+
+def _apply_fusion(plan: LogicalPlan) -> Tuple[LogicalPlan, RuleRewrite]:
+    from repro.core.fusion import fuse_filters
+
+    ops = plan.ops()
+    new_ops = fuse_filters(ops)
+    nodes = _rebuild_nodes(plan.nodes, new_ops)
+    before, after = _names(plan.nodes), _names(nodes)
+    fused = [n.name for n in nodes if n.op_config().get("name") == "fused_op"]
+    rw = RuleRewrite("filter_fusion", before, after,
+                     changed=before != after, detail={"fused": fused})
+    return LogicalPlan(plan.source, nodes, plan.options), rw
+
+
+# ---------------------------------------------------------------------------
+# annotation rules
+# ---------------------------------------------------------------------------
+
+
+def _chain_segments(plan: LogicalPlan) -> List[List[PlanNode]]:
+    """Maximal runs of chain (non-barrier, non-stateful) nodes — the node
+    view of ``fusion.plan_segments``'s chain segments."""
+    from repro.core.fusion import is_barrier_op, is_stream_stage_op
+
+    segs: List[List[PlanNode]] = []
+    cur: List[PlanNode] = []
+    for node in plan.nodes:
+        op = node.bind()
+        if is_barrier_op(op) or is_stream_stage_op(op):
+            if cur:
+                segs.append(cur)
+                cur = []
+        else:
+            cur.append(node)
+    if cur:
+        segs.append(cur)
+    return segs
+
+
+def _apply_pushdown(plan: LogicalPlan) -> Tuple[LogicalPlan, RuleRewrite]:
+    """Mark the leading run of column-only, pushdown-safe filters in every
+    chain segment: the executor applies exactly these driver-side at block
+    decode (``Segment.n_pushdown``), so dropped rows are never shipped to
+    workers. Annotation mirrors ``plan_segments``'s predicate verbatim."""
+    marked: List[str] = []
+    for seg in _chain_segments(plan):
+        for node in seg:
+            op = node.bind()
+            try:
+                if not (op.pushdown_safe and op.supports_columns()):
+                    break
+            except Exception:  # noqa: BLE001 — opt-in probe must not fail planning
+                break
+            node.pushdown = True
+            marked.append(node.name)
+    names = _names(plan.nodes)
+    rw = RuleRewrite("predicate_pushdown", names, names,
+                     changed=bool(marked), detail={"pushdown": marked})
+    return plan, rw
+
+
+def _apply_columnar(plan: LogicalPlan) -> Tuple[LogicalPlan, RuleRewrite]:
+    """Mark the longest prefix of each chain segment whose ops can traverse
+    the struct-of-arrays column path (workers receive column buffers, not
+    row dicts). The engine re-checks per block and falls back to the row
+    path on any exception, so this marks eligibility, not obligation."""
+    marked: List[str] = []
+    for seg in _chain_segments(plan):
+        for node in seg:
+            try:
+                if not node.bind().supports_columns():
+                    break
+            except Exception:  # noqa: BLE001
+                break
+            node.columnar = True
+            marked.append(node.name)
+    names = _names(plan.nodes)
+    rw = RuleRewrite("columnar_prefix", names, names,
+                     changed=bool(marked), detail={"columnar": marked})
+    return plan, rw
+
+
+# ---------------------------------------------------------------------------
+# the ordered optimizer
+# ---------------------------------------------------------------------------
+
+
+def optimize_plan(plan: LogicalPlan, probes: Optional[Dict[str, Any]] = None,
+                  do_fuse: bool = True, do_reorder: bool = True,
+                  ) -> Tuple[LogicalPlan, List[RuleRewrite]]:
+    """Apply the ordered rule list; returns the optimized plan plus one
+    ``RuleRewrite`` per applied rule. Byte-compatibility contract: with the
+    same probes, ``optimize_plan(LogicalPlan.from_ops(ops)).ops()`` is the
+    exact op list the historical ``fusion.optimize(ops)`` produced."""
+    rewrites: List[RuleRewrite] = []
+    if do_reorder:
+        plan, rw = _apply_reorder(plan, probes)
+        rewrites.append(rw)
+    if do_fuse:
+        plan, rw = _apply_fusion(plan)
+        rewrites.append(rw)
+    if do_reorder:
+        # second pass over the fused chain (a FusedOP joins its
+        # commutativity group with the harmonic speed of its members)
+        plan, rw = _apply_reorder(plan, probes)
+        rw.detail["pass"] = 2
+        rewrites.append(rw)
+    plan, rw = _apply_pushdown(plan)
+    rewrites.append(rw)
+    plan, rw = _apply_columnar(plan)
+    rewrites.append(rw)
+    return plan, rewrites
+
+
+def annotate_plan(plan: LogicalPlan) -> LogicalPlan:
+    """Annotation rules only (pushdown + columnar) — for surfaces that show
+    an unoptimized plan (explain with optimization disabled)."""
+    plan, _ = _apply_pushdown(plan)
+    plan, _ = _apply_columnar(plan)
+    return plan

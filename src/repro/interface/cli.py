@@ -2,7 +2,9 @@
 all thin shells over the shared Pipeline API (repro.api).
 
   python -m repro.interface.cli process --config recipe.{json,yaml}
+  python -m repro.interface.cli sql "SELECT ..." [--dataset_path x.jsonl]
   python -m repro.interface.cli explain --config recipe.{json,yaml}
+  python -m repro.interface.cli explain --sql "SELECT ..." [--dataset_path ..]
   python -m repro.interface.cli analyze --dataset_path x.jsonl [--auto]
   python -m repro.interface.cli list-ops
   python -m repro.interface.cli runner --cluster_dir DIR [--capacity N]
@@ -33,11 +35,23 @@ def main(argv=None):
     p_proc.add_argument("--config", required=True)
     p_proc.add_argument("--np", type=int, default=0)
 
+    p_sql = sub.add_parser("sql", help="compile and run a SQL query over the "
+                                       "shared logical plan")
+    p_sql.add_argument("query")
+    p_sql.add_argument("--dataset_path", default=None,
+                       help="input jsonl (or quote a path in FROM)")
+    p_sql.add_argument("--export_path", default=None)
+    p_sql.add_argument("--np", type=int, default=0)
+
     p_ex = sub.add_parser("explain", help="show the optimized plan/segments "
                                           "without processing the dataset "
                                           "(probes a small head sample to "
                                           "estimate op speeds)")
-    p_ex.add_argument("--config", required=True)
+    p_ex.add_argument("--config", default=None)
+    p_ex.add_argument("--sql", default=None, dest="sql_query",
+                      help="explain a SQL query instead of a recipe")
+    p_ex.add_argument("--dataset_path", default=None,
+                      help="input jsonl for --sql (or quote a path in FROM)")
 
     p_an = sub.add_parser("analyze", help="compute default stats + report")
     p_an.add_argument("--dataset_path", required=True)
@@ -104,15 +118,76 @@ def main(argv=None):
         _print_report(report)
         return 0
 
+    if args.cmd == "sql":
+        from repro.api.sql import SQLError, parse_sql, sql
+
+        try:
+            q = parse_sql(args.query)
+            base = args.dataset_path or (q.source if q.source_is_path
+                                         else None)
+            out_path = args.export_path or (base + ".out.jsonl" if base
+                                            else None)
+            pipe = sql(args.query, dataset_path=args.dataset_path,
+                       export_path=out_path)
+        except SQLError as e:
+            print(f"sql error [{e.kind}]: {e}", file=sys.stderr)
+            return 1
+        if args.np:
+            pipe = pipe.options(np=args.np)
+        _, report = pipe.execute()
+        _print_report(report)
+        if out_path:
+            print(f"exported -> {out_path}")
+        return 0
+
     if args.cmd == "explain":
         from repro.api import Pipeline
         from repro.core.recipes import Recipe
 
-        info = Pipeline.from_recipe(Recipe.load(args.config)).explain()
+        if bool(args.sql_query) == bool(args.config):
+            print("explain needs exactly one of --config or --sql",
+                  file=sys.stderr)
+            return 1
+        if args.sql_query:
+            from repro.api.sql import SQLError, sql
+
+            try:
+                pipe = sql(args.sql_query, dataset_path=args.dataset_path)
+            except SQLError as e:
+                print(f"sql error [{e.kind}]: {e}", file=sys.stderr)
+                return 1
+        else:
+            pipe = Pipeline.from_recipe(Recipe.load(args.config))
+        info = pipe.explain()
         print(f"recipe={info['recipe']} engine={info['engine']} np={info['np']} "
               f"streaming={info['streaming']}")
         print(f"requested: {' -> '.join(info['requested'])}")
         print(f"optimized: {' -> '.join(info['plan'])}")
+        for nd in info.get("nodes", []):
+            if nd["kind"] in ("source", "sink"):
+                extra = " ".join(f"{k}={v}" for k, v in nd.items()
+                                 if k not in ("kind", "name"))
+                print(f"  {nd['kind']:8s} {nd['name']:40s} {extra}")
+                continue
+            flags = "".join(f" [{f}]" for f in
+                            ("pushdown", "columnar", "barrier", "stateful")
+                            if nd.get(f))
+            print(f"  {nd['kind']:8s} {nd['name']:40s} "
+                  f"reads={','.join(nd['reads']) or '-'} "
+                  f"writes={','.join(nd['writes']) or '-'}{flags}")
+        for rw in info.get("rewrites", []):
+            if not rw["changed"]:
+                print(f"  rule {rw['rule']:22s} [no-op]")
+            elif rw["before"] != rw["after"]:
+                print(f"  rule {rw['rule']:22s} [changed] "
+                      f"{' -> '.join(rw['before'])}")
+                print(f"       {'':22s}        => {' -> '.join(rw['after'])}")
+            else:
+                # annotation-only rule: the chain is unchanged, the diff is
+                # in the marks it set
+                detail = " ".join(f"{k}={v}" for k, v in
+                                  sorted(rw.get("detail", {}).items()))
+                print(f"  rule {rw['rule']:22s} [marked] {detail}")
         for i, seg in enumerate(info["segments"]):
             kind = "barrier" if seg["barrier"] else (
                 "stateful" if seg.get("stateful") else "stream ")

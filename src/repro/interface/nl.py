@@ -1,8 +1,9 @@
 """Natural-language interaction (paper §4, Appendix C.4).
 
 Offline ReAct-style loop: a rule-based intent parser maps user requests to
-OPs + parameters (the LLM-agent role) and *emits a lazy Pipeline* — the same
-programmable surface the CLI and REST layers compile to — so conversational
+OPs + parameters (the LLM-agent role) and *emits a lazy Pipeline* — i.e. it
+lowers onto the same logical-plan IR (repro.core.plan) every other front-end
+(CLI recipes, REST, SQL) compiles to — so conversational
 requests get fusion, reordering and streaming execution for free, and the
 thought/function/result trace (the paper's transparency pattern) reports the
 optimized plan that actually ran.

@@ -7,6 +7,11 @@ job subsystem, all routed through the shared Pipeline API.
   POST   /run/<op_name>?dataset_path=...   body: JSON op params
                            — synchronous single-op run
   POST   /process?dataset_path=...         body: JSON recipe (synchronous)
+  POST   /sql              body: {"query": "SELECT ...", "dataset_path"?,
+                           "export_path"?} — compile the SQL dialect onto
+                           the shared logical plan and run synchronously;
+                           unknown columns 404 with did-you-mean
+                           suggestions (same contract as /jobs unknown ops)
   POST   /jobs             body: JSON recipe — submit an async job,
                            returns {"job_id", ...} immediately
   GET    /jobs             — job summaries
@@ -137,9 +142,8 @@ class _Handler(BaseHTTPRequestHandler):
     def do_POST(self):
         from repro.api import Pipeline
         from repro.api.jobs import JobStoreFull
-        from repro.core.dataset import DJDataset
         from repro.core.recipes import Recipe
-        from repro.core.registry import create_op, validate_op_config
+        from repro.core.registry import validate_op_config
 
         url = urlparse(self.path)
         qs = parse_qs(url.query)
@@ -158,6 +162,9 @@ class _Handler(BaseHTTPRequestHandler):
                     k: v[0] for k, v in qs.items()
                     if k in ("dataset_path", "export_path")}})
 
+            if parts == ["sql"]:
+                return self._run_sql(params, qs)
+
             dataset_path = qs.get("dataset_path", [None])[0]
             if not dataset_path:
                 return self._err(400, "missing_param",
@@ -167,17 +174,18 @@ class _Handler(BaseHTTPRequestHandler):
             if len(parts) == 2 and parts[0] == "run":
                 try:
                     validate_op_config({"name": parts[1], **params})
-                    op = create_op({"name": parts[1], **params})
                 except KeyError as e:
                     return self._err(404, "unknown_op", str(e.args[0] if e.args else e))
                 except TypeError as e:
                     return self._err(400, "invalid_params", str(e))
-                ds = DJDataset.load(dataset_path)
-                ds = op.run(ds)
-                ds.export(out_path)
+                # single-op runs lower through the shared Pipeline/plan like
+                # every other front-end (no raw op construction here)
+                pipe = (Pipeline.read_jsonl(dataset_path)
+                        .op(parts[1], **params).write_jsonl(out_path))
+                _, report = pipe.execute()
                 return self._send(200, {
                     "status": "ok", "export_path": out_path,
-                    "n_out": len(ds), "errors": len(op.errors),
+                    "n_out": report.n_out, "errors": report.errors,
                 })
 
             if parts == ["process"]:
@@ -199,6 +207,41 @@ class _Handler(BaseHTTPRequestHandler):
         except Exception as e:  # noqa: BLE001
             return self._err(500, "internal", f"{type(e).__name__}: {e}")
         return self._err(404, "not_found", "not found")
+
+    def _run_sql(self, params: dict, qs):
+        """POST /sql: compile the query onto the shared logical plan and run
+        synchronously. Unknown columns get the /jobs unknown-op treatment —
+        404 with did-you-mean ``suggestions``; other rejections are 400."""
+        from repro.api.sql import SQLError, parse_sql, sql
+
+        query = params.get("query") or qs.get("query", [None])[0]
+        if not query or not isinstance(query, str):
+            return self._err(400, "missing_param",
+                             "body must contain a 'query' string")
+        dataset_path = params.get("dataset_path") \
+            or qs.get("dataset_path", [None])[0]
+        export_path = params.get("export_path") \
+            or qs.get("export_path", [None])[0]
+        try:
+            q = parse_sql(query)
+            base = dataset_path or (q.source if q.source_is_path else None)
+            if not base:
+                return self._err(400, "missing_param",
+                                 "dataset_path required (or quote a path in "
+                                 "FROM)")
+            out_path = export_path or base + ".out.jsonl"
+            pipe = sql(query, dataset_path=base, export_path=out_path)
+        except SQLError as e:
+            code = 404 if e.kind == "unknown_column" else 400
+            return self._send(code, {"error": {
+                "type": e.kind, "message": str(e),
+                "suggestions": e.suggestions}})
+        _, report = pipe.execute()
+        return self._send(200, {
+            "status": "ok", "export_path": out_path,
+            "n_in": report.n_in, "n_out": report.n_out,
+            "plan": report.plan, "seconds": report.seconds,
+        })
 
     def _submit_job(self, spec: dict):
         """POST /jobs: validate up front (fail fast with 4xx), then enqueue —

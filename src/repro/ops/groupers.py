@@ -7,16 +7,22 @@ from repro.core.registry import register
 
 @register("key_value_grouper")
 class KeyValueGrouper(Grouper):
-    """Groups samples by a meta key's value."""
+    """Groups samples by a meta (or stats) key's value. ``source`` picks the
+    sample container the key is read from — ``"meta"`` (default, the
+    historical behaviour) or ``"stats"`` (how SQL ``GROUP BY lang`` groups
+    on a filter-computed stat column)."""
 
-    def __init__(self, key: str = "domain", **kw):
-        super().__init__(key=key, **kw)
+    def __init__(self, key: str = "domain", source: str = "meta", **kw):
+        if source not in ("meta", "stats"):
+            raise ValueError(f"source must be 'meta' or 'stats', got {source!r}")
+        super().__init__(key=key, source=source, **kw)
 
     def group(self, samples):
+        key, src = self.params["key"], self.params["source"]
         by: dict = {}
         for s in samples:
-            by.setdefault((s.get("meta") or {}).get(self.params["key"], ""), []).append(s)
-        return [by[k] for k in sorted(by)]
+            by.setdefault((s.get(src) or {}).get(key, ""), []).append(s)
+        return [by[k] for k in sorted(by, key=lambda v: (str(type(v)), v))]
 
 
 @register("batch_grouper")

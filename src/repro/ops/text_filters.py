@@ -203,8 +203,9 @@ class WordRepetitionFilter(_RangeFilter):
     stat_key = "word_rep_ratio"
     text_only_stat = True
 
-    def __init__(self, n: int = 5, **kw):
-        super().__init__(**kw)
+    def __init__(self, n: int = 5, min_val: float = -math.inf,
+                 max_val: float = math.inf, **kw):
+        super().__init__(min_val=min_val, max_val=max_val, **kw)
         self.n = n
         self.params["n"] = n
 
@@ -235,6 +236,8 @@ class CharRepetitionFilter(_RangeFilter):
 @register("language_heuristic_filter")
 class LanguageHeuristicFilter(Filter):
     """Tags a coarse language family via script heuristics; keeps listed ones."""
+
+    stats_keys = ("lang",)
 
     def __init__(self, keep_langs=("en",), **kw):
         super().__init__(keep_langs=tuple(keep_langs), **kw)

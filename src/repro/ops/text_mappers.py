@@ -175,3 +175,16 @@ class GenerateQAFromTextMapper(Mapper):
             ns["meta"] = dict(s.get("meta", {}), synthesized=True)
             out.append(ns)
         return out or [dict(s)]
+
+
+@register("select_fields_mapper")
+class SelectFieldsMapper(Mapper):
+    """Projection: keeps only the listed top-level sample fields (how SQL
+    ``SELECT col, ...`` narrows the exported rows)."""
+
+    def __init__(self, fields=("text",), **kw):
+        super().__init__(fields=tuple(fields), **kw)
+        self.fields = tuple(fields)
+
+    def process_single(self, s):
+        return {k: s[k] for k in self.fields if k in s}

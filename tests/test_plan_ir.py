@@ -1,0 +1,305 @@
+"""Logical-plan IR + rule optimizer (ISSUE 9 tentpole).
+
+Covers: typed node construction and column deps, Recipe<->IR round-trip,
+rule pipeline == historical list-level optimizer (byte-compat contract),
+per-rule rewrite logging, annotation/runtime parity, and the per-rule
+byte-identity properties (rule applied vs not) on seeded-random pipelines.
+A hypothesis variant of the byte-identity property runs where hypothesis
+is installed; the seeded-random variants always run.
+"""
+import json
+import os
+import random
+
+import pytest
+
+from repro.core.fusion import fuse_filters, plan_segments, reorder
+from repro.core.plan import LogicalPlan, column_deps, kind_of_config
+from repro.core.recipes import Recipe
+from repro.core.registry import create_op
+from repro.core.rules import RULE_NAMES, annotate_plan, optimize_plan
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+CHAIN = [
+    {"name": "whitespace_normalization_mapper"},
+    {"name": "text_length_filter", "min_val": 5},
+    {"name": "words_num_filter", "min_val": 1},
+    {"name": "exact_text_deduplicator"},
+    {"name": "topk_stat_selector", "stat_key": "num_words", "fraction": 0.9},
+]
+
+
+def _write_corpus(path, n=60, seed=7):
+    rng = random.Random(seed)
+    words = "alpha beta gamma delta epsilon zeta eta theta iota kappa".split()
+    with open(path, "w", encoding="utf-8") as f:
+        for i in range(n):
+            text = " ".join(rng.choice(words)
+                            for _ in range(rng.randrange(1, 40)))
+            f.write(json.dumps({"text": text, "meta": {"i": i}}) + "\n")
+    return path
+
+
+# ---------------------------------------------------------------------------
+# IR construction
+# ---------------------------------------------------------------------------
+
+
+def test_node_kinds_and_column_deps():
+    plan = LogicalPlan.from_op_configs(CHAIN)
+    assert [n.kind for n in plan.nodes] == [
+        "map", "filter", "filter", "dedup", "select"]
+    tl = plan.nodes[1]
+    reads, writes = column_deps(tl.bind())
+    assert reads == ("text",) and writes == ("stats.text_len",)
+    sel_reads, sel_writes = column_deps(plan.nodes[4].bind())
+    assert sel_reads == ("stats.num_words",) and sel_writes == ()
+    assert kind_of_config({"name": "fused_op", "ops": CHAIN[1:3]}) == "filter"
+
+
+def test_plan_is_immutable_and_validates():
+    plan = LogicalPlan.from_op_configs(CHAIN[:2])
+    p2 = plan.with_op({"name": "words_num_filter", "min_val": 2})
+    assert len(plan.nodes) == 2 and len(p2.nodes) == 3
+    with pytest.raises(KeyError):
+        plan.with_op({"name": "no_such_op"})
+    with pytest.raises(TypeError):
+        plan.with_op({"name": "words_num_filter", "mn_val": 2})
+    with pytest.raises(TypeError):
+        plan.with_options(no_such_option=1)
+
+
+def test_recipe_ir_round_trip():
+    r = Recipe(name="rt", dataset_path="d.jsonl", export_path="o.jsonl",
+               np=2, engine="parallel", process=[dict(c) for c in CHAIN])
+    plan = LogicalPlan.from_recipe(r)
+    back = plan.to_recipe(name="rt")
+    assert back == r
+
+
+def test_describe_nodes_carry_ir_metadata(tmp_path):
+    src = _write_corpus(str(tmp_path / "in.jsonl"))
+    plan = LogicalPlan.from_recipe(Recipe(
+        dataset_path=src, export_path=str(tmp_path / "out.jsonl"),
+        process=[dict(c) for c in CHAIN[1:3]]))  # filters first: prefix marks
+    nodes = annotate_plan(plan).describe()
+    assert nodes[0]["kind"] == "source" and nodes[0]["format"] == "jsonl"
+    assert nodes[-1]["kind"] == "sink"
+    tl = next(n for n in nodes if n["name"] == "text_length_filter")
+    assert tl["reads"] == ["text"] and tl["writes"] == ["stats.text_len"]
+    assert tl.get("columnar") and tl.get("pushdown")
+
+
+# ---------------------------------------------------------------------------
+# rules == historical kernel sequence (byte-compat contract)
+# ---------------------------------------------------------------------------
+
+
+def _random_chain(rng):
+    pool = [
+        lambda: {"name": "text_length_filter",
+                 "min_val": rng.randrange(0, 30)},
+        lambda: {"name": "words_num_filter", "min_val": rng.randrange(0, 5)},
+        lambda: {"name": "alnum_ratio_filter", "min_val": 0.0},
+        lambda: {"name": "char_repetition_filter", "max_val": 0.9},
+        lambda: {"name": "stopword_ratio_filter", "max_val": 1.0},
+        lambda: {"name": "whitespace_normalization_mapper"},
+        lambda: {"name": "lowercase_mapper"},
+    ]
+    return [rng.choice(pool)() for _ in range(rng.randrange(2, 7))]
+
+
+def _fake_probes(cfgs, rng):
+    # synthetic probe speeds keyed the way Adapter.probes are (op name)
+    names = {c["name"] for c in cfgs}
+    return {n: type("P", (), {"speed": rng.uniform(10.0, 10000.0),
+                              "keep_ratio": rng.uniform(0.1, 1.0)})()
+            for n in names}
+
+
+def test_optimize_plan_matches_legacy_kernel_sequence():
+    rng = random.Random(11)
+    for _ in range(25):
+        cfgs = _random_chain(rng)
+        probes = _fake_probes(cfgs, rng)
+        ops = [create_op(dict(c)) for c in cfgs]
+        plan, _ = optimize_plan(LogicalPlan.from_ops(ops), probes)
+        # the historical sequence on the SAME instances
+        legacy = reorder(fuse_filters(reorder(ops, probes)), probes)
+        assert [o.config() for o in plan.ops()] == \
+            [o.config() for o in legacy]
+
+
+def test_optimize_plan_preserves_op_instances():
+    ops = [create_op(dict(c)) for c in CHAIN]
+    plan, _ = optimize_plan(LogicalPlan.from_ops(ops))
+    flat = []
+    for op in plan.ops():
+        flat.extend(getattr(op, "ops", [op]))
+    # probed instances survive rewrites (their measured speeds stay attached)
+    assert {id(o) for o in flat} == {id(o) for o in ops}
+
+
+def test_rewrite_log_shape_and_order():
+    ops = [create_op(dict(c)) for c in CHAIN]
+    _, rewrites = optimize_plan(LogicalPlan.from_ops(ops))
+    assert [rw.rule for rw in rewrites] == [
+        "probe_cost_reorder", "filter_fusion", "probe_cost_reorder",
+        "predicate_pushdown", "columnar_prefix"]
+    assert all(rw.rule in RULE_NAMES for rw in rewrites)
+    fusion_rw = rewrites[1]
+    assert fusion_rw.changed
+    assert any(name.startswith("fused<") for name in fusion_rw.after)
+    assert fusion_rw.detail["fused"]
+    d = fusion_rw.to_dict()
+    assert set(d) == {"rule", "before", "after", "changed", "detail"}
+    assert rewrites[2].detail.get("pass") == 2
+
+
+def test_annotation_matches_runtime_segments():
+    """The pushdown/columnar marks must agree with what plan_segments (the
+    runtime source of truth) decides for the same op chain."""
+    rng = random.Random(23)
+    for _ in range(25):
+        cfgs = _random_chain(rng) + [{"name": "exact_text_deduplicator"}] \
+            + _random_chain(rng)
+        plan = annotate_plan(LogicalPlan.from_op_configs(cfgs))
+        segments = plan_segments(plan.ops())
+        marked = [n.name for n in plan.nodes if n.pushdown]
+        expected = []
+        for seg in segments:
+            if not seg.barrier and not seg.stateful:
+                expected.extend(o.name for o in seg.ops[: seg.n_pushdown])
+        assert marked == expected
+
+
+# ---------------------------------------------------------------------------
+# per-rule byte-identity (rule applied vs not)
+# ---------------------------------------------------------------------------
+
+
+def _export_bytes(tmp_path, tag, src, cfgs, use_fusion, use_reordering):
+    from repro.core.executor import Executor
+
+    out = str(tmp_path / f"{tag}.jsonl")
+    r = Recipe(dataset_path=src, export_path=out,
+               process=[dict(c) for c in cfgs],
+               use_fusion=use_fusion, use_reordering=use_reordering)
+    _, report = Executor(r).run()
+    with open(out, "rb") as f:
+        return f.read(), report
+
+
+def _row_key(line):
+    row = json.loads(line)
+    stats = row.pop("stats", None)
+    return json.dumps({**row, "stats": dict(sorted(stats.items()))
+                       if stats else stats}, sort_keys=True)
+
+
+def _check_rules_preserve_bytes(tmp_path, seed):
+    rng = random.Random(seed)
+    src = _write_corpus(str(tmp_path / f"in{seed}.jsonl"), seed=seed)
+    cfgs = _random_chain(rng)
+
+    base, _ = _export_bytes(tmp_path, f"b{seed}", src, cfgs, False, False)
+    # filter_fusion (+ the annotation rules) on vs off: byte-identical —
+    # a FusedOP cascades stats in chain order, so bytes can't move
+    fused, _ = _export_bytes(tmp_path, f"f{seed}", src, cfgs, True, False)
+    assert fused == base
+
+    # probe_cost_reorder permutes stat-insertion order, so its guarantee is
+    # (a) identical row CONTENT vs unoptimized, (b) byte-identical to a
+    # hand-built pipeline submitted in the already-reordered order
+    reordered, report = _export_bytes(tmp_path, f"r{seed}", src, cfgs,
+                                      False, True)
+    assert sorted(map(_row_key, reordered.splitlines())) == \
+        sorted(map(_row_key, base.splitlines()))
+    by_name = {c["name"]: c for c in cfgs}
+    pre_permuted = [dict(by_name[name]) for name in report.plan]
+    direct, _ = _export_bytes(tmp_path, f"d{seed}", src, pre_permuted,
+                              False, False)
+    assert reordered == direct
+
+
+def test_rules_preserve_bytes_seeded(tmp_path):
+    for seed in (3, 17, 41):
+        _check_rules_preserve_bytes(tmp_path, seed)
+
+
+if HAVE_HYPOTHESIS:
+
+    @given(st.integers(0, 10_000))
+    @settings(max_examples=10, deadline=None)
+    def test_rules_preserve_bytes_property(tmp_path_factory, seed):
+        _check_rules_preserve_bytes(
+            tmp_path_factory.mktemp(f"prop{seed}"), seed)
+
+
+# ---------------------------------------------------------------------------
+# executor surfaces
+# ---------------------------------------------------------------------------
+
+
+def test_explain_exposes_nodes_and_rewrites(tmp_path):
+    import repro.api as dj
+
+    src = _write_corpus(str(tmp_path / "in.jsonl"))
+    info = (dj.read_jsonl(src)
+            .filter("words_num_filter", min_val=2)
+            .filter("text_length_filter", min_val=5)
+            .write_jsonl(str(tmp_path / "out.jsonl"))
+            .explain())
+    kinds = [n["kind"] for n in info["nodes"]]
+    assert kinds[0] == "source" and kinds[-1] == "sink"
+    assert [rw["rule"] for rw in info["rewrites"]] == [
+        "probe_cost_reorder", "filter_fusion", "probe_cost_reorder",
+        "predicate_pushdown", "columnar_prefix"]
+    assert any(rw["changed"] for rw in info["rewrites"])
+    # optimized chain in explain == the IR's op nodes
+    op_names = [n["name"] for n in info["nodes"]
+                if n["kind"] not in ("source", "sink")]
+    assert op_names == info["plan"]
+
+
+def test_plan_optimize_span_records_rewrites(tmp_path):
+    from repro.core import obs
+    from repro.core.executor import Executor
+
+    src = _write_corpus(str(tmp_path / "in.jsonl"))
+    r = Recipe(dataset_path=src, export_path=str(tmp_path / "out.jsonl"),
+               process=[{"name": "words_num_filter", "min_val": 1},
+                        {"name": "text_length_filter", "min_val": 5}])
+    obs.reset()
+    _, report = Executor(r).run()
+    spans = [s for s in report.trace["spans"]
+             if s["name"] == "plan:optimize"]
+    assert spans, "plan:optimize span must be emitted on optimized runs"
+    root = report.trace["root_span"]
+    assert spans[0]["parent_id"] == root  # nested under the run span
+    rules = [rw["rule"] for rw in spans[0]["attrs"]["rules"]]
+    assert rules == ["probe_cost_reorder", "filter_fusion",
+                     "probe_cost_reorder", "predicate_pushdown",
+                     "columnar_prefix"]
+
+
+def test_fixed_plan_skips_optimizer_and_replays_verbatim(tmp_path):
+    from repro.core.executor import Executor
+
+    src = _write_corpus(str(tmp_path / "in.jsonl"))
+    pinned = [{"name": "text_length_filter", "min_val": 5},
+              {"name": "words_num_filter", "min_val": 1}]
+    r = Recipe(dataset_path=src, export_path=str(tmp_path / "out.jsonl"),
+               process=[{"name": "lowercase_mapper"}],  # ignored when pinned
+               fixed_plan=[dict(c) for c in pinned])
+    ex = Executor(r)
+    _, report = ex.run()
+    assert report.plan == ["text_length_filter", "words_num_filter"]
+    assert ex.last_rewrites == []  # no optimizer pass on pinned plans
+    assert os.path.exists(str(tmp_path / "out.jsonl"))

@@ -1,0 +1,317 @@
+"""SQL front-end (ISSUE 9): parser, compiler, error contract, and
+byte-identity of ``repro.sql(q)`` against the hand-built Pipeline on every
+engine — SQL is a parser over the shared logical plan, never a second
+execution path."""
+import json
+import math
+import os
+import random
+
+import pytest
+
+import repro
+import repro.api as dj
+from repro.api.sql import (
+    SQLError, compile_query, parse_sql, sql,
+)
+from cluster_harness import wait_for
+
+
+def _write_corpus(path, n=40, seed=5):
+    rng = random.Random(seed)
+    words = "alpha beta gamma delta epsilon zeta eta theta".split()
+    with open(path, "w", encoding="utf-8") as f:
+        for i in range(n):
+            text = " ".join(rng.choice(words)
+                            for _ in range(rng.randrange(2, 60)))
+            if i % 9 == 0:
+                text = "你好世界 " * 30  # non-en rows for lang predicates
+            f.write(json.dumps({"text": text, "meta": {"i": i}}) + "\n")
+    return path
+
+
+# ---------------------------------------------------------------------------
+# parser
+# ---------------------------------------------------------------------------
+
+
+def test_parse_full_clause_set():
+    q = parse_sql("SELECT text FROM ds WHERE lang = 'en' AND words > 50 "
+                  "AND words <= 400 ORDER BY words DESC LIMIT 7")
+    assert q.star is False and [it.column for it in q.select] == ["text"]
+    assert q.source == "ds" and not q.source_is_path
+    assert [(p.column, p.op, p.value) for p in q.where] == [
+        ("lang", "=", "en"), ("words", ">", 50), ("words", "<=", 400)]
+    assert q.order_by == "words" and q.order_desc and q.limit == 7
+
+
+def test_parse_star_path_group_and_in():
+    q = parse_sql("SELECT * FROM 'data.jsonl' WHERE lang IN ('en', 'zh') "
+                  "GROUP BY lang")
+    assert q.star and q.source == "data.jsonl" and q.source_is_path
+    assert q.where[0].op == "in" and q.where[0].value == ("en", "zh")
+    assert q.group_by == "lang"
+
+
+def test_parse_aggregate_function():
+    q = parse_sql("SELECT KEYWORDS(text, 5) FROM ds GROUP BY lang")
+    it = q.select[0]
+    assert it.func == "keywords" and it.column == "text" and it.arg == 5
+
+
+@pytest.mark.parametrize("bad,kind", [
+    ("SELECT", "syntax"),
+    ("SELCT text FROM ds", "syntax"),
+    ("SELECT text FROM ds WHERE lang != 'en'", "unsupported"),
+    ("SELECT text FROM ds WHERE words > 1 OR words < 9", "unsupported"),
+    ("SELECT text FROM ds LIMIT 3", "unsupported"),
+    ("SELECT text FROM ds GROUP BY lang ORDER BY words", "unsupported"),
+    ("SELECT CONCAT(text) FROM ds", "syntax"),  # aggregate needs GROUP BY
+    ("SELECT text FROM ds WHERE words > 'hi'", "syntax"),
+])
+def test_rejections_carry_kind(bad, kind):
+    with pytest.raises(SQLError) as ei:
+        compile_query(parse_sql(bad))
+    assert ei.value.kind == kind
+
+
+def test_unknown_column_reuses_did_you_mean():
+    from repro.core.registry import did_you_mean
+
+    with pytest.raises(SQLError) as ei:
+        compile_query(parse_sql("SELECT text FROM ds WHERE wrods > 5"))
+    e = ei.value
+    assert e.kind == "unknown_column"
+    assert e.suggestions == did_you_mean("wrods", ["words"]) == ["words"]
+    assert "did you mean words?" in str(e)
+
+
+# ---------------------------------------------------------------------------
+# compiler lowering
+# ---------------------------------------------------------------------------
+
+
+def test_predicates_merge_per_column_with_strict_bounds():
+    ops, _ = compile_query(parse_sql(
+        "SELECT text FROM ds WHERE words > 50 AND words <= 400 "
+        "AND words >= 10"))
+    assert ops == [{"name": "words_num_filter",
+                    "min_val": math.nextafter(50.0, math.inf),
+                    "max_val": 400.0}]
+
+
+def test_group_by_stat_injects_compute_filter():
+    ops, info = compile_query(parse_sql(
+        "SELECT CONCAT(text) FROM ds GROUP BY lang"))
+    assert [o["name"] for o in ops] == [
+        "language_heuristic_filter", "key_value_grouper",
+        "concat_text_aggregator"]
+    # the injected lang filter keeps every language — compute, don't filter
+    assert set(ops[0]["keep_langs"]) == {"en", "zh", "other", "unknown"}
+    assert ops[1] == {"name": "key_value_grouper", "key": "lang",
+                      "source": "stats"}
+    assert info["injected"] == ["lang"]
+
+
+def test_order_by_lowers_to_selector_with_sql_sort_semantics():
+    # SQL default ASC -> ascending selector; stat filter auto-injected
+    ops, _ = compile_query(parse_sql(
+        "SELECT text FROM ds ORDER BY text_len LIMIT 4"))
+    assert ops == [{"name": "text_length_filter"},
+                   {"name": "topk_stat_selector", "stat_key": "text_len",
+                    "descending": False, "k": 4}]
+    # no injection when WHERE already computes the stat
+    ops2, info2 = compile_query(parse_sql(
+        "SELECT text FROM ds WHERE text_len > 5 ORDER BY text_len DESC"))
+    assert [o["name"] for o in ops2] == ["text_length_filter",
+                                        "topk_stat_selector"]
+    assert ops2[1]["descending"] is True and ops2[1]["fraction"] == 1.0
+    assert info2["injected"] == []
+
+
+def test_projection_lowers_to_select_fields_mapper():
+    ops, _ = compile_query(parse_sql("SELECT text, words FROM ds "
+                                     "WHERE words > 1"))
+    assert ops[-1] == {"name": "select_fields_mapper",
+                      "fields": ["text", "stats"]}
+    # SELECT text / SELECT * add no projection
+    for q in ("SELECT text FROM ds WHERE words > 1",
+              "SELECT * FROM ds WHERE words > 1"):
+        ops2, _ = compile_query(parse_sql(q))
+        assert [o["name"] for o in ops2] == ["words_num_filter"]
+
+
+# ---------------------------------------------------------------------------
+# FROM resolution
+# ---------------------------------------------------------------------------
+
+
+def test_from_resolution_paths(tmp_path):
+    src = _write_corpus(str(tmp_path / "in.jsonl"))
+    by_arg = sql("SELECT text FROM whatever WHERE words > 3", src)
+    by_kwarg = sql("SELECT text FROM whatever WHERE words > 3",
+                   dataset_path=src)
+    by_literal = sql(f"SELECT text FROM '{src}' WHERE words > 3")
+    my_dataset = src  # resolved from the caller's scope by name
+    by_scope = sql("SELECT text FROM my_dataset WHERE words > 3")
+    recipes = [p.to_recipe() for p in (by_arg, by_kwarg, by_literal, by_scope)]
+    assert all(r == recipes[0] for r in recipes)
+    with pytest.raises(SQLError) as ei:
+        sql("SELECT text FROM not_bound_anywhere")
+    assert ei.value.kind == "unknown_source"
+
+
+# ---------------------------------------------------------------------------
+# byte-identity vs hand-built Pipeline, across engines
+# ---------------------------------------------------------------------------
+
+
+QUERY = ("SELECT text FROM ds WHERE lang = 'en' AND words > 10 "
+         "AND text_len < 5000")
+
+
+def _hand_built(src, out):
+    return (dj.read_jsonl(src)
+            .filter("language_heuristic_filter", keep_langs=["en"])
+            .filter("words_num_filter",
+                    min_val=math.nextafter(10.0, math.inf))
+            .filter("text_length_filter",
+                    max_val=math.nextafter(5000.0, -math.inf))
+            .write_jsonl(out))
+
+
+@pytest.mark.parametrize("engine,np", [("local", 1), ("parallel", 2)])
+def test_sql_byte_identical_to_pipeline(tmp_path, engine, np):
+    src = _write_corpus(str(tmp_path / "in.jsonl"))
+    a = str(tmp_path / "sql.jsonl")
+    b = str(tmp_path / "hand.jsonl")
+    _, rep = sql(QUERY, dataset_path=src, export_path=a,
+                 engine=engine, np=np).execute()
+    _, rep2 = _hand_built(src, b).options(engine=engine, np=np).execute()
+    assert rep.n_out == rep2.n_out > 0
+    with open(a, "rb") as fa, open(b, "rb") as fb:
+        assert fa.read() == fb.read()
+
+
+def test_sql_byte_identical_on_two_runner_cluster(tmp_path):
+    src = _write_corpus(str(tmp_path / "in.jsonl"))
+    a = str(tmp_path / "sql.jsonl")
+    b = str(tmp_path / "hand.jsonl")
+    mgr = dj.JobManager(max_workers=2, cluster_dir=str(tmp_path / "c"))
+    try:
+        ja = mgr.submit(sql(QUERY, dataset_path=src, export_path=a))
+        jb = mgr.submit(_hand_built(src, b))
+        wait_for(lambda: ja.done() and jb.done(), 60,
+                 message="cluster jobs finish")
+        assert ja.status()["state"] == jb.status()["state"] == "succeeded"
+    finally:
+        mgr.shutdown(wait=True)
+    with open(a, "rb") as fa, open(b, "rb") as fb:
+        assert fa.read() == fb.read()
+
+
+def test_sql_group_by_runs_end_to_end(tmp_path):
+    src = _write_corpus(str(tmp_path / "in.jsonl"))
+    out = str(tmp_path / "g.jsonl")
+    _, rep = repro.sql("SELECT KEYWORDS(text, 3) FROM ds GROUP BY lang",
+                       dataset_path=src, export_path=out).execute()
+    rows = [json.loads(l) for l in open(out, encoding="utf-8")]
+    assert rep.n_out == len(rows) == 2  # en + zh groups
+    assert all(r["text"].startswith("summary keywords:") for r in rows)
+
+
+# ---------------------------------------------------------------------------
+# REST + CLI surfaces
+# ---------------------------------------------------------------------------
+
+
+def _post(port, route, body):
+    import urllib.error
+    import urllib.request
+
+    from repro.core.storage import json_dumps
+
+    req = urllib.request.Request(
+        f"http://127.0.0.1:{port}{route}", data=json_dumps(body),
+        method="POST", headers={"Content-Type": "application/json"})
+    try:
+        with urllib.request.urlopen(req) as resp:
+            return resp.status, json.loads(resp.read())
+    except urllib.error.HTTPError as e:
+        return e.code, json.loads(e.read())
+
+
+def test_rest_sql_route_contract(tmp_path):
+    from repro.interface.server import serve
+
+    src = _write_corpus(str(tmp_path / "in.jsonl"))
+    srv = serve(port=0)
+    port = srv.server_address[1]
+    try:
+        code, ok = _post(port, "/sql", {
+            "query": "SELECT text FROM ds WHERE words > 10",
+            "dataset_path": src,
+            "export_path": str(tmp_path / "out.jsonl")})
+        assert code == 200 and ok["status"] == "ok" and ok["n_out"] > 0
+        assert ok["plan"] == ["words_num_filter"]
+
+        # unknown column: same 404-with-suggestions contract as /jobs
+        code, err = _post(port, "/sql", {
+            "query": "SELECT text FROM ds WHERE wrods > 10",
+            "dataset_path": src})
+        assert code == 404 and err["error"]["type"] == "unknown_column"
+        assert err["error"]["suggestions"] == ["words"]
+        code_op, err_op = _post(port, "/jobs", {
+            "dataset_path": src,
+            "process": [{"name": "wrods_num_filter"}]})
+        assert code_op == code == 404
+        assert "did you mean" in err_op["error"]["message"]
+
+        code, err = _post(port, "/sql", {"query": "SELCT text FROM ds",
+                                         "dataset_path": src})
+        assert code == 400 and err["error"]["type"] == "syntax"
+        assert _post(port, "/sql", {})[0] == 400
+    finally:
+        srv.server_close()
+
+
+def test_rest_run_route_still_lowers_single_ops(tmp_path):
+    from repro.interface.server import serve
+
+    src = _write_corpus(str(tmp_path / "in.jsonl"))
+    srv = serve(port=0)
+    port = srv.server_address[1]
+    try:
+        code, ok = _post(
+            port, f"/run/text_length_filter?dataset_path={src}",
+            {"min_val": 30})
+        assert code == 200 and ok["status"] == "ok"
+        assert ok["n_out"] > 0 and ok["errors"] == 0
+        assert _post(port, f"/run/nope_filter?dataset_path={src}", {})[0] \
+            == 404
+    finally:
+        srv.server_close()
+
+
+def test_cli_sql_and_explain(tmp_path, capsys):
+    from repro.interface.cli import main
+
+    src = _write_corpus(str(tmp_path / "in.jsonl"))
+    assert main(["sql", "SELECT text FROM ds WHERE words > 10",
+                 "--dataset_path", src,
+                 "--export_path", str(tmp_path / "out.jsonl")]) == 0
+    out = capsys.readouterr().out
+    assert "words_num_filter" in out and "exported ->" in out
+    assert os.path.exists(str(tmp_path / "out.jsonl"))
+
+    assert main(["explain", "--sql",
+                 "SELECT text FROM ds WHERE words > 10 AND text_len < 900",
+                 "--dataset_path", src]) == 0
+    out = capsys.readouterr().out
+    assert "rule probe_cost_reorder" in out and "rule filter_fusion" in out
+    assert "reads=text" in out
+
+    assert main(["sql", "SELECT text FROM ds WHERE wrods > 10",
+                 "--dataset_path", src]) == 1
+    assert "did you mean words?" in capsys.readouterr().err
+    assert main(["explain", "--config", "x.yaml", "--sql", "SELECT 1"]) == 1

@@ -1,0 +1,108 @@
+#!/usr/bin/env python
+"""AST lint: front-end modules must lower through the logical-plan IR
+(ISSUE 9 satellite 5).
+
+Every front-end — fluent Pipeline, SQL, NL, REST — compiles to
+``repro.core.plan.LogicalPlan``; the rule optimizer (``repro.core.rules``)
+and the Executor are the only layers that may touch the list-level fusion
+kernels or build raw operator instances. A front-end that calls
+``fusion.optimize`` / ``create_op`` directly, or hand-assembles a
+``process`` / ``fixed_plan`` op list, silently forks the lowering path:
+its output stops matching what recipes and the cluster replay, and the
+per-rule rewrite trace no longer describes what actually ran.
+
+Usage: python tools/check_lowering.py [file ...]   (default: the four
+front-end modules). Exit 1 with one ``path:line`` per violation on stdout.
+"""
+from __future__ import annotations
+
+import ast
+import os
+import sys
+
+FRONTEND_MODULES = (
+    os.path.join("src", "repro", "api", "pipeline.py"),
+    os.path.join("src", "repro", "api", "sql.py"),
+    os.path.join("src", "repro", "interface", "nl.py"),
+    os.path.join("src", "repro", "interface", "server.py"),
+)
+
+# list-level optimizer kernels + raw-op construction: Executor/rules territory
+FORBIDDEN_CALLS = {
+    "optimize", "optimize_plan", "fuse_filters", "reorder", "plan_segments",
+    "create_op",
+}
+FORBIDDEN_IMPORT_MODULES = {"repro.core.fusion"}
+# keys whose dict-literal / subscript assignment means a raw op-list is being
+# assembled outside the Recipe<->IR serialization boundary
+FORBIDDEN_PLAN_KEYS = {"process", "fixed_plan"}
+
+
+def _key_str(node) -> str:
+    return node.value if isinstance(node, ast.Constant) \
+        and isinstance(node.value, str) else ""
+
+
+def _violations(path: str) -> list:
+    with open(path, "r", encoding="utf-8") as f:
+        src = f.read()
+    try:
+        tree = ast.parse(src, filename=path)
+    except SyntaxError as e:
+        return [(e.lineno or 0, f"syntax error: {e.msg}")]
+    out = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                if alias.name in FORBIDDEN_IMPORT_MODULES:
+                    out.append((node.lineno, f"import {alias.name}"))
+        elif isinstance(node, ast.ImportFrom):
+            if node.module in FORBIDDEN_IMPORT_MODULES:
+                out.append((node.lineno, f"from {node.module} import ..."))
+            elif node.module and node.module.startswith("repro"):
+                for alias in node.names:
+                    if alias.name in FORBIDDEN_CALLS:
+                        out.append((node.lineno,
+                                    f"from {node.module} import {alias.name}"))
+        elif isinstance(node, ast.Call):
+            fn = node.func
+            name = fn.id if isinstance(fn, ast.Name) else (
+                fn.attr if isinstance(fn, ast.Attribute) else "")
+            if name in FORBIDDEN_CALLS:
+                out.append((node.lineno, f"{name}()"))
+        elif isinstance(node, ast.Dict):
+            for k in node.keys:
+                if _key_str(k) in FORBIDDEN_PLAN_KEYS:
+                    out.append((node.lineno,
+                                f"dict literal with {_key_str(k)!r} key"))
+        elif isinstance(node, ast.Assign):
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Subscript) \
+                        and _key_str(tgt.slice) in FORBIDDEN_PLAN_KEYS:
+                    out.append((node.lineno,
+                                f"[{_key_str(tgt.slice)!r}] assignment"))
+    return sorted(out)
+
+
+def main(argv=None) -> int:
+    paths = (argv or sys.argv[1:]) or list(FRONTEND_MODULES)
+    bad = 0
+    for path in paths:
+        if not os.path.exists(path):
+            print(f"{path}: missing", file=sys.stderr)
+            return 2
+        for lineno, what in _violations(path):
+            print(f"{path}:{lineno}: {what} — front-ends must lower through "
+                  f"the LogicalPlan IR (Pipeline.op / repro.core.plan), not "
+                  f"raw op lists or the fusion kernels")
+            bad += 1
+    if bad:
+        print(f"\n{bad} raw-lowering call(s) in front-end modules; build a "
+              f"LogicalPlan (Pipeline.op / LogicalPlan.with_op) and let the "
+              f"Executor apply the optimizer rules.", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
