@@ -21,7 +21,18 @@ streaming-dedup job (repro.api.shards) at 1 / 2 / 4 runners, asserting
   * 2 runners finish the single job >= 1.6x faster than 1 (the shard
     maps are sleep-paced, so the ratio measures shard placement).
 
-Usage: python benchmarks/bench_cluster.py [--quick] [--sharded] [--json PATH]
+With ``--multi-tenant``, adds the noisy-neighbor isolation phase: one
+heavy tenant floods the queue with sleep-paced jobs, then a light tenant
+submits a few; both phases (pure-FIFO claiming vs weighted deficit
+round-robin, toggled per-runner via the ``DJ_FAIR_SHARE`` env) run on one
+single-capacity runner, asserting
+  * the light tenant's p95 queue-wait under fair-share is >=2x better
+    than under FIFO;
+  * every job succeeds and the light tenant's exports are byte-identical
+    across both scheduling modes.
+
+Usage: python benchmarks/bench_cluster.py [--quick] [--sharded]
+       [--multi-tenant] [--json PATH]
 """
 from __future__ import annotations
 
@@ -183,9 +194,65 @@ def run_sharded_scaling(n_runners: int, shards: int, delay: float,
         shutil.rmtree(base, ignore_errors=True)
 
 
+def run_noisy_neighbor(fair: bool, n_heavy: int, n_light: int, delay: float,
+                       n_samples: int) -> dict:
+    """One scheduling phase of the noisy-neighbor experiment: a heavy
+    tenant floods a single-capacity runner's queue, a light tenant submits
+    after the backlog has formed. Returns the light tenant's queue-wait
+    stats (from the event log, ``compute_slo``) plus its export bytes for
+    the cross-phase byte-identity assert. ``fair`` toggles the runner
+    between weighted-deficit and pure-FIFO claiming via DJ_FAIR_SHARE."""
+    from repro.api.slo import compute_slo
+    from repro.core.storage import json_dumps
+
+    base = tempfile.mkdtemp(prefix=f"djmt{'f' if fair else '0'}_")
+    try:
+        src = write_corpus(os.path.join(base, "corpus.jsonl"), n=n_samples)
+        cdir = os.path.join(base, "cluster")
+        q = ClusterQueue(cdir, lease_ttl=10.0)
+        # the light tenant is the interactive one: weight 4 means the
+        # scheduler owes it 4 claims for every heavy claim while both have
+        # work queued — the weighted half of weighted-deficit round-robin
+        with open(os.path.join(cdir, "tenants.json"), "wb") as f:
+            f.write(json_dumps({"tenants": {
+                "heavy": {"weight": 1}, "light": {"weight": 4}}}))
+        runner = start_runner(
+            cdir, "bench-mt-runner", lease_ttl=10.0, poll=0.05, defer=DEFER,
+            extra_env={"DJ_FAIR_SHARE": "1" if fair else "0"})
+        try:
+            wait_for(lambda: len(q.runner_cards()) >= 1, 60,
+                     message="runner card live")
+            heavy = [q.submit(_job_recipe(
+                src, os.path.join(base, f"h{i}.jsonl"), delay),
+                tenant="heavy") for i in range(n_heavy)]
+            # let the backlog form: the light tenant arrives while the
+            # runner is already working through the heavy flood
+            wait_for(lambda: any(q.state_of(j) != "queued" for j in heavy),
+                     60, message="heavy backlog claimed")
+            light = [q.submit(_job_recipe(
+                src, os.path.join(base, f"l{i}.jsonl"), delay),
+                tenant="light") for i in range(n_light)]
+            wait_for(lambda: all(q.state_of(j) == "succeeded"
+                                 for j in heavy + light),
+                     600, interval=0.05, message="both tenants drained")
+        finally:
+            stop_runner(runner)
+        slo = compute_slo(q.read_log())
+        outputs = []
+        for i in range(n_light):
+            with open(os.path.join(base, f"l{i}.jsonl"), "rb") as f:
+                outputs.append(f.read())
+        return {"light_wait": slo["tenants"]["light"]["queue_wait"],
+                "heavy_wait": slo["tenants"]["heavy"]["queue_wait"],
+                "outputs": outputs}
+    finally:
+        shutil.rmtree(base, ignore_errors=True)
+
+
 def main(argv) -> int:
     quick, json_path = parse_bench_args(argv)
     sharded = "--sharded" in argv
+    multi_tenant = "--multi-tenant" in argv
     if quick:
         n_jobs, delay, n_samples, runner_counts = 6, 0.025, 40, (1, 2, 4)
     else:
@@ -244,6 +311,32 @@ def main(argv) -> int:
             f"sharded 2-runner speedup only {speedup2s:.2f}x (need >=1.6x)"
         print(f"[bench_cluster] sharded OK: 2-runner speedup {speedup2s:.2f}x "
               f"on one {s_shards}-shard job")
+
+    if multi_tenant:
+        mt_heavy, mt_light = (6, 3) if quick else (8, 3)
+        mt_delay, mt_samples = (0.02, 30) if quick else (0.03, 40)
+        fifo = run_noisy_neighbor(False, mt_heavy, mt_light,
+                                  mt_delay, mt_samples)
+        fair = run_noisy_neighbor(True, mt_heavy, mt_light,
+                                  mt_delay, mt_samples)
+        fifo_p95 = fifo["light_wait"]["p95"]
+        fair_p95 = fair["light_wait"]["p95"]
+        isolation = fifo_p95 / fair_p95 if fair_p95 > 0 else float("inf")
+        emit("cluster_mt_light_p95_fifo", fifo_p95,
+             derived=f"{mt_heavy} heavy jobs ahead, FIFO claiming")
+        emit("cluster_mt_light_p95_fair", fair_p95,
+             derived="weighted deficit round-robin claiming")
+        emit("cluster_mt_isolation_ratio", 0.0,
+             derived=f"{isolation:.2f}x lower light-tenant p95 under "
+                     f"fair-share (need >=2x)")
+        assert fair["outputs"] == fifo["outputs"], \
+            "light-tenant exports must be byte-identical across scheduling modes"
+        assert fair_p95 * 2 <= fifo_p95, \
+            (f"noisy-neighbor isolation only {isolation:.2f}x "
+             f"(fair p95 {fair_p95:.2f}s vs FIFO {fifo_p95:.2f}s; need >=2x)")
+        print(f"[bench_cluster] multi-tenant OK: light-tenant p95 "
+              f"{fair_p95:.2f}s fair vs {fifo_p95:.2f}s FIFO "
+              f"({isolation:.1f}x isolation)")
 
     if json_path:
         dump_json(json_path)

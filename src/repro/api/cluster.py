@@ -52,6 +52,7 @@ from __future__ import annotations
 
 import dataclasses
 import os
+import re
 import socket
 import threading
 import time
@@ -73,6 +74,66 @@ TERMINAL = (SUCCEEDED, FAILED, CANCELLED)
 DEFAULT_LEASE_TTL = 15.0   # seconds a lease lives between heartbeats
 DEFAULT_RUNNER_TTL = 30.0  # seconds before a runner card is considered dead
 DEFAULT_DEFER = 2.0        # seconds a worse-placed runner defers to a better one
+
+# ---------------------------------------------------------------------------
+# multi-tenant identities
+# ---------------------------------------------------------------------------
+
+DEFAULT_TENANT = "default"
+TENANTS_FILE = "tenants.json"      # <cluster_dir>/tenants.json (weights/quotas)
+GLOBAL_SCOPE = "__all__"           # admission-slot scope for the backlog bound
+                                   # (leading "_" is invalid as a tenant id, so
+                                   # it can never collide with a real tenant)
+FAIR_SHARE_ENV = "DJ_FAIR_SHARE"   # "0" falls back to pure FIFO claiming
+SLOT_ORPHAN_GRACE = 10.0           # seconds a slot may exist without its spec
+                                   # (a submit crashed between the two writes)
+                                   # before a racing admission reclaims it
+
+_TENANT_RE = re.compile(r"^[A-Za-z0-9][A-Za-z0-9._-]{0,63}$")
+
+# shard-task id grammar (api.shards publishes `<job>~s<k>` map shards,
+# `<job>~r<o>` reduce owners and `<job>~fin` finalize tasks). The predicate
+# lives here — shards.py and slo.py import it — because shards.py already
+# imports this module. ONLY the reserved suffixes count: a user job named
+# "nightly~v2" is a plain job, not a shard task.
+SHARD_SEP = "~"
+_TASK_SUFFIX_RE = re.compile(r"^(?:s\d+|r\d+|fin)$")
+
+
+def is_shard_task(job_id: Optional[str]) -> bool:
+    """True only for the reserved ``~s<k>`` / ``~r<o>`` / ``~fin`` grammar."""
+    if not job_id or SHARD_SEP not in job_id:
+        return False
+    return bool(_TASK_SUFFIX_RE.match(job_id.rsplit(SHARD_SEP, 1)[-1]))
+
+
+def parent_of(task_id: str) -> str:
+    """The parent job id of a shard task; identity for plain jobs (including
+    user jobs whose names happen to contain ``~``)."""
+    if not is_shard_task(task_id):
+        return task_id
+    return task_id.rsplit(SHARD_SEP, 1)[0]
+
+
+def validate_tenant(tenant: str) -> str:
+    """Tenant ids become directory names and log fields — restrict to a safe
+    charset (letters/digits first, then ``._-``), max 64 chars."""
+    if not isinstance(tenant, str) or not _TENANT_RE.match(tenant):
+        raise ValueError(
+            f"invalid tenant id {tenant!r}: must match "
+            "[A-Za-z0-9][A-Za-z0-9._-]{0,63}")
+    return tenant
+
+
+class AdmissionDenied(RuntimeError):
+    """A per-tenant quota or the cluster backlog bound rejected the
+    submission (the REST layer maps this to the 503 contract)."""
+
+    def __init__(self, msg: str, tenant: str = DEFAULT_TENANT,
+                 scope: str = "cluster"):
+        super().__init__(msg)
+        self.tenant = tenant
+        self.scope = scope  # "tenant" (quota) | "cluster" (backlog bound)
 
 
 def _json_num(v: Any) -> Any:
@@ -204,10 +265,27 @@ class ClusterQueue:
                "runners", "health", "checkpoints", "obs")
 
     def __init__(self, cluster_dir: str, lease_ttl: float = DEFAULT_LEASE_TTL,
-                 runner_ttl: float = DEFAULT_RUNNER_TTL):
+                 runner_ttl: float = DEFAULT_RUNNER_TTL,
+                 fair_share: Optional[bool] = None):
         self.dir = os.path.abspath(cluster_dir)
         self.lease_ttl = lease_ttl
         self.runner_ttl = runner_ttl
+        # fair_share=False claims in pure submit order (pre-tenant FIFO);
+        # default on, env-overridable so subprocess runners can be switched
+        # per-fleet (the bench's FIFO baseline)
+        if fair_share is None:
+            fair_share = os.environ.get(FAIR_SHARE_ENV, "1") != "0"
+        self.fair_share = fair_share
+        # scheduler state derived from log.jsonl (never persisted — failover
+        # re-derives it by folding the log): per-tenant claim counts plus the
+        # byte offset already folded, guarded for the in-process runner +
+        # submitter threads sharing one queue object
+        self._sched_lock = threading.Lock()
+        self._log_offset = 0
+        self._service: Dict[str, float] = {}   # tenant -> claims granted
+        self._tenant_of: Dict[str, str] = {}   # job_id -> tenant (from log)
+        self._spec_meta: Dict[str, Tuple[str, Tuple[str, ...], float]] = {}
+        self._tenants_cfg: Tuple[Dict[str, Any], Any] = ({}, None)
         for sub in self.SUBDIRS:
             os.makedirs(os.path.join(self.dir, sub), exist_ok=True)
 
@@ -242,6 +320,160 @@ class ClusterQueue:
         """Per-process span/metrics spill files land here (core.obs);
         ``merge_trace(obs_dir, trace_id)`` is the driver-side merge."""
         return self._p("obs")
+
+    def slot_dir(self, scope: str) -> str:
+        """Admission-slot directory for one tenant (or ``GLOBAL_SCOPE``).
+        Lives under ``queue/`` but ``job_ids`` never sees it — its scandir
+        keeps only ``*.json`` entries."""
+        return self._p("queue", "tenants", scope)
+
+    # ------------------------------------------------------------------
+    # tenant config (tenants.json: weights, quotas, API keys)
+    # ------------------------------------------------------------------
+    def tenants_config(self) -> Dict[str, Any]:
+        """Parsed ``<cluster_dir>/tenants.json``, cached by (mtime, size)::
+
+            {"tenants": {"alice": {"weight": 4, "max_live_jobs": 8,
+                                   "api_keys": ["sk-alice-1"]}},
+             "default_weight": 1, "default_max_live_jobs": null}
+
+        Absent file -> every tenant gets weight 1 and no quota — the
+        single-tenant deployment needs no config at all."""
+        path = self._p(TENANTS_FILE)
+        try:
+            st = os.stat(path)
+            key = (st.st_mtime_ns, st.st_size)
+        except OSError:
+            self._tenants_cfg = ({}, None)
+            return {}
+        cfg, cached_key = self._tenants_cfg
+        if cached_key == key:
+            return cfg
+        cfg = _read_json(path) or {}
+        self._tenants_cfg = (cfg, key)
+        return cfg
+
+    def tenant_entry(self, tenant: str) -> Dict[str, Any]:
+        entry = (self.tenants_config().get("tenants") or {}).get(tenant)
+        return entry if isinstance(entry, dict) else {}
+
+    def tenant_weight(self, tenant: str) -> float:
+        """Fair-share weight (claims granted proportional to it). Clamped
+        positive so a zero/negative config never divides by zero — it just
+        makes the tenant lowest-priority."""
+        w = self.tenant_entry(tenant).get(
+            "weight", self.tenants_config().get("default_weight", 1.0))
+        try:
+            return max(float(w), 1e-9)
+        except (TypeError, ValueError):
+            return 1.0
+
+    def tenant_quota(self, tenant: str) -> Optional[int]:
+        """Max live (queued+running) jobs for the tenant; None = unlimited."""
+        q = self.tenant_entry(tenant).get(
+            "max_live_jobs", self.tenants_config().get("default_max_live_jobs"))
+        if q is None:
+            return None
+        try:
+            return max(0, int(q))
+        except (TypeError, ValueError):
+            return None
+
+    def tenant_for_key(self, api_key: str) -> Optional[str]:
+        """Tenant owning ``api_key`` per tenants.json, or None when unknown
+        (the REST layer maps None to 403)."""
+        if not api_key:
+            return None
+        for tenant, entry in (self.tenants_config().get("tenants")
+                              or {}).items():
+            if isinstance(entry, dict) and api_key in (
+                    entry.get("api_keys") or ()):
+                return tenant
+        return None
+
+    # ------------------------------------------------------------------
+    # atomic admission (per-tenant quotas + the backlog bound)
+    # ------------------------------------------------------------------
+    def _slot_stale(self, rec: Optional[Dict[str, Any]]) -> bool:
+        """A slot is reclaimable when its holder reached a terminal state, or
+        its spec never appeared (a submit crashed between slot-acquire and
+        spec publish) past the grace window. An unreadable slot is LIVE — a
+        torn read means the writing submitter is mid-create right now."""
+        if rec is None:
+            return False
+        holder = rec.get("job_id")
+        if not holder:
+            return False
+        if os.path.exists(self.spec_path(holder)):
+            return self.state_of(holder) in TERMINAL
+        return clock.now() - float(rec.get("ts") or 0.0) > SLOT_ORPHAN_GRACE
+
+    def _acquire_slot(self, scope: str, limit: int,
+                      job_id: str) -> Optional[str]:
+        """Claim one of ``limit`` O_EXCL slot files under the scope's slot
+        dir. O_EXCL is the admission atom: two submitters racing past the
+        bound collide on the same slot file and exactly one wins — unlike
+        the old count-then-submit check, which both could pass. Slots held
+        by terminal jobs are reclaimed lazily (unlink, then O_EXCL re-race:
+        only one reclaimer can win the recreate). Returns the held slot
+        path, or None when every slot belongs to a live job."""
+        d = self.slot_dir(scope)
+        os.makedirs(d, exist_ok=True)
+        payload = json_dumps({"job_id": job_id, "ts": clock.now()})
+        for k in range(limit):
+            path = os.path.join(d, f"slot{k}.json")
+            fd = None
+            try:
+                fd = os.open(path, os.O_WRONLY | os.O_CREAT | os.O_EXCL, 0o644)
+            except FileExistsError:
+                if not self._slot_stale(_read_json(path)):
+                    continue
+                try:
+                    os.unlink(path)
+                except FileNotFoundError:
+                    pass
+                try:
+                    fd = os.open(path,
+                                 os.O_WRONLY | os.O_CREAT | os.O_EXCL, 0o644)
+                except FileExistsError:
+                    continue  # another reclaimer won the re-race
+            try:
+                os.write(fd, payload)
+                os.fsync(fd)
+            finally:
+                os.close(fd)
+            return path
+        return None
+
+    def _admit(self, job_id: str, tenant: str,
+               max_live: Optional[int]) -> None:
+        """The atomic admission check ``submit`` runs for every non-shard
+        job: a tenant-quota slot (when tenants.json sets one), then a
+        cluster-backlog slot (when the caller bounds the live backlog).
+        Raises :class:`AdmissionDenied` — slots already acquired for a
+        denied submission are released immediately."""
+        held: List[str] = []
+        quota = self.tenant_quota(tenant)
+        if quota is not None:
+            slot = (self._acquire_slot(tenant, quota, job_id)
+                    if quota > 0 else None)
+            if slot is None:
+                raise AdmissionDenied(
+                    f"tenant {tenant!r} live-job quota reached ({quota})",
+                    tenant=tenant, scope="tenant")
+            held.append(slot)
+        if max_live is not None:
+            slot = (self._acquire_slot(GLOBAL_SCOPE, max_live, job_id)
+                    if max_live > 0 else None)
+            if slot is None:
+                for p in held:
+                    try:
+                        os.unlink(p)
+                    except OSError:
+                        pass
+                raise AdmissionDenied(
+                    f"cluster backlog full ({max_live} live jobs)",
+                    tenant=tenant, scope="cluster")
 
     # ------------------------------------------------------------------
     # event log
@@ -281,20 +513,38 @@ class ClusterQueue:
     # ------------------------------------------------------------------
     def submit(self, recipe: Dict[str, Any],
                job_id: Optional[str] = None,
-               extra: Optional[Dict[str, Any]] = None) -> str:
+               extra: Optional[Dict[str, Any]] = None,
+               tenant: Optional[str] = None,
+               max_live: Optional[int] = None) -> str:
         """Enqueue a job spec (a Recipe dict). Returns the job id. The spec
         is the unit of durability: any runner that can read the shared dir
         can execute it. ``extra`` merges additional spec fields — how
         api.shards attaches shard descriptors and ``after`` dependency
-        lists to the shard tasks it publishes."""
+        lists to the shard tasks it publishes.
+
+        Every submission is owned by a ``tenant`` (explicit arg > extra >
+        the recipe's own ``tenant`` field > :data:`DEFAULT_TENANT`) and runs
+        the atomic admission check: per-tenant live-job quota from
+        tenants.json, plus the cluster backlog bound when the caller passes
+        ``max_live``. Raises :class:`AdmissionDenied` over-quota. Shard
+        tasks bypass admission — their parent already holds the slots."""
         job_id = job_id or uuid.uuid4().hex[:12]
         if os.path.exists(self.spec_path(job_id)):
             raise ValueError(f"job id {job_id!r} already exists")
+        extra = dict(extra or {})
+        if tenant is None:
+            tenant = extra.get("tenant") or (recipe or {}).get("tenant") \
+                or DEFAULT_TENANT
+        tenant = validate_tenant(tenant)
+        shard = "shard" in extra or is_shard_task(job_id)
+        if not shard:
+            self._admit(job_id, tenant, max_live)
         spec = {
             "job_id": job_id,
             "recipe": dict(recipe),
             "submitted_at": clock.now(),
-            **(extra or {}),
+            **extra,
+            "tenant": tenant,
         }
         if "trace" not in spec:
             # trace minted at submit: every runner/shard span of this job's
@@ -302,7 +552,7 @@ class ClusterQueue:
             # own trace via extra so the parent's trace_id is preserved.
             spec["trace"] = {"trace_id": obs.new_id(), "root_span": obs.new_id()}
         _write_json_atomic(self.spec_path(job_id), spec)
-        self.log_event("submitted", job_id=job_id)
+        self.log_event("submitted", job_id=job_id, tenant=tenant)
         return job_id
 
     def job_ids(self, include_shards: bool = False) -> List[str]:
@@ -319,7 +569,7 @@ class ClusterQueue:
         for e in entries:
             if not e.name.endswith(".json"):
                 continue
-            if not include_shards and "~" in e.name:
+            if not include_shards and is_shard_task(e.name[:-5]):
                 continue
             try:
                 mtime = e.stat().st_mtime
@@ -428,6 +678,7 @@ class ClusterQueue:
             "finished_at": result.get("finished_at"),
             "error": result.get("error"),
             "cluster": True,
+            "tenant": spec.get("tenant", DEFAULT_TENANT),
         }
         if lease is not None:
             out["runner_id"] = lease.runner_id
@@ -465,9 +716,8 @@ class ClusterQueue:
         """Shard-task ids for one parent, maps -> reduces -> finalize."""
         from repro.api.shards import task_sort_key
 
-        prefix = f"{parent_id}~"
         ids = [jid for jid in self.job_ids(include_shards=True)
-               if jid.startswith(prefix)]
+               if is_shard_task(jid) and parent_of(jid) == parent_id]
         return sorted(ids, key=task_sort_key)
 
     def shard_rows(self, parent_id: str,
@@ -596,36 +846,115 @@ class ClusterQueue:
                            dead_runner=prev.runner_id, attempt=attempt)
         return lease
 
+    def _spec_info(self, jid: str) -> Optional[Tuple[str, Tuple[str, ...],
+                                                     float]]:
+        """(tenant, after-deps, submitted_at) for one spec. Write-once
+        cached — specs are immutable after the atomic publish — so the
+        runner poll decodes each spec JSON once ever, not once per poll.
+        None for a torn/mid-write spec (skip it this poll, don't cache)."""
+        info = self._spec_meta.get(jid)
+        if info is None:
+            spec = _read_json(self.spec_path(jid))
+            if not spec:
+                return None
+            info = (spec.get("tenant") or DEFAULT_TENANT,
+                    tuple(spec.get("after") or ()),
+                    float(spec.get("submitted_at") or 0.0))
+            self._spec_meta[jid] = info
+        return info
+
+    def _refresh_service(self) -> None:
+        """Incrementally fold ``log.jsonl`` into the per-tenant claim counts
+        the deficit round-robin orders by. Deriving service from the fsync'd
+        log — not an in-memory counter — means a restarted or brand-new
+        runner re-derives exactly the service history every other runner
+        sees: failover needs no extra bookkeeping files. Caller holds
+        ``_sched_lock``. Only complete lines are folded; a torn tail waits
+        for the writer's newline."""
+        try:
+            with open(self._p("log.jsonl"), "rb") as f:
+                f.seek(self._log_offset)
+                chunk = f.read()
+        except (FileNotFoundError, OSError):
+            return
+        end = chunk.rfind(b"\n")
+        if end < 0:
+            return
+        for line in chunk[:end].split(b"\n"):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                rec = json_loads(line)
+            except ValueError:
+                continue
+            jid = rec.get("job_id")
+            if not jid:
+                continue
+            ev = rec.get("event")
+            if ev == "submitted":
+                self._tenant_of[jid] = rec.get("tenant") or DEFAULT_TENANT
+            elif ev == "claimed":
+                t = (self._tenant_of.get(jid)
+                     or self._tenant_of.get(parent_of(jid))
+                     or DEFAULT_TENANT)
+                self._service[t] = self._service.get(t, 0.0) + 1.0
+        self._log_offset += end + 1
+
     def next_job(self, runner_id: str,
                  policy: Optional[PlacementPolicy] = None,
                  ttl: Optional[float] = None) -> Optional[Lease]:
-        """Claim the oldest claimable job this runner is well-placed for.
+        """Claim the next claimable job this runner is well-placed for.
         This is the hot path (every runner, every poll): terminal/leased
-        jobs are filtered through three one-listdir indexes, and spec JSON
-        is only decoded for jobs that are actually claimable."""
+        jobs are filtered through three one-listdir indexes and spec
+        metadata comes from a write-once cache.
+
+        Candidate order is weighted deficit round-robin across tenants:
+        the tenant with the least service-per-weight (claims granted /
+        tenants.json weight, folded from the event log) goes first, FIFO
+        within a tenant. A heavy tenant's 50-deep backlog therefore cannot
+        starve a light tenant's next job — each claim the heavy tenant
+        wins raises its deficit rank until the light tenant is due. With
+        ``fair_share`` off (or one tenant), order degenerates to the
+        pre-tenant pure-FIFO mtime scan."""
         policy = policy or PlacementPolicy()
         cards = self.runner_cards()
         now = clock.now()
         results = self._result_ids()
         cancelled = self._cancel_ids()
         claims = self._claims_by_job()
+        candidates: List[Tuple[str, str]] = []  # (job_id, tenant) mtime-order
         for jid in self.job_ids(include_shards=True):
             if jid in results or jid in cancelled:
                 continue
             held = claims.get(jid)
             if held is not None and not held.expired(now):
                 continue
-            spec = _read_json(self.spec_path(jid)) or {}
+            info = self._spec_info(jid)
+            if info is None:
+                continue
+            tenant, deps, submitted_at = info
             # shard-task dependency gate (api.shards): claimable only once
             # every upstream task has a SUCCEEDED result
-            deps = spec.get("after") or ()
             if deps and any(
                     (_read_json(self.result_path(d)) or {}).get("state")
                     != SUCCEEDED for d in deps):
                 continue
-            waited = now - spec.get("submitted_at", now)
+            waited = now - (submitted_at or now)
             if not policy.should_claim(runner_id, cards, waited):
                 continue
+            candidates.append((jid, tenant))
+        if not candidates:
+            return None
+        if self.fair_share and len({t for _, t in candidates}) > 1:
+            with self._sched_lock:
+                self._refresh_service()
+                service = dict(self._service)
+            # stable sort: tenants ordered by deficit rank, mtime order
+            # preserved within each tenant
+            candidates.sort(key=lambda c: (
+                service.get(c[1], 0.0) / self.tenant_weight(c[1]), c[1]))
+        for jid, _tenant in candidates:
             lease = self.try_claim(jid, runner_id, ttl=ttl)
             if lease is not None:
                 return lease
@@ -748,9 +1077,9 @@ class ClusterQueue:
             c["score"] = PlacementPolicy.score(c)
         # per-shard progress for sharded jobs (api.shards): group the shard
         # tasks under their parents, one claims listdir for all of them
-        parents = sorted({jid.split("~", 1)[0]
+        parents = sorted({parent_of(jid)
                           for jid in self.job_ids(include_shards=True)
-                          if "~" in jid})
+                          if is_shard_task(jid)})
         sharded: Dict[str, List[Dict[str, Any]]] = {}
         if parents:
             claims = self._claims_by_job()
@@ -767,6 +1096,42 @@ class ClusterQueue:
         if sharded:
             out["sharded"] = sharded
         return out
+
+    def tenant_overview(self) -> List[Dict[str, Any]]:
+        """Per-tenant rollup for ``GET /tenants`` and ``cluster-status
+        --tenants``: configured weight/quota merged with live queue state
+        and the granted-claims service counter the fair-share scheduler
+        ranks by. Covers config'd tenants plus every tenant seen in queue
+        specs or the log (at minimum the default tenant)."""
+        with self._sched_lock:
+            self._refresh_service()
+            service = dict(self._service)
+        states: Dict[str, Dict[str, int]] = {}
+        live: Dict[str, int] = {}
+        for jid in self.job_ids():
+            info = self._spec_info(jid)
+            if info is None:
+                continue
+            t = info[0]
+            st = self.state_of(jid)
+            per = states.setdefault(t, {})
+            per[st] = per.get(st, 0) + 1
+            if st not in TERMINAL:
+                live[t] = live.get(t, 0) + 1
+        names = (set(self.tenants_config().get("tenants") or ())
+                 | set(states) | set(service)) or {DEFAULT_TENANT}
+        rows: List[Dict[str, Any]] = []
+        for t in sorted(names):
+            rows.append({
+                "tenant": t,
+                "weight": self.tenant_weight(t),
+                "max_live_jobs": self.tenant_quota(t),
+                "live_jobs": live.get(t, 0),
+                "jobs": states.get(t, {}),
+                "claims_granted": service.get(t, 0.0),
+                "api_keys": len(self.tenant_entry(t).get("api_keys") or ()),
+            })
+        return rows
 
 
 class ClusterRunner:

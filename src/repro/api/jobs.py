@@ -270,10 +270,13 @@ class JobManager:
             self._jobs.popitem(last=False)
 
     # ------------------------------------------------------------------
-    def submit(self, pipeline, job_id: Optional[str] = None):
+    def submit(self, pipeline, job_id: Optional[str] = None,
+               tenant: Optional[str] = None):
         """Enqueue a pipeline; returns the (queued) Job immediately. In
         cluster mode the pipeline is lowered to its recipe and durably
-        enqueued in the shared store (so it needs a file-backed source)."""
+        enqueued in the shared store (so it needs a file-backed source),
+        owned by ``tenant`` (or the recipe's own tenant, or the default
+        tenant)."""
         if self.cluster is not None:
             if self._shutdown:
                 raise RuntimeError("JobManager is shut down")
@@ -282,12 +285,18 @@ class JobManager:
                 raise ValueError(
                     "cluster jobs need a file-backed source (dataset_path): "
                     "in-memory samples cannot be leased by remote runners")
+            from repro.api.cluster import AdmissionDenied
+
             # same bound, same 503: max_jobs caps the LIVE backlog (terminal
-            # results are durable on disk and don't count against it)
-            if self.cluster.live_count() >= self.max_jobs:
-                raise JobStoreFull(
-                    f"cluster backlog full ({self.max_jobs} live jobs)")
-            jid = self.cluster.submit(recipe, job_id=job_id)
+            # results don't count). The bound is enforced INSIDE submit via
+            # O_EXCL admission slots — the old live_count()-then-submit
+            # check let two managers race past it together
+            try:
+                jid = self.cluster.submit(recipe, job_id=job_id,
+                                          tenant=tenant,
+                                          max_live=self.max_jobs)
+            except AdmissionDenied as e:
+                raise JobStoreFull(str(e)) from e
             return ClusterJobHandle(self.cluster, jid)
         job = Job(id=job_id or uuid.uuid4().hex[:12], pipeline=pipeline)
         with self._lock:
@@ -340,15 +349,23 @@ class JobManager:
             return {"enabled": False}
         return self.cluster.overview()
 
-    def cluster_slo(self) -> Dict[str, Any]:
+    def cluster_slo(self, tenant: Optional[str] = None) -> Dict[str, Any]:
         """GET /cluster/slo payload: queue-wait percentiles, per-runner
-        throughput, failover/preemption counts from the cluster event log.
-        ``enabled: False`` outside cluster mode."""
+        throughput, failover/preemption counts from the cluster event log;
+        with ``tenant`` (the ``?tenant=`` query) just that tenant's
+        breakdown. ``enabled: False`` outside cluster mode."""
         if self.cluster is None:
             return {"enabled": False}
         from repro.api.slo import cluster_slo
 
-        return cluster_slo(self.cluster.dir)
+        return cluster_slo(self.cluster.dir, tenant=tenant)
+
+    def tenants(self) -> Dict[str, Any]:
+        """GET /tenants payload: per-tenant weight/quota/live-jobs/service
+        rollup. ``enabled: False`` outside cluster mode."""
+        if self.cluster is None:
+            return {"enabled": False}
+        return {"enabled": True, "tenants": self.cluster.tenant_overview()}
 
     def metrics_snapshot(self) -> Dict[str, Any]:
         """GET /metrics payload: this process's live registry, plus the

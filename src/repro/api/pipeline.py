@@ -183,6 +183,14 @@ class Pipeline:
     def checkpoint(self, checkpoint_dir: str) -> "Pipeline":
         return self.options(checkpoint_dir=checkpoint_dir)
 
+    def tenant(self, name: str) -> "Pipeline":
+        """Owning tenant for cluster submission (``repro.api.cluster``):
+        quota admission, fair-share claiming and per-tenant SLOs key on it.
+        Local ``.execute()`` ignores it; omitted means the default tenant."""
+        from repro.api.cluster import validate_tenant
+
+        return self.options(tenant=validate_tenant(name))
+
     def shards(self, n) -> "Pipeline":
         """Intra-job scale-out: when this pipeline is submitted to a
         ``ClusterQueue``, split the input into ``n`` row-range shards that

@@ -47,10 +47,15 @@ from typing import Any, Dict, List, Optional, Tuple
 
 from repro.core import clock, obs
 from repro.api.cluster import (
-    CANCELLED, FAILED, QUEUED, SUCCEEDED, TERMINAL, ClusterQueue, Lease,
-    _read_json, _write_json_atomic,
+    CANCELLED, FAILED, QUEUED, SHARD_SEP, SUCCEEDED, TERMINAL, ClusterQueue,
+    Lease, _read_json, _write_json_atomic, is_shard_task, parent_of,
 )
 from repro.core.recipes import Recipe
+
+__all__ = [
+    "SHARD_SEP", "is_shard_task", "parent_of", "map_task_id",
+    "reduce_task_id", "finalize_task_id", "task_sort_key",
+]
 
 # shards="auto" sizing targets (env-tunable): aim for shards of roughly
 # this many rows / bytes, capped by 2x the live runner fleet's capacity
@@ -66,15 +71,11 @@ MINHASH_STREAMING_OPS = (
     "distributed_minhash_deduplicator",
 )
 
-SHARD_SEP = "~"
-
-
-def is_shard_task(job_id: str) -> bool:
-    return SHARD_SEP in job_id
-
-
-def parent_of(task_id: str) -> str:
-    return task_id.split(SHARD_SEP, 1)[0]
+# SHARD_SEP / is_shard_task / parent_of live in api.cluster (which cannot
+# import this module) and are re-exported here: one strict predicate —
+# ONLY the reserved `~s<k>/~r<o>/~fin` suffixes — shared by the queue,
+# the SLO view and this module. A user job named "nightly~v2" is a plain
+# job everywhere.
 
 
 def map_task_id(job_id: str, k: int) -> str:
@@ -330,17 +331,22 @@ def _submit_quiet(queue: ClusterQueue, spec: Dict[str, Any]) -> None:
 
 def publish_shard_tasks(queue: ClusterQueue, job_id: str, recipe: Recipe,
                         meta: Dict[str, Any],
-                        trace: Optional[Dict[str, Any]] = None) -> List[str]:
+                        trace: Optional[Dict[str, Any]] = None,
+                        tenant: Optional[str] = None) -> List[str]:
     """Submit the shard-task DAG; returns every task id in execution order.
 
     ``trace`` is the PARENT job's trace context: every shard task inherits
     the parent's trace_id and roots its own span under the parent's root
     span, so the whole DAG — including failed-over attempts — merges into
-    one trace (core.obs)."""
+    one trace (core.obs). ``tenant`` is likewise the parent's: shard tasks
+    run under the parent's identity (fair-share service and per-tenant SLOs
+    attribute them to it) but bypass quota admission — the parent already
+    holds the slot."""
     n_shards, n_reducers = meta["n_shards"], meta["n_reducers"]
     mode = meta["mode"]
     base = recipe.to_dict()
     base.update(shards=0, trace=None)
+    owner = {"tenant": tenant} if tenant else {}
 
     def task_trace() -> Dict[str, Any]:
         if not trace or not trace.get("trace_id"):
@@ -355,7 +361,7 @@ def publish_shard_tasks(queue: ClusterQueue, job_id: str, recipe: Recipe,
             "job_id": map_ids[k], "recipe": _map_recipe(recipe, meta, k),
             "shard": {"parent": job_id, "kind": "map", "index": k,
                       "n_shards": n_shards, "mode": mode},
-            **task_trace(),
+            **owner, **task_trace(),
         })
     reduce_ids: List[str] = []
     if mode == "dedup":
@@ -368,7 +374,7 @@ def publish_shard_tasks(queue: ClusterQueue, job_id: str, recipe: Recipe,
                           "n_shards": n_shards, "n_reducers": n_reducers,
                           "dedup": meta["dedup"]},
                 "after": list(map_ids),
-                **task_trace(),
+                **owner, **task_trace(),
             })
     fin_id = finalize_task_id(job_id)
     _submit_quiet(queue, {
@@ -378,7 +384,7 @@ def publish_shard_tasks(queue: ClusterQueue, job_id: str, recipe: Recipe,
                   "n_reducers": n_reducers, "n_prefix": meta["n_prefix"],
                   "n_rows": meta["n_rows"], "dedup": meta.get("dedup")},
         "after": list(map_ids) + list(reduce_ids),
-        **task_trace(),
+        **owner, **task_trace(),
     })
     return map_ids + reduce_ids + [fin_id]
 
@@ -417,7 +423,8 @@ def run_sharded(runner, lease: Lease, spec: Dict[str, Any], recipe: Recipe,
     meta = {**meta, "shard_dir": shard_dir_for(queue, job_id)}
     parent_trace = spec.get("trace") or {}
     tasks = publish_shard_tasks(queue, job_id, recipe, meta,
-                                trace=parent_trace)
+                                trace=parent_trace,
+                                tenant=spec.get("tenant"))
     specs = {t: queue.read_spec(t) for t in tasks}
     fin_id = tasks[-1]
     queue.log_event("sharded", job_id=job_id, n_shards=meta["n_shards"],

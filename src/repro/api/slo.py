@@ -13,59 +13,100 @@ any cluster dir, live or post-mortem:
 * **failover / preemption counts** — ``requeued_after_expiry`` events
   (lease failovers) and the dispatcher's preemption/redispatch counters
   carried on ``finished`` events.
+* **per-tenant breakdowns** — every ``submitted`` event carries the
+  owning tenant, so queue-wait and throughput fold per tenant too (the
+  noisy-neighbor view: is the light tenant's p95 bounded while a heavy
+  tenant floods the queue?). Shard-task rows/busy-seconds fold into the
+  PARENT's tenant.
 
-Shard tasks (``~``-suffixed ids) are folded into their parent's runner
-stats but excluded from queue-wait percentiles — a shard task's "wait"
-is DAG scheduling, not submitter-visible latency.
+Shard tasks (the reserved ``~s<k>/~r<o>/~fin`` id grammar —
+``cluster.is_shard_task``, shared with api.shards) are folded into their
+parent's runner stats but excluded from queue-wait percentiles — a shard
+task's "wait" is DAG scheduling, not submitter-visible latency. A user
+job that merely contains ``~`` (e.g. ``nightly~v2``) is a plain job and
+counts normally.
 """
 from __future__ import annotations
 
+import math
 from typing import Any, Dict, Iterable, List, Optional
 
 from repro.core import obs
+from repro.api.cluster import DEFAULT_TENANT, is_shard_task, parent_of
 
 
 def percentile(xs: List[float], q: float) -> float:
-    """Nearest-rank percentile (q in [0, 1]); 0.0 on empty input."""
+    """True nearest-rank percentile (q in [0, 1]); 0.0 on empty input.
+
+    Nearest-rank is ``ceil(q * n)``-th of the sorted values (1-based).
+    The previous ``int(round(q * (n - 1)))`` variant inherited Python's
+    banker's rounding, picking the wrong element on even-length inputs
+    (p50 of [1,2,3,4] came out 3.0, not 2.0)."""
     if not xs:
         return 0.0
     s = sorted(xs)
-    k = max(0, min(len(s) - 1, int(round(q * (len(s) - 1)))))
+    k = min(len(s) - 1, max(0, math.ceil(q * len(s)) - 1))
     return s[k]
 
 
-def _is_shard_task(job_id: Optional[str]) -> bool:
-    return bool(job_id) and "~" in job_id
+def _wait_stats(waits: List[float]) -> Dict[str, Any]:
+    return {
+        "n": len(waits),
+        "p50": percentile(waits, 0.50),
+        "p95": percentile(waits, 0.95),
+        "mean": (sum(waits) / len(waits)) if waits else 0.0,
+        "max": max(waits) if waits else 0.0,
+    }
 
 
 def compute_slo(events: Iterable[Dict[str, Any]]) -> Dict[str, Any]:
     """Fold an event stream (``ClusterQueue.read_log()``) into the SLO
-    summary. Pure function of the events — hermetic under a fake clock."""
+    summary. Pure function of the events — hermetic under a fake clock.
+
+    Requeued/failed-over jobs count exactly one queue wait (submit to
+    FIRST claim — later re-claims are failover latency, surfaced by the
+    ``failovers`` counter, not submitter wait)."""
     submitted: Dict[str, float] = {}
     first_claim: Dict[str, float] = {}
+    tenant_of: Dict[str, str] = {}
     failovers = 0
     preempted = 0
     redispatches = 0
     finished_jobs = 0
     failed_jobs = 0
     runners: Dict[str, Dict[str, float]] = {}
+    tenants: Dict[str, Dict[str, float]] = {}
+
+    def tstats(tenant: str) -> Dict[str, float]:
+        return tenants.setdefault(tenant, {
+            "jobs_finished": 0, "jobs_failed": 0,
+            "rows": 0.0, "busy_seconds": 0.0})
+
     for ev in events:
         kind = ev.get("event")
         jid = ev.get("job_id")
         ts = float(ev.get("ts") or 0.0)
         if kind == "submitted":
             submitted.setdefault(jid, ts)
+            tenant_of.setdefault(jid, ev.get("tenant") or DEFAULT_TENANT)
         elif kind == "claimed":
             first_claim.setdefault(jid, ts)
         elif kind == "requeued_after_expiry":
             failovers += 1
         elif kind == "finished":
-            if not _is_shard_task(jid):
+            tenant = (tenant_of.get(jid) or tenant_of.get(parent_of(jid))
+                      or DEFAULT_TENANT)
+            t = tstats(tenant)
+            if not is_shard_task(jid):
                 finished_jobs += 1
+                t["jobs_finished"] += 1
                 if ev.get("state") == "failed":
                     failed_jobs += 1
+                    t["jobs_failed"] += 1
             preempted += int(ev.get("preempted") or 0)
             redispatches += int(ev.get("redispatches") or 0)
+            t["rows"] += float(ev.get("n_out") or 0.0)
+            t["busy_seconds"] += float(ev.get("seconds") or 0.0)
             rid = ev.get("runner_id")
             if rid:
                 r = runners.setdefault(rid, {"jobs": 0, "rows": 0.0,
@@ -73,9 +114,15 @@ def compute_slo(events: Iterable[Dict[str, Any]]) -> Dict[str, Any]:
                 r["jobs"] += 1
                 r["rows"] += float(ev.get("n_out") or 0.0)
                 r["busy_seconds"] += float(ev.get("seconds") or 0.0)
-    waits = [first_claim[j] - submitted[j]
-             for j in first_claim
-             if j in submitted and not _is_shard_task(j)]
+    waits: List[float] = []
+    tenant_waits: Dict[str, List[float]] = {}
+    for j, t0 in first_claim.items():
+        if j not in submitted or is_shard_task(j):
+            continue
+        w = t0 - submitted[j]
+        waits.append(w)
+        tenant_waits.setdefault(
+            tenant_of.get(j) or DEFAULT_TENANT, []).append(w)
     per_runner = {
         rid: {
             "jobs": int(r["jobs"]),
@@ -86,15 +133,22 @@ def compute_slo(events: Iterable[Dict[str, Any]]) -> Dict[str, Any]:
         }
         for rid, r in sorted(runners.items())
     }
+    per_tenant: Dict[str, Dict[str, Any]] = {}
+    for tenant in sorted(set(tenants) | set(tenant_waits)):
+        t = tstats(tenant)
+        per_tenant[tenant] = {
+            "queue_wait": _wait_stats(tenant_waits.get(tenant, [])),
+            "jobs_finished": int(t["jobs_finished"]),
+            "jobs_failed": int(t["jobs_failed"]),
+            "rows": int(t["rows"]),
+            "busy_seconds": round(t["busy_seconds"], 6),
+            "rows_per_second": (t["rows"] / t["busy_seconds"]
+                                if t["busy_seconds"] > 0 else 0.0),
+        }
     return {
-        "queue_wait": {
-            "n": len(waits),
-            "p50": percentile(waits, 0.50),
-            "p95": percentile(waits, 0.95),
-            "mean": (sum(waits) / len(waits)) if waits else 0.0,
-            "max": max(waits) if waits else 0.0,
-        },
+        "queue_wait": _wait_stats(waits),
         "throughput": per_runner,
+        "tenants": per_tenant,
         "failovers": failovers,
         "preempted": preempted,
         "redispatches": redispatches,
@@ -103,13 +157,31 @@ def compute_slo(events: Iterable[Dict[str, Any]]) -> Dict[str, Any]:
     }
 
 
-def cluster_slo(cluster_dir: str) -> Dict[str, Any]:
+def empty_tenant_slo() -> Dict[str, Any]:
+    """The zeroed per-tenant breakdown ``cluster_slo(tenant=...)`` returns
+    for a tenant with no logged activity yet (a 200, not a 404 — an idle
+    tenant is a healthy tenant)."""
+    return {
+        "queue_wait": _wait_stats([]),
+        "jobs_finished": 0, "jobs_failed": 0,
+        "rows": 0, "busy_seconds": 0.0, "rows_per_second": 0.0,
+    }
+
+
+def cluster_slo(cluster_dir: str,
+                tenant: Optional[str] = None) -> Dict[str, Any]:
     """GET /cluster/slo payload: event-log SLOs + the merged per-process
-    metrics spills from the cluster obs dir."""
+    metrics spills from the cluster obs dir. With ``tenant`` set
+    (``?tenant=`` query), the cluster-wide summary is replaced by that
+    tenant's breakdown (zeroed for a tenant with no activity)."""
     from repro.api.cluster import ClusterQueue
 
     queue = ClusterQueue(cluster_dir)
     out = compute_slo(queue.read_log())
     out["enabled"] = True
+    if tenant is not None:
+        breakdown = out["tenants"].get(tenant) or empty_tenant_slo()
+        out = {"enabled": True, "tenant": tenant, **breakdown}
+        return out
     out["metrics"] = obs.merged_metrics(queue.obs_dir())
     return out

@@ -52,6 +52,10 @@ class Recipe:
     # [lo, hi) row window of dataset_path this run reads — how a shard task
     # scopes itself to its range. Internal: set by api.shards, not by users.
     row_range: Optional[List[int]] = None
+    # owning tenant for cluster submission (api.cluster): quota admission,
+    # fair-share claiming and per-tenant SLOs key on it. None means the
+    # default tenant — single-tenant recipes never need to set it.
+    tenant: Optional[str] = None
     # trace context {"trace_id", "span_id"} linking this run's spans into an
     # enclosing trace (core.obs). Internal: minted at cluster submit /
     # Executor.run, threaded through shard tasks — not set by users.

@@ -8,7 +8,10 @@ all thin shells over the shared Pipeline API (repro.api).
   python -m repro.interface.cli analyze --dataset_path x.jsonl [--auto]
   python -m repro.interface.cli list-ops
   python -m repro.interface.cli runner --cluster_dir DIR [--capacity N]
-  python -m repro.interface.cli cluster-status --cluster_dir DIR [--slo]
+  python -m repro.interface.cli submit --config recipe.{json,yaml} \
+      --cluster_dir DIR [--tenant T] [--job_id ID] [--wait]
+  python -m repro.interface.cli cluster-status --cluster_dir DIR \
+      [--slo] [--tenants]
   python -m repro.interface.cli trace JOB_ID --cluster_dir DIR [--out F]
 """
 from __future__ import annotations
@@ -80,14 +83,32 @@ def main(argv=None):
     p_run.add_argument("--once", action="store_true",
                        help="claim and run at most one job, then exit")
 
+    p_sub = sub.add_parser("submit", help="durably enqueue a recipe into a "
+                                          "cluster queue (executed by "
+                                          "whichever runners lease it) under "
+                                          "a tenant identity")
+    p_sub.add_argument("--config", required=True)
+    p_sub.add_argument("--cluster_dir", required=True)
+    p_sub.add_argument("--tenant", default=None,
+                       help="owning tenant (quota admission, fair-share "
+                            "claiming, per-tenant SLOs); defaults to the "
+                            "recipe's tenant field or the default tenant")
+    p_sub.add_argument("--job_id", default=None)
+    p_sub.add_argument("--wait", action="store_true",
+                       help="block until the job reaches a terminal state")
+
     p_cs = sub.add_parser("cluster-status", help="print the cluster queue "
                                                  "overview (runners, leases, "
                                                  "queue depth)")
     p_cs.add_argument("--cluster_dir", required=True)
     p_cs.add_argument("--slo", action="store_true",
                       help="also print SLO rollups from the event log "
-                           "(queue-wait percentiles, per-runner throughput, "
-                           "failover/preemption counts)")
+                           "(queue-wait percentiles, per-runner AND "
+                           "per-tenant throughput, failover/preemption "
+                           "counts)")
+    p_cs.add_argument("--tenants", action="store_true",
+                      help="also print the per-tenant rollup (weight, quota, "
+                           "live jobs, claims granted)")
 
     p_tr = sub.add_parser("trace", help="merge a job's span spills into one "
                                         "Chrome-trace JSON (open in "
@@ -220,10 +241,41 @@ def main(argv=None):
             runner.drain()
         return 0
 
+    if args.cmd == "submit":
+        import time as _time
+
+        from repro.api.cluster import (AdmissionDenied, ClusterQueue,
+                                       TERMINAL)
+        from repro.core.recipes import Recipe
+
+        queue = ClusterQueue(args.cluster_dir)
+        recipe = Recipe.load(args.config)
+        try:
+            jid = queue.submit(recipe.to_dict(), job_id=args.job_id,
+                               tenant=args.tenant)
+        except AdmissionDenied as e:
+            print(f"admission denied [{e.scope}]: {e}", file=sys.stderr)
+            return 1
+        spec = queue.read_spec(jid)
+        print(f"submitted {jid} tenant={spec.get('tenant')} "
+              f"-> {queue.dir}", flush=True)
+        if not args.wait:
+            return 0
+        while True:
+            state = queue.state_of(jid)
+            if state in TERMINAL:
+                break
+            _time.sleep(0.2)
+        st = queue.status(jid, verbose=False)
+        print(f"job {jid} {st['state']}"
+              + (f" error={st['error']}" if st.get("error") else ""))
+        return 0 if st["state"] == "succeeded" else 1
+
     if args.cmd == "cluster-status":
         from repro.api.cluster import ClusterQueue
 
-        ov = ClusterQueue(args.cluster_dir).overview()
+        cq = ClusterQueue(args.cluster_dir)
+        ov = cq.overview()
         jobs = " ".join(f"{k}={v}" for k, v in sorted(ov["jobs"].items()))
         print(f"cluster {ov['cluster_dir']}")
         print(f"queue_depth={ov['queue_depth']} {jobs}")
@@ -267,6 +319,24 @@ def main(argv=None):
                 print(f"  throughput {rid:28s} jobs={t['jobs']} "
                       f"rows={t['rows']} "
                       f"rows_per_second={t['rows_per_second']:.1f}")
+            for name, t in slo.get("tenants", {}).items():
+                tqw = t["queue_wait"]
+                print(f"  tenant {name:24s} waits n={tqw['n']} "
+                      f"p50={tqw['p50']:.3f}s p95={tqw['p95']:.3f}s "
+                      f"finished={t['jobs_finished']} "
+                      f"rows_per_second={t['rows_per_second']:.1f}")
+        if args.tenants:
+            for row in cq.tenant_overview():
+                quota = row["max_live_jobs"]
+                jobs = " ".join(f"{k}={v}"
+                                for k, v in sorted(row["jobs"].items()))
+                print(f"  tenant {row['tenant']:24s} "
+                      f"weight={row['weight']:g} "
+                      f"quota={'-' if quota is None else quota} "
+                      f"live={row['live_jobs']} "
+                      f"claims={row['claims_granted']:g} "
+                      f"keys={row['api_keys']}"
+                      + (f" [{jobs}]" if jobs else ""))
         return 0
 
     if args.cmd == "trace":

@@ -20,12 +20,20 @@ job subsystem, all routed through the shared Pipeline API.
   GET    /cluster          — cluster overview: runner cards + placement
                            scores, live/expired leases, queue depth
                            ({"enabled": false} outside cluster mode)
-  GET    /cluster/slo      — p50/p95 queue-wait, per-runner throughput,
-                           failover/preemption counts from log.jsonl
-                           ({"enabled": false} outside cluster mode)
+  GET    /cluster/slo      — p50/p95 queue-wait, per-runner AND per-tenant
+                           throughput, failover/preemption counts from
+                           log.jsonl; ?tenant=<id> narrows to one tenant's
+                           breakdown ({"enabled": false} outside cluster
+                           mode)
+  GET    /tenants          — per-tenant weight/quota/live-jobs/service
+                           rollup ({"enabled": false} outside cluster mode)
   GET    /metrics          — live in-process metrics registry snapshot,
                            plus the merged cross-process spills in
                            cluster mode
+
+POST /jobs resolves the submitting tenant from the ``X-DJ-API-Key``
+header via the cluster's tenants.json key map (unknown key -> 403), else
+the body's ``tenant`` field, else the default tenant.
 
 With ``serve(cluster_dir=...)`` the job subsystem runs on the distributed
 cluster queue (repro.api.cluster): submissions are durably enqueued in the
@@ -115,7 +123,11 @@ class _Handler(BaseHTTPRequestHandler):
         if parts == ["cluster"]:
             return self._send(200, self.server.jobs.cluster_status())
         if parts == ["cluster", "slo"]:
-            return self._send(200, self.server.jobs.cluster_slo())
+            qs = parse_qs(url.query)
+            tenant = qs.get("tenant", [None])[0]
+            return self._send(200, self.server.jobs.cluster_slo(tenant=tenant))
+        if parts == ["tenants"]:
+            return self._send(200, self.server.jobs.tenants())
         if parts == ["metrics"]:
             return self._send(200, self.server.jobs.metrics_snapshot())
         return self._err(404, "not_found", "not found")
@@ -266,11 +278,32 @@ class _Handler(BaseHTTPRequestHandler):
         except TypeError as e:
             return self._err(400, "invalid_params", str(e))
 
+        # tenant identity: X-DJ-API-Key header resolves through the cluster
+        # tenants.json key map (unknown key -> 403: never silently misfile a
+        # keyed submission under the default tenant); else the body's
+        # 'tenant' field; else the default tenant. Single-node mode has no
+        # tenant registry — the header is ignored there.
+        tenant = spec.get("tenant") or None
+        api_key = self.headers.get("X-DJ-API-Key")
+        cluster = getattr(self.server.jobs, "cluster", None)
+        if api_key and cluster is not None:
+            tenant = cluster.tenant_for_key(api_key)
+            if tenant is None:
+                return self._err(403, "unknown_api_key",
+                                 "X-DJ-API-Key does not match any tenant in "
+                                 "tenants.json")
+
         pipe = Pipeline.from_recipe(Recipe.from_dict(
             {k: v for k, v in spec.items() if k != "strict"}))
-        job = self.server.jobs.submit(pipe)
-        return self._send(202, {"job_id": job.id, "state": job.state,
-                                "poll": f"/jobs/{job.id}"})
+        try:
+            job = self.server.jobs.submit(pipe, tenant=tenant)
+        except ValueError as e:
+            return self._err(400, "invalid_params", str(e))
+        out = {"job_id": job.id, "state": job.state,
+               "poll": f"/jobs/{job.id}"}
+        if tenant:
+            out["tenant"] = tenant
+        return self._send(202, out)
 
 
 def serve(host: str = "127.0.0.1", port: int = 8123,

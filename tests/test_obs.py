@@ -222,6 +222,51 @@ def test_percentile_nearest_rank():
     assert percentile(xs, 1.0) == 10.0
 
 
+def test_percentile_even_length_true_nearest_rank():
+    # the old int(round(q*(n-1))) formula hit Python's banker's rounding on
+    # even-length inputs: round(1.5) == 2 gave p50([1,2,3,4]) == 3.0
+    assert percentile([1.0, 2.0, 3.0, 4.0], 0.5) == 2.0
+    assert percentile([1.0, 2.0], 0.5) == 1.0
+    assert percentile([1.0, 2.0, 3.0, 4.0], 0.95) == 4.0
+    assert percentile([1.0, 2.0, 3.0, 4.0], 0.25) == 1.0
+    # nearest-rank p95 over 20 values is the 19th (index 18), not the 20th
+    xs = [float(i) for i in range(1, 21)]
+    assert percentile(xs, 0.95) == 19.0
+
+
+def test_shard_task_predicate_is_strict():
+    from repro.api.cluster import is_shard_task, parent_of
+    from repro.api import shards
+
+    # the reserved grammar
+    for tid in ("job~s0", "job~s12", "job~r3", "job~fin", "a~s1~r2"):
+        assert is_shard_task(tid), tid
+    assert parent_of("job~s0") == "job"
+    assert parent_of("a~s1~r2") == "a~s1"
+    # user jobs that merely contain '~' are PLAIN jobs (the old `"~" in id`
+    # predicate silently dropped them from SLO queue-wait counts)
+    for jid in ("nightly~v2", "job~", "job~rat", "job~final", "job~s",
+                "job~r", "job~s1b", None, ""):
+        assert not is_shard_task(jid), jid
+    assert parent_of("nightly~v2") == "nightly~v2"
+    # shards.py re-exports the same predicate — one grammar, both modules
+    assert shards.is_shard_task is is_shard_task
+
+
+def test_compute_slo_counts_user_jobs_with_tilde():
+    evs = [
+        {"event": "submitted", "job_id": "nightly~v2", "ts": 10.0},
+        {"event": "claimed", "job_id": "nightly~v2", "ts": 11.0,
+         "runner_id": "r1"},
+        {"event": "finished", "job_id": "nightly~v2", "ts": 12.0,
+         "runner_id": "r1", "state": "succeeded", "n_out": 5, "seconds": 1.0},
+    ]
+    s = compute_slo(evs)
+    assert s["queue_wait"]["n"] == 1
+    assert s["queue_wait"]["p50"] == pytest.approx(1.0)
+    assert s["jobs_finished"] == 1
+
+
 def test_compute_slo_folds_event_log():
     evs = [
         {"event": "submitted", "job_id": "a", "ts": 10.0},
@@ -251,6 +296,68 @@ def test_compute_slo_folds_event_log():
     assert s["throughput"]["r1"]["jobs"] == 2
     assert s["throughput"]["r2"]["rows"] == 25
     assert s["throughput"]["r2"]["rows_per_second"] == pytest.approx(50.0)
+
+
+def test_compute_slo_per_tenant_breakdowns():
+    evs = [
+        {"event": "submitted", "job_id": "a", "ts": 0.0, "tenant": "alice"},
+        {"event": "claimed", "job_id": "a", "ts": 1.0, "runner_id": "r1"},
+        {"event": "submitted", "job_id": "b", "ts": 0.0, "tenant": "bob"},
+        {"event": "claimed", "job_id": "b", "ts": 4.0, "runner_id": "r1"},
+        # legacy event without a tenant field folds into the default tenant
+        {"event": "submitted", "job_id": "c", "ts": 0.0},
+        {"event": "claimed", "job_id": "c", "ts": 2.0, "runner_id": "r1"},
+        {"event": "finished", "job_id": "a", "ts": 5.0, "runner_id": "r1",
+         "state": "succeeded", "n_out": 40, "seconds": 2.0},
+        {"event": "finished", "job_id": "b", "ts": 9.0, "runner_id": "r1",
+         "state": "failed", "n_out": 0, "seconds": 1.0},
+        # alice's shard task: rows fold into ALICE's throughput (via the
+        # parent), never into queue-wait
+        {"event": "submitted", "job_id": "a~s0", "ts": 5.0, "tenant": "alice"},
+        {"event": "claimed", "job_id": "a~s0", "ts": 6.0, "runner_id": "r1"},
+        {"event": "finished", "job_id": "a~s0", "ts": 8.0, "runner_id": "r1",
+         "state": "succeeded", "n_out": 10, "seconds": 1.0},
+    ]
+    s = compute_slo(evs)
+    t = s["tenants"]
+    assert set(t) == {"alice", "bob", "default"}
+    assert t["alice"]["queue_wait"]["n"] == 1
+    assert t["alice"]["queue_wait"]["p95"] == pytest.approx(1.0)
+    assert t["alice"]["jobs_finished"] == 1 and t["alice"]["jobs_failed"] == 0
+    assert t["alice"]["rows"] == 50  # parent 40 + shard task 10
+    assert t["alice"]["rows_per_second"] == pytest.approx(50 / 3.0)
+    assert t["bob"]["queue_wait"]["p50"] == pytest.approx(4.0)
+    assert t["bob"]["jobs_failed"] == 1
+    assert t["default"]["queue_wait"]["n"] == 1
+    # cluster-wide view is unchanged by the breakdown
+    assert s["queue_wait"]["n"] == 3
+
+
+def test_compute_slo_requeued_failover_job(fake, tmp_path):
+    """A job claimed, lease-expired, and re-claimed counts ONE queue wait
+    (submit -> FIRST claim) and one failover — driven through the real
+    ClusterQueue event log under the fake clock, not a hand-built fixture."""
+    from repro.api.cluster import ClusterQueue
+
+    q = ClusterQueue(str(tmp_path / "cluster"), lease_ttl=1.0)
+    jid = q.submit({"name": "r"}, job_id="flaky")
+    fake.tick(2.0)
+    lease1 = q.try_claim(jid, "r1", ttl=1.0)
+    assert lease1 is not None and lease1.attempt == 1
+    fake.tick(5.0)  # r1 dies: lease expires without a heartbeat
+    lease2 = q.try_claim(jid, "r2", ttl=1.0)
+    assert lease2 is not None and lease2.attempt == 2
+    fake.tick(3.0)
+    assert q.complete(lease2, "succeeded",
+                      report={"n_out": 7, "seconds": 3.0})
+    s = compute_slo(q.read_log())
+    assert s["queue_wait"]["n"] == 1, "one wait despite two claims"
+    assert s["queue_wait"]["max"] == pytest.approx(2.0), \
+        "wait is submit -> FIRST claim; the re-claim is failover, not wait"
+    assert s["failovers"] == 1
+    assert s["jobs_finished"] == 1 and s["jobs_failed"] == 0
+    assert s["throughput"]["r2"]["rows"] == 7
+    assert s["tenants"]["default"]["jobs_finished"] == 1
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,390 @@
+"""Multi-tenant cluster serving (repro.api.cluster): tenant identity on
+submissions, atomic O_EXCL quota/backlog admission (the TOCTOU regression
+suite for the old count-then-submit 503), weighted deficit-round-robin
+claiming, and the tenant surface (REST API keys, /tenants, per-tenant SLO,
+CLI submit / cluster-status --tenants)."""
+import json
+import os
+import threading
+import urllib.error
+import urllib.request
+
+import pytest
+
+import repro.api as dj
+from repro.api.cluster import (
+    SLOT_ORPHAN_GRACE, AdmissionDenied, ClusterQueue, validate_tenant,
+)
+from repro.core import clock
+from cluster_harness import make_recipe, wait_for, write_corpus
+
+
+@pytest.fixture(autouse=True)
+def _real_clock():
+    clock.reset()
+    yield
+    clock.reset()
+
+
+@pytest.fixture
+def fake():
+    fc = clock.FakeClock()
+    clock.install(fc)
+    yield fc
+    clock.reset()
+
+
+def _spec(tmp_path, name="unit", n=30):
+    src = write_corpus(str(tmp_path / f"{name}.jsonl"), n=n)
+    return make_recipe(src, str(tmp_path / f"{name}.out.jsonl"),
+                       slow_delay=0.0)
+
+
+def _pipeline(tmp_path, name="p"):
+    src = write_corpus(str(tmp_path / f"{name}.jsonl"), n=30)
+    return (dj.read_jsonl(src)
+            .op("whitespace_normalization_mapper")
+            .write_jsonl(str(tmp_path / f"{name}.out.jsonl")))
+
+
+def _write_tenants(cdir, cfg):
+    os.makedirs(str(cdir), exist_ok=True)
+    with open(os.path.join(str(cdir), "tenants.json"), "w") as f:
+        json.dump(cfg, f)
+
+
+# ---------------------------------------------------------------------------
+# tenant identity
+# ---------------------------------------------------------------------------
+
+
+def test_validate_tenant_charset():
+    assert validate_tenant("alice") == "alice"
+    assert validate_tenant("team-a.prod_2") == "team-a.prod_2"
+    assert validate_tenant("x" * 64) == "x" * 64
+    for bad in ("", "_hidden", "-lead", ".dot", "a/b", "a b", "x" * 65,
+                "__all__", None, 7):
+        with pytest.raises(ValueError):
+            validate_tenant(bad)
+
+
+def test_submit_defaults_to_default_tenant(tmp_path):
+    q = ClusterQueue(str(tmp_path / "c"))
+    jid = q.submit(_spec(tmp_path))
+    assert q.read_spec(jid)["tenant"] == "default"
+    assert q.status(jid)["tenant"] == "default"
+    sub = [e for e in q.read_log() if e["event"] == "submitted"][0]
+    assert sub["tenant"] == "default"
+
+
+def test_submit_tenant_resolution_order(tmp_path):
+    q = ClusterQueue(str(tmp_path / "c"))
+    spec = dict(_spec(tmp_path), tenant="from-recipe")
+    assert q.read_spec(q.submit(spec, job_id="j1"))["tenant"] == "from-recipe"
+    assert q.read_spec(q.submit(spec, job_id="j2",
+                                tenant="explicit"))["tenant"] == "explicit"
+    with pytest.raises(ValueError, match="invalid tenant"):
+        q.submit(_spec(tmp_path), tenant="bad/tenant")
+
+
+# ---------------------------------------------------------------------------
+# atomic admission: quotas, backlog bound, TOCTOU regression
+# ---------------------------------------------------------------------------
+
+
+def test_tenant_quota_admission_and_lazy_reclaim(tmp_path):
+    cdir = tmp_path / "c"
+    _write_tenants(cdir, {"tenants": {"alice": {"max_live_jobs": 2}}})
+    q = ClusterQueue(str(cdir))
+    spec = _spec(tmp_path)
+    a1 = q.submit(spec, job_id="a1", tenant="alice")
+    q.submit(spec, job_id="a2", tenant="alice")
+    with pytest.raises(AdmissionDenied) as ei:
+        q.submit(spec, job_id="a3", tenant="alice")
+    assert ei.value.tenant == "alice" and ei.value.scope == "tenant"
+    # other tenants are unaffected by alice's quota
+    q.submit(spec, job_id="b1", tenant="bob")
+    # finishing a job frees its slot lazily: the next submit reclaims it
+    lease = q.try_claim(a1, "r1")
+    q.complete(lease, "succeeded", report={"n_out": 1})
+    q.submit(spec, job_id="a4", tenant="alice")
+    with pytest.raises(AdmissionDenied):
+        q.submit(spec, job_id="a5", tenant="alice")
+
+
+def test_concurrent_submits_respect_backlog_bound(tmp_path):
+    """The TOCTOU regression: N submitters racing past a max_live bound used
+    to all pass the read-then-check count — O_EXCL slots admit exactly
+    max_live of them no matter the interleaving."""
+    cdir = str(tmp_path / "c")
+    ClusterQueue(cdir)  # create the tree once
+    spec = _spec(tmp_path)
+    n_threads, bound = 8, 3
+    barrier = threading.Barrier(n_threads)
+    outcomes = [None] * n_threads
+
+    def submitter(i):
+        q = ClusterQueue(cdir)  # each racer has its own queue object
+        barrier.wait()
+        try:
+            q.submit(spec, job_id=f"race{i}", max_live=bound)
+            outcomes[i] = "admitted"
+        except AdmissionDenied as e:
+            outcomes[i] = e.scope
+
+    threads = [threading.Thread(target=submitter, args=(i,))
+               for i in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert outcomes.count("admitted") == bound
+    assert outcomes.count("cluster") == n_threads - bound
+    assert len(ClusterQueue(cdir).job_ids()) == bound
+
+
+def test_two_jobmanagers_share_backlog_atomically(tmp_path):
+    """Two JobManager front-ends over one cluster_dir see ONE shared
+    backlog bound (the old per-manager live_count() check did not)."""
+    cdir = str(tmp_path / "c")
+    a = dj.JobManager(max_jobs=1, cluster_dir=cdir, start_runner=False)
+    b = dj.JobManager(max_jobs=1, cluster_dir=cdir, start_runner=False)
+    try:
+        a.submit(_pipeline(tmp_path, name="ma"))
+        with pytest.raises(dj.JobStoreFull):
+            b.submit(_pipeline(tmp_path, name="mb"))
+    finally:
+        a.shutdown()
+        b.shutdown()
+
+
+def test_orphan_slot_reclaimed_after_grace(fake, tmp_path):
+    """A submitter that crashed between slot-acquire and spec publish leaves
+    an orphan slot: denied inside the grace window (the writer may still be
+    mid-create), reclaimed after it."""
+    cdir = tmp_path / "c"
+    _write_tenants(cdir, {"tenants": {"alice": {"max_live_jobs": 1}}})
+    q = ClusterQueue(str(cdir))
+    sd = q.slot_dir("alice")
+    os.makedirs(sd, exist_ok=True)
+    with open(os.path.join(sd, "slot0.json"), "w") as f:
+        json.dump({"job_id": "ghost-never-published", "ts": clock.now()}, f)
+    with pytest.raises(AdmissionDenied):
+        q.submit(_spec(tmp_path), job_id="denied", tenant="alice")
+    fake.tick(SLOT_ORPHAN_GRACE + 1.0)
+    q.submit(_spec(tmp_path), job_id="admitted", tenant="alice")
+    assert q.state_of("admitted") == "queued"
+
+
+# ---------------------------------------------------------------------------
+# weighted deficit-round-robin claiming
+# ---------------------------------------------------------------------------
+
+
+def _claim_order(q, runner="r1"):
+    order = []
+    while True:
+        lease = q.next_job(runner)
+        if lease is None:
+            return order
+        order.append(lease.job_id)
+
+
+def test_fair_share_interleaves_tenants(tmp_path):
+    """A heavy tenant's pre-submitted backlog cannot starve a light
+    tenant: equal weights alternate as deficits accrue."""
+    q = ClusterQueue(str(tmp_path / "c"), fair_share=True)
+    spec = _spec(tmp_path)
+    for i in range(3):
+        q.submit(spec, job_id=f"aa-{i}", tenant="aa")
+    q.submit(spec, job_id="bb-0", tenant="bb")
+    assert _claim_order(q) == ["aa-0", "bb-0", "aa-1", "aa-2"]
+
+
+def test_fair_share_weighted_proportionality(tmp_path):
+    """weight 2 earns two claims per weight-1 claim, deterministically
+    (deficit = service/weight, name tie-break, FIFO within tenant)."""
+    cdir = tmp_path / "c"
+    _write_tenants(cdir, {"tenants": {"aa": {"weight": 1},
+                                      "bb": {"weight": 2}}})
+    q = ClusterQueue(str(cdir), fair_share=True)
+    spec = _spec(tmp_path)
+    for i in range(4):
+        q.submit(spec, job_id=f"aa-{i}", tenant="aa")
+    for i in range(4):
+        q.submit(spec, job_id=f"bb-{i}", tenant="bb")
+    assert _claim_order(q) == ["aa-0", "bb-0", "bb-1", "aa-1",
+                               "bb-2", "bb-3", "aa-2", "aa-3"]
+
+
+def test_fair_share_off_preserves_pure_fifo(tmp_path):
+    q = ClusterQueue(str(tmp_path / "c"), fair_share=False)
+    spec = _spec(tmp_path)
+    q.submit(spec, job_id="j0", tenant="bb")
+    q.submit(spec, job_id="j1", tenant="aa")
+    q.submit(spec, job_id="j2", tenant="aa")
+    # fair-share would rank aa first (both deficits 0, name tie-break);
+    # FIFO keeps submit order
+    assert _claim_order(q) == ["j0", "j1", "j2"]
+
+
+def test_service_counter_survives_queue_restart(tmp_path):
+    """Deficit state is derived from log.jsonl, so a brand-new queue object
+    (failover, restarted runner) continues the rotation, not restarts it."""
+    cdir = str(tmp_path / "c")
+    q = ClusterQueue(cdir, fair_share=True)
+    spec = _spec(tmp_path)
+    for i in range(3):
+        q.submit(spec, job_id=f"aa-{i}", tenant="aa")
+    q.submit(spec, job_id="bb-0", tenant="bb")
+    assert q.next_job("r1").job_id == "aa-0"
+    fresh = ClusterQueue(cdir, fair_share=True)
+    assert fresh.next_job("r2").job_id == "bb-0", \
+        "restarted scheduler must see aa's granted claim in the log"
+
+
+# ---------------------------------------------------------------------------
+# reserved shard grammar vs user job ids containing "~"
+# ---------------------------------------------------------------------------
+
+
+def test_tilde_named_user_job_is_a_plain_job(tmp_path):
+    cdir = tmp_path / "c"
+    _write_tenants(cdir, {"tenants": {"ops": {"max_live_jobs": 1}}})
+    q = ClusterQueue(str(cdir))
+    spec = _spec(tmp_path)
+    q.submit(spec, job_id="nightly~v2", tenant="ops")
+    # not hidden from listings like a shard task would be...
+    assert "nightly~v2" in q.job_ids()
+    assert q.shard_tasks("nightly") == []
+    # ...and it consumed an admission slot (shard tasks bypass admission)
+    with pytest.raises(AdmissionDenied):
+        q.submit(spec, job_id="nightly~v3", tenant="ops")
+
+
+# ---------------------------------------------------------------------------
+# surface: Pipeline knob, JobManager, tenant overview
+# ---------------------------------------------------------------------------
+
+
+def test_pipeline_tenant_flows_to_cluster_spec(tmp_path):
+    mgr = dj.JobManager(cluster_dir=str(tmp_path / "c"), start_runner=False)
+    try:
+        job = mgr.submit(_pipeline(tmp_path).tenant("alice"))
+        assert mgr.cluster.read_spec(job.id)["tenant"] == "alice"
+        rows = {r["tenant"]: r for r in mgr.cluster.tenant_overview()}
+        assert rows["alice"]["live_jobs"] == 1
+        assert rows["alice"]["jobs"] == {"queued": 1}
+        tn = mgr.tenants()
+        assert tn["enabled"] is True
+        assert any(r["tenant"] == "alice" for r in tn["tenants"])
+    finally:
+        mgr.shutdown()
+
+
+def test_pipeline_tenant_validates_eagerly():
+    with pytest.raises(ValueError, match="invalid tenant"):
+        dj.from_samples([{"text": "x"}]).tenant("no/slashes")
+
+
+# ---------------------------------------------------------------------------
+# REST: API-key auth, /tenants, per-tenant SLO
+# ---------------------------------------------------------------------------
+
+
+def _get(port, path):
+    with urllib.request.urlopen(f"http://127.0.0.1:{port}{path}") as r:
+        return json.loads(r.read())
+
+
+def _post_job(port, tmp_path, name, api_key=None):
+    src = write_corpus(str(tmp_path / f"{name}.jsonl"), n=40)
+    body = json.dumps({
+        "dataset_path": src,
+        "export_path": str(tmp_path / f"{name}.out.jsonl"),
+        "use_reordering": False,
+        "process": [{"name": "whitespace_normalization_mapper"}],
+    }).encode()
+    headers = {"Content-Type": "application/json"}
+    if api_key is not None:
+        headers["X-DJ-API-Key"] = api_key
+    req = urllib.request.Request(f"http://127.0.0.1:{port}/jobs",
+                                 data=body, method="POST", headers=headers)
+    with urllib.request.urlopen(req) as r:
+        return r.status, json.loads(r.read())
+
+
+@pytest.mark.slow
+def test_rest_api_key_tenants_and_per_tenant_slo(tmp_path):
+    from repro.interface.server import serve
+
+    cdir = tmp_path / "c"
+    _write_tenants(cdir, {"tenants": {"alice": {"weight": 4,
+                                                "api_keys": ["sk-alice-1"]}}})
+    srv = serve(port=0, max_workers=1, cluster_dir=str(cdir))
+    port = srv.server_address[1]
+    try:
+        # API key -> tenant identity on the submission
+        status, sub = _post_job(port, tmp_path, "keyed", api_key="sk-alice-1")
+        assert status == 202 and sub["tenant"] == "alice"
+        # the default path is contract-unchanged: no tenant key at all
+        status, anon = _post_job(port, tmp_path, "anon")
+        assert status == 202 and "tenant" not in anon
+
+        # unknown key -> 403, not a default-tenant submission
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            _post_job(port, tmp_path, "bad", api_key="sk-wrong")
+        assert ei.value.code == 403
+        assert json.loads(ei.value.read())["error"]["type"] == \
+            "unknown_api_key"
+
+        for jid in (sub["job_id"], anon["job_id"]):
+            wait_for(lambda j=jid: _get(port, f"/jobs/{j}")["state"]
+                     in ("succeeded", "failed"), 60, message="REST job")
+            assert _get(port, f"/jobs/{jid}")["state"] == "succeeded"
+
+        tn = _get(port, "/tenants")
+        assert tn["enabled"] is True
+        rows = {r["tenant"]: r for r in tn["tenants"]}
+        assert rows["alice"]["weight"] == 4.0
+        assert rows["alice"]["claims_granted"] >= 1
+
+        slo = _get(port, "/cluster/slo?tenant=alice")
+        assert slo["enabled"] is True and slo["tenant"] == "alice"
+        assert slo["jobs_finished"] == 1
+        full = _get(port, "/cluster/slo")
+        assert set(full["tenants"]) == {"alice", "default"}
+        assert full["tenants"]["default"]["jobs_finished"] == 1
+    finally:
+        srv.server_close()
+
+
+# ---------------------------------------------------------------------------
+# CLI: dj submit / cluster-status --tenants
+# ---------------------------------------------------------------------------
+
+
+def test_cli_submit_and_tenant_status(tmp_path, capsys):
+    from repro.interface import cli
+
+    cdir = tmp_path / "c"
+    _write_tenants(cdir, {"tenants": {"alice": {"weight": 2,
+                                                "max_live_jobs": 5}}})
+    cfg = str(tmp_path / "recipe.yaml")
+    _pipeline(tmp_path, name="cli").save_recipe(cfg)
+    rc = cli.main(["submit", "--config", cfg, "--cluster_dir", str(cdir),
+                   "--tenant", "alice", "--job_id", "cli1"])
+    assert rc == 0
+    assert "submitted cli1 tenant=alice" in capsys.readouterr().out
+
+    rc = cli.main(["cluster-status", "--cluster_dir", str(cdir), "--tenants"])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "alice" in out and "weight" in out
+
+    # over-quota submission is a clean non-zero exit, not a traceback
+    _write_tenants(cdir, {"tenants": {"alice": {"max_live_jobs": 1}}})
+    rc = cli.main(["submit", "--config", cfg, "--cluster_dir", str(cdir),
+                   "--tenant", "alice", "--job_id", "cli2"])
+    assert rc == 1
+    assert "admission denied [tenant]" in capsys.readouterr().err
